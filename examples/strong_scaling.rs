@@ -1,0 +1,89 @@
+//! Strong scaling (paper §4.1, Table 2 + Figures 1–3).
+//!
+//! ```bash
+//! cargo run --release --example strong_scaling
+//! ```
+//!
+//! Part 1 — **real runs** at simulation scale: the same multiplication on
+//! growing simulated grids, PTP vs OS1 vs best OSL, with *counted* (not
+//! modeled) per-process traffic — demonstrating the paper's two volume
+//! claims: `O(1/√P)` scaling and the `√L` 2.5D reduction (Eq. 7).
+//!
+//! Part 2 — **calibrated replay** at paper scale (200–2704 nodes):
+//! regenerates the Table 2 / Figure 1–3 series.
+
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::topology25d::Topology25d;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::stats::report;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+fn main() {
+    println!("== Part 1: real simulated runs (counted bytes) ==\n");
+    let spec = BenchSpec::h2o_dft_ls().scaled(48);
+    let a = random_for_spec(&spec, 3);
+    let b = random_for_spec(&spec, 4);
+    let layout = spec.layout();
+    println!(
+        "workload: {} scaled to {} blocks of {} ({:.1}% occupied)\n",
+        spec.name,
+        spec.nblocks,
+        spec.block_size,
+        a.occupancy() * 100.0
+    );
+    println!(
+        "{:>6} {:>6}  {:>12} {:>12} {:>10}  {:>8}",
+        "ranks", "engine", "A+B MB/rank", "C MB/rank", "total MB", "vs PTP"
+    );
+    for (pr, pc) in [(1, 2), (2, 2), (2, 4), (4, 4), (4, 6)] {
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 9);
+        let mut engines = vec![Engine::PointToPoint, Engine::OneSided { l: 1 }];
+        for l in [2usize, 4, 9] {
+            if Topology25d::new(grid, l).is_ok() {
+                engines.push(Engine::OneSided { l });
+            }
+        }
+        let mut ptp_total = 0.0;
+        for engine in engines {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let n = rep.per_rank_stats.len() as f64;
+            let ab: f64 = rep
+                .per_rank_stats
+                .iter()
+                .map(|s| s.ab_message_stats().1 as f64)
+                .sum::<f64>()
+                / n;
+            let total = rep.avg_requested_bytes();
+            let c = total - ab;
+            if engine == Engine::PointToPoint {
+                ptp_total = total;
+            }
+            println!(
+                "{:>6} {:>6}  {:>12.3} {:>12.3} {:>10.3}  {:>7.2}x",
+                grid.size(),
+                engine.label(),
+                ab / 1e6,
+                c / 1e6,
+                total / 1e6,
+                ptp_total / total.max(1.0)
+            );
+        }
+        println!();
+    }
+
+    println!("\n== Part 2: paper-scale replay (calibrated model) ==\n");
+    print!("{}", report::table2());
+    println!();
+    print!("{}", report::fig1());
+    println!();
+    print!("{}", report::fig2());
+    println!();
+    print!("{}", report::fig3());
+}

@@ -1,0 +1,63 @@
+//! Weak scaling (paper §4.2, Figure 4).
+//!
+//! ```bash
+//! cargo run --release --example weak_scaling
+//! ```
+//!
+//! Part 1 — real simulated weak-scaling series: constant blocks *per
+//! rank*, growing grids; counted per-rank traffic shows the constant
+//! message sizes / growing tick counts the paper discusses.
+//!
+//! Part 2 — the Figure 4 replay at 144–3844 nodes (S-E, 76 molecules per
+//! process, PTP vs OS1 vs OS4 and the ratio curves).
+
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::stats::report;
+use dbcsr::workloads::spec::BenchSpec;
+use dbcsr::workloads::generator::random_for_spec;
+
+fn main() {
+    println!("== Part 1: real simulated weak scaling (counted bytes) ==\n");
+    let blocks_per_rank = 12usize;
+    println!(
+        "{:>6} {:>8} {:>6}  {:>14} {:>14}",
+        "ranks", "nblocks", "eng", "A+B MB/rank", "avg msg KB"
+    );
+    for (pr, pc) in [(1, 1), (2, 2), (3, 3), (4, 4)] {
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let nblocks = blocks_per_rank * grid.size();
+        // occupancy falls as 1/P: constant work per rank (paper §4.2)
+        let mut spec = BenchSpec::s_e().scaled(nblocks);
+        spec.occupancy = (0.6 / grid.size() as f64).min(1.0);
+        let a = random_for_spec(&spec, 5);
+        let b = random_for_spec(&spec, 6);
+        let layout = spec.layout();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 7);
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let n = rep.per_rank_stats.len() as f64;
+            let (msgs, bytes) = rep
+                .per_rank_stats
+                .iter()
+                .map(|s| s.ab_message_stats())
+                .fold((0u64, 0u64), |(m, b), (m2, b2)| (m + m2, b + b2));
+            println!(
+                "{:>6} {:>8} {:>6}  {:>14.3} {:>14.2}",
+                grid.size(),
+                nblocks,
+                engine.label(),
+                bytes as f64 / n / 1e6,
+                bytes as f64 / msgs.max(1) as f64 / 1e3,
+            );
+        }
+    }
+
+    println!("\n== Part 2: paper-scale replay (Figure 4) ==\n");
+    print!("{}", report::fig4());
+}

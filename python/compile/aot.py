@@ -1,0 +1,115 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for rust.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+every artifact's input/output shapes for the rust artifact registry
+(``rust/src/runtime/client.rs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm_variant(name: str, n: int, bm: int, bk: int, bn: int):
+    a = jax.ShapeDtypeStruct((n, bm, bk), jnp.float32)
+    b = jax.ShapeDtypeStruct((n, bk, bn), jnp.float32)
+    eps = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+    lowered = jax.jit(model.panel_multiply).lower(a, b, eps)
+    entry = {
+        "name": name,
+        "kind": "panel_multiply",
+        "inputs": [
+            {"shape": [n, bm, bk], "dtype": "f32", "role": "a_stack"},
+            {"shape": [n, bk, bn], "dtype": "f32", "role": "b_stack"},
+            {"shape": [1, 1], "dtype": "f32", "role": "eps"},
+        ],
+        "outputs": [{"shape": [n, bm, bn], "dtype": "f32", "role": "c_stack"}],
+        "capacity": n,
+        "block": [bm, bk, bn],
+    }
+    return to_hlo_text(lowered), entry
+
+
+def lower_sign_variant(name: str, n: int):
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(model.sign_step).lower(x)
+    entry = {
+        "name": name,
+        "kind": "sign_step",
+        "inputs": [{"shape": [n, n], "dtype": "f32", "role": "x"}],
+        "outputs": [{"shape": [n, n], "dtype": "f32", "role": "x_next"}],
+        "capacity": n,
+        "block": [n, n, n],
+    }
+    return to_hlo_text(lowered), entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: single-file sentinel")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, n, bm, bk, bn in model.VARIANTS:
+        text, entry = lower_gemm_variant(name, n, bm, bk, bn)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest.append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for name, n in model.SIGN_VARIANTS:
+        text, entry = lower_sign_variant(name, n)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest.append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Sentinel for make's dependency tracking.
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            f.write("\n".join(e["file"] for e in manifest) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} "
+          f"({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

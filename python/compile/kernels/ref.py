@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracle for the L1 kernel and the L2 model.
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and no
+cleverness — the ground truth the kernels are validated against in
+``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["batched_block_gemm_ref", "sign_step_ref", "frob_norms_ref"]
+
+
+def frob_norms_ref(stack):
+    """Frobenius norm of each block in a ``[n, r, c]`` stack."""
+    return jnp.sqrt(jnp.sum(stack * stack, axis=(1, 2)))
+
+
+def batched_block_gemm_ref(a, b, eps):
+    """Reference norm-filtered batched block GEMM.
+
+    Same contract as ``batched_gemm.batched_block_gemm``: keep product ``i``
+    iff ``||a_i||_F * ||b_i||_F > eps``, else contribute exactly zero.
+    """
+    eps = jnp.asarray(eps).reshape(())
+    prod = jnp.einsum("nij,njk->nik", a, b)
+    keep = (frob_norms_ref(a) * frob_norms_ref(b)) > eps
+    return jnp.where(keep[:, None, None], prod, jnp.zeros_like(prod))
+
+
+def sign_step_ref(x):
+    """One Newton-Schulz sign iteration on a dense panel (paper Eq. 3).
+
+    ``X_{n+1} = 1/2 * X_n @ (3I - X_n @ X_n)``
+    """
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=x.dtype)
+    return 0.5 * (x @ (3.0 * eye - x @ x))

@@ -1,0 +1,66 @@
+"""L2 JAX model: the compute graphs that get AOT-lowered for the rust L3.
+
+Two graphs, both calling the L1 Pallas kernel where the FLOPs are:
+
+* ``panel_multiply``: one DBCSR *local multiplication* — the per-tick
+  ``C_panel += A_panel * B_panel`` of Algorithms 1/2, expressed over the
+  fixed-capacity block-product stack the rust coordinator assembles
+  (``local/stacks.rs``).  Rust zero-pads the tail of the stack; padded
+  entries have zero operand norms and are therefore filtered out by the
+  kernel's own norm test (they contribute exactly 0).
+
+* ``sign_step``: one Newton-Schulz iteration of the matrix sign function
+  (paper Eq. 3) on a dense panel, used by the linear-scaling-DFT driver
+  example for its dense-oracle path.
+
+Build-time only: ``aot.py`` lowers these once to HLO text; python is never
+on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.batched_gemm import DEFAULT_TILE, batched_block_gemm
+
+__all__ = ["panel_multiply", "sign_step", "VARIANTS", "SIGN_VARIANTS"]
+
+
+def panel_multiply(a_stack, b_stack, eps, *, tile: int = DEFAULT_TILE):
+    """Norm-filtered batched block products for one tick of a multiplication.
+
+    Args:
+      a_stack: ``[n, bm, bk]`` f32 — left operand blocks (gathered by rust).
+      b_stack: ``[n, bk, bn]`` f32 — right operand blocks.
+      eps:     ``[1, 1]`` f32 — DBCSR on-the-fly filtering threshold.
+
+    Returns a 1-tuple (lowered with ``return_tuple=True``) with the
+    ``[n, bm, bn]`` product stack; rust scatters/accumulates it into the
+    C panel's blocked CSR structure.
+    """
+    return (batched_block_gemm(a_stack, b_stack, eps, tile=tile),)
+
+
+def sign_step(x):
+    """``X_{n+1} = 1/2 X_n (3 I - X_n^2)`` on a dense f32 panel (Eq. 3)."""
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=x.dtype)
+    x2 = jax.lax.dot(x, x)
+    return (0.5 * jax.lax.dot(x, 3.0 * eye - x2),)
+
+
+# AOT variants: (name, stack capacity, bm, bk, bn).  Block sizes follow
+# paper Table 1 — 23 (H2O-DFT-LS), 6 (S-E), 32 (Dense); capacities are
+# multiples of the Pallas tile.
+VARIANTS = [
+    ("batched_gemm_b6", 1024, 6, 6, 6),
+    ("batched_gemm_b23", 256, 23, 23, 23),
+    ("batched_gemm_b32", 256, 32, 32, 32),
+]
+
+# Dense sign-step panels for the DFT driver example.
+SIGN_VARIANTS = [
+    ("sign_step_n128", 128),
+    ("sign_step_n256", 256),
+]

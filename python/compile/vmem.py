@@ -1,0 +1,91 @@
+"""L1 performance estimator: VMEM footprint + MXU utilization per variant.
+
+``interpret=True`` gives CPU-numpy timings, which say nothing about real
+TPU performance — so, per DESIGN.md §Hardware-Adaptation, the TPU story
+is *structural*: does each kernel invocation fit VMEM with double
+buffering, and what fraction of the MXU's systolic throughput can the
+block shape feed?
+
+Usage::
+
+    cd python && python -m compile.vmem
+
+Also writes ``artifacts/vmem_report.json`` when artifacts exist.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from compile import model
+from compile.kernels.batched_gemm import DEFAULT_TILE
+
+# TPU-v4-ish envelope (per core).
+VMEM_BYTES = 16 * 2 ** 20
+MXU_DIM = 128  # systolic array edge
+F32 = 4
+
+
+def gemm_variant_report(name: str, n: int, bm: int, bk: int, bn: int,
+                        tile: int = DEFAULT_TILE) -> dict:
+    """VMEM/MXU analysis of one batched-GEMM variant."""
+    # One slab (grid step): [tile, bm, bk] + [tile, bk, bn] + [tile, bm, bn]
+    slab_in = tile * (bm * bk + bk * bn) * F32
+    slab_out = tile * bm * bn * F32
+    # BlockSpec pipelining double-buffers inputs; output single-buffered.
+    vmem = 2 * slab_in + slab_out
+    # MXU: a [bm, bk] x [bk, bn] product occupies a bm x bn corner of the
+    # 128x128 array for bk cycles; utilization = useful MACs / array MACs.
+    mxu_util = (bm * bn) / (MXU_DIM * MXU_DIM)
+    # Batched dot_general can pack independent products along the array
+    # when the compiler tiles the batch dim; the *shape* ceiling is:
+    packing = max(1, (MXU_DIM // bm) * (MXU_DIM // bn))
+    mxu_util_packed = min(1.0, mxu_util * packing)
+    # Arithmetic intensity (FLOPs per HBM byte for one slab).
+    flops = 2.0 * tile * bm * bk * bn
+    intensity = flops / (slab_in + slab_out)
+    return {
+        "name": name,
+        "capacity": n,
+        "block": [bm, bk, bn],
+        "tile": tile,
+        "grid_steps": n // tile,
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "fits_vmem": vmem <= VMEM_BYTES,
+        "mxu_util_single": mxu_util,
+        "mxu_util_packed_ceiling": mxu_util_packed,
+        "flops_per_byte": intensity,
+    }
+
+
+def full_report() -> list[dict]:
+    return [
+        gemm_variant_report(name, n, bm, bk, bn)
+        for name, n, bm, bk, bn in model.VARIANTS
+    ]
+
+
+def main() -> None:
+    rows = full_report()
+    print(f"{'variant':<20} {'vmem':>9} {'%vmem':>6} {'mxu1':>6} "
+          f"{'mxu-pack':>8} {'F/B':>6}")
+    for r in rows:
+        print(
+            f"{r['name']:<20} {r['vmem_bytes']:>9} "
+            f"{100 * r['vmem_frac']:>5.1f}% {100 * r['mxu_util_single']:>5.1f}% "
+            f"{100 * r['mxu_util_packed_ceiling']:>7.1f}% "
+            f"{r['flops_per_byte']:>6.1f}"
+        )
+        assert r["fits_vmem"], f"{r['name']} exceeds VMEM!"
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if os.path.isdir(out_dir):
+        path = os.path.join(out_dir, "vmem_report.json")
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.batched_gemm import batched_block_gemm
+from compile.kernels.ref import batched_block_gemm_ref, frob_norms_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_stack(rng, n, r, c, scale=1.0):
+    return jnp.asarray(rng.standard_normal((n, r, c)) * scale, jnp.float32)
+
+
+def _eps(v):
+    return jnp.full((1, 1), v, jnp.float32)
+
+
+class TestAgainstRef:
+    @pytest.mark.parametrize("n,tile", [(64, 64), (128, 64), (128, 32), (64, 16)])
+    @pytest.mark.parametrize("bm,bk,bn", [(6, 6, 6), (23, 23, 23), (32, 32, 32), (5, 7, 3)])
+    def test_matches_ref_no_filter(self, n, tile, bm, bk, bn):
+        rng = np.random.default_rng(42 + n + bm)
+        a = _rand_stack(rng, n, bm, bk)
+        b = _rand_stack(rng, n, bk, bn)
+        got = batched_block_gemm(a, b, _eps(-1.0), tile=tile)
+        want = batched_block_gemm_ref(a, b, -1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("eps", [0.0, 0.5, 2.0, 10.0, 1e3])
+    def test_matches_ref_with_filter(self, eps):
+        rng = np.random.default_rng(7)
+        # Mix of tiny and large blocks so the filter actually splits the batch.
+        a = jnp.concatenate(
+            [_rand_stack(rng, 32, 8, 8, 1e-4), _rand_stack(rng, 32, 8, 8, 3.0)]
+        )
+        b = jnp.concatenate(
+            [_rand_stack(rng, 32, 8, 8, 2.0), _rand_stack(rng, 32, 8, 8, 1e-4)]
+        )
+        got = batched_block_gemm(a, b, _eps(eps), tile=32)
+        want = batched_block_gemm_ref(a, b, eps)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_f64_inputs_upcast_safe(self):
+        # Kernel contract is f32; f64 input must be accepted via explicit cast.
+        rng = np.random.default_rng(3)
+        a64 = rng.standard_normal((64, 4, 4))
+        b64 = rng.standard_normal((64, 4, 4))
+        got = batched_block_gemm(
+            jnp.asarray(a64, jnp.float32), jnp.asarray(b64, jnp.float32), _eps(-1.0)
+        )
+        want = np.einsum("nij,njk->nik", a64, b64)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestFilterSemantics:
+    def test_filtered_products_are_exact_zero(self):
+        rng = np.random.default_rng(0)
+        a = _rand_stack(rng, 64, 6, 6, 1e-6)
+        b = _rand_stack(rng, 64, 6, 6, 1e-6)
+        out = np.asarray(batched_block_gemm(a, b, _eps(1.0)))
+        assert np.all(out == 0.0), "filtered products must contribute exactly 0"
+
+    def test_zero_padding_is_filtered(self):
+        # Rust pads partial stacks with zero blocks; with any eps >= 0 they
+        # are filtered (norm product 0 > eps is false) and contribute 0.
+        rng = np.random.default_rng(1)
+        a = _rand_stack(rng, 32, 6, 6)
+        b = _rand_stack(rng, 32, 6, 6)
+        pad = jnp.zeros((32, 6, 6), jnp.float32)
+        out = batched_block_gemm(
+            jnp.concatenate([a, pad]), jnp.concatenate([b, pad]), _eps(0.0)
+        )
+        np.testing.assert_allclose(
+            out[:32], batched_block_gemm_ref(a, b, 0.0), rtol=1e-5, atol=1e-6
+        )
+        assert np.all(np.asarray(out[32:]) == 0.0)
+
+    def test_threshold_is_strict_greater(self):
+        # A block pair with norm product exactly eps must be dropped.
+        a = jnp.ones((64, 1, 1), jnp.float32) * 2.0  # norm 2
+        b = jnp.ones((64, 1, 1), jnp.float32) * 3.0  # norm 3
+        out = np.asarray(batched_block_gemm(a, b, _eps(6.0)))
+        assert np.all(out == 0.0)
+        out = np.asarray(batched_block_gemm(a, b, _eps(6.0 - 1e-3)))
+        assert np.all(out == 6.0)
+
+    def test_norms_ref(self):
+        stack = jnp.asarray([[[3.0, 4.0]], [[0.0, 0.0]]], jnp.float32)
+        np.testing.assert_allclose(frob_norms_ref(stack), [5.0, 0.0])
+
+
+class TestShapeErrors:
+    def test_stack_mismatch_raises(self):
+        a = jnp.zeros((64, 4, 5), jnp.float32)
+        b = jnp.zeros((64, 6, 4), jnp.float32)
+        with pytest.raises(ValueError, match="stack mismatch"):
+            batched_block_gemm(a, b, _eps(0.0))
+
+    def test_tile_must_divide(self):
+        a = jnp.zeros((60, 4, 4), jnp.float32)
+        b = jnp.zeros((60, 4, 4), jnp.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            batched_block_gemm(a, b, _eps(0.0), tile=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm=st.integers(1, 33),
+    bk=st.integers(1, 33),
+    bn=st.integers(1, 33),
+    ntiles=st.integers(1, 3),
+    tile=st.sampled_from([8, 16, 32]),
+    eps=st.floats(-1.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_kernel_equals_ref(bm, bk, bn, ntiles, tile, eps, seed):
+    """Hypothesis sweep: arbitrary block shapes/tiles/thresholds match ref."""
+    rng = np.random.default_rng(seed)
+    n = ntiles * tile
+    a = _rand_stack(rng, n, bm, bk)
+    b = _rand_stack(rng, n, bk, bn)
+    got = batched_block_gemm(a, b, _eps(eps), tile=tile)
+    want = batched_block_gemm_ref(a, b, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,69 @@
+"""L2 model graphs: shapes, numerics, sign-step convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import sign_step_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestPanelMultiply:
+    def test_returns_tuple(self):
+        a = jnp.ones((64, 6, 6), jnp.float32)
+        b = jnp.ones((64, 6, 6), jnp.float32)
+        out = model.panel_multiply(a, b, jnp.full((1, 1), -1.0, jnp.float32))
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (64, 6, 6)
+
+    @pytest.mark.parametrize("name,n,bm,bk,bn", model.VARIANTS)
+    def test_variant_shapes_lower(self, name, n, bm, bk, bn):
+        a = jax.ShapeDtypeStruct((n, bm, bk), jnp.float32)
+        b = jax.ShapeDtypeStruct((n, bk, bn), jnp.float32)
+        eps = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+        lowered = jax.jit(model.panel_multiply).lower(a, b, eps)
+        assert lowered is not None
+
+    def test_variant_capacity_is_tile_multiple(self):
+        from compile.kernels.batched_gemm import DEFAULT_TILE
+
+        for _, n, *_ in model.VARIANTS:
+            assert n % DEFAULT_TILE == 0
+
+
+class TestSignStep:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((32, 32)) * 0.1, jnp.float32)
+        x = 0.5 * (x + x.T)
+        (got,) = model.sign_step(x)
+        np.testing.assert_allclose(got, sign_step_ref(x), rtol=1e-4, atol=1e-5)
+
+    def test_converges_to_sign(self):
+        # Newton-Schulz converges when ||I - X^2|| < 1; scale by a bound on
+        # the spectral radius.
+        rng = np.random.default_rng(6)
+        m = rng.standard_normal((24, 24))
+        m = 0.5 * (m + m.T) + np.eye(24) * 0.1
+        x = jnp.asarray(m / (np.linalg.norm(m, 2) * 1.1), jnp.float32)
+        for _ in range(40):
+            (x,) = model.sign_step(x)
+        evals = np.linalg.eigvalsh(np.asarray(x, np.float64))
+        np.testing.assert_allclose(np.abs(evals), 1.0, atol=1e-3)
+
+    def test_sign_idempotent_on_identity(self):
+        x = jnp.eye(16, dtype=jnp.float32)
+        (got,) = model.sign_step(x)
+        np.testing.assert_allclose(got, x, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+    def test_property_step_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, n)) * 0.2, jnp.float32)
+        (got,) = model.sign_step(x)
+        np.testing.assert_allclose(got, sign_step_ref(x), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,38 @@
+"""VMEM/MXU estimator: every AOT variant must fit the TPU envelope."""
+
+from compile import model
+from compile.vmem import full_report, gemm_variant_report, VMEM_BYTES
+
+
+def test_all_variants_fit_vmem():
+    for r in full_report():
+        assert r["fits_vmem"], r
+        # comfortable margin: the DESIGN.md claim is ~1/10 of VMEM
+        assert r["vmem_frac"] < 0.25, r
+
+
+def test_report_covers_all_variants():
+    names = {r["name"] for r in full_report()}
+    assert names == {v[0] for v in model.VARIANTS}
+
+
+def test_mxu_packing_monotone_in_block_size():
+    # larger blocks feed the systolic array better per product
+    r6 = gemm_variant_report("b6", 1024, 6, 6, 6)
+    r32 = gemm_variant_report("b32", 256, 32, 32, 32)
+    assert r32["mxu_util_single"] > r6["mxu_util_single"]
+    # but packing ceilings are comparable (many small blocks tile the array)
+    assert r6["mxu_util_packed_ceiling"] > 0.4
+
+
+def test_intensity_grows_with_block_size():
+    r6 = gemm_variant_report("b6", 1024, 6, 6, 6)
+    r23 = gemm_variant_report("b23", 256, 23, 23, 23)
+    assert r23["flops_per_byte"] > r6["flops_per_byte"]
+
+
+def test_vmem_scales_with_tile():
+    small = gemm_variant_report("t", 256, 32, 32, 32, tile=32)
+    big = gemm_variant_report("t", 256, 32, 32, 32, tile=128)
+    assert big["vmem_bytes"] == 4 * small["vmem_bytes"]
+    assert big["vmem_bytes"] < VMEM_BYTES

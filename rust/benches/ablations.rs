@@ -1,0 +1,171 @@
+//! Ablation bench: isolate the design choices DESIGN.md calls out.
+//!
+//! 1. on-the-fly filter on/off — FLOPs skipped vs result fidelity;
+//! 2. randomized permutation vs identity distribution — load balance;
+//! 3. window-pool reuse vs naive create/free — collective count (§3's
+//!    "up to 5%" optimization);
+//! 4. DMAPP vs no-DMAPP pricing — the paper's 2.4x footnote;
+//! 5. wide vs narrow grids at equal P — the lcm(P_R,P_C) tick blowup.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::context::MultContext;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::perfmodel::replay::{replay_multiplication, ReplayConfig};
+use dbcsr::workloads::generator::{banded_for_spec, random_for_spec};
+use dbcsr::workloads::spec::BenchSpec;
+
+fn main() {
+    let bencher = Bencher::quick();
+
+    // ---- 1. on-the-fly filter ----------------------------------------
+    print_header("ablation: on-the-fly filter (H2O-like, decaying blocks)");
+    let spec = BenchSpec::h2o_dft_ls().scaled(40);
+    // strong decay so norm products span decades and the filter bites
+    let a = banded_for_spec(&spec, 3.0, 1);
+    let b = banded_for_spec(&spec, 3.0, 2);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+    for eps in [-1.0, 1e-6, 1e-3, 1e-1] {
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l: 1 },
+            filter: FilterConfig::uniform(eps),
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let m = bencher.run(&format!("filter eps={eps:.0e}"), || {
+            multiply_distributed(&a, &b, None, &dist, &cfg)
+                .unwrap()
+                .mult_stats
+                .products
+        });
+        println!(
+            "{}   [{} products, {} filtered]",
+            m.row(None),
+            rep.mult_stats.products,
+            rep.mult_stats.filtered
+        );
+    }
+
+    // ---- 2. permutation vs identity ----------------------------------
+    // Adversarial-but-physical structure: two atom kinds interleaved so
+    // that the heavy rows all share the same residue class — exactly the
+    // correlation a modulo distribution collapses onto one process row
+    // and the random permutation destroys (paper §2).
+    print_header("ablation: randomized permutation (load balance)");
+    let a_banded = {
+        use dbcsr::blocks::matrix::BlockCsrMatrix;
+        let dense_rows = BlockCsrMatrix::random(&layout, &layout, 0.9, 12);
+        let d = dense_rows.to_dense();
+        let mut out = dbcsr::blocks::dense::DenseMatrix::zeros(d.rows, d.cols);
+        let bs = spec.block_size;
+        for r in 0..d.rows {
+            // keep only rows whose block row is even (heavy kind)
+            if (r / bs) % 2 == 0 {
+                for c in 0..d.cols {
+                    out.set(r, c, d.get(r, c));
+                }
+            }
+        }
+        BlockCsrMatrix::from_dense(&out, &layout, &layout)
+    };
+    for (name, dist) in [
+        (
+            "random perm",
+            Distribution2d::rand_permuted(&layout, &layout, &grid, 5),
+        ),
+        (
+            "identity    ",
+            Distribution2d::identity(
+                layout.nblocks(),
+                layout.nblocks(),
+                layout.nblocks(),
+                grid,
+            ),
+        ),
+    ] {
+        let cfg = MultiplyConfig::default();
+        let rep = multiply_distributed(&a_banded, &a_banded, None, &dist, &cfg).unwrap();
+        // imbalance = max/mean flops across ranks
+        let flops: Vec<f64> = rep
+            .per_rank_logs
+            .iter()
+            .map(|l| l.total_flops())
+            .collect();
+        let mean = flops.iter().sum::<f64>() / flops.len() as f64;
+        let max = flops.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "{name}  flops max/mean = {:.2} (1.0 is perfect balance)",
+            max / mean.max(1.0)
+        );
+    }
+
+    // ---- 3. window-pool reuse ------------------------------------------
+    print_header("ablation: grow-only window pool vs per-mult create/free");
+    let a = random_for_spec(&spec, 6);
+    let b = random_for_spec(&spec, 7);
+    let mut ctx = MultContext::new(
+        Distribution2d::rand_permuted(&layout, &layout, &grid, 8),
+        MultiplyConfig {
+            engine: Engine::OneSided { l: 1 },
+            ..Default::default()
+        },
+    );
+    for _ in 0..10 {
+        ctx.multiply(&a, &b, None).unwrap();
+    }
+    let p = ctx.pool_stats();
+    println!(
+        "10 multiplications: pooled collectives = {} vs naive = {} \
+         ({} reallocation(s), high-water {} KB/rank)",
+        p.pooled_collectives(),
+        p.naive_collectives,
+        p.reallocations,
+        p.high_water_bytes / 1024
+    );
+
+    // ---- 4. DMAPP pricing (modeled) ------------------------------------
+    print_header("ablation: RMA with vs without DMAPP (modeled, paper: 2.4x)");
+    for nodes in [400usize, 2704] {
+        let mk = |no_dmapp| {
+            replay_multiplication(&ReplayConfig {
+                spec: BenchSpec::h2o_dft_ls(),
+                grid: ProcGrid::squarest(nodes).unwrap(),
+                engine: Engine::OneSided { l: 1 },
+                no_dmapp,
+            })
+            .exec_time_s
+        };
+        let with = mk(false);
+        let without = mk(true);
+        println!(
+            "H2O @{nodes:>5}: DMAPP {with:.0}s  no-DMAPP {without:.0}s  ({:.2}x)",
+            without / with
+        );
+    }
+
+    // ---- 5. grid shape at equal P ---------------------------------------
+    print_header("ablation: grid shape at P=12 (V = lcm blowup)");
+    let spec12 = BenchSpec::dense().scaled(24);
+    let a = random_for_spec(&spec12, 9);
+    let b = random_for_spec(&spec12, 10);
+    let l12 = spec12.layout();
+    for (pr, pc) in [(3, 4), (2, 6), (1, 12)] {
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&l12, &l12, &grid, 11);
+        let cfg = MultiplyConfig::default();
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        println!(
+            "{pr}x{pc}: V = {:>2} ticks, {:>7.3} MB/rank requested",
+            grid.virtual_dim(),
+            rep.avg_requested_bytes() / 1e6
+        );
+    }
+}

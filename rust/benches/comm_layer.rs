@@ -1,0 +1,89 @@
+//! Bench: the simulated MPI fabric — PTP message rate, RMA get rate,
+//! collective latency; the L3 cost floor under the engines.
+//!
+//! ```bash
+//! cargo bench --bench comm_layer
+//! ```
+
+use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::blocks::panel::Panel;
+use dbcsr::comm::world::{Payload, SimWorld, TrafficClass};
+use std::collections::HashMap;
+
+fn make_panel(blocks: usize, bs: usize) -> Panel {
+    let mut p = Panel::new();
+    let data = vec![1.0f64; bs * bs];
+    for i in 0..blocks {
+        p.push_block(i as u32, 0, bs as u16, bs as u16, &data);
+    }
+    p
+}
+
+fn main() {
+    let bencher = Bencher::default();
+
+    print_header("ptp ping-pong (2 ranks)");
+    for (blocks, bs) in [(4usize, 6usize), (16, 23), (64, 32)] {
+        let panel = make_panel(blocks, bs);
+        let bytes = panel.wire_bytes();
+        let m = bencher.run(&format!("ptp {blocks} blocks b{bs} ({bytes} B)"), || {
+            let w = SimWorld::new(2);
+            let p = panel.clone();
+            w.run(move |c| {
+                if c.rank() == 0 {
+                    c.isend(1, 1, TrafficClass::MatrixA, Payload::Panel(p.clone()));
+                    let r = c.irecv(1, 2, TrafficClass::MatrixA);
+                    c.wait(r);
+                } else {
+                    let r = c.irecv(0, 1, TrafficClass::MatrixA);
+                    c.wait(r);
+                    c.isend(0, 2, TrafficClass::MatrixA, Payload::Panel(p.clone()));
+                }
+            });
+        });
+        println!("{}", m.row(Some((2.0 * bytes as f64, "B"))));
+    }
+
+    print_header("rma window create + rget fan-in (4 ranks)");
+    for (blocks, bs) in [(4usize, 6usize), (16, 23)] {
+        let panel = make_panel(blocks, bs);
+        let bytes = panel.wire_bytes();
+        let m = bencher.run(&format!("rget {blocks} blocks b{bs}"), || {
+            let w = SimWorld::new(4);
+            let p = panel.clone();
+            w.run(move |c| {
+                let mut dir = HashMap::new();
+                dir.insert(c.rank() as u64, p.clone());
+                c.win_create("w", dir);
+                // everyone reads everyone (passive target)
+                for target in 0..c.size() {
+                    let _ = c.rget("w", target, target as u64, TrafficClass::MatrixA).wait();
+                }
+                c.win_free("w");
+            });
+        });
+        println!("{}", m.row(Some((16.0 * bytes as f64, "B"))));
+    }
+
+    print_header("collectives (4 ranks)");
+    let m = bencher.run("barrier x10", || {
+        let w = SimWorld::new(4);
+        w.run(|c| {
+            for _ in 0..10 {
+                c.barrier();
+            }
+        });
+    });
+    println!("{}", m.row(None));
+    let m = bencher.run("allreduce_max x10", || {
+        let w = SimWorld::new(4);
+        w.run(|c| {
+            let mut x = c.rank() as u64;
+            for _ in 0..10 {
+                x = c.allreduce_max(x);
+            }
+            x
+        });
+    });
+    println!("{}", m.row(None));
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate paper **Figure 4** (weak scaling) — the modeled
+//! 144–3844-node series plus timed real weak-scaling steps.
+//!
+//! ```bash
+//! cargo bench --bench fig4_weak_scaling
+//! ```
+
+use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::stats::report;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+fn main() {
+    print!("{}", report::fig4());
+
+    let bencher = Bencher::quick();
+    print_header("real weak-scaling steps (wall time, this box)");
+    for (pr, pc) in [(1, 1), (2, 2), (3, 3)] {
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let nblocks = 10 * grid.size();
+        let mut spec = BenchSpec::s_e().scaled(nblocks);
+        spec.occupancy = (0.5 / grid.size() as f64).min(1.0);
+        let a = random_for_spec(&spec, 1);
+        let b = random_for_spec(&spec, 2);
+        let layout = spec.layout();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let m = bencher.run(
+                &format!("S-E weak {}r {}", grid.size(), engine.label()),
+                || multiply_distributed(&a, &b, None, &dist, &cfg).unwrap().c.nnz_blocks(),
+            );
+            println!("{}", m.row(None));
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Bench: the node-local hot path — microkernel GEMM, batch assembly,
+//! full panel products, and the PJRT/Pallas artifact path.
+//!
+//! ```bash
+//! cargo bench --bench local_multiply
+//! ```
+
+use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::blocks::build::BlockAccumulator;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::local::batch::{assemble_tasks, matrix_to_panel, multiply_panels_native, LocalMultStats};
+use dbcsr::local::microkernel::{gemm_acc, gemm_flops};
+use dbcsr::util::prng::Pcg64;
+
+fn main() {
+    let bencher = Bencher::default();
+
+    // --- raw microkernel at the paper's block sizes --------------------
+    print_header("microkernel gemm_acc (paper block sizes)");
+    let mut rng = Pcg64::new(1);
+    for &s in &[6usize, 23, 32] {
+        let a: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0; s * s];
+        let m = bencher.run(&format!("gemm {s}x{s}x{s}"), || {
+            gemm_acc(s, s, s, &a, &b, &mut c);
+            c[0]
+        });
+        println!("{}", m.row(Some((gemm_flops(s, s, s), "FLOP"))));
+    }
+
+    // --- batch assembly + full panel multiply --------------------------
+    print_header("panel multiply (assembly + filter + execute)");
+    for (nb, bs, occ) in [(64usize, 6usize, 0.3), (32, 23, 0.3), (24, 32, 1.0)] {
+        let l = BlockLayout::uniform(nb, bs);
+        let a = BlockCsrMatrix::random(&l, &l, occ, 7);
+        let b = BlockCsrMatrix::random(&l, &l, occ, 8);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let mut st = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut st);
+        let flops: f64 = tasks.len() as f64 * gemm_flops(bs, bs, bs);
+        let m = bencher.run(&format!("panel {nb}x{nb} b{bs} occ {occ}"), || {
+            let mut acc = BlockAccumulator::new();
+            multiply_panels_native(&pa, &pb, -1.0, &mut acc);
+            acc.nblocks()
+        });
+        println!("{}", m.row(Some((flops, "FLOP"))));
+        let m = bencher.run(&format!("assemble-only {nb}x{nb} b{bs}"), || {
+            let mut st = LocalMultStats::default();
+            assemble_tasks(&pa, &pb, -1.0, &mut st).len()
+        });
+        println!("{}", m.row(None));
+    }
+
+    // --- PJRT / Pallas artifact path ------------------------------------
+    match dbcsr::runtime::client::PjrtContext::load("artifacts") {
+        Ok(ctx) => {
+            print_header("AOT Pallas kernel via PJRT (f32)");
+            for (nb, bs) in [(64usize, 6usize), (32, 23), (24, 32)] {
+                let l = BlockLayout::uniform(nb, bs);
+                let a = BlockCsrMatrix::random(&l, &l, 0.5, 9);
+                let b = BlockCsrMatrix::random(&l, &l, 0.5, 10);
+                let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+                let mut st = LocalMultStats::default();
+                let ntasks = assemble_tasks(&pa, &pb, -1.0, &mut st).len();
+                let flops = ntasks as f64 * gemm_flops(bs, bs, bs);
+                let m = bencher.run(&format!("pjrt panel b{bs} ({ntasks} prods)"), || {
+                    let mut acc = BlockAccumulator::new();
+                    dbcsr::runtime::gemm::multiply_panels_pjrt(&ctx, &pa, &pb, -1.0, &mut acc)
+                        .unwrap();
+                    acc.nblocks()
+                });
+                println!("{}", m.row(Some((flops, "FLOP"))));
+            }
+        }
+        Err(e) => println!("\npjrt benches skipped: {e}"),
+    }
+}

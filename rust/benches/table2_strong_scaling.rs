@@ -1,0 +1,53 @@
+//! Bench: regenerate paper **Table 2** (strong scaling) — modeled rows
+//! at paper scale plus timed real multiplications at simulation scale.
+//!
+//! ```bash
+//! cargo bench --bench table2_strong_scaling
+//! ```
+
+use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::stats::report;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+fn main() {
+    // --- the paper table itself (analytic replay; fast) ---------------
+    print!("{}", report::table1());
+    println!();
+    print!("{}", report::table2());
+    println!();
+    print!("{}", report::fig1());
+
+    // --- timed real end-to-end multiplications -------------------------
+    let bencher = Bencher::quick();
+    print_header("real simulated multiplications (wall time, this box)");
+    for (bench, nblocks) in [("h2o", 36usize), ("s-e", 48), ("dense", 24)] {
+        let spec = BenchSpec::by_name(bench).unwrap().scaled(nblocks);
+        let a = random_for_spec(&spec, 1);
+        let b = random_for_spec(&spec, 2);
+        let layout = spec.layout();
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+        let flops = {
+            let cfg = MultiplyConfig::default();
+            multiply_distributed(&a, &b, None, &dist, &cfg)
+                .unwrap()
+                .mult_stats
+                .flops
+        };
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }, Engine::OneSided { l: 4 }] {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let m = bencher.run(
+                &format!("{} {} 2x2 ({} blk)", spec.name, engine.label(), nblocks),
+                || multiply_distributed(&a, &b, None, &dist, &cfg).unwrap().c.nnz_blocks(),
+            );
+            println!("{}", m.row(Some((flops, "FLOP"))));
+        }
+    }
+}

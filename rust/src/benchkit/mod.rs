@@ -1,0 +1,182 @@
+//! Micro-benchmark harness (offline `criterion` stand-in).
+//!
+//! Measures a closure with warmup + timed iterations and reports
+//! mean / σ / min / p50 / p95 wall time and derived throughput.  The bench
+//! binaries in `rust/benches/` use this with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (times in seconds).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl Measurement {
+    /// Throughput in `units/s` given the per-iteration work amount.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+
+    /// Render a human row, optionally with throughput.
+    pub fn row(&self, units_per_iter: Option<(f64, &str)>) -> String {
+        let base = format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            fmt_time(self.p95_s),
+        );
+        match units_per_iter {
+            Some((u, unit)) => format!("{base}  {:>12.3} {unit}/s", self.throughput(u)),
+            None => base,
+        }
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 10_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(200),
+            min_iters: 2,
+            max_iters: 1000,
+        }
+    }
+
+    /// Run the closure until the measurement budget is exhausted.
+    ///
+    /// The closure's return value is passed through `std::hint::black_box`
+    /// so the optimizer cannot elide the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup, also estimates per-iteration cost.
+        let wstart = Instant::now();
+        let mut witers = 0usize;
+        while wstart.elapsed() < self.warmup || witers < 1 {
+            std::hint::black_box(f());
+            witers += 1;
+            if witers >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / witers as f64;
+        let target = ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(name, &mut samples)
+    }
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> Measurement {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: samples[0],
+        p50_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n.max(1)],
+    }
+}
+
+/// Print the standard header that aligns with [`Measurement::row`].
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "std", "min", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 100_000,
+        };
+        let m = b.run("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.iters >= 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s);
+        assert!(m.p50_s <= m.p95_s || m.iters < 20);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            mean_s: 0.5,
+            std_s: 0.0,
+            min_s: 0.5,
+            p50_s: 0.5,
+            p95_s: 0.5,
+        };
+        assert_eq!(m.throughput(10.0), 20.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Accumulating assembler: COO block contributions → blocked CSR.
+//!
+//! The multiplication engines produce C contributions block-by-block (and,
+//! in the 2.5D case, partial panels that must be reduced); this builder
+//! accumulates them and finalizes into a [`BlockCsrMatrix`] or a
+//! [`Panel`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::blocks::layout::BlockLayout;
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::panel::Panel;
+
+/// Block accumulator keyed by (block_row, block_col); blocks carry their
+/// dims so accumulations can be re-panelized without a layout.
+#[derive(Clone, Debug, Default)]
+pub struct BlockAccumulator {
+    blocks: HashMap<(u32, u32), (u16, u16, Vec<f64>)>,
+}
+
+impl BlockAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add (accumulate) a block contribution of dims `nr × nc`.
+    pub fn add_block(&mut self, row: u32, col: u32, nr: u16, nc: u16, data: &[f64]) {
+        debug_assert_eq!(data.len(), nr as usize * nc as usize);
+        match self.blocks.entry((row, col)) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let (enr, enc, acc) = e.get_mut();
+                debug_assert_eq!((*enr, *enc), (nr, nc), "block shape changed");
+                for (x, &y) in acc.iter_mut().zip(data) {
+                    *x += y;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert((nr, nc, data.to_vec()));
+            }
+        }
+    }
+
+    /// Mutable access to the block at `(row, col)`, zero-initialized if
+    /// absent — the in-place accumulation target the microkernel writes
+    /// into (avoids a temporary product buffer).
+    pub fn block_mut(&mut self, row: u32, col: u32, nr: u16, nc: u16) -> &mut [f64] {
+        let (_, _, data) = self
+            .blocks
+            .entry((row, col))
+            .or_insert_with(|| (nr, nc, vec![0.0; nr as usize * nc as usize]));
+        data
+    }
+
+    /// Accumulate every block of a panel (the 2.5D C reduction step).
+    pub fn add_panel(&mut self, panel: &Panel) {
+        for (e, en) in panel.entries.iter().enumerate() {
+            self.add_block(en.row, en.col, en.nr, en.nc, panel.block(e));
+        }
+    }
+
+    /// Number of distinct blocks accumulated so far.
+    pub fn nblocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Total accumulated elements (C panel size, the paper's `S_C`).
+    pub fn nelements(&self) -> usize {
+        self.blocks.values().map(|(_, _, d)| d.len()).sum()
+    }
+
+    /// Convert into a panel (entries sorted by (row, col) for
+    /// determinism).
+    pub fn into_panel(self) -> Panel {
+        let mut items: Vec<((u32, u32), (u16, u16, Vec<f64>))> =
+            self.blocks.into_iter().collect();
+        items.sort_unstable_by_key(|(k, _)| *k);
+        let mut p = Panel::new();
+        for ((r, c), (nr, nc, data)) in items {
+            p.push_block(r, c, nr, nc, &data);
+        }
+        p
+    }
+
+    /// Finalize into a blocked CSR matrix over the given layouts.
+    pub fn into_matrix(
+        self,
+        row_layout: Arc<BlockLayout>,
+        col_layout: Arc<BlockLayout>,
+    ) -> BlockCsrMatrix {
+        let mut rows: Vec<Vec<(usize, Vec<f64>)>> = vec![Vec::new(); row_layout.nblocks()];
+        for ((r, c), (_, _, data)) in self.blocks {
+            rows[r as usize].push((c as usize, data));
+        }
+        for row in &mut rows {
+            row.sort_unstable_by_key(|(c, _)| *c);
+        }
+        BlockCsrMatrix::from_sorted_rows(row_layout, col_layout, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_duplicates() {
+        let mut acc = BlockAccumulator::new();
+        acc.add_block(1, 2, 1, 2, &[1.0, 1.0]);
+        acc.add_block(1, 2, 1, 2, &[2.0, 3.0]);
+        acc.add_block(0, 0, 1, 1, &[5.0]);
+        assert_eq!(acc.nblocks(), 2);
+        assert_eq!(acc.nelements(), 3);
+        let rl = BlockLayout::from_sizes(vec![1, 1]);
+        let cl = BlockLayout::from_sizes(vec![1, 2, 2]);
+        let m = acc.into_matrix(Arc::new(rl), Arc::new(cl));
+        assert_eq!(m.get_block(1, 2).unwrap(), &[3.0, 4.0]);
+        assert_eq!(m.get_block(0, 0).unwrap(), &[5.0]);
+    }
+
+    #[test]
+    fn block_mut_zero_initialized() {
+        let mut acc = BlockAccumulator::new();
+        {
+            let b = acc.block_mut(0, 1, 2, 2);
+            assert_eq!(b, &[0.0; 4]);
+            b[3] = 7.0;
+        }
+        let b = acc.block_mut(0, 1, 2, 2);
+        assert_eq!(b[3], 7.0);
+    }
+
+    #[test]
+    fn add_panel_accumulates() {
+        let mut p = Panel::new();
+        p.push_block(0, 0, 1, 1, &[1.0]);
+        p.push_block(0, 1, 1, 1, &[2.0]);
+        let mut acc = BlockAccumulator::new();
+        acc.add_panel(&p);
+        acc.add_panel(&p);
+        let out = acc.into_panel();
+        assert_eq!(out.nblocks(), 2);
+        assert_eq!(out.block(0), &[2.0]);
+        assert_eq!(out.block(1), &[4.0]);
+    }
+
+    #[test]
+    fn into_panel_sorted() {
+        let mut acc = BlockAccumulator::new();
+        acc.add_block(1, 0, 1, 1, &[9.0]);
+        acc.add_block(0, 3, 1, 1, &[1.0]);
+        acc.add_block(0, 1, 1, 1, &[2.0]);
+        let p = acc.into_panel();
+        let coords: Vec<(u32, u32)> = p.entries.iter().map(|e| (e.row, e.col)).collect();
+        assert_eq!(coords, vec![(0, 1), (0, 3), (1, 0)]);
+    }
+
+    #[test]
+    fn into_matrix_sorted_rows() {
+        let mut acc = BlockAccumulator::new();
+        acc.add_block(0, 3, 1, 1, &[1.0]);
+        acc.add_block(0, 1, 1, 1, &[2.0]);
+        let l = BlockLayout::uniform(4, 1);
+        let m = acc.into_matrix(Arc::new(l.clone()), Arc::new(l));
+        let cols: Vec<usize> = m.row(0).map(|(c, _)| c).collect();
+        assert_eq!(cols, vec![1, 3]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Dense matrices: the single-rank oracle the distributed engines are
+//! validated against, and the workhorse for small spectral checks.
+
+use crate::util::prng::Pcg64;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Standard-normal random matrix.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        Self {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] += v;
+    }
+
+    /// `self @ other` (naive triple loop with ikj order).
+    pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (cv, &bv) in crow.iter_mut().zip(orow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self + alpha * other`.
+    pub fn axpy(&self, alpha: f64, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (o, &x) in out.data.iter_mut().zip(&other.data) {
+            *o += alpha * x;
+        }
+        out
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Crude 2-norm upper bound: sqrt(‖·‖₁ · ‖·‖∞) (Higham 2008).
+    pub fn norm2_upper_bound(&self) -> f64 {
+        let mut col_sums = vec![0.0f64; self.cols];
+        let mut row_max = 0.0f64;
+        for r in 0..self.rows {
+            let mut row_sum = 0.0;
+            for c in 0..self.cols {
+                let v = self.get(r, c).abs();
+                row_sum += v;
+                col_sums[c] += v;
+            }
+            row_max = row_max.max(row_sum);
+        }
+        let col_max = col_sums.iter().copied().fold(0.0, f64::max);
+        (row_max * col_max).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::assert_close;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let b = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 1.0, 1.0, 1.0],
+        };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Pcg64::new(1);
+        let a = DenseMatrix::randn(5, 5, &mut rng);
+        let i = DenseMatrix::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn rect_matmul_shapes() {
+        let mut rng = Pcg64::new(2);
+        let a = DenseMatrix::randn(3, 7, &mut rng);
+        let b = DenseMatrix::randn(7, 4, &mut rng);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        // check one entry by hand
+        let mut want = 0.0;
+        for k in 0..7 {
+            want += a.get(1, k) * b.get(k, 2);
+        }
+        assert_close(c.get(1, 2), want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let a = DenseMatrix::eye(2);
+        let b = DenseMatrix::eye(2);
+        let mut c = a.axpy(2.0, &b);
+        assert_eq!(c.get(0, 0), 3.0);
+        c.scale(0.5);
+        assert_eq!(c.get(1, 1), 1.5);
+    }
+
+    #[test]
+    fn norm2_bound_dominates() {
+        let mut rng = Pcg64::new(3);
+        let a = DenseMatrix::randn(10, 10, &mut rng);
+        // Power iteration estimate of the true 2-norm.
+        let mut v = vec![1.0; 10];
+        for _ in 0..50 {
+            let mut w = vec![0.0; 10];
+            for r in 0..10 {
+                for c in 0..10 {
+                    w[r] += a.get(r, c) * v[c];
+                }
+            }
+            let n = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in &mut w {
+                *x /= n;
+            }
+            v = w;
+        }
+        let mut av = vec![0.0; 10];
+        for r in 0..10 {
+            for c in 0..10 {
+                av[r] += a.get(r, c) * v[c];
+            }
+        }
+        let sigma = av.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(a.norm2_upper_bound() >= sigma * 0.999);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(4);
+        let a = DenseMatrix::randn(4, 6, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

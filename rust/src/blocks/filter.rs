@@ -1,0 +1,153 @@
+//! Threshold filtering (paper §1/§2).
+//!
+//! DBCSR retains sparsity through the sign iteration with a *filtering
+//! multiplication* in two phases:
+//!
+//! * **on-the-fly**: during the multiplication, a block product
+//!   `A_rk · B_kc` is skipped unless `‖A_rk‖_F · ‖B_kc‖_F > eps`
+//!   (implemented in `local/` and in the L1 Pallas kernel);
+//! * **post-multiplication**: result blocks with `‖C_rc‖_F ≤ eps` are
+//!   removed after the multiplication (this module).
+
+use std::sync::Arc;
+
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::norms::block_norm;
+
+/// Filtering configuration shared by both phases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FilterConfig {
+    /// On-the-fly threshold: skip products with `‖A‖·‖B‖ ≤ eps`.
+    /// Negative disables on-the-fly filtering.
+    pub on_the_fly_eps: f64,
+    /// Post-multiplication threshold: drop result blocks with `‖C‖ ≤ eps`.
+    /// Negative disables post-filtering.
+    pub post_eps: f64,
+}
+
+impl Default for FilterConfig {
+    fn default() -> Self {
+        Self {
+            on_the_fly_eps: -1.0,
+            post_eps: -1.0,
+        }
+    }
+}
+
+impl FilterConfig {
+    /// The CP2K-style setting: both phases at the same threshold.
+    pub fn uniform(eps: f64) -> Self {
+        Self {
+            on_the_fly_eps: eps,
+            post_eps: eps,
+        }
+    }
+
+    /// No filtering at all (exact multiplication).
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// Remove all blocks with Frobenius norm `<= eps`; returns the filtered
+/// matrix and the number of removed blocks.
+pub fn filter_blocks(m: &BlockCsrMatrix, eps: f64) -> (BlockCsrMatrix, usize) {
+    if eps < 0.0 {
+        return (m.clone(), 0);
+    }
+    let mut removed = 0usize;
+    let mut rows: Vec<Vec<(usize, Vec<f64>)>> =
+        vec![Vec::new(); m.row_layout().nblocks()];
+    for (r, c, blk) in m.iter_blocks() {
+        if block_norm(blk) > eps {
+            rows[r].push((c, blk.to_vec()));
+        } else {
+            removed += 1;
+        }
+    }
+    let out = BlockCsrMatrix::from_sorted_rows(
+        Arc::new(m.row_layout().clone()),
+        Arc::new(m.col_layout().clone()),
+        rows,
+    );
+    (out, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::layout::BlockLayout;
+    use crate::util::prng::Pcg64;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn negative_eps_keeps_everything() {
+        let l = BlockLayout::uniform(8, 2);
+        let m = BlockCsrMatrix::random(&l, &l, 0.5, 1);
+        let (f, removed) = filter_blocks(&m, -1.0);
+        assert_eq!(removed, 0);
+        assert_eq!(f.nnz_blocks(), m.nnz_blocks());
+    }
+
+    #[test]
+    fn large_eps_removes_everything() {
+        let l = BlockLayout::uniform(8, 2);
+        let m = BlockCsrMatrix::random(&l, &l, 0.5, 1);
+        let (f, removed) = filter_blocks(&m, 1e9);
+        assert_eq!(removed, m.nnz_blocks());
+        assert_eq!(f.nnz_blocks(), 0);
+    }
+
+    #[test]
+    fn filter_monotone_in_eps() {
+        let l = BlockLayout::uniform(16, 3);
+        let m = BlockCsrMatrix::random(&l, &l, 0.4, 2);
+        property("filter monotone", 4, 20, |rng, _| {
+            let e1 = rng.range_f64(0.0, 0.5);
+            let e2 = e1 + rng.range_f64(0.0, 0.5);
+            let (f1, _) = filter_blocks(&m, e1);
+            let (f2, _) = filter_blocks(&m, e2);
+            if f2.nnz_blocks() > f1.nnz_blocks() {
+                return Err(format!(
+                    "eps {e2} kept more blocks ({}) than eps {e1} ({})",
+                    f2.nnz_blocks(),
+                    f1.nnz_blocks()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn surviving_blocks_unchanged() {
+        let l = BlockLayout::uniform(8, 2);
+        let m = BlockCsrMatrix::random(&l, &l, 0.5, 3);
+        let (f, _) = filter_blocks(&m, 0.1);
+        for (r, c, blk) in f.iter_blocks() {
+            assert_eq!(m.get_block(r, c).unwrap(), blk);
+        }
+    }
+
+    #[test]
+    fn filter_config_presets() {
+        let u = FilterConfig::uniform(1e-5);
+        assert_eq!(u.on_the_fly_eps, 1e-5);
+        assert_eq!(u.post_eps, 1e-5);
+        let n = FilterConfig::none();
+        assert!(n.on_the_fly_eps < 0.0 && n.post_eps < 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let l = BlockLayout::uniform(8, 2);
+        let m1 = BlockCsrMatrix::random(&l, &l, 0.5, 7);
+        let m2 = BlockCsrMatrix::random(&l, &l, 0.5, 7);
+        assert_eq!(m1.nnz_blocks(), m2.nnz_blocks());
+        let mut rng = Pcg64::new(0);
+        let eps = rng.f64();
+        let (f1, r1) = filter_blocks(&m1, eps);
+        let (f2, r2) = filter_blocks(&m2, eps);
+        assert_eq!(r1, r2);
+        assert_eq!(f1.nnz_blocks(), f2.nnz_blocks());
+    }
+}

@@ -1,0 +1,111 @@
+//! Block layouts: the partition of a matrix dimension into block rows/cols.
+
+/// Partition of one matrix dimension into contiguous blocks.
+///
+/// `sizes[b]` is the width of block `b`; `offsets[b]` its first element
+/// index; `offsets[nblocks] == dim`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    sizes: Vec<usize>,
+    offsets: Vec<usize>,
+}
+
+impl BlockLayout {
+    /// Layout with `nblocks` blocks, all of width `size`.
+    pub fn uniform(nblocks: usize, size: usize) -> Self {
+        assert!(size > 0, "block size must be positive");
+        Self::from_sizes(vec![size; nblocks])
+    }
+
+    /// Layout from explicit block sizes.
+    pub fn from_sizes(sizes: Vec<usize>) -> Self {
+        assert!(sizes.iter().all(|&s| s > 0), "block sizes must be positive");
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for &s in &sizes {
+            acc += s;
+            offsets.push(acc);
+        }
+        Self { sizes, offsets }
+    }
+
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total dimension (sum of block sizes).
+    pub fn dim(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Width of block `b`.
+    pub fn size(&self, b: usize) -> usize {
+        self.sizes[b]
+    }
+
+    /// First element index of block `b`.
+    pub fn offset(&self, b: usize) -> usize {
+        self.offsets[b]
+    }
+
+    /// All block sizes.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Block containing element index `e` (binary search).
+    pub fn block_of(&self, e: usize) -> usize {
+        assert!(e < self.dim(), "element {e} out of range {}", self.dim());
+        match self.offsets.binary_search(&e) {
+            Ok(b) => b,
+            Err(ins) => ins - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_layout() {
+        let l = BlockLayout::uniform(4, 23);
+        assert_eq!(l.nblocks(), 4);
+        assert_eq!(l.dim(), 92);
+        assert_eq!(l.offset(2), 46);
+        assert_eq!(l.size(3), 23);
+    }
+
+    #[test]
+    fn ragged_layout_offsets() {
+        let l = BlockLayout::from_sizes(vec![2, 5, 1, 7]);
+        assert_eq!(l.dim(), 15);
+        assert_eq!(l.offset(0), 0);
+        assert_eq!(l.offset(3), 8);
+    }
+
+    #[test]
+    fn block_of_finds_blocks() {
+        let l = BlockLayout::from_sizes(vec![2, 5, 1, 7]);
+        assert_eq!(l.block_of(0), 0);
+        assert_eq!(l.block_of(1), 0);
+        assert_eq!(l.block_of(2), 1);
+        assert_eq!(l.block_of(6), 1);
+        assert_eq!(l.block_of(7), 2);
+        assert_eq!(l.block_of(14), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_of_out_of_range_panics() {
+        BlockLayout::uniform(2, 3).block_of(6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_block_size_panics() {
+        BlockLayout::from_sizes(vec![3, 0]);
+    }
+}

@@ -1,0 +1,383 @@
+//! Blocked compressed-sparse-row matrix storage (the DBCSR format).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::blocks::dense::DenseMatrix;
+use crate::blocks::layout::BlockLayout;
+use crate::util::prng::Pcg64;
+
+/// A block-sparse matrix in blocked CSR format.
+///
+/// Block row `r` owns the index range `row_ptr[r]..row_ptr[r+1]` of
+/// `col_idx`/`block_off`; `block_off[e]` is the offset of entry `e`'s dense
+/// block (row-major, `row_sizes[r] x col_sizes[col_idx[e]]`) in `data`.
+/// Column indices within a row are strictly increasing.
+#[derive(Clone, Debug)]
+pub struct BlockCsrMatrix {
+    row_layout: Arc<BlockLayout>,
+    col_layout: Arc<BlockLayout>,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    block_off: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl BlockCsrMatrix {
+    /// Empty (all-zero) matrix over the given layouts.
+    pub fn empty(row_layout: &BlockLayout, col_layout: &BlockLayout) -> Self {
+        Self {
+            row_layout: Arc::new(row_layout.clone()),
+            col_layout: Arc::new(col_layout.clone()),
+            row_ptr: vec![0; row_layout.nblocks() + 1],
+            col_idx: Vec::new(),
+            block_off: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Build from per-row sorted entries: `rows[r]` is a sorted
+    /// `(block_col, block_data)` list. Internal assembler entry point.
+    pub(crate) fn from_sorted_rows(
+        row_layout: Arc<BlockLayout>,
+        col_layout: Arc<BlockLayout>,
+        rows: Vec<Vec<(usize, Vec<f64>)>>,
+    ) -> Self {
+        assert_eq!(rows.len(), row_layout.nblocks());
+        let nnzb: usize = rows.iter().map(|r| r.len()).sum();
+        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+        let mut col_idx = Vec::with_capacity(nnzb);
+        let mut block_off = Vec::with_capacity(nnzb);
+        let mut data = Vec::new();
+        row_ptr.push(0);
+        for (r, row) in rows.into_iter().enumerate() {
+            let mut last: Option<usize> = None;
+            for (c, bdata) in row {
+                assert!(
+                    last.map_or(true, |l| c > l),
+                    "row {r}: unsorted/duplicate column {c}"
+                );
+                assert_eq!(
+                    bdata.len(),
+                    row_layout.size(r) * col_layout.size(c),
+                    "row {r} col {c}: block size mismatch"
+                );
+                last = Some(c);
+                col_idx.push(c);
+                block_off.push(data.len());
+                data.extend_from_slice(&bdata);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self {
+            row_layout,
+            col_layout,
+            row_ptr,
+            col_idx,
+            block_off,
+            data,
+        }
+    }
+
+    /// Random block-sparse matrix with approximately `occupancy` fraction
+    /// of blocks present (uniform block positions, standard-normal data
+    /// scaled by `1/sqrt(dim)` so products stay O(1)).
+    pub fn random(
+        row_layout: &BlockLayout,
+        col_layout: &BlockLayout,
+        occupancy: f64,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&occupancy));
+        let mut rng = Pcg64::new(seed);
+        let nbr = row_layout.nblocks();
+        let nbc = col_layout.nblocks();
+        let scale = 1.0 / (row_layout.dim() as f64).sqrt();
+        let mut rows: Vec<Vec<(usize, Vec<f64>)>> = Vec::with_capacity(nbr);
+        for r in 0..nbr {
+            let mut row = Vec::new();
+            // Expected occupancy*nbc blocks per row; sample count then cols.
+            let mut k = 0usize;
+            let target = occupancy * nbc as f64;
+            let base = target.floor() as usize;
+            k += base;
+            if rng.chance(target - base as f64) {
+                k += 1;
+            }
+            let k = k.min(nbc);
+            let mut cols = rng.sample_distinct(nbc, k);
+            cols.sort_unstable();
+            for c in cols {
+                let n = row_layout.size(r) * col_layout.size(c);
+                row.push((c, (0..n).map(|_| rng.normal() * scale).collect()));
+            }
+            rows.push(row);
+        }
+        Self::from_sorted_rows(
+            Arc::new(row_layout.clone()),
+            Arc::new(col_layout.clone()),
+            rows,
+        )
+    }
+
+    pub fn row_layout(&self) -> &BlockLayout {
+        &self.row_layout
+    }
+
+    pub fn col_layout(&self) -> &BlockLayout {
+        &self.col_layout
+    }
+
+    /// Shared handle to the row layout (for assembling results).
+    pub fn row_layout_arc(&self) -> Arc<BlockLayout> {
+        Arc::clone(&self.row_layout)
+    }
+
+    /// Shared handle to the column layout.
+    pub fn col_layout_arc(&self) -> Arc<BlockLayout> {
+        Arc::clone(&self.col_layout)
+    }
+
+    /// Number of non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Number of stored scalar elements.
+    pub fn nnz_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Fraction of occupied blocks.
+    pub fn occupancy(&self) -> f64 {
+        self.nnz_blocks() as f64
+            / (self.row_layout.nblocks() * self.col_layout.nblocks()) as f64
+    }
+
+    /// Iterate `(block_row, block_col, block_data)`.
+    pub fn iter_blocks(&self) -> impl Iterator<Item = (usize, usize, &[f64])> + '_ {
+        (0..self.row_layout.nblocks()).flat_map(move |r| {
+            (self.row_ptr[r]..self.row_ptr[r + 1]).map(move |e| {
+                let c = self.col_idx[e];
+                let len = self.row_layout.size(r) * self.col_layout.size(c);
+                let off = self.block_off[e];
+                (r, c, &self.data[off..off + len])
+            })
+        })
+    }
+
+    /// Entries of one block row as `(block_col, data)`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, &[f64])> + '_ {
+        (self.row_ptr[r]..self.row_ptr[r + 1]).map(move |e| {
+            let c = self.col_idx[e];
+            let len = self.row_layout.size(r) * self.col_layout.size(c);
+            let off = self.block_off[e];
+            (c, &self.data[off..off + len])
+        })
+    }
+
+    /// Block at `(r, c)` if present (binary search within the row).
+    pub fn get_block(&self, r: usize, c: usize) -> Option<&[f64]> {
+        let lo = self.row_ptr[r];
+        let hi = self.row_ptr[r + 1];
+        self.col_idx[lo..hi].binary_search(&c).ok().map(|k| {
+            let e = lo + k;
+            let len = self.row_layout.size(r) * self.col_layout.size(c);
+            &self.data[self.block_off[e]..self.block_off[e] + len]
+        })
+    }
+
+    /// Densify (oracle path).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.row_layout.dim(), self.col_layout.dim());
+        for (r, c, blk) in self.iter_blocks() {
+            let (r0, c0) = (self.row_layout.offset(r), self.col_layout.offset(c));
+            let (nr, nc) = (self.row_layout.size(r), self.col_layout.size(c));
+            for i in 0..nr {
+                for j in 0..nc {
+                    out.set(r0 + i, c0 + j, blk[i * nc + j]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Blockify a dense matrix, keeping blocks with any non-zero entry.
+    pub fn from_dense(
+        dense: &DenseMatrix,
+        row_layout: &BlockLayout,
+        col_layout: &BlockLayout,
+    ) -> Self {
+        assert_eq!(dense.rows, row_layout.dim());
+        assert_eq!(dense.cols, col_layout.dim());
+        let mut rows = Vec::with_capacity(row_layout.nblocks());
+        for r in 0..row_layout.nblocks() {
+            let mut row = Vec::new();
+            for c in 0..col_layout.nblocks() {
+                let (r0, c0) = (row_layout.offset(r), col_layout.offset(c));
+                let (nr, nc) = (row_layout.size(r), col_layout.size(c));
+                let mut blk = vec![0.0; nr * nc];
+                let mut any = false;
+                for i in 0..nr {
+                    for j in 0..nc {
+                        let v = dense.get(r0 + i, c0 + j);
+                        blk[i * nc + j] = v;
+                        any |= v != 0.0;
+                    }
+                }
+                if any {
+                    row.push((c, blk));
+                }
+            }
+            rows.push(row);
+        }
+        Self::from_sorted_rows(
+            Arc::new(row_layout.clone()),
+            Arc::new(col_layout.clone()),
+            rows,
+        )
+    }
+
+    /// Block-diagonal identity (layouts must be square-compatible).
+    pub fn identity(layout: &BlockLayout) -> Self {
+        let mut rows = Vec::with_capacity(layout.nblocks());
+        for r in 0..layout.nblocks() {
+            let n = layout.size(r);
+            let mut blk = vec![0.0; n * n];
+            for i in 0..n {
+                blk[i * n + i] = 1.0;
+            }
+            rows.push(vec![(r, blk)]);
+        }
+        Self::from_sorted_rows(Arc::new(layout.clone()), Arc::new(layout.clone()), rows)
+    }
+
+    /// `self + alpha * other` (block-union sum; layouts must match).
+    pub fn add_scaled(&self, alpha: f64, other: &BlockCsrMatrix) -> BlockCsrMatrix {
+        assert_eq!(self.row_layout, other.row_layout);
+        assert_eq!(self.col_layout, other.col_layout);
+        let mut rows = Vec::with_capacity(self.row_layout.nblocks());
+        for r in 0..self.row_layout.nblocks() {
+            let mut map: HashMap<usize, Vec<f64>> = HashMap::new();
+            for (c, blk) in self.row(r) {
+                map.insert(c, blk.to_vec());
+            }
+            for (c, blk) in other.row(r) {
+                match map.entry(c) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        for (x, &y) in e.get_mut().iter_mut().zip(blk) {
+                            *x += alpha * y;
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(blk.iter().map(|&y| alpha * y).collect());
+                    }
+                }
+            }
+            let mut row: Vec<(usize, Vec<f64>)> = map.into_iter().collect();
+            row.sort_unstable_by_key(|(c, _)| *c);
+            rows.push(row);
+        }
+        Self::from_sorted_rows(
+            Arc::clone(&self.row_layout),
+            Arc::clone(&self.col_layout),
+            rows,
+        )
+    }
+
+    /// Scale all blocks in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Frobenius norm over all stored data.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Stored bytes (block data only — what panel messages carry).
+    pub fn data_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_layouts() -> (BlockLayout, BlockLayout) {
+        (
+            BlockLayout::from_sizes(vec![2, 3]),
+            BlockLayout::from_sizes(vec![1, 2, 2]),
+        )
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let (rl, cl) = small_layouts();
+        let m = BlockCsrMatrix::empty(&rl, &cl);
+        assert_eq!(m.nnz_blocks(), 0);
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.to_dense(), DenseMatrix::zeros(5, 5));
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let (rl, cl) = small_layouts();
+        let mut rng = Pcg64::new(8);
+        let d = DenseMatrix::randn(5, 5, &mut rng);
+        let m = BlockCsrMatrix::from_dense(&d, &rl, &cl);
+        assert_eq!(m.nnz_blocks(), 6); // all blocks nonzero
+        assert!(m.to_dense().max_abs_diff(&d) < 1e-15);
+    }
+
+    #[test]
+    fn identity_blocks() {
+        let l = BlockLayout::from_sizes(vec![2, 3]);
+        let i = BlockCsrMatrix::identity(&l);
+        assert_eq!(i.nnz_blocks(), 2);
+        assert!(i.to_dense().max_abs_diff(&DenseMatrix::eye(5)) < 1e-15);
+    }
+
+    #[test]
+    fn random_occupancy_close() {
+        let l = BlockLayout::uniform(64, 4);
+        let m = BlockCsrMatrix::random(&l, &l, 0.25, 3);
+        assert!((m.occupancy() - 0.25).abs() < 0.05, "{}", m.occupancy());
+    }
+
+    #[test]
+    fn get_block_lookup() {
+        let (rl, cl) = small_layouts();
+        let mut rng = Pcg64::new(9);
+        let d = DenseMatrix::randn(5, 5, &mut rng);
+        let m = BlockCsrMatrix::from_dense(&d, &rl, &cl);
+        let blk = m.get_block(1, 2).unwrap();
+        assert_eq!(blk.len(), 3 * 2);
+        assert_eq!(blk[0], d.get(2, 3));
+        assert!(m.get_block(0, 0).is_some());
+    }
+
+    #[test]
+    fn add_scaled_matches_dense() {
+        let l = BlockLayout::uniform(8, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.3, 1);
+        let b = BlockCsrMatrix::random(&l, &l, 0.3, 2);
+        let s = a.add_scaled(2.0, &b);
+        let want = a.to_dense().axpy(2.0, &b.to_dense());
+        assert!(s.to_dense().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsorted")]
+    fn unsorted_rows_rejected() {
+        let l = Arc::new(BlockLayout::uniform(1, 1));
+        BlockCsrMatrix::from_sorted_rows(
+            Arc::clone(&l),
+            l,
+            vec![vec![(0, vec![1.0]), (0, vec![2.0])]],
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Block Frobenius norms — the quantity DBCSR's on-the-fly filter tests.
+
+use crate::blocks::matrix::BlockCsrMatrix;
+
+/// Frobenius norm of one dense block.
+#[inline]
+pub fn block_norm(block: &[f64]) -> f64 {
+    block.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Per-block norms of a matrix, in `iter_blocks` order.
+pub fn all_block_norms(m: &BlockCsrMatrix) -> Vec<f64> {
+    m.iter_blocks().map(|(_, _, b)| block_norm(b)).collect()
+}
+
+/// Largest block norm (used for adaptive thresholds).
+pub fn max_block_norm(m: &BlockCsrMatrix) -> f64 {
+    m.iter_blocks()
+        .map(|(_, _, b)| block_norm(b))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::layout::BlockLayout;
+
+    #[test]
+    fn block_norm_known() {
+        assert_eq!(block_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(block_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn all_norms_match_matrix() {
+        let l = BlockLayout::uniform(6, 3);
+        let m = BlockCsrMatrix::random(&l, &l, 0.4, 5);
+        let norms = all_block_norms(&m);
+        assert_eq!(norms.len(), m.nnz_blocks());
+        let total: f64 = norms.iter().map(|n| n * n).sum::<f64>().sqrt();
+        assert!((total - m.frob_norm()).abs() < 1e-12);
+        assert!(max_block_norm(&m) <= norms.iter().fold(f64::INFINITY, |a, &b| a.min(b)) * 1e9);
+    }
+}

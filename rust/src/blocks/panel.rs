@@ -1,0 +1,173 @@
+//! Panels: the unit of distribution and communication.
+//!
+//! A panel is the set of blocks of one matrix that live on one (virtual)
+//! process-grid position — what Cannon's shifts move around and what the
+//! one-sided `rget` fetches from a window.  Blocks keep their *global*
+//! block coordinates so panels can be multiplied and re-assembled without
+//! reference to the distribution that produced them.
+
+use std::collections::HashMap;
+
+use crate::blocks::norms::block_norm;
+
+/// Metadata of one block inside a panel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PanelEntry {
+    /// Global block row.
+    pub row: u32,
+    /// Global block column.
+    pub col: u32,
+    /// Block dims.
+    pub nr: u16,
+    pub nc: u16,
+    /// Offset into `Panel::data`.
+    pub off: usize,
+}
+
+/// A block-sparse matrix fragment with contiguous data storage.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Panel {
+    pub entries: Vec<PanelEntry>,
+    pub data: Vec<f64>,
+    /// Cached per-entry Frobenius norms (computed on construction; the
+    /// on-the-fly filter reads these instead of re-reducing block data).
+    pub norms: Vec<f64>,
+}
+
+impl Panel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one block (data copied; norm cached).
+    pub fn push_block(&mut self, row: u32, col: u32, nr: u16, nc: u16, data: &[f64]) {
+        debug_assert_eq!(data.len(), nr as usize * nc as usize);
+        self.entries.push(PanelEntry {
+            row,
+            col,
+            nr,
+            nc,
+            off: self.data.len(),
+        });
+        self.norms.push(block_norm(data));
+        self.data.extend_from_slice(data);
+    }
+
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Data slice of entry `e`.
+    pub fn block(&self, e: usize) -> &[f64] {
+        let en = &self.entries[e];
+        &self.data[en.off..en.off + en.nr as usize * en.nc as usize]
+    }
+
+    /// Bytes this panel occupies on the wire: block data plus the entry
+    /// directory (16 B/entry: row, col, dims packed) plus the norm cache.
+    /// This is the quantity the paper's "communicated data" tables count.
+    pub fn wire_bytes(&self) -> usize {
+        self.data.len() * 8 + self.entries.len() * 16 + self.norms.len() * 8
+    }
+
+    /// Group entry indices by block column (for A·B matching on the inner
+    /// dimension: A panels match B entries by `A.col == B.row`).
+    pub fn index_by_col(&self) -> HashMap<u32, Vec<usize>> {
+        let mut map: HashMap<u32, Vec<usize>> = HashMap::new();
+        for (e, en) in self.entries.iter().enumerate() {
+            map.entry(en.col).or_default().push(e);
+        }
+        map
+    }
+
+    /// Group entry indices by block row.
+    pub fn index_by_row(&self) -> HashMap<u32, Vec<usize>> {
+        let mut map: HashMap<u32, Vec<usize>> = HashMap::new();
+        for (e, en) in self.entries.iter().enumerate() {
+            map.entry(en.row).or_default().push(e);
+        }
+        map
+    }
+
+    /// Merge another panel into this one (concatenation; no dedup —
+    /// panels from disjoint owners never overlap).
+    pub fn extend_from(&mut self, other: &Panel) {
+        let base = self.data.len();
+        for en in &other.entries {
+            self.entries.push(PanelEntry {
+                off: en.off + base,
+                ..*en
+            });
+        }
+        self.data.extend_from_slice(&other.data);
+        self.norms.extend_from_slice(&other.norms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Panel {
+        let mut p = Panel::new();
+        p.push_block(0, 1, 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        p.push_block(3, 1, 1, 2, &[5.0, 6.0]);
+        p.push_block(0, 2, 2, 1, &[7.0, 8.0]);
+        p
+    }
+
+    #[test]
+    fn push_and_read_blocks() {
+        let p = sample();
+        assert_eq!(p.nblocks(), 3);
+        assert_eq!(p.block(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.block(1), &[5.0, 6.0]);
+        assert_eq!(p.block(2), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn norms_cached() {
+        let p = sample();
+        assert!((p.norms[0] - (1.0f64 + 4.0 + 9.0 + 16.0).sqrt()).abs() < 1e-12);
+        assert!((p.norms[2] - (49.0f64 + 64.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_bytes_counts_data_and_directory() {
+        let p = sample();
+        assert_eq!(p.wire_bytes(), 8 * 8 + 3 * 16 + 3 * 8);
+    }
+
+    #[test]
+    fn col_and_row_indices() {
+        let p = sample();
+        let by_col = p.index_by_col();
+        assert_eq!(by_col[&1], vec![0, 1]);
+        assert_eq!(by_col[&2], vec![2]);
+        let by_row = p.index_by_row();
+        assert_eq!(by_row[&0], vec![0, 2]);
+        assert_eq!(by_row[&3], vec![1]);
+    }
+
+    #[test]
+    fn extend_preserves_blocks() {
+        let mut p = sample();
+        let q = sample();
+        p.extend_from(&q);
+        assert_eq!(p.nblocks(), 6);
+        assert_eq!(p.block(3), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.block(5), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn empty_panel() {
+        let p = Panel::new();
+        assert!(p.is_empty());
+        assert_eq!(p.wire_bytes(), 0);
+    }
+}

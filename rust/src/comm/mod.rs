@@ -1,0 +1,24 @@
+//! Simulated MPI: ranks as threads inside one process.
+//!
+//! The substitution for the paper's Piz Daint testbed (see DESIGN.md §3):
+//! every MPI rank becomes an OS thread with private storage; the three
+//! communication styles the paper uses are reproduced with matching
+//! completion semantics:
+//!
+//! * [`ptp`] — nonblocking point-to-point (`isend`/`irecv`/`wait_all`),
+//!   which Algorithm 1 (Cannon) is built on; completion requires both
+//!   sender and receiver progress, like `mpi_waitall`.
+//! * [`rma`] — one-sided windows with passive-target `rget`, which
+//!   Algorithm 2 is built on; only the origin (receiver) synchronizes.
+//! * [`collective`] — barrier / allreduce (the window-pool size check).
+//!
+//! All traffic is counted per rank and per matrix class, giving the
+//! *exact* "communicated data per process" quantity of paper Table 2.
+
+pub mod collective;
+pub mod netmodel;
+pub mod ptp;
+pub mod rma;
+pub mod world;
+
+pub use world::{Comm, CommStats, Payload, SimWorld, TrafficClass};

@@ -1,0 +1,189 @@
+//! Nonblocking point-to-point: `isend` / `irecv` / `wait_all`.
+//!
+//! Semantics follow what Algorithm 1 relies on:
+//!
+//! * `isend` starts a buffered send and returns a request immediately
+//!   (the payload is moved into the destination mailbox right away; MPI
+//!   permits buffered completion for nonblocking sends);
+//! * `irecv` posts a receive for `(src, tag)` and returns a request;
+//! * `wait_all` blocks until every receive request has matched a message
+//!   (send requests are already complete), like `mpi_waitall`.
+//!
+//! Messages between the same (src, dst, tag) triple are delivered in
+//! send order (MPI non-overtaking rule).
+
+use crate::comm::world::{Comm, Payload, TrafficClass, DEADLOCK_TIMEOUT};
+
+/// A pending communication request.
+pub enum Request {
+    /// Buffered send — complete at creation.
+    Send,
+    /// Posted receive, resolved by `wait`.
+    Recv {
+        src: usize,
+        tag: u64,
+        class: TrafficClass,
+    },
+}
+
+impl Comm {
+    /// Nonblocking send of `payload` to `dest` under `tag`.
+    pub fn isend(
+        &self,
+        dest: usize,
+        tag: u64,
+        class: TrafficClass,
+        payload: Payload,
+    ) -> Request {
+        let bytes = payload.wire_bytes();
+        self.stats.borrow_mut().add_ptp_sent(class, bytes);
+        let mb = &self.shared.mailboxes[dest];
+        {
+            let mut queues = mb.queues.lock().unwrap();
+            queues
+                .entry((self.rank, tag))
+                .or_default()
+                .push_back(payload);
+        }
+        mb.cv.notify_all();
+        Request::Send
+    }
+
+    /// Post a nonblocking receive from `src` under `tag`.
+    pub fn irecv(&self, src: usize, tag: u64, class: TrafficClass) -> Request {
+        Request::Recv { src, tag, class }
+    }
+
+    /// Wait for one request; returns the payload for receives.
+    pub fn wait(&self, req: Request) -> Option<Payload> {
+        match req {
+            Request::Send => None,
+            Request::Recv { src, tag, class } => {
+                let mb = &self.shared.mailboxes[self.rank];
+                let mut queues = mb.queues.lock().unwrap();
+                loop {
+                    if let Some(q) = queues.get_mut(&(src, tag)) {
+                        if let Some(p) = q.pop_front() {
+                            self.stats.borrow_mut().add_ptp_recv(class, p.wire_bytes());
+                            return Some(p);
+                        }
+                    }
+                    let (g, timeout) = mb.cv.wait_timeout(queues, DEADLOCK_TIMEOUT).unwrap();
+                    queues = g;
+                    assert!(
+                        !timeout.timed_out(),
+                        "rank {} deadlocked waiting for (src={src}, tag={tag})",
+                        self.rank
+                    );
+                }
+            }
+        }
+    }
+
+    /// `mpi_waitall`: complete every request, returning receive payloads
+    /// in request order (None for sends).
+    pub fn wait_all(&self, reqs: Vec<Request>) -> Vec<Option<Payload>> {
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::panel::Panel;
+    use crate::comm::world::SimWorld;
+
+    #[test]
+    fn ring_exchange() {
+        let w = SimWorld::new(3);
+        let sums = w.run(|c| {
+            let right = (c.rank() + 1) % c.size();
+            let left = (c.rank() + c.size() - 1) % c.size();
+            let s = c.isend(
+                right,
+                7,
+                TrafficClass::Other,
+                Payload::Usize(c.rank() * 10),
+            );
+            let r = c.irecv(left, 7, TrafficClass::Other);
+            let got = c.wait_all(vec![s, r]);
+            match got[1] {
+                Some(Payload::Usize(v)) => v,
+                _ => panic!("missing payload"),
+            }
+        });
+        assert_eq!(sums, vec![20, 0, 10]);
+    }
+
+    #[test]
+    fn nonovertaking_order_same_tag() {
+        let w = SimWorld::new(2);
+        let out = w.run(|c| {
+            if c.rank() == 0 {
+                for v in 0..5 {
+                    c.isend(1, 1, TrafficClass::Other, Payload::Usize(v));
+                }
+                Vec::new()
+            } else {
+                (0..5)
+                    .map(|_| {
+                        let r = c.irecv(0, 1, TrafficClass::Other);
+                        match c.wait(r) {
+                            Some(Payload::Usize(v)) => v,
+                            _ => unreachable!(),
+                        }
+                    })
+                    .collect()
+            }
+        });
+        assert_eq!(out[1], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn tags_demultiplex() {
+        let w = SimWorld::new(2);
+        let out = w.run(|c| {
+            if c.rank() == 0 {
+                c.isend(1, 100, TrafficClass::Other, Payload::Usize(100));
+                c.isend(1, 200, TrafficClass::Other, Payload::Usize(200));
+                0
+            } else {
+                // receive in the opposite order of sending
+                let r200 = c.irecv(0, 200, TrafficClass::Other);
+                let v200 = match c.wait(r200) {
+                    Some(Payload::Usize(v)) => v,
+                    _ => unreachable!(),
+                };
+                let r100 = c.irecv(0, 100, TrafficClass::Other);
+                let v100 = match c.wait(r100) {
+                    Some(Payload::Usize(v)) => v,
+                    _ => unreachable!(),
+                };
+                v200 * 1000 + v100
+            }
+        });
+        assert_eq!(out[1], 200100);
+    }
+
+    #[test]
+    fn panel_payload_roundtrip_and_counting() {
+        let w = SimWorld::new(2);
+        let stats = w.run(|c| {
+            if c.rank() == 0 {
+                let mut p = Panel::new();
+                p.push_block(3, 4, 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+                c.isend(1, 9, TrafficClass::MatrixA, Payload::Panel(p));
+            } else {
+                let r = c.irecv(0, 9, TrafficClass::MatrixA);
+                let p = c.wait(r).unwrap().into_panel();
+                assert_eq!(p.block(0), &[1.0, 2.0, 3.0, 4.0]);
+                assert_eq!(p.entries[0].row, 3);
+            }
+            c.stats()
+        });
+        assert_eq!(stats[0].ptp_sent_msgs[0], 1);
+        assert_eq!(stats[1].ptp_recv_msgs[0], 1);
+        assert_eq!(stats[1].ptp_recv_bytes[0], stats[0].ptp_sent_bytes[0]);
+        assert_eq!(stats[1].total_requested_bytes(), 4 * 8 + 16 + 8);
+    }
+}

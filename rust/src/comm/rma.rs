@@ -1,0 +1,190 @@
+//! One-sided communication: windows + passive-target `rget`.
+//!
+//! Mirrors the paper's §3 communication scheme: A and B panels are copied
+//! once into read-only buffers that back MPI windows; during the whole
+//! multiplication every process fetches panels directly from their *home*
+//! position in the 2D grid with `mpi_rget` (passive target), so only the
+//! origin process synchronizes — no sender-side progress is needed
+//! (observation (2) in §4.1 for why this beats point-to-point waitalls).
+//!
+//! Window creation/destruction are collective (they barrier), matching
+//! `mpi_win_create`/`free`; the grow-only buffer-pool reuse trick (the
+//! `mpi_iallreduce` size check) lives in `collective.rs`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::blocks::panel::Panel;
+use crate::comm::world::{Comm, TrafficClass};
+
+/// Key for a panel inside a window directory (packs a 2D coordinate).
+#[inline]
+pub fn win_key(x: usize, y: usize) -> u64 {
+    ((x as u64) << 32) | y as u64
+}
+
+/// A completed one-sided get (the data is fetched eagerly at `rget`;
+/// `wait` hands it out — valid for read-only windows where passive-target
+/// completion only orders the origin's accesses).
+pub struct RgetHandle {
+    panel: Panel,
+}
+
+impl RgetHandle {
+    pub fn wait(self) -> Panel {
+        self.panel
+    }
+}
+
+impl Comm {
+    /// Collectively create window `name`, exposing this rank's `panels`
+    /// directory (keyed with [`win_key`]).  Barriers like
+    /// `mpi_win_create`.
+    pub fn win_create(&self, name: &str, panels: HashMap<u64, Panel>) {
+        let bytes: usize = panels.values().map(|p| p.wire_bytes()).sum();
+        self.stats.borrow_mut().window_bytes += bytes as u64;
+        {
+            let mut wins = self.shared.windows.write().unwrap();
+            let slots = wins
+                .entry(name.to_string())
+                .or_insert_with(|| vec![None; self.shared.n]);
+            assert!(
+                slots[self.rank].is_none(),
+                "rank {} re-creating window '{name}'",
+                self.rank
+            );
+            slots[self.rank] = Some(Arc::new(panels));
+        }
+        self.barrier(); // collective: all exposures visible after this
+    }
+
+    /// Passive-target get of the panel under `key` from `target`'s window.
+    /// No target-side synchronization.  Missing keys yield an empty panel
+    /// (an absent panel of a sparse matrix).
+    pub fn rget(&self, name: &str, target: usize, key: u64, class: TrafficClass) -> RgetHandle {
+        let wins = self.shared.windows.read().unwrap();
+        let slots = wins
+            .get(name)
+            .unwrap_or_else(|| panic!("window '{name}' does not exist"));
+        let data = slots[target]
+            .as_ref()
+            .unwrap_or_else(|| panic!("window '{name}' not exposed by rank {target}"));
+        let panel = data.get(&key).cloned().unwrap_or_default();
+        self.stats
+            .borrow_mut()
+            .add_rget(class, panel.wire_bytes());
+        RgetHandle { panel }
+    }
+
+    /// Collectively free window `name` (barriers like `mpi_win_free`).
+    pub fn win_free(&self, name: &str) {
+        self.barrier(); // all origins done before teardown
+        let mut wins = self.shared.windows.write().unwrap();
+        if let Some(slots) = wins.get_mut(name) {
+            slots[self.rank] = None;
+            if slots.iter().all(|s| s.is_none()) {
+                wins.remove(name);
+            }
+        }
+    }
+
+    /// Direct read of this rank's own exposure (local window access).
+    pub fn win_local(&self, name: &str, key: u64) -> Panel {
+        let wins = self.shared.windows.read().unwrap();
+        wins.get(name)
+            .and_then(|slots| slots[self.rank].as_ref())
+            .and_then(|d| d.get(&key).cloned())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::SimWorld;
+
+    fn panel_with(v: f64) -> Panel {
+        let mut p = Panel::new();
+        p.push_block(0, 0, 1, 1, &[v]);
+        p
+    }
+
+    #[test]
+    fn rget_fetches_remote_panels() {
+        let w = SimWorld::new(4);
+        let got = w.run(|c| {
+            let mut dir = HashMap::new();
+            dir.insert(win_key(c.rank(), 0), panel_with(c.rank() as f64));
+            c.win_create("a", dir);
+            // everyone reads rank 2's panel with zero involvement of rank 2
+            let h = c.rget("a", 2, win_key(2, 0), TrafficClass::MatrixA);
+            let p = h.wait();
+            c.win_free("a");
+            p.block(0)[0]
+        });
+        assert_eq!(got, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn missing_key_is_empty_panel() {
+        let w = SimWorld::new(2);
+        let empties = w.run(|c| {
+            c.win_create("w", HashMap::new());
+            let p = c.rget("w", 1 - c.rank(), win_key(9, 9), TrafficClass::MatrixB).wait();
+            c.win_free("w");
+            p.is_empty()
+        });
+        assert!(empties.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn rget_counts_origin_side_only() {
+        let w = SimWorld::new(2);
+        let stats = w.run(|c| {
+            let mut dir = HashMap::new();
+            dir.insert(0, panel_with(1.0));
+            c.win_create("w", dir);
+            if c.rank() == 0 {
+                let _ = c.rget("w", 1, 0, TrafficClass::MatrixA).wait();
+            }
+            c.barrier();
+            c.win_free("w");
+            c.stats()
+        });
+        assert_eq!(stats[0].rget_calls[0], 1);
+        assert!(stats[0].rget_bytes[0] > 0);
+        assert_eq!(stats[1].rget_calls[0], 0);
+        // both exposed one panel
+        assert_eq!(stats[0].window_bytes, stats[1].window_bytes);
+        assert!(stats[0].window_bytes > 0);
+    }
+
+    #[test]
+    fn win_local_reads_own_exposure() {
+        let w = SimWorld::new(2);
+        let vals = w.run(|c| {
+            let mut dir = HashMap::new();
+            dir.insert(5, panel_with(c.rank() as f64 + 10.0));
+            c.win_create("w", dir);
+            let v = c.win_local("w", 5).block(0)[0];
+            c.win_free("w");
+            v
+        });
+        assert_eq!(vals, vec![10.0, 11.0]);
+    }
+
+    #[test]
+    fn windows_can_be_recreated_after_free() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            for round in 0..3 {
+                let mut dir = HashMap::new();
+                dir.insert(0, panel_with(round as f64));
+                c.win_create("w", dir);
+                let p = c.rget("w", 1 - c.rank(), 0, TrafficClass::MatrixA).wait();
+                assert_eq!(p.block(0)[0], round as f64);
+                c.win_free("w");
+            }
+        });
+    }
+}

@@ -1,0 +1,287 @@
+//! The simulated world: shared state, per-rank handles, traffic counters.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::blocks::panel::Panel;
+
+/// How long a blocking wait may stall before the simulation declares a
+/// deadlock (a schedule bug) and panics with context.
+pub const DEADLOCK_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Message payloads carried by the simulated fabric.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Panel(Panel),
+    /// A bundle of keyed panels moved as one message (Cannon's per-tick
+    /// shift moves a rank's whole resident panel set at once).
+    PanelSet(Vec<(u64, Panel)>),
+    Bytes(Vec<u8>),
+    Usize(usize),
+}
+
+impl Payload {
+    /// Modeled wire size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Panel(p) => p.wire_bytes(),
+            Payload::PanelSet(v) => v.iter().map(|(_, p)| 8 + p.wire_bytes()).sum(),
+            Payload::Bytes(b) => b.len(),
+            Payload::Usize(_) => 8,
+        }
+    }
+
+    /// Unwrap a panel payload.
+    pub fn into_panel(self) -> Panel {
+        match self {
+            Payload::Panel(p) => p,
+            other => panic!("expected Panel payload, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a panel-set payload.
+    pub fn into_panel_set(self) -> Vec<(u64, Panel)> {
+        match self {
+            Payload::PanelSet(v) => v,
+            other => panic!("expected PanelSet payload, got {other:?}"),
+        }
+    }
+}
+
+/// Traffic classes, matching the paper's per-matrix accounting (Table 2
+/// counts A, B and C panel traffic separately).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    MatrixA,
+    MatrixB,
+    MatrixC,
+    Other,
+}
+
+impl TrafficClass {
+    pub const ALL: [TrafficClass; 4] = [
+        TrafficClass::MatrixA,
+        TrafficClass::MatrixB,
+        TrafficClass::MatrixC,
+        TrafficClass::Other,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            TrafficClass::MatrixA => 0,
+            TrafficClass::MatrixB => 1,
+            TrafficClass::MatrixC => 2,
+            TrafficClass::Other => 3,
+        }
+    }
+}
+
+/// Per-rank communication statistics (bytes are modeled wire bytes).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Point-to-point messages/bytes sent, per class.
+    pub ptp_sent_msgs: [u64; 4],
+    pub ptp_sent_bytes: [u64; 4],
+    /// Point-to-point messages/bytes received, per class.
+    pub ptp_recv_msgs: [u64; 4],
+    pub ptp_recv_bytes: [u64; 4],
+    /// One-sided gets issued by this rank (origin-side), per class.
+    pub rget_calls: [u64; 4],
+    pub rget_bytes: [u64; 4],
+    /// Bytes exposed in this rank's windows (window pool footprint).
+    pub window_bytes: u64,
+}
+
+impl CommStats {
+    /// Total data *requested/received* by this process — the quantity of
+    /// paper Eq. 7 / Table 2 ("total amount of requested data by each
+    /// process"): PTP receives plus one-sided gets.
+    pub fn total_requested_bytes(&self) -> u64 {
+        self.ptp_recv_bytes.iter().sum::<u64>() + self.rget_bytes.iter().sum::<u64>()
+    }
+
+    /// Requested bytes for one class.
+    pub fn requested_bytes(&self, class: TrafficClass) -> u64 {
+        self.ptp_recv_bytes[class.index()] + self.rget_bytes[class.index()]
+    }
+
+    /// Message count + byte count for A/B panel *fetches* (Fig 2's
+    /// average message size numerator/denominator).
+    pub fn ab_message_stats(&self) -> (u64, u64) {
+        let a = TrafficClass::MatrixA.index();
+        let b = TrafficClass::MatrixB.index();
+        (
+            self.ptp_recv_msgs[a] + self.ptp_recv_msgs[b] + self.rget_calls[a] + self.rget_calls[b],
+            self.ptp_recv_bytes[a] + self.ptp_recv_bytes[b] + self.rget_bytes[a] + self.rget_bytes[b],
+        )
+    }
+
+    pub(crate) fn add_ptp_sent(&mut self, class: TrafficClass, bytes: usize) {
+        self.ptp_sent_msgs[class.index()] += 1;
+        self.ptp_sent_bytes[class.index()] += bytes as u64;
+    }
+
+    pub(crate) fn add_ptp_recv(&mut self, class: TrafficClass, bytes: usize) {
+        self.ptp_recv_msgs[class.index()] += 1;
+        self.ptp_recv_bytes[class.index()] += bytes as u64;
+    }
+
+    pub(crate) fn add_rget(&mut self, class: TrafficClass, bytes: usize) {
+        self.rget_calls[class.index()] += 1;
+        self.rget_bytes[class.index()] += bytes as u64;
+    }
+}
+
+/// One rank's mailbox: (src, tag) -> queue of payloads.
+pub(crate) struct Mailbox {
+    pub(crate) queues: Mutex<HashMap<(usize, u64), VecDeque<Payload>>>,
+    pub(crate) cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self {
+            queues: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Window contents: a directory of panels keyed by a u64 coordinate.
+pub(crate) type WindowData = HashMap<u64, Panel>;
+
+/// Shared fabric state.
+pub(crate) struct Shared {
+    pub(crate) n: usize,
+    pub(crate) mailboxes: Vec<Mailbox>,
+    pub(crate) barrier: Barrier,
+    /// Windows: name -> per-rank exposed data.
+    pub(crate) windows: RwLock<HashMap<String, Vec<Option<Arc<WindowData>>>>>,
+    /// Allreduce scratch (collective.rs).
+    pub(crate) reduce_slots: Mutex<Vec<u64>>,
+    pub(crate) reduce_result: AtomicU64,
+    pub(crate) reduce_barrier: Barrier,
+}
+
+/// The simulated world; spawns rank closures on threads.
+pub struct SimWorld {
+    n: usize,
+}
+
+impl SimWorld {
+    /// Create a world of `n` ranks.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "world needs at least one rank");
+        Self { n }
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// Run `f(comm)` on every rank concurrently; returns per-rank results
+    /// in rank order.  Panics in any rank propagate.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        let shared = Arc::new(Shared {
+            n: self.n,
+            mailboxes: (0..self.n).map(|_| Mailbox::new()).collect(),
+            barrier: Barrier::new(self.n),
+            windows: RwLock::new(HashMap::new()),
+            reduce_slots: Mutex::new(vec![0; self.n]),
+            reduce_result: AtomicU64::new(0),
+            reduce_barrier: Barrier::new(self.n),
+        });
+        let mut out: Vec<Option<T>> = (0..self.n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.n);
+            for (rank, slot) in out.iter_mut().enumerate() {
+                let shared = Arc::clone(&shared);
+                let f = &f;
+                handles.push(scope.spawn(move || {
+                    let comm = Comm {
+                        rank,
+                        shared,
+                        stats: std::cell::RefCell::new(CommStats::default()),
+                    };
+                    *slot = Some(f(comm));
+                }));
+            }
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+        out.into_iter().map(|x| x.unwrap()).collect()
+    }
+}
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    pub(crate) rank: usize,
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) stats: std::cell::RefCell<CommStats>,
+}
+
+impl Comm {
+    /// This rank's id.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn size(&self) -> usize {
+        self.shared.n
+    }
+
+    /// Snapshot of this rank's traffic counters.
+    pub fn stats(&self) -> CommStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_runs_all_ranks() {
+        let w = SimWorld::new(4);
+        let mut ids = w.run(|c| c.rank());
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Payload::Usize(3).wire_bytes(), 8);
+        assert_eq!(Payload::Bytes(vec![0; 10]).wire_bytes(), 10);
+        let mut p = Panel::new();
+        p.push_block(0, 0, 1, 2, &[1.0, 2.0]);
+        assert_eq!(Payload::Panel(p).wire_bytes(), 16 + 16 + 8);
+    }
+
+    #[test]
+    fn stats_request_accounting() {
+        let mut s = CommStats::default();
+        s.add_ptp_recv(TrafficClass::MatrixA, 100);
+        s.add_rget(TrafficClass::MatrixB, 50);
+        s.add_ptp_sent(TrafficClass::MatrixC, 999);
+        assert_eq!(s.total_requested_bytes(), 150);
+        assert_eq!(s.requested_bytes(TrafficClass::MatrixA), 100);
+        let (msgs, bytes) = s.ab_message_stats();
+        assert_eq!((msgs, bytes), (2, 150));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one rank")]
+    fn zero_world_panics() {
+        SimWorld::new(0);
+    }
+}

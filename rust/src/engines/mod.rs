@@ -1,0 +1,8 @@
+//! Multiplication engines: Cannon/PTP (Algorithm 1) and 2.5D/RMA
+//! (Algorithm 2), plus the shared tick schedule they are both built on.
+
+pub mod cannon;
+pub mod context;
+pub mod multiply;
+pub mod osl;
+pub mod schedule;

@@ -1,0 +1,422 @@
+//! Top-level distributed multiplication driver: `C = C + A · B`.
+//!
+//! Splits the global matrices into panels per the distribution, spawns
+//! the simulated ranks, runs the selected engine (Algorithm 1 or 2),
+//! reduces/assembles the result and applies the post-multiplication
+//! filter.  Returns the result together with the exact per-rank traffic
+//! counters and virtual-time logs the benchmarks consume.
+
+use std::sync::Mutex;
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::filter::{filter_blocks, FilterConfig};
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::comm::world::{CommStats, SimWorld};
+use crate::dist::distribution::Distribution2d;
+use crate::dist::topology25d::{Topology25d, TopologyError};
+use crate::engines::{cannon, osl};
+use crate::local::batch::LocalMultStats;
+use crate::perfmodel::machine::MachineModel;
+use crate::perfmodel::virtual_time::{critical_path, model_rank_time, ModeledTime, RankLog};
+use crate::stats::timers::Timers;
+
+/// Which multiplication engine to run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// Cannon + MPI point-to-point (paper Algorithm 1; the baseline).
+    #[default]
+    PointToPoint,
+    /// 2.5D + MPI one-sided with replication factor `l` (Algorithm 2).
+    OneSided { l: usize },
+}
+
+impl Engine {
+    pub fn l(&self) -> usize {
+        match self {
+            Engine::PointToPoint => 1,
+            Engine::OneSided { l } => *l,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Engine::PointToPoint => "PTP".to_string(),
+            Engine::OneSided { l } => format!("OS{l}"),
+        }
+    }
+}
+
+/// Multiplication configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MultiplyConfig {
+    pub engine: Engine,
+    pub filter: FilterConfig,
+    /// Reject (error) instead of falling back to L=1 on invalid L.
+    pub strict_topology: bool,
+}
+
+/// Result + instrumentation of one distributed multiplication.
+pub struct MultiplyReport {
+    /// The (post-filtered) result matrix.
+    pub c: BlockCsrMatrix,
+    /// Exact per-rank traffic counters.
+    pub per_rank_stats: Vec<CommStats>,
+    /// Per-rank virtual-time logs.
+    pub per_rank_logs: Vec<RankLog>,
+    /// Merged local-multiplication stats.
+    pub mult_stats: LocalMultStats,
+    /// Merged (critical-path) region timers.
+    pub timers: Timers,
+    /// Wall-clock seconds of the simulated run (all ranks timesharing —
+    /// not the paper-comparable number; see `model`).
+    pub wall_s: f64,
+    /// Result blocks removed by the post-filter.
+    pub post_filtered: usize,
+    /// Peak temporary buffer bytes over ranks (Eq. 6 observable).
+    pub peak_buffer_bytes: u64,
+    /// Topology actually used (after any fallback).
+    pub topo: Topology25d,
+}
+
+impl MultiplyReport {
+    /// Price the run on a machine model: per-rank modeled times plus the
+    /// critical path (the paper's "DBCSR execution time").
+    pub fn model(&self, machine: &MachineModel) -> (Vec<ModeledTime>, ModeledTime) {
+        let per: Vec<ModeledTime> = self
+            .per_rank_logs
+            .iter()
+            .map(|l| model_rank_time(l, machine))
+            .collect();
+        let crit = critical_path(&per);
+        (per, crit)
+    }
+
+    /// Average per-rank requested bytes (paper Table 2 "communicated
+    /// data per process").
+    pub fn avg_requested_bytes(&self) -> f64 {
+        self.per_rank_stats
+            .iter()
+            .map(|s| s.total_requested_bytes() as f64)
+            .sum::<f64>()
+            / self.per_rank_stats.len() as f64
+    }
+}
+
+/// Errors from the multiplication driver.
+#[derive(Debug, thiserror::Error)]
+pub enum MultiplyError {
+    #[error("layout mismatch: A is {a_rows}x{a_cols} blocks, B is {b_rows}x{b_cols} blocks")]
+    LayoutMismatch {
+        a_rows: usize,
+        a_cols: usize,
+        b_rows: usize,
+        b_cols: usize,
+    },
+    #[error("invalid 2.5D topology: {0}")]
+    Topology(#[from] TopologyError),
+}
+
+/// Distributed `C = C + A·B` over the simulated world.
+pub fn multiply_distributed(
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+    c0: Option<&BlockCsrMatrix>,
+    dist: &Distribution2d,
+    cfg: &MultiplyConfig,
+) -> Result<MultiplyReport, MultiplyError> {
+    if a.col_layout() != b.row_layout() {
+        return Err(MultiplyError::LayoutMismatch {
+            a_rows: a.row_layout().nblocks(),
+            a_cols: a.col_layout().nblocks(),
+            b_rows: b.row_layout().nblocks(),
+            b_cols: b.col_layout().nblocks(),
+        });
+    }
+    let grid = dist.grid;
+    let topo = if cfg.strict_topology {
+        Topology25d::new(grid, cfg.engine.l())?
+    } else {
+        Topology25d::new_or_fallback(grid, cfg.engine.l())
+    };
+
+    // ---- split global matrices into home panels ----------------------
+    let a_panels = dist.split_a(a); // [pi][vk]
+    let b_panels = dist.split_b(b); // [vk][pj]
+    let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
+
+    // Per-rank input slots (taken by each rank thread).
+    let mut inputs: Vec<(std::collections::HashMap<u64, crate::blocks::panel::Panel>,
+                         std::collections::HashMap<u64, crate::blocks::panel::Panel>)> =
+        (0..pr * pc).map(|_| Default::default()).collect();
+    for (pi, row) in a_panels.into_iter().enumerate() {
+        for (vk, panel) in row.into_iter().enumerate() {
+            let home = grid.rank(pi, vk % pc);
+            // Cannon keys its circulating sets by vk alone; the one-sided
+            // windows use win_key(pi, vk). Both fit u64 keys.
+            let key = match cfg.engine {
+                Engine::PointToPoint => vk as u64,
+                Engine::OneSided { .. } => crate::comm::rma::win_key(pi, vk),
+            };
+            inputs[home].0.insert(key, panel);
+        }
+    }
+    for (vk, row) in b_panels.into_iter().enumerate() {
+        for (pj, panel) in row.into_iter().enumerate() {
+            let home = grid.rank(vk % pr, pj);
+            let key = match cfg.engine {
+                Engine::PointToPoint => vk as u64,
+                Engine::OneSided { .. } => crate::comm::rma::win_key(vk, pj),
+            };
+            inputs[home].1.insert(key, panel);
+        }
+    }
+    let _ = v;
+    let input_slots: Vec<Mutex<Option<(_, _)>>> =
+        inputs.into_iter().map(|x| Mutex::new(Some(x))).collect();
+
+    // ---- run the world ------------------------------------------------
+    let world = SimWorld::new(pr * pc);
+    let eps = cfg.filter.on_the_fly_eps;
+    let t0 = std::time::Instant::now();
+    let engine = cfg.engine;
+    let results = world.run(|comm| {
+        let (a_in, b_in) = input_slots[comm.rank()].lock().unwrap().take().unwrap();
+        match engine {
+            Engine::PointToPoint => {
+                let out = cannon::run_rank(
+                    &comm,
+                    dist,
+                    &topo,
+                    cannon::RankInput {
+                        a_panels: a_in,
+                        b_panels: b_in,
+                    },
+                    eps,
+                );
+                (out.c_acc, out.mult_stats, out.timers, out.log, comm.stats(), 0u64)
+            }
+            Engine::OneSided { .. } => {
+                let out = osl::run_rank(
+                    &comm,
+                    dist,
+                    &topo,
+                    osl::RankInput {
+                        a_window: a_in,
+                        b_window: b_in,
+                    },
+                    eps,
+                );
+                (
+                    out.c_acc,
+                    out.mult_stats,
+                    out.timers,
+                    out.log,
+                    comm.stats(),
+                    out.peak_buffer_bytes,
+                )
+            }
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // ---- assemble + post-filter ----------------------------------------
+    let mut global = BlockAccumulator::new();
+    let mut per_rank_stats = Vec::with_capacity(results.len());
+    let mut per_rank_logs = Vec::with_capacity(results.len());
+    let mut mult_stats = LocalMultStats::default();
+    let mut timers_per_rank = Vec::with_capacity(results.len());
+    let mut peak_buffer_bytes = 0u64;
+    for (acc, ms, timers, log, stats, peak) in results {
+        let panel = acc.into_panel();
+        global.add_panel(&panel);
+        mult_stats.merge(&ms);
+        per_rank_stats.push(stats);
+        per_rank_logs.push(log);
+        timers_per_rank.push(timers);
+        peak_buffer_bytes = peak_buffer_bytes.max(peak);
+    }
+    let mut c = global.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+    if let Some(c0) = c0 {
+        c = c.add_scaled(1.0, c0);
+    }
+    let (c, post_filtered) = filter_blocks(&c, cfg.filter.post_eps);
+
+    Ok(MultiplyReport {
+        c,
+        per_rank_stats,
+        per_rank_logs,
+        mult_stats,
+        timers: Timers::merge_ranks(&timers_per_rank),
+        wall_s,
+        post_filtered,
+        peak_buffer_bytes,
+        topo,
+    })
+}
+
+/// Single-rank dense-backed oracle for `C = C + A·B` with the same
+/// filtering semantics — what the distributed engines are validated
+/// against.
+pub fn multiply_oracle(
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+    c0: Option<&BlockCsrMatrix>,
+    filter: &FilterConfig,
+) -> BlockCsrMatrix {
+    let mut acc = BlockAccumulator::new();
+    let pa = crate::local::batch::matrix_to_panel(a);
+    let pb = crate::local::batch::matrix_to_panel(b);
+    crate::local::batch::multiply_panels_native(&pa, &pb, filter.on_the_fly_eps, &mut acc);
+    let mut c = acc.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+    if let Some(c0) = c0 {
+        c = c.add_scaled(1.0, c0);
+    }
+    filter_blocks(&c, filter.post_eps).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::layout::BlockLayout;
+    use crate::dist::grid::ProcGrid;
+    use crate::util::testkit::property;
+
+    fn setup(
+        nblocks: usize,
+        bs: usize,
+        occ: f64,
+        seed: u64,
+    ) -> (BlockCsrMatrix, BlockCsrMatrix, BlockLayout) {
+        let l = BlockLayout::uniform(nblocks, bs);
+        let a = BlockCsrMatrix::random(&l, &l, occ, seed);
+        let b = BlockCsrMatrix::random(&l, &l, occ, seed ^ 0xFF);
+        (a, b, l)
+    }
+
+    fn check_engine(engine: Engine, pr: usize, pc: usize, seed: u64) {
+        let (a, b, l) = setup(18, 3, 0.35, seed);
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, seed ^ 0xD);
+        let cfg = MultiplyConfig {
+            engine,
+            ..Default::default()
+        };
+        let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+        let diff = report.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(
+            diff < 1e-10,
+            "{} on {pr}x{pc}: max diff {diff}",
+            engine.label()
+        );
+    }
+
+    #[test]
+    fn ptp_matches_oracle_square() {
+        check_engine(Engine::PointToPoint, 2, 2, 1);
+        check_engine(Engine::PointToPoint, 3, 3, 2);
+    }
+
+    #[test]
+    fn ptp_matches_oracle_nonsquare() {
+        check_engine(Engine::PointToPoint, 2, 3, 3);
+        check_engine(Engine::PointToPoint, 1, 4, 4);
+        check_engine(Engine::PointToPoint, 3, 2, 5);
+    }
+
+    #[test]
+    fn os1_matches_oracle() {
+        check_engine(Engine::OneSided { l: 1 }, 2, 2, 6);
+        check_engine(Engine::OneSided { l: 1 }, 2, 3, 7);
+        check_engine(Engine::OneSided { l: 1 }, 3, 3, 8);
+    }
+
+    #[test]
+    fn osl_matches_oracle_square_l4() {
+        check_engine(Engine::OneSided { l: 4 }, 4, 4, 9);
+        check_engine(Engine::OneSided { l: 4 }, 2, 2, 10); // falls back? 2x2: sqrt4=2 | 2, V=2 % 4 != 0 -> fallback L=1
+    }
+
+    #[test]
+    fn osl_matches_oracle_nonsquare_l2() {
+        check_engine(Engine::OneSided { l: 2 }, 2, 4, 11);
+        check_engine(Engine::OneSided { l: 2 }, 4, 2, 12);
+    }
+
+    #[test]
+    fn osl_matches_oracle_l9() {
+        check_engine(Engine::OneSided { l: 9 }, 3, 3, 13);
+    }
+
+    #[test]
+    fn c_accumulation_works() {
+        let (a, b, l) = setup(12, 2, 0.4, 20);
+        let c0 = BlockCsrMatrix::random(&l, &l, 0.3, 21);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 22);
+        let cfg = MultiplyConfig::default();
+        let report = multiply_distributed(&a, &b, Some(&c0), &dist, &cfg).unwrap();
+        let want = multiply_oracle(&a, &b, Some(&c0), &FilterConfig::none());
+        assert!(report.c.to_dense().max_abs_diff(&want.to_dense()) < 1e-10);
+    }
+
+    #[test]
+    fn filtering_matches_oracle() {
+        let (a, b, l) = setup(14, 3, 0.5, 30);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 31);
+        let filter = FilterConfig {
+            on_the_fly_eps: 0.05,
+            post_eps: 0.02,
+        };
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let cfg = MultiplyConfig {
+                engine,
+                filter,
+                ..Default::default()
+            };
+            let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let want = multiply_oracle(&a, &b, None, &filter);
+            let diff = report.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(diff < 1e-10, "{}: {diff}", engine.label());
+        }
+    }
+
+    #[test]
+    fn strict_topology_errors() {
+        let (a, b, l) = setup(8, 2, 0.4, 40);
+        let grid = ProcGrid::new(3, 3).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 41);
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l: 4 },
+            strict_topology: true,
+            ..Default::default()
+        };
+        assert!(multiply_distributed(&a, &b, None, &dist, &cfg).is_err());
+    }
+
+    #[test]
+    fn property_engines_agree_random_grids() {
+        property("engines agree", 77, 8, |rng, _| {
+            let pr = 1 + rng.usize_below(3);
+            let pc = 1 + rng.usize_below(3);
+            let (a, b, l) = setup(10 + rng.usize_below(8), 2, 0.3, rng.next_u64());
+            let grid = ProcGrid::new(pr, pc).unwrap();
+            let dist = Distribution2d::rand_permuted(&l, &l, &grid, rng.next_u64());
+            let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+            for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+                let cfg = MultiplyConfig {
+                    engine,
+                    ..Default::default()
+                };
+                let got = multiply_distributed(&a, &b, None, &dist, &cfg)
+                    .map_err(|e| e.to_string())?;
+                let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+                if diff > 1e-10 {
+                    return Err(format!("{} {pr}x{pc}: diff {diff}", engine.label()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Paper **Algorithm 2**: the 2.5D multiplication with MPI one-sided
+//! communication — the paper's contribution.
+//!
+//! Differences from Cannon (§3):
+//!
+//! * A and B panels are copied once into read-only buffers backing MPI
+//!   **windows**; every fetch is an `mpi_rget` (passive target) straight
+//!   from the panel's *home* position in the 2D grid — **no pre-shift,
+//!   no neighbour chains, receiver-only synchronization**.
+//! * The computation of each C panel is split over `L` processes (the
+//!   2.5D replication); each process accumulates `L` *partial* C panels
+//!   and, at the end, sends `L−1` of them to their 2D owners
+//!   (point-to-point, overlapped with the last tick), keeping the one
+//!   that is already home for the final accumulation.
+//! * `V/L` ticks; per tick `L_R` A panels + `L_C` B panels are fetched
+//!   and reused across the tick's `L` products (`engines::schedule`),
+//!   cutting A/B traffic by `√L` at the cost of `(L−1)·S_C` C traffic
+//!   and `O(L)` memory — Eq. 6/7.
+//! * Window pools are grow-only across multiplications; a nonblocking
+//!   allreduce checks the required size while initialization proceeds
+//!   (here: the `iallreduce_max` call).
+
+use std::collections::HashMap;
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::panel::Panel;
+use crate::comm::rma::win_key;
+use crate::comm::world::{Comm, Payload, TrafficClass};
+use crate::dist::distribution::Distribution2d;
+use crate::dist::topology25d::Topology25d;
+use crate::engines::schedule::{osl_tick_products, osl_vk};
+use crate::local::batch::{multiply_panels_native, LocalMultStats};
+use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
+use crate::stats::timers::Timers;
+
+const TAG_C: u64 = 7 << 56;
+
+/// Per-rank inputs: the window exposures (home panels).
+pub struct RankInput {
+    /// A panels this rank is home for: key `win_key(pi, vk)` with
+    /// `pi == i`, `vk ≡ j (mod P_C)`.
+    pub a_window: HashMap<u64, Panel>,
+    /// B panels this rank is home for: key `win_key(vk, pj)` with
+    /// `vk ≡ i (mod P_R)`, `pj == j`.
+    pub b_window: HashMap<u64, Panel>,
+}
+
+/// Per-rank result.
+pub struct RankOutput {
+    /// Final (fully reduced) C accumulation for this rank's C panel.
+    pub c_acc: BlockAccumulator,
+    pub mult_stats: LocalMultStats,
+    pub timers: Timers,
+    pub log: RankLog,
+    /// Peak bytes held in temporary A/B/C buffers (memory model, Eq. 6).
+    pub peak_buffer_bytes: u64,
+}
+
+/// Run Algorithm 2 on one rank.
+pub fn run_rank(
+    comm: &Comm,
+    dist: &Distribution2d,
+    topo: &Topology25d,
+    input: RankInput,
+    eps: f64,
+) -> RankOutput {
+    let grid = &dist.grid;
+    let (i, j) = grid.coords(comm.rank());
+    let mut timers = Timers::new();
+    let mut log = RankLog::new(EngineKind::OneSided);
+    let mut mult_stats = LocalMultStats::default();
+
+    // Window-pool size check (nonblocking, overlaps initialization).
+    let pool_bytes: u64 = input
+        .a_window
+        .values()
+        .chain(input.b_window.values())
+        .map(|p| p.wire_bytes() as u64)
+        .sum();
+    let size_check = comm.iallreduce_max(pool_bytes);
+
+    // Create the read-only windows (collective).
+    timers.time("osl/win_create", || {
+        comm.win_create("osl_a", input.a_window);
+        comm.win_create("osl_b", input.b_window);
+    });
+    let _max_pool = comm.iallreduce_wait(size_check);
+
+    // L partial C accumulators: index (a, b) -> C panel (m(a), n(b)).
+    let mut partials: Vec<BlockAccumulator> = (0..topo.l).map(|_| BlockAccumulator::new()).collect();
+    let rows = topo.c_panel_rows(i);
+    let cols = topo.c_panel_cols(j);
+    let mut peak_buffer_bytes = 0u64;
+
+    // --- V/L ticks ----------------------------------------------------
+    for big_t in 0..topo.nticks() {
+        let vk = osl_vk(topo, i, j, big_t);
+        // Fetch the tick's L_R A panels and L_C B panels from their homes
+        // (passive-target rget; the paper's mpi_waitall for these fetches
+        // is the per-tick synchronization point).
+        let mut rec = TickRecord::default();
+        let (a_bufs, b_bufs) = timers.time("osl/rget_waitall", || {
+            let a_bufs: Vec<Panel> = rows
+                .iter()
+                .map(|&m| {
+                    let home = dist.a_panel_home(m, vk);
+                    comm.rget("osl_a", home, win_key(m, vk), TrafficClass::MatrixA)
+                        .wait()
+                })
+                .collect();
+            let b_bufs: Vec<Panel> = cols
+                .iter()
+                .map(|&n| {
+                    let home = dist.b_panel_home(vk, n);
+                    comm.rget("osl_b", home, win_key(vk, n), TrafficClass::MatrixB)
+                        .wait()
+                })
+                .collect();
+            (a_bufs, b_bufs)
+        });
+        rec.a_msgs = a_bufs.len() as u32;
+        rec.a_bytes = a_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
+        rec.b_msgs = b_bufs.len() as u32;
+        rec.b_bytes = b_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
+        peak_buffer_bytes = peak_buffer_bytes.max(rec.a_bytes + rec.b_bytes);
+
+        // The tick's L products, A-index fastest (Algorithm 2 sub-steps).
+        for (a, b, _m, _n) in osl_tick_products(topo, i, j) {
+            let s = timers.time("osl/local_multiply", || {
+                multiply_panels_native(
+                    &a_bufs[a],
+                    &b_bufs[b],
+                    eps,
+                    &mut partials[b * topo.l_r + a],
+                )
+            });
+            mult_stats.merge(&s);
+            rec.flops += s.flops;
+            rec.mults += 1;
+        }
+        log.ticks.push(rec);
+    }
+
+    // --- C reduction (overlapped with the last tick in the paper) -----
+    // Send the L-1 partials that are not home; keep the home one.
+    let my_partial_idx = {
+        let (i3d, j3d, _) = topo.coords3d(i, j);
+        j3d * topo.l_r + i3d
+    };
+    let mut c_acc = BlockAccumulator::new();
+    let mut send_reqs = Vec::new();
+    let mut expected: usize = 0;
+    timers.time("osl/c_reduce", || {
+        for (idx, acc) in partials.drain(..).enumerate() {
+            let a = idx % topo.l_r;
+            let b = idx / topo.l_r;
+            let (m, n) = (rows[a], cols[b]);
+            if idx == my_partial_idx {
+                // Home panel: keep locally.
+                debug_assert_eq!((m, n), (i, j));
+                c_acc = acc;
+            } else {
+                let owner = grid.rank(m, n);
+                let panel = acc.into_panel();
+                log.c_bytes += panel.wire_bytes() as u64;
+                log.c_msgs += 1;
+                send_reqs.push(comm.isend(
+                    owner,
+                    TAG_C | ((i * grid.cols() + j) as u64),
+                    TrafficClass::MatrixC,
+                    Payload::Panel(panel),
+                ));
+            }
+        }
+        // Receive L-1 partials from the other replicas of OUR C panel.
+        if topo.l > 1 {
+            for (ri, rj) in topo.replicas_of_panel(i, j) {
+                if (ri, rj) == (i, j) {
+                    continue;
+                }
+                expected += 1;
+                let req = comm.irecv(
+                    grid.rank(ri, rj),
+                    TAG_C | ((ri * grid.cols() + rj) as u64),
+                    TrafficClass::MatrixC,
+                );
+                let panel = comm.wait(req).unwrap().into_panel();
+                log.c_accum_elems += panel.data.len() as u64;
+                c_acc.add_panel(&panel);
+            }
+        }
+        let _ = comm.wait_all(send_reqs);
+    });
+    let _ = expected;
+
+    timers.time("osl/win_free", || {
+        comm.win_free("osl_a");
+        comm.win_free("osl_b");
+    });
+
+    RankOutput {
+        c_acc,
+        mult_stats,
+        timers,
+        log,
+        peak_buffer_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_space_disjoint() {
+        // C tags never collide with rank encodings up to 2^56.
+        assert!(TAG_C > (1u64 << 55));
+        assert_eq!(TAG_C | 42, TAG_C + 42);
+    }
+}

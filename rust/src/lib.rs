@@ -1,0 +1,76 @@
+//! # dbcsr-rs
+//!
+//! Reproduction of *"Increasing the Efficiency of Sparse Matrix-Matrix
+//! Multiplication with a 2.5D Algorithm and One-Sided MPI"* (Lazzaro,
+//! VandeVondele, Hutter, Schütt — PASC '17) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate implements a distributed **block-sparse** matrix-matrix
+//! multiplication library in the spirit of DBCSR:
+//!
+//! * [`blocks`] — blocked-CSR storage, block norms, threshold filtering;
+//! * [`dist`] — 2D process grids, randomized permutations, the 2.5D
+//!   topology rules of the paper (§3, Eq. 4/5);
+//! * [`comm`] — a simulated MPI layer: ranks as threads, point-to-point
+//!   `isend`/`irecv`/`wait_all`, one-sided windows with `rget` (passive
+//!   target), collectives, and exact per-rank byte accounting;
+//! * [`engines`] — the two multiplication engines: Cannon's algorithm
+//!   with point-to-point communication (paper Algorithm 1, the baseline)
+//!   and the 2.5D one-sided algorithm (paper Algorithm 2, the
+//!   contribution);
+//! * [`local`] — the node-local batched block multiplication with
+//!   DBCSR's on-the-fly norm filter (the LIBSMM role), feeding either a
+//!   native microkernel or the AOT-compiled Pallas kernel via [`runtime`];
+//! * [`runtime`] — PJRT CPU client that loads `artifacts/*.hlo.txt`
+//!   produced by `python/compile/aot.py`;
+//! * [`perfmodel`] — virtual-time replay of both engines' schedules at
+//!   paper scale (200–3844 nodes) over an α-β network model;
+//! * [`workloads`] — synthetic CP2K-benchmark generators (Table 1);
+//! * [`sign`] — the linear-scaling-DFT matrix-sign iteration (Eq. 1–3);
+//! * [`stats`] — region timers and the table/figure printers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dbcsr::prelude::*;
+//!
+//! let layout = BlockLayout::uniform(64, 8); // 64 block-rows of size 8
+//! let grid = ProcGrid::new(2, 2).unwrap();
+//! let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 42);
+//! let a = BlockCsrMatrix::random(&layout, &layout, 0.2, 1);
+//! let b = BlockCsrMatrix::random(&layout, &layout, 0.2, 2);
+//! let cfg = MultiplyConfig { engine: Engine::OneSided { l: 1 }, ..Default::default() };
+//! let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+//! println!("C nnz blocks = {}", report.c.nnz_blocks());
+//! ```
+
+pub mod benchkit;
+pub mod blocks;
+pub mod comm;
+pub mod dist;
+pub mod engines;
+pub mod local;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sign;
+pub mod stats;
+pub mod util;
+pub mod workloads;
+
+/// Convenience re-exports of the main public types.
+pub mod prelude {
+    pub use crate::blocks::filter::FilterConfig;
+    pub use crate::blocks::layout::BlockLayout;
+    pub use crate::blocks::matrix::BlockCsrMatrix;
+    pub use crate::dist::distribution::Distribution2d;
+    pub use crate::dist::grid::ProcGrid;
+    pub use crate::dist::topology25d::Topology25d;
+    pub use crate::engines::multiply::{
+        multiply_distributed, Engine, MultiplyConfig, MultiplyReport,
+    };
+    pub use crate::local::microkernel::GemmBackend;
+    pub use crate::perfmodel::machine::MachineModel;
+    pub use crate::perfmodel::replay::{replay_multiplication, ReplayConfig};
+    pub use crate::util::prng::Pcg64;
+    pub use crate::workloads::spec::BenchSpec;
+}

@@ -1,0 +1,209 @@
+//! Batch assembly + execution of one local multiplication
+//! `C_panel += A_panel · B_panel` with DBCSR's on-the-fly filter.
+//!
+//! Block pairs are matched on the inner dimension (`A.col == B.row`),
+//! their norm product is tested against the filtering threshold, and the
+//! surviving products are executed — by the native microkernel here, or
+//! packed into fixed-capacity stacks for the AOT Pallas kernel
+//! (`stacks.rs` / `runtime/gemm.rs`).
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::panel::Panel;
+use crate::local::microkernel::{gemm_acc, gemm_flops};
+
+/// One surviving block product: indices into the A and B panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProductTask {
+    pub a_entry: usize,
+    pub b_entry: usize,
+}
+
+/// Statistics of one local multiplication.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LocalMultStats {
+    /// Products that passed the norm filter and were executed.
+    pub products: u64,
+    /// Products skipped by the on-the-fly filter.
+    pub filtered: u64,
+    /// FLOPs actually executed.
+    pub flops: f64,
+}
+
+impl LocalMultStats {
+    pub fn merge(&mut self, other: &LocalMultStats) {
+        self.products += other.products;
+        self.filtered += other.filtered;
+        self.flops += other.flops;
+    }
+}
+
+/// Enumerate the surviving products of `A_panel · B_panel`.
+///
+/// `eps < 0` disables the filter.  Matching indexes the B panel by block
+/// row and streams A entries: `O(|A| + |B| + matches)`.
+pub fn assemble_tasks(
+    a: &Panel,
+    b: &Panel,
+    eps: f64,
+    stats: &mut LocalMultStats,
+) -> Vec<ProductTask> {
+    let b_by_row = b.index_by_row();
+    let mut tasks = Vec::new();
+    for (ae, aen) in a.entries.iter().enumerate() {
+        if let Some(bes) = b_by_row.get(&aen.col) {
+            let an = a.norms[ae];
+            for &be in bes {
+                if eps < 0.0 || an * b.norms[be] > eps {
+                    tasks.push(ProductTask {
+                        a_entry: ae,
+                        b_entry: be,
+                    });
+                } else {
+                    stats.filtered += 1;
+                }
+            }
+        }
+    }
+    tasks
+}
+
+/// Execute tasks with the native microkernel, accumulating into `acc`.
+pub fn execute_tasks_native(
+    a: &Panel,
+    b: &Panel,
+    tasks: &[ProductTask],
+    acc: &mut BlockAccumulator,
+    stats: &mut LocalMultStats,
+) {
+    for t in tasks {
+        let aen = &a.entries[t.a_entry];
+        let ben = &b.entries[t.b_entry];
+        debug_assert_eq!(aen.col, ben.row, "inner dimension mismatch");
+        let (m, k, n) = (aen.nr as usize, aen.nc as usize, ben.nc as usize);
+        let c = acc.block_mut(aen.row, ben.col, aen.nr, ben.nc);
+        gemm_acc(m, k, n, a.block(t.a_entry), b.block(t.b_entry), c);
+        stats.products += 1;
+        stats.flops += gemm_flops(m, k, n);
+    }
+}
+
+/// One-call local multiplication: assemble + execute natively.
+pub fn multiply_panels_native(
+    a: &Panel,
+    b: &Panel,
+    eps: f64,
+    acc: &mut BlockAccumulator,
+) -> LocalMultStats {
+    let mut stats = LocalMultStats::default();
+    let tasks = assemble_tasks(a, b, eps, &mut stats);
+    execute_tasks_native(a, b, &tasks, acc, &mut stats);
+    stats
+}
+
+/// Convert a whole matrix into one panel (single-rank / oracle path).
+pub fn matrix_to_panel(m: &crate::blocks::matrix::BlockCsrMatrix) -> Panel {
+    let mut p = Panel::new();
+    for (r, c, blk) in m.iter_blocks() {
+        p.push_block(
+            r as u32,
+            c as u32,
+            m.row_layout().size(r) as u16,
+            m.col_layout().size(c) as u16,
+            blk,
+        );
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::layout::BlockLayout;
+    use crate::blocks::matrix::BlockCsrMatrix;
+
+    #[test]
+    fn panel_product_matches_dense() {
+        let l = BlockLayout::uniform(8, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.4, 1);
+        let b = BlockCsrMatrix::random(&l, &l, 0.4, 2);
+        let mut acc = BlockAccumulator::new();
+        let stats =
+            multiply_panels_native(&matrix_to_panel(&a), &matrix_to_panel(&b), -1.0, &mut acc);
+        assert!(stats.products > 0);
+        assert_eq!(stats.filtered, 0);
+        let c = acc.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+        let want = a.to_dense().matmul(&b.to_dense());
+        assert!(c.to_dense().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn filter_skips_small_products() {
+        let l = BlockLayout::uniform(4, 2);
+        let a = BlockCsrMatrix::random(&l, &l, 1.0, 3);
+        let b = BlockCsrMatrix::random(&l, &l, 1.0, 4);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let mut s_all = LocalMultStats::default();
+        let all = assemble_tasks(&pa, &pb, -1.0, &mut s_all);
+        let mut s_none = LocalMultStats::default();
+        let none = assemble_tasks(&pa, &pb, 1e12, &mut s_none);
+        assert!(none.is_empty());
+        assert_eq!(s_none.filtered as usize, all.len());
+        // a median threshold keeps some, filters some
+        let mut prods: Vec<f64> = all
+            .iter()
+            .map(|t| pa.norms[t.a_entry] * pb.norms[t.b_entry])
+            .collect();
+        prods.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let mid_eps = prods[prods.len() / 2];
+        let mut s_mid = LocalMultStats::default();
+        let mid = assemble_tasks(&pa, &pb, mid_eps, &mut s_mid);
+        assert!(!mid.is_empty() && mid.len() < all.len());
+    }
+
+    #[test]
+    fn filtered_equals_masked_execution() {
+        // Executing with the filter == executing exactly the products
+        // whose norm product exceeds eps.
+        let l = BlockLayout::uniform(6, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.6, 5);
+        let b = BlockCsrMatrix::random(&l, &l, 0.6, 6);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let eps = 0.3;
+
+        let mut acc1 = BlockAccumulator::new();
+        multiply_panels_native(&pa, &pb, eps, &mut acc1);
+        let c1 = acc1.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+
+        let mut acc2 = BlockAccumulator::new();
+        let mut s = LocalMultStats::default();
+        let all = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let kept: Vec<ProductTask> = all
+            .into_iter()
+            .filter(|t| pa.norms[t.a_entry] * pb.norms[t.b_entry] > eps)
+            .collect();
+        execute_tasks_native(&pa, &pb, &kept, &mut acc2, &mut s);
+        let c2 = acc2.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+
+        assert!(c1.to_dense().max_abs_diff(&c2.to_dense()) < 1e-14);
+    }
+
+    #[test]
+    fn empty_panels_no_tasks() {
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&Panel::new(), &Panel::new(), -1.0, &mut s);
+        assert!(tasks.is_empty());
+        assert_eq!(s, LocalMultStats::default());
+    }
+
+    #[test]
+    fn flops_counted() {
+        let l = BlockLayout::uniform(3, 4);
+        let a = BlockCsrMatrix::random(&l, &l, 1.0, 7);
+        let b = BlockCsrMatrix::random(&l, &l, 1.0, 8);
+        let mut acc = BlockAccumulator::new();
+        let s = multiply_panels_native(&matrix_to_panel(&a), &matrix_to_panel(&b), -1.0, &mut acc);
+        // 3x3 grid of blocks, all present: 3*3*3 = 27 products of 4x4x4
+        assert_eq!(s.products, 27);
+        assert_eq!(s.flops, 27.0 * 2.0 * 64.0);
+    }
+}

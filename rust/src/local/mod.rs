@@ -1,0 +1,6 @@
+//! Node-local multiplication: batch assembly, the native microkernel and
+//! the fixed-capacity stacks for the AOT/PJRT path.
+
+pub mod batch;
+pub mod microkernel;
+pub mod stacks;

@@ -1,0 +1,192 @@
+//! Fixed-capacity product stacks for the AOT/PJRT path.
+//!
+//! The AOT-compiled Pallas kernel has a static shape
+//! `[N, bm, bk] × [N, bk, bn] → [N, bm, bn]` (one artifact per block-size
+//! variant, see `python/compile/model.py::VARIANTS`).  This module packs
+//! the surviving product tasks of a local multiplication into f32 stacks
+//! of exactly that shape — zero-padding the tail, which the kernel's own
+//! norm filter maps to exact-zero products — and scatters the results
+//! back into the block accumulator.
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::panel::Panel;
+use crate::local::batch::ProductTask;
+
+/// A packed batch ready for one kernel invocation.
+#[derive(Clone, Debug)]
+pub struct PackedStack {
+    /// `[n, bm, bk]` flattened, f32.
+    pub a: Vec<f32>,
+    /// `[n, bk, bn]` flattened, f32.
+    pub b: Vec<f32>,
+    /// Target C block of each real (non-padding) slot.
+    pub targets: Vec<(u32, u32)>,
+    /// Stack capacity `n`.
+    pub capacity: usize,
+    /// Block dims.
+    pub bm: usize,
+    pub bk: usize,
+    pub bn: usize,
+}
+
+impl PackedStack {
+    /// Number of real (non-padding) products.
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+}
+
+/// Pack product tasks (all of one `[bm,bk,bn]` shape) into stacks of
+/// `capacity`.  Tasks with other shapes are returned as leftovers for the
+/// native fallback.
+pub fn pack_stacks(
+    a: &Panel,
+    b: &Panel,
+    tasks: &[ProductTask],
+    bm: usize,
+    bk: usize,
+    bn: usize,
+    capacity: usize,
+) -> (Vec<PackedStack>, Vec<ProductTask>) {
+    let mut stacks = Vec::new();
+    let mut leftovers = Vec::new();
+    let mut cur: Option<PackedStack> = None;
+    for &t in tasks {
+        let aen = &a.entries[t.a_entry];
+        let ben = &b.entries[t.b_entry];
+        if (aen.nr as usize, aen.nc as usize, ben.nc as usize) != (bm, bk, bn) {
+            leftovers.push(t);
+            continue;
+        }
+        let stack = cur.get_or_insert_with(|| PackedStack {
+            a: vec![0.0; capacity * bm * bk],
+            b: vec![0.0; capacity * bk * bn],
+            targets: Vec::with_capacity(capacity),
+            capacity,
+            bm,
+            bk,
+            bn,
+        });
+        let slot = stack.targets.len();
+        for (i, &v) in a.block(t.a_entry).iter().enumerate() {
+            stack.a[slot * bm * bk + i] = v as f32;
+        }
+        for (i, &v) in b.block(t.b_entry).iter().enumerate() {
+            stack.b[slot * bk * bn + i] = v as f32;
+        }
+        stack.targets.push((aen.row, ben.col));
+        if stack.targets.len() == capacity {
+            stacks.push(cur.take().unwrap());
+        }
+    }
+    if let Some(s) = cur {
+        if !s.is_empty() {
+            stacks.push(s);
+        }
+    }
+    (stacks, leftovers)
+}
+
+/// Scatter a kernel output stack (`[n, bm, bn]` f32) into the accumulator.
+pub fn scatter_results(stack: &PackedStack, out: &[f32], acc: &mut BlockAccumulator) {
+    assert_eq!(out.len(), stack.capacity * stack.bm * stack.bn);
+    let blk = stack.bm * stack.bn;
+    for (slot, &(row, col)) in stack.targets.iter().enumerate() {
+        let src = &out[slot * blk..(slot + 1) * blk];
+        let dst = acc.block_mut(row, col, stack.bm as u16, stack.bn as u16);
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::local::batch::{assemble_tasks, LocalMultStats};
+
+    fn uniform_panels(nb: usize, bs: usize, seeds: (u64, u64)) -> (Panel, Panel) {
+        use crate::blocks::layout::BlockLayout;
+        use crate::blocks::matrix::BlockCsrMatrix;
+        use crate::local::batch::matrix_to_panel;
+        let l = BlockLayout::uniform(nb, bs);
+        let a = BlockCsrMatrix::random(&l, &l, 0.7, seeds.0);
+        let b = BlockCsrMatrix::random(&l, &l, 0.7, seeds.1);
+        (matrix_to_panel(&a), matrix_to_panel(&b))
+    }
+
+    #[test]
+    fn packing_respects_capacity() {
+        let (pa, pb) = uniform_panels(6, 3, (1, 2));
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let (stacks, leftovers) = pack_stacks(&pa, &pb, &tasks, 3, 3, 3, 8);
+        assert!(leftovers.is_empty());
+        let total: usize = stacks.iter().map(|s| s.len()).sum();
+        assert_eq!(total, tasks.len());
+        for st in &stacks[..stacks.len() - 1] {
+            assert_eq!(st.len(), 8);
+        }
+        // padding slots are zero
+        let last = stacks.last().unwrap();
+        for slot in last.len()..last.capacity {
+            assert!(last.a[slot * 9..(slot + 1) * 9].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_go_to_leftovers() {
+        use crate::blocks::layout::BlockLayout;
+        use crate::blocks::matrix::BlockCsrMatrix;
+        use crate::local::batch::matrix_to_panel;
+        // ragged layout: blocks of size 2 and 3
+        let l = BlockLayout::from_sizes(vec![2, 3, 2, 3]);
+        let a = BlockCsrMatrix::random(&l, &l, 1.0, 3);
+        let b = BlockCsrMatrix::random(&l, &l, 1.0, 4);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let (stacks, leftovers) = pack_stacks(&pa, &pb, &tasks, 2, 2, 2, 16);
+        let packed: usize = stacks.iter().map(|s| s.len()).sum();
+        assert_eq!(packed + leftovers.len(), tasks.len());
+        assert!(packed > 0 && !leftovers.is_empty());
+    }
+
+    #[test]
+    fn scatter_accumulates_f32_products() {
+        let (pa, pb) = uniform_panels(4, 2, (5, 6));
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let (stacks, _) = pack_stacks(&pa, &pb, &tasks, 2, 2, 2, 4);
+        // emulate the kernel: compute the products in f32 on the packed data
+        let mut acc = BlockAccumulator::new();
+        for st in &stacks {
+            let mut out = vec![0.0f32; st.capacity * 4];
+            for slot in 0..st.capacity {
+                for i in 0..2 {
+                    for j in 0..2 {
+                        let mut v = 0.0f32;
+                        for p in 0..2 {
+                            v += st.a[slot * 4 + i * 2 + p] * st.b[slot * 4 + p * 2 + j];
+                        }
+                        out[slot * 4 + i * 2 + j] = v;
+                    }
+                }
+            }
+            scatter_results(st, &out, &mut acc);
+        }
+        // compare against the native f64 path within f32 tolerance
+        let mut acc64 = BlockAccumulator::new();
+        crate::local::batch::multiply_panels_native(&pa, &pb, -1.0, &mut acc64);
+        use crate::blocks::layout::BlockLayout;
+        use std::sync::Arc;
+        let l = Arc::new(BlockLayout::uniform(4, 2));
+        let c32 = acc.into_matrix(Arc::clone(&l), Arc::clone(&l));
+        let c64 = acc64.into_matrix(Arc::clone(&l), l);
+        assert!(c32.to_dense().max_abs_diff(&c64.to_dense()) < 1e-5);
+    }
+}

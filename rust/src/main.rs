@@ -1,0 +1,272 @@
+//! `dbcsr` — CLI for the DBCSR 2.5D/RMA reproduction.
+//!
+//! Subcommands:
+//!
+//! * `multiply`  — run one distributed multiplication on the simulated
+//!   world (real data, exact byte counters), PTP vs OSL.
+//! * `sign`      — linear-scaling-DFT driver: sign iteration to the
+//!   density matrix on a synthetic system.
+//! * `table1` / `table2` / `fig1` / `fig2` / `fig3` / `fig4` — regenerate
+//!   the paper's tables/figures from the calibrated analytic replay.
+//! * `selftest`  — quick end-to-end sanity run (engines vs oracle +
+//!   PJRT artifact smoke test).
+
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{
+    multiply_distributed, multiply_oracle, Engine, MultiplyConfig,
+};
+use dbcsr::perfmodel::machine::MachineModel;
+use dbcsr::stats::report;
+use dbcsr::util::cli::Args;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().collect();
+    let sub = if argv.len() > 1 { argv.remove(1) } else { String::new() };
+    let code = match sub.as_str() {
+        "multiply" => cmd_multiply(),
+        "sign" => cmd_sign(),
+        "table1" => {
+            print!("{}", report::table1());
+            0
+        }
+        "table2" => {
+            print!("{}", report::table2());
+            0
+        }
+        "fig1" => {
+            print!("{}", report::fig1());
+            0
+        }
+        "fig2" => {
+            print!("{}", report::fig2());
+            0
+        }
+        "fig3" => {
+            print!("{}", report::fig3());
+            0
+        }
+        "fig4" => {
+            print!("{}", report::fig4());
+            0
+        }
+        "selftest" => cmd_selftest(),
+        other => {
+            eprintln!(
+                "dbcsr — DBCSR 2.5D + one-sided MPI reproduction (PASC'17)\n\n\
+                 USAGE: dbcsr <multiply|sign|table1|table2|fig1|fig2|fig3|fig4|selftest> [options]\n\
+                 (unknown subcommand '{other}'; try `dbcsr multiply --help`)"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_engine(s: &str) -> Engine {
+    match s {
+        "ptp" => Engine::PointToPoint,
+        os if os.starts_with("os") => Engine::OneSided {
+            l: os[2..].parse().unwrap_or(1),
+        },
+        _ => {
+            eprintln!("unknown engine '{s}' (use ptp|os1|os2|os4|os9)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_grid(s: &str) -> ProcGrid {
+    let (a, b) = s.split_once('x').expect("grid must be PRxPC");
+    ProcGrid::new(a.parse().unwrap(), b.parse().unwrap()).unwrap()
+}
+
+fn cmd_multiply() -> i32 {
+    let args = match Args::new("dbcsr multiply", "one distributed multiplication")
+        .opt("bench", "dense", "benchmark: h2o|s-e|dense")
+        .opt("nblocks", "32", "matrix size in blocks (scaled run)")
+        .opt("grid", "4x4", "process grid PRxPC")
+        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
+        .opt("eps", "-1", "filter threshold (<0 = off)")
+        .opt("seed", "42", "rng seed")
+        .flag("verify", "compare against the dense oracle")
+        .flag("json", "emit a machine-readable JSON report line")
+        .parse_env(1)
+    {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let spec = BenchSpec::by_name(args.get("bench")).expect("unknown benchmark");
+    let spec = spec.scaled(args.get_as("nblocks"));
+    let grid = parse_grid(args.get("grid"));
+    let engine = parse_engine(args.get("engine"));
+    let seed: u64 = args.get_as("seed");
+
+    let a = random_for_spec(&spec, seed);
+    let b = random_for_spec(&spec, seed ^ 0xBEEF);
+    let layout = spec.layout();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
+    let cfg = MultiplyConfig {
+        engine,
+        filter: FilterConfig::uniform(args.get_as("eps")),
+        ..Default::default()
+    };
+    println!(
+        "benchmark={} blocks={}x{} (block size {}) grid={}x{} engine={}",
+        spec.name,
+        spec.nblocks,
+        spec.nblocks,
+        spec.block_size,
+        grid.rows(),
+        grid.cols(),
+        engine.label()
+    );
+    let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+    let machine = MachineModel::piz_daint(spec.node_flop_rate);
+    let (_, crit) = report.model(&machine);
+    println!(
+        "C: {} blocks ({:.2}% occupied), {} products, {} filtered",
+        report.c.nnz_blocks(),
+        report.c.occupancy() * 100.0,
+        report.mult_stats.products,
+        report.mult_stats.filtered
+    );
+    println!(
+        "comm: {:.3} MB/process avg requested; modeled time {:.3} ms \
+         (waitall {:.3} ms); wall {:.1} ms",
+        report.avg_requested_bytes() / 1e6,
+        crit.total_s * 1e3,
+        crit.waitall_s * 1e3,
+        report.wall_s * 1e3
+    );
+    println!("{}", report.timers.render());
+    if args.is_set("json") {
+        println!(
+            "{}",
+            dbcsr::stats::report::multiply_report_json(&report, &engine).to_string_compact()
+        );
+    }
+    if args.is_set("verify") {
+        let want = multiply_oracle(&a, &b, None, &cfg.filter);
+        let diff = report.c.to_dense().max_abs_diff(&want.to_dense());
+        println!("verify: max |diff| vs oracle = {diff:.3e}");
+        if diff > 1e-10 {
+            eprintln!("VERIFICATION FAILED");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_sign() -> i32 {
+    let args = match Args::new("dbcsr sign", "linear-scaling DFT sign-iteration driver")
+        .opt("nblocks", "12", "system size in blocks")
+        .opt("block-size", "6", "block edge")
+        .opt("grid", "2x2", "process grid PRxPC")
+        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
+        .opt("eps", "1e-7", "filter threshold")
+        .opt("seed", "7", "rng seed")
+        .parse_env(1)
+    {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let grid = parse_grid(args.get("grid"));
+    let sys = dbcsr::workloads::hamiltonian::synthetic_system(
+        args.get_as("nblocks"),
+        args.get_as("block-size"),
+        args.get_as("seed"),
+    );
+    let dist = Distribution2d::rand_permuted(&sys.layout, &sys.layout, &grid, 3);
+    let cfg = MultiplyConfig {
+        engine: parse_engine(args.get("engine")),
+        filter: FilterConfig::uniform(args.get_as("eps")),
+        ..Default::default()
+    };
+    let (p, sign) =
+        dbcsr::sign::density::density_matrix(&sys.h, &sys.s, sys.mu, &dist, &cfg).unwrap();
+    println!(
+        "sign iteration: {} iterations, converged = {}",
+        sign.iters.len(),
+        sign.converged
+    );
+    for s in &sign.iters {
+        println!(
+            "  iter {:>2}: delta {:>10.3e}  occupancy {:>6.2}%  products {}",
+            s.iter,
+            s.delta,
+            s.occupancy * 100.0,
+            s.mult_stats.products
+        );
+    }
+    println!(
+        "density matrix: {} blocks, occupancy {:.2}%",
+        p.nnz_blocks(),
+        p.occupancy() * 100.0
+    );
+    i32::from(!sign.converged)
+}
+
+fn cmd_selftest() -> i32 {
+    // engines vs oracle
+    let spec = BenchSpec::dense().scaled(16);
+    let a = random_for_spec(&spec, 1);
+    let b = random_for_spec(&spec, 2);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+    let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+    for engine in [
+        Engine::PointToPoint,
+        Engine::OneSided { l: 1 },
+        Engine::OneSided { l: 4 },
+    ] {
+        let cfg = MultiplyConfig {
+            engine,
+            ..Default::default()
+        };
+        let got = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+        println!("{}: max diff vs oracle {diff:.2e}", engine.label());
+        if diff > 1e-10 {
+            eprintln!("SELFTEST FAILED ({})", engine.label());
+            return 1;
+        }
+    }
+    // PJRT artifacts (if built)
+    match dbcsr::runtime::client::PjrtContext::load("artifacts") {
+        Ok(ctx) => {
+            println!("pjrt: loaded artifacts {:?}", ctx.names());
+            let pa = dbcsr::local::batch::matrix_to_panel(&a);
+            let pb = dbcsr::local::batch::matrix_to_panel(&b);
+            let mut acc = dbcsr::blocks::build::BlockAccumulator::new();
+            let stats =
+                dbcsr::runtime::gemm::multiply_panels_pjrt(&ctx, &pa, &pb, -1.0, &mut acc)
+                    .unwrap();
+            let c = acc.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+            let diff = c.to_dense().max_abs_diff(&want.to_dense());
+            println!(
+                "pjrt: {} products through the Pallas artifact, max diff {diff:.2e} (f32 path)",
+                stats.products
+            );
+            if diff > 1e-2 {
+                eprintln!("SELFTEST FAILED (pjrt numerics)");
+                return 1;
+            }
+        }
+        Err(e) => {
+            println!("pjrt: skipped ({e}); run `make artifacts`");
+        }
+    }
+    println!("selftest OK");
+    0
+}

@@ -1,0 +1,6 @@
+//! Virtual-time performance model: replays the engines' schedules at
+//! paper scale over the α-β network model.
+
+pub mod machine;
+pub mod replay;
+pub mod virtual_time;

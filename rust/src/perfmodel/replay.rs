@@ -1,0 +1,351 @@
+//! Analytic paper-scale replay: reproduce Table 2 / Figures 1–4 at
+//! 200–3844 nodes.
+//!
+//! The real engines validate *correctness* and count bytes exactly at
+//! simulation scale (≤ ~64 ranks on this box).  For the paper's node
+//! counts we replay the **same schedules** (`engines::schedule`)
+//! analytically: per-tick traffic follows from the panel sizes the
+//! distribution implies, compute follows from the benchmark's FLOPs, and
+//! the pricing is `perfmodel::virtual_time` over the Aries α-β model —
+//! the identical code path the real engines' logs go through.
+//!
+//! Volumes are exact consequences of the schedule (they match the
+//! counted bytes of the real engines, cross-checked in
+//! `rust/tests/replay_validation.rs`); times are modeled, calibrated per
+//! benchmark from the paper's own 200-node PTP row (see
+//! `MachineModel::for_benchmark`), with everything else predicted.
+
+use crate::dist::grid::ProcGrid;
+use crate::dist::topology25d::Topology25d;
+use crate::engines::multiply::Engine;
+use crate::perfmodel::machine::MachineModel;
+use crate::perfmodel::virtual_time::{model_rank_time, EngineKind, ModeledTime, RankLog, TickRecord};
+use crate::workloads::spec::BenchSpec;
+
+/// Replay configuration: one (benchmark, grid, engine) cell of Table 2.
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    pub spec: BenchSpec,
+    pub grid: ProcGrid,
+    pub engine: Engine,
+    /// Price RMA without DMAPP (the paper's 2.4x footnote experiment).
+    pub no_dmapp: bool,
+}
+
+/// One Table-2 cell worth of modeled observables.
+#[derive(Clone, Debug)]
+pub struct ReplaySummary {
+    pub label: String,
+    pub nodes: usize,
+    /// DBCSR execution time for the whole run (all multiplications), s.
+    pub exec_time_s: f64,
+    /// Fraction of exec time in the A/B-panel waitall (§4.1 analysis).
+    pub waitall_frac: f64,
+    /// Total communicated data per process over the run, bytes (Table 2).
+    pub comm_bytes_per_process: f64,
+    /// Average A/B fetch message size, bytes (Figure 2).
+    pub avg_msg_bytes: f64,
+    pub avg_a_msg_bytes: f64,
+    pub avg_b_msg_bytes: f64,
+    /// Modeled peak memory per process, bytes (matrices + temp buffers,
+    /// Eq. 6 observable; excludes the fixed CP2K application overhead).
+    pub peak_mem_bytes: f64,
+    /// Single-multiplication time (Figure 4's y-axis), s.
+    pub per_mult_s: f64,
+}
+
+/// Panel sizes (bytes) implied by a spec on a grid.
+#[derive(Clone, Copy, Debug)]
+pub struct PanelSizes {
+    /// One A virtual panel `(P_R × V)` grid.
+    pub s_a: f64,
+    /// One B virtual panel `(V × P_C)` grid.
+    pub s_b: f64,
+    /// One C panel `(P_R × P_C)` grid.
+    pub s_c: f64,
+}
+
+/// Compute the panel sizes for a spec on a grid (paper §3 notation).
+pub fn panel_sizes(spec: &BenchSpec, grid: &ProcGrid) -> PanelSizes {
+    let v = grid.virtual_dim() as f64;
+    let (pr, pc) = (grid.rows() as f64, grid.cols() as f64);
+    let bytes = spec.matrix_bytes();
+    PanelSizes {
+        s_a: bytes / (pr * v),
+        s_b: bytes / (v * pc),
+        s_c: spec.sc_ratio * bytes / (pr * pc),
+    }
+}
+
+/// Build the synthetic per-rank log of ONE multiplication under the
+/// engine's schedule (all ranks are statistically identical after the
+/// random permutation, so one log represents every rank).
+pub fn build_rank_log(cfg: &ReplayConfig) -> RankLog {
+    let topo = Topology25d::new_or_fallback(cfg.grid, cfg.engine.l());
+    let sizes = panel_sizes(&cfg.spec, &cfg.grid);
+    let p = cfg.grid.size() as f64;
+    let v = topo.v as f64;
+    let flops_per_mult = cfg.spec.flops / cfg.spec.n_mults as f64;
+    let flops_per_rank = flops_per_mult / p;
+
+    match cfg.engine {
+        Engine::PointToPoint => {
+            // Per tick each rank forwards its whole resident sets:
+            // V/P_C A panels and V/P_R B panels, one message each.
+            let mut log = RankLog::new(EngineKind::Ptp);
+            let a_set = sizes.s_a * (topo.v / cfg.grid.cols()) as f64;
+            let b_set = sizes.s_b * (topo.v / cfg.grid.rows()) as f64;
+            log.pre_bytes = (a_set + b_set) as u64;
+            log.pre_msgs = 2;
+            for t in 0..topo.v {
+                log.ticks.push(TickRecord {
+                    // last tick posts no shift
+                    a_bytes: if t + 1 < topo.v { a_set as u64 } else { 0 },
+                    a_msgs: u32::from(t + 1 < topo.v),
+                    b_bytes: if t + 1 < topo.v { b_set as u64 } else { 0 },
+                    b_msgs: u32::from(t + 1 < topo.v),
+                    flops: flops_per_rank / v,
+                    mults: 1,
+                });
+            }
+            log
+        }
+        Engine::OneSided { .. } => {
+            let kind = if cfg.no_dmapp {
+                EngineKind::OneSidedNoDmapp
+            } else {
+                EngineKind::OneSided
+            };
+            let mut log = RankLog::new(kind);
+            // V/L ticks; per tick L_R A gets + L_C B gets; L products.
+            for _ in 0..topo.nticks() {
+                log.ticks.push(TickRecord {
+                    a_bytes: (sizes.s_a * topo.l_r as f64) as u64,
+                    a_msgs: topo.l_r as u32,
+                    b_bytes: (sizes.s_b * topo.l_c as f64) as u64,
+                    b_msgs: topo.l_c as u32,
+                    flops: flops_per_rank / topo.nticks() as f64,
+                    mults: topo.l as u32,
+                });
+            }
+            // C reduction: L-1 partial panels out, L-1 in (count the
+            // incoming accumulation work; bytes counted once).
+            if topo.l > 1 {
+                log.c_bytes = (sizes.s_c * (topo.l - 1) as f64) as u64;
+                log.c_msgs = (topo.l - 1) as u32;
+                log.c_accum_elems = (sizes.s_c * (topo.l - 1) as f64 / 8.0) as u64;
+            }
+            log
+        }
+    }
+}
+
+/// Modeled peak memory per process (matrix shares + temporary buffers,
+/// following the §3 buffer inventory / Eq. 6).
+pub fn modeled_peak_memory(cfg: &ReplayConfig) -> f64 {
+    let topo = Topology25d::new_or_fallback(cfg.grid, cfg.engine.l());
+    let sizes = panel_sizes(&cfg.spec, &cfg.grid);
+    let p = cfg.grid.size() as f64;
+    let matrices = (2.0 + cfg.spec.sc_ratio) * cfg.spec.matrix_bytes() / p;
+    let buffers = match cfg.engine {
+        Engine::PointToPoint => {
+            // 2 comm + 2 comp buffers holding the resident sets.
+            2.0 * sizes.s_a * (topo.v / cfg.grid.cols()) as f64
+                + 2.0 * sizes.s_b * (topo.v / cfg.grid.rows()) as f64
+        }
+        Engine::OneSided { .. } => {
+            // windows (read-only copies of A and B shares)
+            let windows = 2.0 * cfg.spec.matrix_bytes() / p;
+            // A/B fetch buffers + L-1 partial C + 1 C comm buffer
+            let ab = topo.nbuffers_a() as f64 * sizes.s_a + 2.0 * sizes.s_b;
+            let c = if topo.l > 1 {
+                topo.l as f64 * sizes.s_c
+            } else {
+                0.0
+            };
+            windows + ab + c
+        }
+    };
+    matrices + buffers
+}
+
+/// Run the replay for one Table-2 cell.
+pub fn replay_multiplication(cfg: &ReplayConfig) -> ReplaySummary {
+    let machine = MachineModel::for_benchmark(cfg.spec.name, cfg.grid.size());
+    let log = build_rank_log(cfg);
+    let t: ModeledTime = model_rank_time(&log, &machine);
+    let n_mults = cfg.spec.n_mults as f64;
+
+    let a_bytes: u64 = log.ticks.iter().map(|r| r.a_bytes).sum();
+    let b_bytes: u64 = log.ticks.iter().map(|r| r.b_bytes).sum();
+    let a_msgs: u32 = log.ticks.iter().map(|r| r.a_msgs).sum();
+    let b_msgs: u32 = log.ticks.iter().map(|r| r.b_msgs).sum();
+    let total_bytes = log.total_bytes() as f64;
+
+    ReplaySummary {
+        label: cfg.engine.label(),
+        nodes: cfg.grid.size(),
+        exec_time_s: t.total_s * n_mults,
+        waitall_frac: if t.total_s > 0.0 {
+            t.waitall_s / t.total_s
+        } else {
+            0.0
+        },
+        comm_bytes_per_process: total_bytes * n_mults,
+        avg_msg_bytes: (a_bytes + b_bytes) as f64 / (a_msgs + b_msgs).max(1) as f64,
+        avg_a_msg_bytes: a_bytes as f64 / a_msgs.max(1) as f64,
+        avg_b_msg_bytes: b_bytes as f64 / b_msgs.max(1) as f64,
+        peak_mem_bytes: modeled_peak_memory(cfg),
+        per_mult_s: t.total_s,
+    }
+}
+
+/// The paper's strong-scaling grids (Table 2 node counts).
+pub fn strong_scaling_grids() -> Vec<ProcGrid> {
+    [200usize, 400, 729, 1296, 2704]
+        .iter()
+        .map(|&n| ProcGrid::squarest(n).unwrap())
+        .collect()
+}
+
+/// The paper's L values per node count (Table 2 columns: OS1 plus the
+/// valid L > 1 settings at each size).
+pub fn paper_l_values(grid: &ProcGrid) -> Vec<usize> {
+    let mut out = vec![1];
+    for l in [2usize, 4, 9] {
+        if Topology25d::new(*grid, l).is_ok() {
+            out.push(l);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(spec: BenchSpec, nodes: usize, engine: Engine) -> ReplayConfig {
+        ReplayConfig {
+            spec,
+            grid: ProcGrid::squarest(nodes).unwrap(),
+            engine,
+            no_dmapp: false,
+        }
+    }
+
+    #[test]
+    fn paper_l_values_match_table2() {
+        // 200 -> {1,2}; 400 -> {1,4}; 729 -> {1,9}; 1296 -> {1,4,9};
+        // 2704 -> {1,4}.
+        let grids = strong_scaling_grids();
+        assert_eq!(paper_l_values(&grids[0]), vec![1, 2]);
+        assert_eq!(paper_l_values(&grids[1]), vec![1, 4]);
+        assert_eq!(paper_l_values(&grids[2]), vec![1, 9]);
+        assert_eq!(paper_l_values(&grids[3]), vec![1, 4, 9]);
+        assert_eq!(paper_l_values(&grids[4]), vec![1, 4]);
+    }
+
+    #[test]
+    fn os1_faster_than_ptp_and_gap_grows() {
+        let spec = BenchSpec::h2o_dft_ls();
+        let mut prev_speedup = 0.0;
+        for &nodes in &[400usize, 1296, 2704] {
+            let ptp = replay_multiplication(&cfg(spec.clone(), nodes, Engine::PointToPoint));
+            let os1 = replay_multiplication(&cfg(spec.clone(), nodes, Engine::OneSided { l: 1 }));
+            let speedup = ptp.exec_time_s / os1.exec_time_s;
+            assert!(speedup > 1.0, "OS1 not faster at {nodes}: {speedup}");
+            // the paper's range for H2O-DFT-LS is 1.09x-1.16x, growing;
+            // the model reproduces the band and approximate monotonicity
+            assert!(
+                (1.02..1.5).contains(&speedup),
+                "speedup {speedup} outside plausible band at {nodes}"
+            );
+            assert!(
+                speedup >= prev_speedup * 0.95,
+                "speedup should not fall with nodes: {prev_speedup} -> {speedup}"
+            );
+            prev_speedup = speedup;
+        }
+    }
+
+    #[test]
+    fn osl_reduces_comm_volume_by_eq7() {
+        // Volume ratio OS1/OSL must follow Eq. 7 with the S_C term.
+        let spec = BenchSpec::dense();
+        let grid = ProcGrid::squarest(1296).unwrap();
+        let os1 = replay_multiplication(&ReplayConfig {
+            spec: spec.clone(),
+            grid,
+            engine: Engine::OneSided { l: 1 },
+            no_dmapp: false,
+        });
+        let os4 = replay_multiplication(&ReplayConfig {
+            spec: spec.clone(),
+            grid,
+            engine: Engine::OneSided { l: 4 },
+            no_dmapp: false,
+        });
+        let sizes = panel_sizes(&spec, &grid);
+        let v = grid.virtual_dim() as f64;
+        let vol1 = v * (sizes.s_a + sizes.s_b);
+        let vol4 = v / 2.0 * (sizes.s_a + sizes.s_b) + 3.0 * sizes.s_c;
+        let want = vol1 / vol4;
+        let got = os1.comm_bytes_per_process / os4.comm_bytes_per_process;
+        assert!(
+            (got - want).abs() / want < 0.02,
+            "volume ratio {got} vs Eq.7 {want}"
+        );
+    }
+
+    #[test]
+    fn ptp_comm_scales_inverse_sqrt_p() {
+        let spec = BenchSpec::s_e();
+        let v200 = replay_multiplication(&cfg(spec.clone(), 200, Engine::PointToPoint))
+            .comm_bytes_per_process;
+        let v800 = replay_multiplication(&cfg(spec.clone(), 800, Engine::PointToPoint))
+            .comm_bytes_per_process;
+        let ratio = v200 / v800;
+        assert!(
+            (ratio - 2.0).abs() < 0.35,
+            "expected ~2x comm reduction at 4x nodes, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn memory_grows_with_l() {
+        let spec = BenchSpec::h2o_dft_ls();
+        let grid = ProcGrid::squarest(1296).unwrap();
+        let m1 = modeled_peak_memory(&ReplayConfig {
+            spec: spec.clone(),
+            grid,
+            engine: Engine::OneSided { l: 1 },
+            no_dmapp: false,
+        });
+        let m9 = modeled_peak_memory(&ReplayConfig {
+            spec,
+            grid,
+            engine: Engine::OneSided { l: 9 },
+            no_dmapp: false,
+        });
+        assert!(m9 > m1 * 1.2, "L=9 memory {m9} vs L=1 {m1}");
+    }
+
+    #[test]
+    fn no_dmapp_slower() {
+        let spec = BenchSpec::h2o_dft_ls();
+        let grid = ProcGrid::squarest(2704).unwrap();
+        let with = replay_multiplication(&ReplayConfig {
+            spec: spec.clone(),
+            grid,
+            engine: Engine::OneSided { l: 1 },
+            no_dmapp: false,
+        });
+        let without = replay_multiplication(&ReplayConfig {
+            spec,
+            grid,
+            engine: Engine::OneSided { l: 1 },
+            no_dmapp: true,
+        });
+        assert!(without.exec_time_s > with.exec_time_s);
+    }
+}

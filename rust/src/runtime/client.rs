@@ -1,0 +1,174 @@
+//! PJRT artifact registry: load `artifacts/*.hlo.txt` once, compile on
+//! the PJRT CPU client, execute from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts` →
+//! `python/compile/aot.py`); this module consumes its outputs:
+//! `manifest.json` describing each artifact's shapes plus one HLO **text**
+//! file per variant (text, not serialized proto — xla_extension 0.5.1
+//! rejects jax ≥ 0.5's 64-bit instruction ids; the text parser reassigns
+//! ids).  Pattern follows /opt/xla-example/load_hlo.rs.
+//!
+//! Thread-safety: the CPU PJRT client wraps raw C++ pointers without Sync
+//! guarantees, so a [`PjrtContext`] must stay on one thread.  The
+//! distributed engines therefore run the native microkernel inside rank
+//! threads, while the PJRT path serves the single-threaded drivers
+//! (quickstart, kernel validation, benches) — python stays off the
+//! request path either way.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// Stack capacity `n` for panel_multiply; panel dim for sign_step.
+    pub capacity: usize,
+    /// `[bm, bk, bn]`.
+    pub block: [usize; 3],
+}
+
+/// Parse `manifest.json` into artifact specs.
+pub fn parse_manifest(text: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
+    let v = Json::parse(text)?;
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        let get_str = |k: &str| -> anyhow::Result<String> {
+            Ok(e.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest entry missing '{k}'"))?
+                .to_string())
+        };
+        let block = e
+            .get("block")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing 'block'"))?;
+        anyhow::ensure!(block.len() == 3, "block must have 3 dims");
+        out.push(ArtifactSpec {
+            name: get_str("name")?,
+            kind: get_str("kind")?,
+            file: get_str("file")?,
+            capacity: e
+                .get("capacity")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest entry missing 'capacity'"))?,
+            block: [
+                block[0].as_usize().unwrap_or(0),
+                block[1].as_usize().unwrap_or(0),
+                block[2].as_usize().unwrap_or(0),
+            ],
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU client with every artifact compiled.
+pub struct PjrtContext {
+    pub client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl PjrtContext {
+    /// Load and compile every artifact in `dir` (default: `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = HashMap::new();
+        for spec in specs {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.insert(spec.name.clone(), LoadedArtifact { spec, exe });
+        }
+        Ok(Self {
+            client,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Artifact directory this context was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up a compiled artifact by name.
+    pub fn get(&self, name: &str) -> Option<&LoadedArtifact> {
+        self.artifacts.get(name)
+    }
+
+    /// All loaded artifact names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The `panel_multiply` artifact matching a block shape, if any.
+    pub fn gemm_variant(&self, bm: usize, bk: usize, bn: usize) -> Option<&LoadedArtifact> {
+        self.artifacts
+            .values()
+            .find(|a| a.spec.kind == "panel_multiply" && a.spec.block == [bm, bk, bn])
+    }
+
+    /// The `sign_step` artifact for panel dim `n`, if any.
+    pub fn sign_variant(&self, n: usize) -> Option<&LoadedArtifact> {
+        self.artifacts
+            .values()
+            .find(|a| a.spec.kind == "sign_step" && a.spec.capacity == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_entries() {
+        let text = r#"[
+          {"name": "batched_gemm_b6", "kind": "panel_multiply",
+           "file": "batched_gemm_b6.hlo.txt", "capacity": 1024,
+           "block": [6, 6, 6],
+           "inputs": [], "outputs": []}
+        ]"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].capacity, 1024);
+        assert_eq!(specs[0].block, [6, 6, 6]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_manifest() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest(r#"[{"name": "x"}]"#).is_err());
+    }
+
+    // Tests that actually load artifacts live in rust/tests/runtime.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,103 @@
+//! Execute the AOT Pallas batched-GEMM (and sign-step) artifacts.
+//!
+//! The L3 side of the three-layer contract: `local/stacks.rs` packs the
+//! surviving block products into the kernel's static `[N, bm, bk]` shape;
+//! this module feeds the stacks through the compiled PJRT executable and
+//! scatters the results, falling back to the native microkernel for
+//! blocks with no matching AOT variant.
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::panel::Panel;
+use crate::local::batch::{assemble_tasks, execute_tasks_native, LocalMultStats};
+use crate::local::stacks::{pack_stacks, scatter_results, PackedStack};
+use crate::runtime::client::PjrtContext;
+
+/// Execute one packed stack on its AOT variant.  `eps` is the on-the-fly
+/// filter threshold (f32; padding slots have zero norms, so any
+/// `eps >= 0` filters them inside the kernel itself).
+pub fn execute_stack(
+    ctx: &PjrtContext,
+    stack: &PackedStack,
+    eps: f32,
+) -> anyhow::Result<Vec<f32>> {
+    let variant = ctx
+        .gemm_variant(stack.bm, stack.bk, stack.bn)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no AOT variant for block shape {}x{}x{}",
+                stack.bm,
+                stack.bk,
+                stack.bn
+            )
+        })?;
+    anyhow::ensure!(
+        stack.capacity == variant.spec.capacity,
+        "stack capacity {} != artifact capacity {}",
+        stack.capacity,
+        variant.spec.capacity
+    );
+    let n = stack.capacity as i64;
+    let (bm, bk, bn) = (stack.bm as i64, stack.bk as i64, stack.bn as i64);
+    let a = xla::Literal::vec1(&stack.a).reshape(&[n, bm, bk])?;
+    let b = xla::Literal::vec1(&stack.b).reshape(&[n, bk, bn])?;
+    let e = xla::Literal::vec1(&[eps]).reshape(&[1, 1])?;
+    let result = variant.exe.execute::<xla::Literal>(&[a, b, e])?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+/// Local multiplication `C += A_panel · B_panel` through the AOT kernel.
+///
+/// Uniform-shaped products go through the Pallas artifact in batches of
+/// its capacity; ragged leftovers run on the native microkernel.  The
+/// numeric contract is f32 on the kernel path (documented deviation from
+/// DBCSR's f64; the validation tests bound the error).
+pub fn multiply_panels_pjrt(
+    ctx: &PjrtContext,
+    a: &Panel,
+    b: &Panel,
+    eps: f64,
+    acc: &mut BlockAccumulator,
+) -> anyhow::Result<LocalMultStats> {
+    let mut stats = LocalMultStats::default();
+    let tasks = assemble_tasks(a, b, eps, &mut stats);
+    if tasks.is_empty() {
+        return Ok(stats);
+    }
+    // Group by the (single) dominant uniform shape; leftovers go native.
+    let aen = &a.entries[tasks[0].a_entry];
+    let ben = &b.entries[tasks[0].b_entry];
+    let (bm, bk, bn) = (aen.nr as usize, aen.nc as usize, ben.nc as usize);
+    match ctx.gemm_variant(bm, bk, bn) {
+        Some(variant) => {
+            let cap = variant.spec.capacity;
+            let (stacks, leftovers) = pack_stacks(a, b, &tasks, bm, bk, bn, cap);
+            for stack in &stacks {
+                // The filter already ran in assemble_tasks; eps < 0 keeps
+                // every real slot, and zero padding contributes zero.
+                let out = execute_stack(ctx, stack, -1.0)?;
+                scatter_results(stack, &out, acc);
+                stats.products += stack.len() as u64;
+                stats.flops += stack.len() as f64 * 2.0 * (bm * bk * bn) as f64;
+            }
+            execute_tasks_native(a, b, &leftovers, acc, &mut stats);
+        }
+        None => execute_tasks_native(a, b, &tasks, acc, &mut stats),
+    }
+    Ok(stats)
+}
+
+/// One dense sign-iteration step `X ← ½ X (3I − X²)` on the AOT artifact.
+pub fn sign_step_pjrt(ctx: &PjrtContext, n: usize, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(x.len() == n * n, "x must be {n}x{n}");
+    let variant = ctx
+        .sign_variant(n)
+        .ok_or_else(|| anyhow::anyhow!("no sign_step artifact for n={n}"))?;
+    let lit = xla::Literal::vec1(x).reshape(&[n as i64, n as i64])?;
+    let result = variant.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple1()?.to_vec::<f32>()?)
+}
+
+// Integration tests that require built artifacts live in
+// rust/tests/runtime.rs.

@@ -1,0 +1,4 @@
+//! PJRT runtime: load and execute the AOT artifacts from the L3 hot path.
+
+pub mod client;
+pub mod gemm;

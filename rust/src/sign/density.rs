@@ -1,0 +1,150 @@
+//! Density matrix from the sign function (paper Eq. 1):
+//!
+//! `P = ½ (I − sign(S⁻¹H − µI)) S⁻¹`
+//!
+//! with `S⁻¹` obtained by a Newton–Schulz inverse iteration (also pure
+//! multiplications, so the whole driver is SpGEMM work end to end).
+
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::dist::distribution::Distribution2d;
+use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyError};
+use crate::sign::iteration::{scale_to_unit_norm, sign_iteration, SignResult};
+
+/// Newton–Schulz matrix inverse: `Y_{k+1} = Y_k (2I − A Y_k)`, seeded
+/// with `Y₀ = Aᵀ/(‖A‖₁‖A‖∞)`.  Converges for our diagonally dominant
+/// overlap matrices.
+pub fn newton_inverse(
+    a: &BlockCsrMatrix,
+    dist: &Distribution2d,
+    cfg: &MultiplyConfig,
+    tol: f64,
+    max_iter: usize,
+) -> Result<BlockCsrMatrix, MultiplyError> {
+    let layout = a.row_layout().clone();
+    let eye = BlockCsrMatrix::identity(&layout);
+    let ad = a.to_dense();
+    // y0 = a^T / (||a||_1 ||a||_inf)
+    let scale = 1.0 / (ad.norm2_upper_bound().powi(2));
+    let mut y = BlockCsrMatrix::from_dense(&ad.transpose(), &layout, &layout);
+    y.scale(scale);
+    for _ in 0..max_iter {
+        // ay = A·Y
+        let ay = multiply_distributed(a, &y, None, dist, cfg)?.c;
+        // r = 2I - AY
+        let mut two_eye = eye.clone();
+        two_eye.scale(2.0);
+        let r = two_eye.add_scaled(-1.0, &ay);
+        // y' = Y·r
+        let yn = multiply_distributed(&y, &r, None, dist, cfg)?.c;
+        let delta = yn.add_scaled(-1.0, &y).frob_norm();
+        y = yn;
+        if delta < tol {
+            break;
+        }
+    }
+    Ok(y)
+}
+
+/// Full density-matrix pipeline of Eq. 1.  Returns `(P, sign_result)`.
+pub fn density_matrix(
+    h: &BlockCsrMatrix,
+    s: &BlockCsrMatrix,
+    mu: f64,
+    dist: &Distribution2d,
+    cfg: &MultiplyConfig,
+) -> Result<(BlockCsrMatrix, SignResult), MultiplyError> {
+    let layout = h.row_layout().clone();
+    let eye = BlockCsrMatrix::identity(&layout);
+
+    // S^-1
+    // Tolerances sit above the filtering noise floor: a threshold
+    // filter at eps leaves per-iteration residuals O(eps * sqrt(nnzb)).
+    let floor = cfg.filter.post_eps.max(cfg.filter.on_the_fly_eps).max(0.0);
+    let inv_tol = (floor * 1e2).max(1e-10);
+    let sign_tol = (floor * 1e2).max(1e-9);
+    let s_inv = newton_inverse(s, dist, cfg, inv_tol, 100)?;
+
+    // K = S^-1 H - mu I
+    let k = multiply_distributed(&s_inv, h, None, dist, cfg)?.c;
+    let k = k.add_scaled(-mu, &eye);
+
+    // sign(K)
+    let (x0, _) = scale_to_unit_norm(&k);
+    let sign = sign_iteration(&x0, dist, cfg, sign_tol, 80)?;
+
+    // P = 1/2 (I - sign) S^-1
+    let mut proj = eye.add_scaled(-1.0, &sign.sign);
+    proj.scale(0.5);
+    let p = multiply_distributed(&proj, &s_inv, None, dist, cfg)?.c;
+    Ok((p, sign))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::filter::FilterConfig;
+    use crate::dist::grid::ProcGrid;
+    use crate::engines::multiply::Engine;
+    use crate::workloads::hamiltonian::synthetic_system;
+
+    fn cfg(engine: Engine) -> MultiplyConfig {
+        MultiplyConfig {
+            engine,
+            filter: FilterConfig::none(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn newton_inverse_inverts() {
+        let sys = synthetic_system(6, 3, 1);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(
+            sys.s.row_layout(),
+            sys.s.col_layout(),
+            &grid,
+            3,
+        );
+        let inv = newton_inverse(&sys.s, &dist, &cfg(Engine::PointToPoint), 1e-12, 100)
+            .unwrap();
+        let prod = sys.s.to_dense().matmul(&inv.to_dense());
+        let eye = crate::blocks::dense::DenseMatrix::eye(prod.rows);
+        assert!(prod.max_abs_diff(&eye) < 1e-8, "{}", prod.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn density_matrix_is_projector() {
+        // P S P = P (idempotency in the S metric) and trace counts the
+        // occupied manifold.
+        let sys = synthetic_system(5, 3, 2);
+        let grid = ProcGrid::new(1, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(
+            sys.h.row_layout(),
+            sys.h.col_layout(),
+            &grid,
+            4,
+        );
+        let (p, sign) = density_matrix(
+            &sys.h,
+            &sys.s,
+            sys.mu,
+            &dist,
+            &cfg(Engine::OneSided { l: 1 }),
+        )
+        .unwrap();
+        assert!(sign.converged);
+        let pd = p.to_dense();
+        let sd = sys.s.to_dense();
+        let psp = pd.matmul(&sd).matmul(&pd);
+        let diff = psp.max_abs_diff(&pd);
+        assert!(diff < 1e-5, "PSP != P: {diff}");
+        // trace(PS) = number of occupied states: an integer in [0, dim]
+        let ps = pd.matmul(&sd);
+        let trace: f64 = (0..ps.rows).map(|i| ps.get(i, i)).sum();
+        assert!(
+            (trace - trace.round()).abs() < 1e-4,
+            "non-integer occupation {trace}"
+        );
+        assert!(trace > 0.5 && trace < ps.rows as f64 - 0.5);
+    }
+}

@@ -1,0 +1,4 @@
+//! Linear-scaling DFT driver: the matrix sign iteration (paper Eq. 1-3).
+
+pub mod density;
+pub mod iteration;

@@ -1,0 +1,5 @@
+//! Timing and reporting: the stand-in for CP2K's internal timing framework
+//! the paper's measurements are taken with.
+
+pub mod report;
+pub mod timers;

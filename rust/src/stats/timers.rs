@@ -1,0 +1,187 @@
+//! Hierarchical region timers.
+//!
+//! The paper's measurements come from "a CP2K internal timing framework,
+//! annotating carefully the most important functions" (§4) — notably the
+//! `mpi_waitall` residue, which is *only the non-overlapped part* of
+//! communication.  This module reproduces that: named regions accumulate
+//! inclusive wall time and call counts, and the per-rank timer sets can be
+//! merged (max / avg across ranks) the way the paper reports them.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulated statistics for one named region.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RegionStat {
+    pub calls: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// A set of named region timers (one per simulated rank).
+#[derive(Clone, Debug, Default)]
+pub struct Timers {
+    regions: BTreeMap<String, RegionStat>,
+}
+
+/// RAII guard that stops the region on drop.
+pub struct RegionGuard<'a> {
+    timers: &'a mut Timers,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed().as_secs_f64();
+        self.timers.record(&self.name, dt);
+    }
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a timed region; stops when the guard drops.
+    pub fn region(&mut self, name: &str) -> RegionGuard<'_> {
+        RegionGuard {
+            name: name.to_string(),
+            start: Instant::now(),
+            timers: self,
+        }
+    }
+
+    /// Record an externally-measured duration.
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        let e = self.regions.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_s += seconds;
+        e.max_s = e.max_s.max(seconds);
+    }
+
+    /// Time a closure under a region name.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Stats for a region (zeros if never recorded).
+    pub fn get(&self, name: &str) -> RegionStat {
+        self.regions.get(name).copied().unwrap_or_default()
+    }
+
+    /// Total seconds of a region.
+    pub fn total(&self, name: &str) -> f64 {
+        self.get(name).total_s
+    }
+
+    /// All regions, ordered by name.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &RegionStat)> {
+        self.regions.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Merge per-rank timer sets: per region, `total` becomes the MAX over
+    /// ranks (the paper reports critical-path style maxima), `calls` the
+    /// max, plus an `avg:`-prefixed region holding the average.
+    pub fn merge_ranks(per_rank: &[Timers]) -> Timers {
+        let mut out = Timers::new();
+        let mut names: Vec<&str> = Vec::new();
+        for t in per_rank {
+            for (name, _) in t.iter() {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+        for name in names {
+            let stats: Vec<RegionStat> = per_rank.iter().map(|t| t.get(name)).collect();
+            let maxt = stats.iter().map(|s| s.total_s).fold(0.0, f64::max);
+            let avgt = stats.iter().map(|s| s.total_s).sum::<f64>() / per_rank.len() as f64;
+            let calls = stats.iter().map(|s| s.calls).max().unwrap_or(0);
+            out.regions.insert(
+                name.to_string(),
+                RegionStat {
+                    calls,
+                    total_s: maxt,
+                    max_s: stats.iter().map(|s| s.max_s).fold(0.0, f64::max),
+                },
+            );
+            out.regions.insert(
+                format!("avg:{name}"),
+                RegionStat {
+                    calls,
+                    total_s: avgt,
+                    max_s: avgt,
+                },
+            );
+        }
+        out
+    }
+
+    /// Human-readable dump, longest regions first.
+    pub fn render(&self) -> String {
+        let mut rows: Vec<(&str, &RegionStat)> =
+            self.iter().filter(|(n, _)| !n.starts_with("avg:")).collect();
+        rows.sort_by(|a, b| b.1.total_s.partial_cmp(&a.1.total_s).unwrap());
+        let mut s = format!("{:<40} {:>8} {:>12} {:>12}\n", "region", "calls", "total", "max");
+        for (name, st) in rows {
+            s.push_str(&format!(
+                "{:<40} {:>8} {:>12} {:>12}\n",
+                name,
+                st.calls,
+                crate::benchkit::fmt_time(st.total_s),
+                crate::benchkit::fmt_time(st.max_s)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let mut t = Timers::new();
+        t.record("multiply", 1.0);
+        t.record("multiply", 2.0);
+        let s = t.get("multiply");
+        assert_eq!(s.calls, 2);
+        assert!((s.total_s - 3.0).abs() < 1e-12);
+        assert!((s.max_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn region_guard_times() {
+        let mut t = Timers::new();
+        {
+            let _g = t.region("r");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(t.total("r") >= 0.004);
+        assert_eq!(t.get("r").calls, 1);
+    }
+
+    #[test]
+    fn merge_takes_max_and_avg() {
+        let mut a = Timers::new();
+        a.record("waitall", 1.0);
+        let mut b = Timers::new();
+        b.record("waitall", 3.0);
+        let m = Timers::merge_ranks(&[a, b]);
+        assert!((m.total("waitall") - 3.0).abs() < 1e-12);
+        assert!((m.total("avg:waitall") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = Timers::new();
+        let x = t.time("f", || 41 + 1);
+        assert_eq!(x, 42);
+        assert_eq!(t.get("f").calls, 1);
+    }
+}

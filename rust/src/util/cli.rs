@@ -1,0 +1,255 @@
+//! Tiny declarative CLI argument parser (offline `clap` stand-in).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and auto-generated `--help`.  Used by `rust/src/main.rs`,
+//! the examples and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Start a parser description for `program`.
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self {
+            program: program.to_string(),
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self.values.insert(name, default.to_string());
+        self
+    }
+
+    /// Declare a required `--name <value>` option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self.flags.insert(name, false);
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else if let Some(d) = &spec.default {
+                format!("  --{} <v> [default: {}]", spec.name, d)
+            } else {
+                format!("  --{} <v> (required)", spec.name)
+            };
+            s.push_str(&format!("{head:<42} {}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse an explicit token list; returns self with values populated.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        mut self,
+        argv: I,
+    ) -> Result<Self, String> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.flags.insert(spec.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?,
+                    };
+                    self.values.insert(spec.name, v);
+                }
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(spec.name)
+            {
+                return Err(format!("missing required option --{}\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse the process arguments after the given number of prefix tokens.
+    pub fn parse_env(self, skip: usize) -> Result<Self, String> {
+        self.parse_from(std::env::args().skip(skip + 1))
+    }
+
+    /// String value of an option.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared/set"))
+    }
+
+    /// Typed value of an option.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse()
+            .unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Vec<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            return Vec::new();
+        }
+        raw.split(',')
+            .map(|x| {
+                x.trim()
+                    .parse()
+                    .unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+            })
+            .collect()
+    }
+
+    /// Boolean flag state.
+    pub fn is_set(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("nodes", "4", "node count")
+            .opt("bench", "dense", "benchmark")
+            .flag("verbose", "chatty")
+            .parse_from(argv("--nodes 16 --verbose"))
+            .unwrap();
+        assert_eq!(a.get_as::<usize>("nodes"), 16);
+        assert_eq!(a.get("bench"), "dense");
+        assert!(a.is_set("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = Args::new("t", "test")
+            .opt("l-values", "1,2,4", "L sweep")
+            .parse_from(argv("--l-values=1,4,9"))
+            .unwrap();
+        assert_eq!(a.get_list::<usize>("l-values"), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "test")
+            .req("bench", "benchmark name")
+            .parse_from(argv(""));
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("missing required"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse_from(argv("--nope 3"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let r = Args::new("t", "about-string")
+            .opt("x", "1", "the x")
+            .parse_from(argv("--help"));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("about-string") && msg.contains("--x"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t", "test")
+            .parse_from(argv("pos1 pos2"))
+            .unwrap();
+        assert_eq!(a.positional(), ["pos1", "pos2"]);
+    }
+}

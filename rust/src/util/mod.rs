@@ -1,0 +1,12 @@
+//! From-scratch substrates.
+//!
+//! The build image has no network access and only a small vendored crate
+//! set (no `rand`, `clap`, `serde`, `proptest`, `criterion`), so the
+//! supporting machinery a production crate would normally pull in is
+//! implemented here from scratch: deterministic PRNGs, a CLI argument
+//! parser, a minimal JSON writer and a property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod testkit;

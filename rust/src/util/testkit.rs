@@ -1,0 +1,105 @@
+//! Property-testing and numeric-assertion helpers (offline `proptest` /
+//! `approx` stand-in).
+//!
+//! [`property`] runs a closure over `n` generated cases, each driven by a
+//! seeded [`Pcg64`]; on failure it reports the failing case index and the
+//! seed that reproduces it deterministically.
+
+use crate::util::prng::Pcg64;
+
+/// Relative+absolute closeness test for scalars.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert two scalars are close; panics with context otherwise.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    assert!(
+        close(a, b, rtol, atol),
+        "assert_close failed: {a} vs {b} (rtol={rtol}, atol={atol}, |diff|={})",
+        (a - b).abs()
+    );
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            close(x, y, rtol, atol),
+            "assert_allclose failed at [{i}]: {x} vs {y} (|diff|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Run `cases` property cases.  The closure receives a per-case RNG and the
+/// case index and returns `Err(description)` on property violation.
+#[track_caller]
+pub fn property<F>(name: &str, seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed ^ ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg64::new_stream(case_seed, 77);
+        if let Err(msg) = f(&mut rng, i) {
+            panic!(
+                "property '{name}' falsified at case {i}/{cases} \
+                 (reproduce with seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_semantics() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("counts", 1, 25, |_rng, _i| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn property_reports_failure() {
+        property("fails", 2, 10, |rng, _| {
+            if rng.f64() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn property_is_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        property("det1", 3, 5, |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        property("det2", 3, 5, |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

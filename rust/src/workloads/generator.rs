@@ -1,0 +1,139 @@
+//! Occupancy-targeted block-sparse matrix generators for the benchmarks.
+//!
+//! Two flavours:
+//!
+//! * [`random_for_spec`] — uniformly random block positions at the spec's
+//!   occupancy (what the Dense and S-E strong-scaling matrices look like
+//!   after DBCSR's randomized permutation);
+//! * [`banded_for_spec`] — a banded/decay structure (before permutation)
+//!   as produced by localized atomic bases, used by the sign-iteration
+//!   driver where fill-in evolution matters.
+
+use crate::blocks::layout::BlockLayout;
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::util::prng::Pcg64;
+use crate::workloads::spec::BenchSpec;
+
+/// Random matrix at the spec's block size / count / occupancy.
+pub fn random_for_spec(spec: &BenchSpec, seed: u64) -> BlockCsrMatrix {
+    let layout = spec.layout();
+    BlockCsrMatrix::random(&layout, &layout, spec.occupancy, seed)
+}
+
+/// Banded block matrix: block `(r, c)` present iff `|r - c| <= half_band`,
+/// with magnitudes decaying exponentially away from the diagonal (the
+/// structure of operators in a localized atomic basis).
+pub fn banded(
+    layout: &BlockLayout,
+    half_band: usize,
+    decay: f64,
+    seed: u64,
+) -> BlockCsrMatrix {
+    let mut rng = Pcg64::new_stream(seed, 0xBA4D);
+    let nb = layout.nblocks();
+    let mut rows: Vec<Vec<(usize, Vec<f64>)>> = Vec::with_capacity(nb);
+    for r in 0..nb {
+        let lo = r.saturating_sub(half_band);
+        let hi = (r + half_band).min(nb - 1);
+        let mut row = Vec::with_capacity(hi - lo + 1);
+        for c in lo..=hi {
+            let dist = r.abs_diff(c) as f64;
+            let scale = (-decay * dist).exp() / (layout.size(r) as f64).sqrt();
+            let n = layout.size(r) * layout.size(c);
+            let mut data: Vec<f64> = (0..n).map(|_| rng.normal() * scale).collect();
+            if r == c {
+                // diagonal dominance keeps spectra tame for the sign driver
+                let bs = layout.size(r);
+                for i in 0..bs {
+                    data[i * bs + i] += 2.0;
+                }
+            }
+            row.push((c, data));
+        }
+        rows.push(row);
+    }
+    // from_sorted_rows wants Arc'd layouts
+    BlockCsrMatrix::from_sorted_rows(
+        std::sync::Arc::new(layout.clone()),
+        std::sync::Arc::new(layout.clone()),
+        rows,
+    )
+}
+
+/// Banded matrix with the band width chosen to hit the spec's occupancy.
+pub fn banded_for_spec(spec: &BenchSpec, decay: f64, seed: u64) -> BlockCsrMatrix {
+    let layout = spec.layout();
+    // occupancy of a banded matrix ~ (2*hb + 1) / nblocks
+    let hb = (((spec.occupancy * spec.nblocks as f64) - 1.0) / 2.0)
+        .round()
+        .max(0.0) as usize;
+    banded(&layout, hb, decay, seed)
+}
+
+/// Make a matrix symmetric: `(M + Mᵀ)/2` (densified internally — only
+/// for driver-scale matrices).
+pub fn symmetrize(m: &BlockCsrMatrix) -> BlockCsrMatrix {
+    let d = m.to_dense();
+    let mut s = d.transpose();
+    for (x, &y) in s.data.iter_mut().zip(&d.data) {
+        *x = 0.5 * (*x + y);
+    }
+    BlockCsrMatrix::from_dense(&s, m.row_layout(), m.col_layout())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_matches_spec_occupancy() {
+        let spec = BenchSpec::dense().scaled(24);
+        let m = random_for_spec(&spec, 1);
+        assert!((m.occupancy() - spec.occupancy).abs() < 0.08);
+        assert_eq!(m.row_layout().nblocks(), 24);
+    }
+
+    #[test]
+    fn banded_structure() {
+        let l = BlockLayout::uniform(20, 3);
+        let m = banded(&l, 2, 0.5, 2);
+        for (r, c, _) in m.iter_blocks() {
+            assert!(r.abs_diff(c) <= 2, "block ({r},{c}) outside band");
+        }
+        // full band rows have 5 blocks
+        assert_eq!(m.row(10).count(), 5);
+    }
+
+    #[test]
+    fn banded_decays_off_diagonal() {
+        let l = BlockLayout::uniform(16, 4);
+        let m = banded(&l, 4, 1.0, 3);
+        let d0 = crate::blocks::norms::block_norm(m.get_block(8, 8).unwrap());
+        let d4 = crate::blocks::norms::block_norm(m.get_block(8, 12).unwrap());
+        assert!(d0 > d4, "diagonal {d0} should dominate off-band {d4}");
+    }
+
+    #[test]
+    fn banded_for_spec_occupancy() {
+        let spec = BenchSpec::h2o_dft_ls().scaled(60);
+        let m = banded_for_spec(&spec, 0.3, 4);
+        assert!(
+            (m.occupancy() - spec.occupancy).abs() < 0.06,
+            "occ {} vs {}",
+            m.occupancy(),
+            spec.occupancy
+        );
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let l = BlockLayout::uniform(6, 2);
+        let m = BlockCsrMatrix::random(&l, &l, 0.5, 5);
+        let s = symmetrize(&m).to_dense();
+        for r in 0..12 {
+            for c in 0..12 {
+                assert!((s.get(r, c) - s.get(c, r)).abs() < 1e-14);
+            }
+        }
+    }
+}

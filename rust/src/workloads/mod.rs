@@ -1,0 +1,5 @@
+//! Synthetic CP2K benchmark workloads (paper Table 1).
+
+pub mod generator;
+pub mod hamiltonian;
+pub mod spec;

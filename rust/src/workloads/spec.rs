@@ -1,0 +1,213 @@
+//! Benchmark specifications — paper Table 1.
+//!
+//! | benchmark   | block | rows      | occupancy      | #mults | FLOPs    |
+//! |-------------|-------|-----------|----------------|--------|----------|
+//! | H2O-DFT-LS  | 23    | 158,976   | 7–15%          | 193    | 4.038e15 |
+//! | S-E         | 6     | 1,119,744 | (4–6)e-2 %     | 1198   | 1.46e14  |
+//! | Dense       | 32    | 60,000    | 100%           | 10     | 4.32e15  |
+//!
+//! plus the measured `S_C / S_{A,B}` panel-size ratios of §4.1 (2.7 /
+//! 2.1 / 1.0) that drive the Eq. 6/7 analysis, and the per-node
+//! effective FLOP rates implied by Table 2 (see `perfmodel::machine`).
+
+use crate::blocks::layout::BlockLayout;
+
+/// Full description of one benchmark workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSpec {
+    pub name: &'static str,
+    /// Square block edge (Table 1 "block sizes").
+    pub block_size: usize,
+    /// Number of block rows/cols at paper scale.
+    pub nblocks: usize,
+    /// Average fraction of occupied blocks in A and B.
+    pub occupancy: f64,
+    /// Multiplications per application run.
+    pub n_mults: usize,
+    /// Total DBCSR FLOPs at paper scale (all multiplications).
+    pub flops: f64,
+    /// Measured `S_C / S_{A,B}` ratio (paper §4.1).
+    pub sc_ratio: f64,
+    /// Effective per-node FLOP rate on the paper's testbed (calibrated
+    /// from Table 1/2; see `MachineModel::for_benchmark`).
+    pub node_flop_rate: f64,
+}
+
+impl BenchSpec {
+    /// H2O-DFT-LS: linear-scaling DFT, 20,736 atoms — medium sparsity.
+    pub fn h2o_dft_ls() -> Self {
+        Self {
+            name: "H2O-DFT-LS",
+            block_size: 23,
+            nblocks: 158_976 / 23, // 6,912
+            occupancy: 0.10,
+            n_mults: 193,
+            flops: 4.038e15,
+            sc_ratio: 2.7,
+            node_flop_rate: 62e9,
+        }
+    }
+
+    /// S-E: semi-empirical, 186,624 water molecules — large sparsity.
+    pub fn s_e() -> Self {
+        Self {
+            name: "S-E",
+            block_size: 6,
+            nblocks: 1_119_744 / 6, // 186,624
+            occupancy: 5e-4,
+            n_mults: 1198,
+            flops: 1.46e14,
+            sc_ratio: 2.1,
+            node_flop_rate: 1.3e9,
+        }
+    }
+
+    /// Dense: fully occupied synthetic benchmark.
+    pub fn dense() -> Self {
+        Self {
+            name: "Dense",
+            block_size: 32,
+            nblocks: 60_000 / 32, // 1,875
+            occupancy: 1.0,
+            n_mults: 10,
+            flops: 4.32e15,
+            sc_ratio: 1.0,
+            node_flop_rate: 500e9,
+        }
+    }
+
+    /// The three strong-scaling benchmarks in paper order.
+    pub fn all() -> Vec<Self> {
+        vec![Self::h2o_dft_ls(), Self::s_e(), Self::dense()]
+    }
+
+    /// Look up by name (case-insensitive prefix).
+    pub fn by_name(name: &str) -> Option<Self> {
+        let lower = name.to_lowercase();
+        Self::all()
+            .into_iter()
+            .find(|s| s.name.to_lowercase().starts_with(&lower))
+    }
+
+    /// §4.2 weak-scaling S-E series: 76 molecules (≈ 456 basis rows) per
+    /// process, occupancy decreasing with node count (1.1% at 144 nodes
+    /// scaled as 1/P), constant FLOPs per process.
+    pub fn s_e_weak(nodes: usize) -> Self {
+        let nblocks = 76 * nodes; // one block per molecule-ish unit
+        let occupancy = (0.011 * 144.0 / nodes as f64).min(1.0);
+        let se = Self::s_e();
+        // FLOPs per mult per node constant: anchored to the strong-scaling
+        // S-E density (FLOPs scale with occupancy^2 * nblocks^3 roughly;
+        // here we keep the paper's operational definition: constant per
+        // process).
+        let flops_per_node_per_mult = 1.9e8;
+        Self {
+            name: "S-E-weak",
+            block_size: 6,
+            nblocks,
+            occupancy,
+            n_mults: 617,
+            flops: flops_per_node_per_mult * nodes as f64 * 617.0,
+            sc_ratio: se.sc_ratio,
+            node_flop_rate: se.node_flop_rate,
+        }
+    }
+
+    /// Matrix dimension (rows == cols).
+    pub fn dim(&self) -> usize {
+        self.nblocks * self.block_size
+    }
+
+    /// Stored elements of A (== B) at this spec's occupancy.
+    pub fn nnz_elements(&self) -> f64 {
+        self.occupancy * (self.nblocks as f64).powi(2) * (self.block_size as f64).powi(2)
+    }
+
+    /// Stored bytes of one matrix (f64).
+    pub fn matrix_bytes(&self) -> f64 {
+        self.nnz_elements() * 8.0
+    }
+
+    /// A scaled-down copy for real (in-process) execution: `nblocks`
+    /// reduced to `target_blocks`, occupancy raised so each panel still
+    /// holds a few blocks, FLOPs re-derived.
+    pub fn scaled(&self, target_blocks: usize) -> Self {
+        let occ = self
+            .occupancy
+            .max(8.0 / target_blocks as f64)
+            .min(1.0);
+        Self {
+            name: self.name,
+            block_size: self.block_size,
+            nblocks: target_blocks,
+            occupancy: occ,
+            n_mults: self.n_mults.min(4),
+            // dense-equivalent flops * occ^2 (expected surviving products)
+            flops: 2.0
+                * (target_blocks as f64 * self.block_size as f64).powi(3)
+                * occ
+                * occ,
+            sc_ratio: self.sc_ratio,
+            node_flop_rate: self.node_flop_rate,
+        }
+    }
+
+    /// Uniform block layout for this spec.
+    pub fn layout(&self) -> BlockLayout {
+        BlockLayout::uniform(self.nblocks, self.block_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_dimensions() {
+        assert_eq!(BenchSpec::h2o_dft_ls().dim(), 158_976);
+        assert_eq!(BenchSpec::s_e().dim(), 1_119_744);
+        assert_eq!(BenchSpec::dense().dim(), 60_000);
+    }
+
+    #[test]
+    fn occupancies_in_table_ranges() {
+        let h = BenchSpec::h2o_dft_ls();
+        assert!((0.07..=0.15).contains(&h.occupancy));
+        let s = BenchSpec::s_e();
+        assert!((4e-4..=6e-4).contains(&s.occupancy));
+        assert_eq!(BenchSpec::dense().occupancy, 1.0);
+    }
+
+    #[test]
+    fn by_name_prefix() {
+        assert_eq!(BenchSpec::by_name("dense").unwrap().name, "Dense");
+        assert_eq!(BenchSpec::by_name("h2o").unwrap().name, "H2O-DFT-LS");
+        assert_eq!(BenchSpec::by_name("S-E").unwrap().name, "S-E");
+        assert!(BenchSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn weak_scaling_constant_work_per_node() {
+        let a = BenchSpec::s_e_weak(144);
+        let b = BenchSpec::s_e_weak(3844);
+        assert!((a.flops / 144.0 - b.flops / 3844.0).abs() / (a.flops / 144.0) < 1e-9);
+        assert!(b.occupancy < a.occupancy);
+        assert_eq!(b.nblocks / 3844, a.nblocks / 144);
+    }
+
+    #[test]
+    fn scaled_keeps_block_size() {
+        let s = BenchSpec::dense().scaled(40);
+        assert_eq!(s.block_size, 32);
+        assert_eq!(s.nblocks, 40);
+        assert!(s.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn dense_flops_sanity() {
+        // Table 1: 10 multiplications of 60000^3 dense: 2*60000^3*10 = 4.32e15.
+        let d = BenchSpec::dense();
+        let expect = 2.0 * 60_000f64.powi(3) * d.n_mults as f64;
+        assert!((d.flops - expect).abs() / expect < 1e-6);
+    }
+}

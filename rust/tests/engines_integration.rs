@@ -1,0 +1,222 @@
+//! Integration: distributed engines vs dense oracle across grids,
+//! replication factors, filtering settings and workloads.
+
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::topology25d::Topology25d;
+use dbcsr::engines::multiply::{
+    multiply_distributed, multiply_oracle, Engine, MultiplyConfig,
+};
+use dbcsr::util::testkit::property;
+use dbcsr::workloads::generator::{banded_for_spec, random_for_spec};
+use dbcsr::workloads::spec::BenchSpec;
+
+fn engines_for(grid: &ProcGrid) -> Vec<Engine> {
+    let mut out = vec![Engine::PointToPoint, Engine::OneSided { l: 1 }];
+    for l in [2usize, 3, 4, 9] {
+        if Topology25d::new(*grid, l).is_ok() {
+            out.push(Engine::OneSided { l });
+        }
+    }
+    out
+}
+
+#[test]
+fn all_grids_all_engines_match_oracle() {
+    let l = BlockLayout::uniform(24, 4);
+    let a = BlockCsrMatrix::random(&l, &l, 0.3, 1);
+    let b = BlockCsrMatrix::random(&l, &l, 0.3, 2);
+    let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+    for (pr, pc) in [
+        (1, 1),
+        (1, 3),
+        (2, 2),
+        (2, 3),
+        (3, 2),
+        (3, 3),
+        (4, 4),
+        (2, 4),
+        (4, 2),
+        (6, 2),
+        (2, 6),
+    ] {
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 5);
+        for engine in engines_for(&grid) {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let got = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(
+                diff < 1e-10,
+                "{} on {pr}x{pc}: diff {diff}",
+                engine.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_workload_shapes_match_oracle() {
+    // the three Table-1 benchmarks at reduced scale, including the
+    // banded (pre-permutation) structure of real operators.
+    for spec in [
+        BenchSpec::h2o_dft_ls().scaled(20),
+        BenchSpec::s_e().scaled(30),
+        BenchSpec::dense().scaled(12),
+    ] {
+        let a = random_for_spec(&spec, 3);
+        let b = banded_for_spec(&spec, 0.5, 4);
+        let layout = spec.layout();
+        let grid = ProcGrid::new(2, 3).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 6);
+        let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let got = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(diff < 1e-9, "{} {}: {diff}", spec.name, engine.label());
+        }
+    }
+}
+
+#[test]
+fn rectangular_matrices_supported() {
+    // C(m,n) = A(m,k) · B(k,n) with three distinct layouts.
+    let lm = BlockLayout::from_sizes(vec![3, 5, 2, 4, 3, 5, 2, 4]);
+    let lk = BlockLayout::from_sizes(vec![2, 2, 6, 3, 2, 2, 6, 3, 2, 2]);
+    let ln = BlockLayout::from_sizes(vec![4, 1, 4, 1, 4, 1]);
+    let a = BlockCsrMatrix::random(&lm, &lk, 0.5, 7);
+    let b = BlockCsrMatrix::random(&lk, &ln, 0.5, 8);
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::new_random(8, 10, 6, grid, 9);
+    let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+    for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+        let cfg = MultiplyConfig {
+            engine,
+            ..Default::default()
+        };
+        let got = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(diff < 1e-10, "{}: {diff}", engine.label());
+    }
+}
+
+#[test]
+fn c_accumulate_and_filter_combined() {
+    let l = BlockLayout::uniform(16, 3);
+    let a = BlockCsrMatrix::random(&l, &l, 0.4, 10);
+    let b = BlockCsrMatrix::random(&l, &l, 0.4, 11);
+    let c0 = BlockCsrMatrix::random(&l, &l, 0.2, 12);
+    let filter = FilterConfig {
+        on_the_fly_eps: 0.02,
+        post_eps: 0.05,
+    };
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&l, &l, &grid, 13);
+    let want = multiply_oracle(&a, &b, Some(&c0), &filter);
+    for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }, Engine::OneSided { l: 4 }] {
+        let cfg = MultiplyConfig {
+            engine,
+            filter,
+            ..Default::default()
+        };
+        let got = multiply_distributed(&a, &b, Some(&c0), &dist, &cfg).unwrap();
+        let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(diff < 1e-10, "{}: {diff}", engine.label());
+        assert_eq!(got.c.nnz_blocks(), want.nnz_blocks());
+    }
+}
+
+#[test]
+fn results_deterministic_across_runs() {
+    let l = BlockLayout::uniform(20, 3);
+    let a = BlockCsrMatrix::random(&l, &l, 0.3, 20);
+    let b = BlockCsrMatrix::random(&l, &l, 0.3, 21);
+    let grid = ProcGrid::new(2, 3).unwrap();
+    let dist = Distribution2d::rand_permuted(&l, &l, &grid, 22);
+    let cfg = MultiplyConfig {
+        engine: Engine::OneSided { l: 1 },
+        ..Default::default()
+    };
+    let r1 = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+    let r2 = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+    assert_eq!(r1.c.nnz_blocks(), r2.c.nnz_blocks());
+    assert_eq!(r1.c.to_dense(), r2.c.to_dense());
+    // byte counters identical too (schedule is deterministic)
+    for (s1, s2) in r1.per_rank_stats.iter().zip(&r2.per_rank_stats) {
+        assert_eq!(s1.total_requested_bytes(), s2.total_requested_bytes());
+    }
+}
+
+#[test]
+fn empty_and_degenerate_matrices() {
+    let l = BlockLayout::uniform(8, 2);
+    let empty = BlockCsrMatrix::empty(&l, &l);
+    let a = BlockCsrMatrix::random(&l, &l, 0.5, 30);
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&l, &l, &grid, 31);
+    for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+        let cfg = MultiplyConfig {
+            engine,
+            ..Default::default()
+        };
+        // empty * A = empty
+        let got = multiply_distributed(&empty, &a, None, &dist, &cfg).unwrap();
+        assert_eq!(got.c.nnz_blocks(), 0, "{}", engine.label());
+        // A * empty = empty
+        let got = multiply_distributed(&a, &empty, None, &dist, &cfg).unwrap();
+        assert_eq!(got.c.nnz_blocks(), 0, "{}", engine.label());
+        // identity * A = A
+        let eye = BlockCsrMatrix::identity(&l);
+        let got = multiply_distributed(&eye, &a, None, &dist, &cfg).unwrap();
+        assert!(got.c.to_dense().max_abs_diff(&a.to_dense()) < 1e-12);
+    }
+}
+
+#[test]
+fn property_random_everything() {
+    property("full random integration", 2024, 10, |rng, _| {
+        let pr = 1 + rng.usize_below(4);
+        let pc = 1 + rng.usize_below(4);
+        let nb = 6 + rng.usize_below(18);
+        let bs = 1 + rng.usize_below(5);
+        let occ = 0.1 + rng.f64() * 0.6;
+        let l = BlockLayout::uniform(nb, bs);
+        let a = BlockCsrMatrix::random(&l, &l, occ, rng.next_u64());
+        let b = BlockCsrMatrix::random(&l, &l, occ, rng.next_u64());
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, rng.next_u64());
+        let eps = if rng.chance(0.5) { 0.05 } else { -1.0 };
+        let filter = FilterConfig {
+            on_the_fly_eps: eps,
+            post_eps: -1.0,
+        };
+        let want = multiply_oracle(&a, &b, None, &filter);
+        for engine in engines_for(&grid) {
+            let cfg = MultiplyConfig {
+                engine,
+                filter,
+                ..Default::default()
+            };
+            let got = multiply_distributed(&a, &b, None, &dist, &cfg)
+                .map_err(|e| e.to_string())?;
+            let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+            if diff > 1e-9 {
+                return Err(format!(
+                    "{} {pr}x{pc} nb={nb} bs={bs} occ={occ:.2} eps={eps}: {diff}",
+                    engine.label()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

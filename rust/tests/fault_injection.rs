@@ -1,0 +1,106 @@
+//! Failure injection: misuse of the simulated MPI fabric must fail loudly
+//! (a silent wrong answer is the worst outcome for a comm layer).
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use dbcsr::blocks::panel::Panel;
+use dbcsr::comm::world::{Payload, SimWorld, TrafficClass};
+
+#[test]
+fn rget_on_missing_window_panics() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            // nobody created "nope"
+            let _ = c.rget("nope", 0, 0, TrafficClass::MatrixA);
+        });
+    }));
+    assert!(result.is_err(), "rget on missing window must panic");
+}
+
+#[test]
+fn double_window_create_panics() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let w = SimWorld::new(1);
+        w.run(|c| {
+            c.win_create("w", HashMap::new());
+            c.win_create("w", HashMap::new()); // re-create without free
+        });
+    }));
+    assert!(result.is_err(), "double create must panic");
+}
+
+#[test]
+fn payload_type_confusion_panics() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        Payload::Usize(3).into_panel();
+    }));
+    assert!(result.is_err());
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        Payload::Panel(Panel::new()).into_panel_set();
+    }));
+    assert!(result.is_err());
+}
+
+#[test]
+fn rank_panic_propagates_to_driver() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let w = SimWorld::new(3);
+        w.run(|c| {
+            if c.rank() == 1 {
+                panic!("rank 1 dies");
+            }
+            // other ranks return normally (no barrier, so no deadlock)
+            c.rank()
+        });
+    }));
+    assert!(result.is_err(), "a dead rank must fail the whole run");
+}
+
+#[test]
+fn strict_topology_is_an_error_not_a_fallback() {
+    use dbcsr::blocks::layout::BlockLayout;
+    use dbcsr::blocks::matrix::BlockCsrMatrix;
+    use dbcsr::dist::distribution::Distribution2d;
+    use dbcsr::dist::grid::ProcGrid;
+    use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+    let l = BlockLayout::uniform(6, 2);
+    let a = BlockCsrMatrix::random(&l, &l, 0.5, 1);
+    let grid = ProcGrid::new(5, 5).unwrap();
+    let dist = Distribution2d::rand_permuted(&l, &l, &grid, 2);
+    // L=4 invalid on 5x5 (sqrt(4)=2 does not divide 5)
+    let strict = MultiplyConfig {
+        engine: Engine::OneSided { l: 4 },
+        strict_topology: true,
+        ..Default::default()
+    };
+    assert!(multiply_distributed(&a, &a, None, &dist, &strict).is_err());
+    // non-strict falls back to L=1 and succeeds
+    let lax = MultiplyConfig {
+        engine: Engine::OneSided { l: 4 },
+        strict_topology: false,
+        ..Default::default()
+    };
+    let rep = multiply_distributed(&a, &a, None, &dist, &lax).unwrap();
+    assert_eq!(rep.topo.l, 1, "paper Algorithm 2: set L = 1 if not valid");
+}
+
+#[test]
+fn layout_mismatch_rejected() {
+    use dbcsr::blocks::layout::BlockLayout;
+    use dbcsr::blocks::matrix::BlockCsrMatrix;
+    use dbcsr::dist::distribution::Distribution2d;
+    use dbcsr::dist::grid::ProcGrid;
+    use dbcsr::engines::multiply::{multiply_distributed, MultiplyConfig};
+    let l1 = BlockLayout::uniform(6, 2);
+    let l2 = BlockLayout::uniform(7, 2); // A.cols != B.rows
+    let a = BlockCsrMatrix::random(&l1, &l1, 0.5, 1);
+    let b = BlockCsrMatrix::random(&l2, &l2, 0.5, 2);
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&l1, &l1, &grid, 3);
+    match multiply_distributed(&a, &b, None, &dist, &MultiplyConfig::default()) {
+        Err(e) => assert!(e.to_string().contains("layout mismatch")),
+        Ok(_) => panic!("mismatched layouts must be rejected"),
+    }
+}

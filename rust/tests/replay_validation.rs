@@ -1,0 +1,195 @@
+//! Cross-validation of the analytic replay against the real engines:
+//! the replay's volume model must match the *counted* bytes of real
+//! runs, and both must follow the paper's Eq. 7 / §3 claims.
+
+use dbcsr::comm::world::TrafficClass;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::topology25d::Topology25d;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::perfmodel::replay::{build_rank_log, panel_sizes, ReplayConfig};
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+/// Dense workload on a square grid: counted bytes must match the
+/// replay's analytic volumes within the block-granularity noise.
+fn counted_vs_modeled(engine: Engine, pr: usize, pc: usize, tol: f64) {
+    // Dense occupancy removes sparsity sampling noise.
+    let spec = BenchSpec::dense().scaled(24);
+    let a = random_for_spec(&spec, 1);
+    let b = random_for_spec(&spec, 2);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(pr, pc).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+    let cfg = MultiplyConfig {
+        engine,
+        ..Default::default()
+    };
+    let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+
+    // counted A+B fetch bytes per rank (average)
+    let n = rep.per_rank_stats.len() as f64;
+    let counted_ab: f64 = rep
+        .per_rank_stats
+        .iter()
+        .map(|s| {
+            (s.requested_bytes(TrafficClass::MatrixA)
+                + s.requested_bytes(TrafficClass::MatrixB)) as f64
+        })
+        .sum::<f64>()
+        / n;
+
+    // modeled: one multiplication's A+B bytes from the replay log built
+    // on an equivalent spec (exact nnz elements of the actual matrices).
+    let mut eff = spec.clone();
+    eff.occupancy = (a.occupancy() + b.occupancy()) / 2.0;
+    let rcfg = ReplayConfig {
+        spec: eff,
+        grid,
+        engine,
+        no_dmapp: false,
+    };
+    let log = build_rank_log(&rcfg);
+    let modeled_ab: f64 = log
+        .ticks
+        .iter()
+        .map(|t| (t.a_bytes + t.b_bytes) as f64)
+        .sum::<f64>()
+        + log.pre_bytes as f64;
+
+    let rel = (counted_ab - modeled_ab).abs() / modeled_ab;
+    assert!(
+        rel < tol,
+        "{} {pr}x{pc}: counted {counted_ab:.0} vs modeled {modeled_ab:.0} (rel {rel:.3})",
+        engine.label()
+    );
+}
+
+#[test]
+fn ptp_counted_matches_model_2x2() {
+    counted_vs_modeled(Engine::PointToPoint, 2, 2, 0.12);
+}
+
+#[test]
+fn ptp_counted_matches_model_nonsquare() {
+    counted_vs_modeled(Engine::PointToPoint, 2, 4, 0.12);
+}
+
+#[test]
+fn os1_counted_matches_model_2x2() {
+    counted_vs_modeled(Engine::OneSided { l: 1 }, 2, 2, 0.12);
+}
+
+#[test]
+fn os1_counted_matches_model_3x3() {
+    counted_vs_modeled(Engine::OneSided { l: 1 }, 3, 3, 0.12);
+}
+
+#[test]
+fn os4_counted_matches_model_4x4() {
+    counted_vs_modeled(Engine::OneSided { l: 4 }, 4, 4, 0.12);
+}
+
+#[test]
+fn eq7_sqrt_l_reduction_counted() {
+    // The real engines must show the sqrt(L) A/B volume reduction of
+    // Eq. 7: OS4 fetches half the A/B bytes of OS1 on the same grid.
+    let spec = BenchSpec::dense().scaled(24);
+    let a = random_for_spec(&spec, 5);
+    let b = random_for_spec(&spec, 6);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(4, 4).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 7);
+    let run = |l: usize| {
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l },
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let n = rep.per_rank_stats.len() as f64;
+        rep.per_rank_stats
+            .iter()
+            .map(|s| {
+                (s.requested_bytes(TrafficClass::MatrixA)
+                    + s.requested_bytes(TrafficClass::MatrixB)) as f64
+            })
+            .sum::<f64>()
+            / n
+    };
+    let v1 = run(1);
+    let v4 = run(4);
+    let ratio = v1 / v4;
+    assert!(
+        (ratio - 2.0).abs() < 0.2,
+        "A/B volume OS1/OS4 = {ratio}, want ~sqrt(4) = 2"
+    );
+}
+
+#[test]
+fn c_traffic_only_for_l_greater_1() {
+    let spec = BenchSpec::dense().scaled(16);
+    let a = random_for_spec(&spec, 8);
+    let b = random_for_spec(&spec, 9);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(4, 4).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 10);
+    let c_bytes = |l: usize| {
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l },
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        rep.per_rank_stats
+            .iter()
+            .map(|s| s.requested_bytes(TrafficClass::MatrixC))
+            .sum::<u64>()
+    };
+    assert_eq!(c_bytes(1), 0, "L=1 must not communicate C");
+    assert!(c_bytes(4) > 0, "L=4 must reduce partial C panels");
+}
+
+#[test]
+fn panel_size_formulas() {
+    let spec = BenchSpec::dense();
+    let grid = ProcGrid::new(10, 20).unwrap();
+    let s = panel_sizes(&spec, &grid);
+    // A on (P_R x V): V = 20 -> s_a = bytes/(10*20); B on (V x P_C):
+    // bytes/(20*20) -> s_a = 2*s_b, the paper's Fig-2 note for the
+    // 200-node virtual topology.
+    assert!((s.s_a / s.s_b - 2.0).abs() < 1e-9);
+    // C panels: sc_ratio * bytes / P
+    assert!((s.s_c - spec.matrix_bytes() / 200.0).abs() / s.s_c < 1e-9);
+}
+
+#[test]
+fn osl_buffer_claims_hold_in_engine() {
+    // The peak fetch-buffer footprint of the real OSL engine per tick is
+    // L_R * s_a + L_C * s_b — i.e. bounded by the paper's buffer counts
+    // (nbuffers_a * s_a + 2 * s_b would be the double-buffered bound).
+    let spec = BenchSpec::dense().scaled(24);
+    let a = random_for_spec(&spec, 11);
+    let b = random_for_spec(&spec, 12);
+    let layout = spec.layout();
+    let grid = ProcGrid::new(4, 4).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 13);
+    let topo = Topology25d::new(grid, 4).unwrap();
+    let sizes = panel_sizes(
+        &{
+            let mut e = spec.clone();
+            e.occupancy = a.occupancy();
+            e
+        },
+        &grid,
+    );
+    let cfg = MultiplyConfig {
+        engine: Engine::OneSided { l: 4 },
+        ..Default::default()
+    };
+    let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+    let bound = (topo.l_r as f64 * sizes.s_a + topo.l_c as f64 * sizes.s_b) * 1.5;
+    assert!(
+        (rep.peak_buffer_bytes as f64) < bound,
+        "peak buffers {} exceed 1.5x the paper bound {bound}",
+        rep.peak_buffer_bytes
+    );
+}

@@ -1,0 +1,140 @@
+//! Integration: the AOT three-layer contract — rust loads the Pallas/JAX
+//! HLO artifacts and reproduces the native numerics.
+//!
+//! Requires `make artifacts` (skips gracefully if absent so `cargo test`
+//! works on a fresh checkout).
+
+use dbcsr::blocks::build::BlockAccumulator;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::local::batch::{assemble_tasks, matrix_to_panel, multiply_panels_native, LocalMultStats};
+use dbcsr::local::stacks::pack_stacks;
+use dbcsr::runtime::client::PjrtContext;
+use dbcsr::runtime::gemm::{execute_stack, multiply_panels_pjrt, sign_step_pjrt};
+
+fn ctx() -> Option<PjrtContext> {
+    match PjrtContext::load("artifacts") {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("skipping pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_load_and_list() {
+    let Some(ctx) = ctx() else { return };
+    let names = ctx.names();
+    assert!(names.contains(&"batched_gemm_b6"));
+    assert!(names.contains(&"batched_gemm_b23"));
+    assert!(names.contains(&"batched_gemm_b32"));
+    assert!(names.contains(&"sign_step_n128"));
+    assert!(ctx.gemm_variant(23, 23, 23).is_some());
+    assert!(ctx.gemm_variant(7, 7, 7).is_none());
+    assert!(ctx.sign_variant(128).is_some());
+    assert!(ctx.sign_variant(64).is_none());
+}
+
+#[test]
+fn pallas_kernel_matches_native_all_block_sizes() {
+    let Some(ctx) = ctx() else { return };
+    for &bs in &[6usize, 23, 32] {
+        let l = BlockLayout::uniform(12, bs);
+        let a = BlockCsrMatrix::random(&l, &l, 0.6, bs as u64);
+        let b = BlockCsrMatrix::random(&l, &l, 0.6, bs as u64 + 1);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+
+        let mut acc_native = BlockAccumulator::new();
+        multiply_panels_native(&pa, &pb, -1.0, &mut acc_native);
+        let c_native = acc_native.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+
+        let mut acc_pjrt = BlockAccumulator::new();
+        let stats = multiply_panels_pjrt(&ctx, &pa, &pb, -1.0, &mut acc_pjrt).unwrap();
+        assert!(stats.products > 0);
+        let c_pjrt = acc_pjrt.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+
+        let diff = c_native.to_dense().max_abs_diff(&c_pjrt.to_dense());
+        assert!(diff < 1e-3, "b{bs}: pjrt vs native diff {diff} (f32 path)");
+    }
+}
+
+#[test]
+fn kernel_filter_semantics_through_pjrt() {
+    // The eps input of the artifact itself: large eps filters everything.
+    let Some(ctx) = ctx() else { return };
+    let l = BlockLayout::uniform(8, 6);
+    let a = BlockCsrMatrix::random(&l, &l, 1.0, 42);
+    let b = BlockCsrMatrix::random(&l, &l, 1.0, 43);
+    let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+    let mut st = LocalMultStats::default();
+    let tasks = assemble_tasks(&pa, &pb, -1.0, &mut st);
+    let (stacks, _) = pack_stacks(&pa, &pb, &tasks, 6, 6, 6, 1024);
+    let out_keep = execute_stack(&ctx, &stacks[0], -1.0).unwrap();
+    let out_drop = execute_stack(&ctx, &stacks[0], 1e9).unwrap();
+    assert!(out_keep.iter().any(|&x| x != 0.0));
+    assert!(out_drop.iter().all(|&x| x == 0.0), "eps=1e9 must zero all");
+}
+
+#[test]
+fn padding_slots_produce_zero() {
+    let Some(ctx) = ctx() else { return };
+    let l = BlockLayout::uniform(4, 6);
+    let a = BlockCsrMatrix::random(&l, &l, 0.8, 50);
+    let b = BlockCsrMatrix::random(&l, &l, 0.8, 51);
+    let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+    let mut st = LocalMultStats::default();
+    let tasks = assemble_tasks(&pa, &pb, -1.0, &mut st);
+    let (stacks, _) = pack_stacks(&pa, &pb, &tasks, 6, 6, 6, 1024);
+    let stack = &stacks[0];
+    assert!(stack.len() < stack.capacity, "need padding for this test");
+    let out = execute_stack(&ctx, stack, -1.0).unwrap();
+    for slot in stack.len()..stack.capacity {
+        let blk = &out[slot * 36..(slot + 1) * 36];
+        assert!(blk.iter().all(|&x| x == 0.0), "padding slot {slot} nonzero");
+    }
+}
+
+#[test]
+fn sign_step_artifact_matches_native() {
+    let Some(ctx) = ctx() else { return };
+    for n in [128usize, 256] {
+        let mut rng = dbcsr::util::prng::Pcg64::new(n as u64);
+        let x: Vec<f32> = (0..n * n).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let got = sign_step_pjrt(&ctx, n, &x).unwrap();
+        // native f64 reference
+        let xm = dbcsr::blocks::dense::DenseMatrix {
+            rows: n,
+            cols: n,
+            data: x.iter().map(|&v| v as f64).collect(),
+        };
+        let x2 = xm.matmul(&xm);
+        let mut three_i = dbcsr::blocks::dense::DenseMatrix::eye(n);
+        three_i.scale(3.0);
+        let y = three_i.axpy(-1.0, &x2);
+        let mut want = xm.matmul(&y);
+        want.scale(0.5);
+        let max_diff = got
+            .iter()
+            .zip(&want.data)
+            .map(|(&g, &w)| (g as f64 - w).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff < 1e-4, "n={n}: {max_diff}");
+    }
+}
+
+#[test]
+fn wrong_capacity_rejected() {
+    let Some(ctx) = ctx() else { return };
+    let stack = dbcsr::local::stacks::PackedStack {
+        a: vec![0.0; 10 * 36],
+        b: vec![0.0; 10 * 36],
+        targets: vec![(0, 0)],
+        capacity: 10, // artifact expects 1024
+        bm: 6,
+        bk: 6,
+        bn: 6,
+    };
+    assert!(execute_stack(&ctx, &stack, -1.0).is_err());
+    assert!(sign_step_pjrt(&ctx, 100, &vec![0.0; 100]).is_err());
+}
