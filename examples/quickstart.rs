@@ -10,9 +10,9 @@
 //! against the dense oracle, and prints the communication counters that
 //! make the paper's argument: same FLOPs, different bytes.
 
-use dbcsr::prelude::*;
 use dbcsr::comm::world::TrafficClass;
 use dbcsr::engines::multiply::multiply_oracle;
+use dbcsr::prelude::*;
 
 fn main() {
     // 48 block rows/cols of 8x8 blocks, 20% block occupancy.

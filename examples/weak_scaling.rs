@@ -15,8 +15,8 @@ use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
 use dbcsr::stats::report;
-use dbcsr::workloads::spec::BenchSpec;
 use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
 
 fn main() {
     println!("== Part 1: real simulated weak scaling (counted bytes) ==\n");

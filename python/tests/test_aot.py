@@ -6,6 +6,9 @@ import tempfile
 
 import pytest
 
+# The AOT pipeline lowers JAX programs; skip on runners without jax.
+pytest.importorskip("jax", reason="AOT lowering needs jax")
+
 from compile import aot, model
 
 

@@ -1,9 +1,13 @@
 """L2 model graphs: shapes, numerics, sign-step convergence."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Skip gracefully on runners without the JAX stack (e.g. bare CI boxes).
+jax = pytest.importorskip("jax", reason="model tests need jax")
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile import model

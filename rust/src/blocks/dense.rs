@@ -138,6 +138,7 @@ impl DenseMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::util::testkit::assert_close;
 
     #[test]

@@ -76,6 +76,7 @@ pub fn filter_blocks(m: &BlockCsrMatrix, eps: f64) -> (BlockCsrMatrix, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::layout::BlockLayout;
     use crate::util::prng::Pcg64;
     use crate::util::testkit::property;

@@ -53,10 +53,9 @@ impl BlockCsrMatrix {
         for (r, row) in rows.into_iter().enumerate() {
             let mut last: Option<usize> = None;
             for (c, bdata) in row {
-                assert!(
-                    last.map_or(true, |l| c > l),
-                    "row {r}: unsorted/duplicate column {c}"
-                );
+                if let Some(l) = last {
+                    assert!(c > l, "row {r}: unsorted/duplicate column {c}");
+                }
                 assert_eq!(
                     bdata.len(),
                     row_layout.size(r) * col_layout.size(c),

@@ -23,6 +23,7 @@ pub fn max_block_norm(m: &BlockCsrMatrix) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::layout::BlockLayout;
 
     #[test]

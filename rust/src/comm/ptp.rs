@@ -90,6 +90,7 @@ impl Comm {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::panel::Panel;
     use crate::comm::world::SimWorld;
 

@@ -101,6 +101,7 @@ impl Comm {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::comm::world::SimWorld;
 
     fn panel_with(v: f64) -> Panel {

@@ -114,7 +114,10 @@ impl CommStats {
         let b = TrafficClass::MatrixB.index();
         (
             self.ptp_recv_msgs[a] + self.ptp_recv_msgs[b] + self.rget_calls[a] + self.rget_calls[b],
-            self.ptp_recv_bytes[a] + self.ptp_recv_bytes[b] + self.rget_bytes[a] + self.rget_bytes[b],
+            self.ptp_recv_bytes[a]
+                + self.ptp_recv_bytes[b]
+                + self.rget_bytes[a]
+                + self.rget_bytes[b],
         )
     }
 

@@ -1,0 +1,360 @@
+//! Block → grid mappings with DBCSR's randomized permutations (paper §2).
+//!
+//! A [`Distribution2d`] owns three maps over block indices:
+//!
+//! * block *rows* → process rows (`A` and `C` rows live on process rows);
+//! * block *columns* → process columns (`B` and `C` columns);
+//! * *inner*-dimension blocks (`A` columns == `B` rows) → virtual indices
+//!   in `[0, V)`, `V = lcm(P_R, P_C)`.
+//!
+//! Each map is a seeded random permutation folded onto its target range —
+//! the paper's "randomly permuting rows and columns" for static load
+//! balance: physically correlated blocks (e.g. heavy rows of one atom
+//! kind) are scattered across the grid, while every process still gets an
+//! equal share (the permutation folds onto residue classes of equal
+//! size ±1).  [`Distribution2d::identity`] is the unpermuted modulo
+//! distribution the ablation bench compares against.
+//!
+//! The split/home accessors implement the placement contract both engines
+//! and `engines::multiply` share: A panel `(pi, vk)` is home at rank
+//! `(pi, vk mod P_C)`, B panel `(vk, pj)` at `(vk mod P_R, pj)` — the
+//! positions Cannon's pre-shift starts from and the one-sided windows
+//! expose.
+
+use crate::blocks::layout::BlockLayout;
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::panel::Panel;
+use crate::dist::grid::ProcGrid;
+use crate::util::prng::Pcg64;
+
+/// Independent PRNG streams so the three permutations decorrelate even
+/// when the dimensions coincide.
+const ROW_STREAM: u64 = 0xD157_0001;
+const INNER_STREAM: u64 = 0xD157_0002;
+const COL_STREAM: u64 = 0xD157_0003;
+
+/// A 2D block distribution over a process grid.
+#[derive(Clone, Debug)]
+pub struct Distribution2d {
+    /// The process grid this distribution maps onto.
+    pub grid: ProcGrid,
+    row_map: Vec<usize>,
+    inner_map: Vec<usize>,
+    col_map: Vec<usize>,
+}
+
+impl Distribution2d {
+    /// Randomly permuted distribution for square-shaped multiplications:
+    /// `row_layout` describes the block rows, `col_layout` the block
+    /// columns *and* the inner dimension (for `C = A·B` through one
+    /// distribution, `A`'s columns and `B`'s rows share the layout).
+    pub fn rand_permuted(
+        row_layout: &BlockLayout,
+        col_layout: &BlockLayout,
+        grid: &ProcGrid,
+        seed: u64,
+    ) -> Self {
+        let nbr = row_layout.nblocks();
+        let nbc = col_layout.nblocks();
+        Self::new_random(nbr, nbc, nbc, *grid, seed)
+    }
+
+    /// Randomly permuted distribution with explicit dimension sizes
+    /// (`C(m,n) = A(m,k)·B(k,n)` with `nbrows` row blocks, `nbinner`
+    /// inner blocks and `nbcols` column blocks).
+    pub fn new_random(
+        nbrows: usize,
+        nbinner: usize,
+        nbcols: usize,
+        grid: ProcGrid,
+        seed: u64,
+    ) -> Self {
+        let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
+        let rows = Pcg64::new_stream(seed, ROW_STREAM).permutation(nbrows);
+        let inner = Pcg64::new_stream(seed, INNER_STREAM).permutation(nbinner);
+        let cols = Pcg64::new_stream(seed, COL_STREAM).permutation(nbcols);
+        Self {
+            grid,
+            row_map: rows.into_iter().map(|x| x % pr).collect(),
+            inner_map: inner.into_iter().map(|x| x % v).collect(),
+            col_map: cols.into_iter().map(|x| x % pc).collect(),
+        }
+    }
+
+    /// Unpermuted modulo distribution (the load-balance ablation's
+    /// baseline): block `b` maps to `b mod P_R` / `b mod V` / `b mod P_C`.
+    pub fn identity(nbrows: usize, nbinner: usize, nbcols: usize, grid: ProcGrid) -> Self {
+        let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
+        Self {
+            grid,
+            row_map: (0..nbrows).map(|b| b % pr).collect(),
+            inner_map: (0..nbinner).map(|b| b % v).collect(),
+            col_map: (0..nbcols).map(|b| b % pc).collect(),
+        }
+    }
+
+    /// Number of block rows this distribution maps.
+    pub fn nbrows(&self) -> usize {
+        self.row_map.len()
+    }
+
+    /// Number of inner-dimension blocks this distribution maps.
+    pub fn nbinner(&self) -> usize {
+        self.inner_map.len()
+    }
+
+    /// Number of block columns this distribution maps.
+    pub fn nbcols(&self) -> usize {
+        self.col_map.len()
+    }
+
+    /// Process row owning block row `r` (rows of `A` and `C`).
+    pub fn row_owner(&self, r: usize) -> usize {
+        self.row_map[r]
+    }
+
+    /// Process column owning block column `c` (columns of `B` and `C`).
+    pub fn col_owner(&self, c: usize) -> usize {
+        self.col_map[c]
+    }
+
+    /// Virtual index of inner-dimension block `k` (`A` columns / `B`
+    /// rows) — the coordinate Cannon's rings and the one-sided fetches
+    /// tick through.
+    pub fn inner_virtual(&self, k: usize) -> usize {
+        self.inner_map[k]
+    }
+
+    /// Rank owning C block `(r, c)` under this distribution.
+    pub fn c_block_home(&self, r: usize, c: usize) -> usize {
+        self.grid.rank(self.row_map[r], self.col_map[c])
+    }
+
+    /// Home rank of A panel `(pi, vk)`: rank `(pi, vk mod P_C)` — where
+    /// the one-sided window exposes it and where Cannon's circulation
+    /// starts.
+    pub fn a_panel_home(&self, pi: usize, vk: usize) -> usize {
+        self.grid.rank(pi, vk % self.grid.cols())
+    }
+
+    /// Home rank of B panel `(vk, pj)`: rank `(vk mod P_R, pj)`.
+    pub fn b_panel_home(&self, vk: usize, pj: usize) -> usize {
+        self.grid.rank(vk % self.grid.rows(), pj)
+    }
+
+    /// Split A into its `P_R × V` panels (`[pi][vk]`).  Blocks keep their
+    /// global coordinates (see [`crate::blocks::panel`]), so the engines
+    /// can match and re-assemble without the distribution.
+    pub fn split_a(&self, a: &BlockCsrMatrix) -> Vec<Vec<Panel>> {
+        assert_eq!(a.row_layout().nblocks(), self.nbrows());
+        assert_eq!(a.col_layout().nblocks(), self.nbinner());
+        let (pr, v) = (self.grid.rows(), self.grid.virtual_dim());
+        let mut panels: Vec<Vec<Panel>> = (0..pr).map(|_| vec![Panel::new(); v]).collect();
+        for (r, k, blk) in a.iter_blocks() {
+            panels[self.row_map[r]][self.inner_map[k]].push_block(
+                r as u32,
+                k as u32,
+                a.row_layout().size(r) as u16,
+                a.col_layout().size(k) as u16,
+                blk,
+            );
+        }
+        panels
+    }
+
+    /// Split B into its `V × P_C` panels (`[vk][pj]`).
+    pub fn split_b(&self, b: &BlockCsrMatrix) -> Vec<Vec<Panel>> {
+        assert_eq!(b.row_layout().nblocks(), self.nbinner());
+        assert_eq!(b.col_layout().nblocks(), self.nbcols());
+        let (pc, v) = (self.grid.cols(), self.grid.virtual_dim());
+        let mut panels: Vec<Vec<Panel>> = (0..v).map(|_| vec![Panel::new(); pc]).collect();
+        for (k, c, blk) in b.iter_blocks() {
+            panels[self.inner_map[k]][self.col_map[c]].push_block(
+                k as u32,
+                c as u32,
+                b.row_layout().size(k) as u16,
+                b.col_layout().size(c) as u16,
+                blk,
+            );
+        }
+        panels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(map: impl Iterator<Item = usize>, n: usize) -> Vec<usize> {
+        let mut c = vec![0usize; n];
+        for x in map {
+            c[x] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn identity_is_modulo() {
+        let grid = ProcGrid::new(2, 3).unwrap();
+        let d = Distribution2d::identity(7, 8, 9, grid);
+        for r in 0..7 {
+            assert_eq!(d.row_owner(r), r % 2);
+        }
+        for k in 0..8 {
+            assert_eq!(d.inner_virtual(k), k % 6);
+        }
+        for c in 0..9 {
+            assert_eq!(d.col_owner(c), c % 3);
+        }
+    }
+
+    #[test]
+    fn rand_permuted_is_balanced() {
+        // A folded permutation gives every process row/column an equal
+        // share (±1) — the paper's static load balance.
+        let grid = ProcGrid::new(3, 4).unwrap();
+        let l = BlockLayout::uniform(26, 2);
+        let d = Distribution2d::rand_permuted(&l, &l, &grid, 99);
+        let rows = counts((0..26).map(|r| d.row_owner(r)), 3);
+        assert!(rows.iter().max().unwrap() - rows.iter().min().unwrap() <= 1, "{rows:?}");
+        let cols = counts((0..26).map(|c| d.col_owner(c)), 4);
+        assert!(cols.iter().max().unwrap() - cols.iter().min().unwrap() <= 1, "{cols:?}");
+        let inner = counts((0..26).map(|k| d.inner_virtual(k)), 12);
+        assert!(inner.iter().max().unwrap() - inner.iter().min().unwrap() <= 1, "{inner:?}");
+    }
+
+    #[test]
+    fn rand_permuted_deterministic_and_seed_sensitive() {
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let l = BlockLayout::uniform(32, 2);
+        let d1 = Distribution2d::rand_permuted(&l, &l, &grid, 5);
+        let d2 = Distribution2d::rand_permuted(&l, &l, &grid, 5);
+        let d3 = Distribution2d::rand_permuted(&l, &l, &grid, 6);
+        let owners = |d: &Distribution2d| -> Vec<usize> {
+            (0..32).map(|r| d.c_block_home(r, 31 - r)).collect()
+        };
+        assert_eq!(owners(&d1), owners(&d2));
+        assert_ne!(owners(&d1), owners(&d3), "different seeds should differ");
+    }
+
+    #[test]
+    fn rand_permuted_actually_permutes() {
+        // With 64 blocks on a 2x2 grid, the chance a random permutation
+        // reproduces the modulo maps is astronomically small.
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let l = BlockLayout::uniform(64, 2);
+        let d = Distribution2d::rand_permuted(&l, &l, &grid, 7);
+        let id = Distribution2d::identity(64, 64, 64, grid);
+        assert!((0..64).any(|r| d.row_owner(r) != id.row_owner(r)));
+        assert!((0..64).any(|k| d.inner_virtual(k) != id.inner_virtual(k)));
+    }
+
+    #[test]
+    fn split_a_places_blocks_at_their_panels() {
+        let grid = ProcGrid::new(2, 3).unwrap();
+        let l = BlockLayout::uniform(12, 2);
+        let d = Distribution2d::rand_permuted(&l, &l, &grid, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.5, 4);
+        let panels = d.split_a(&a);
+        assert_eq!(panels.len(), 2);
+        assert!(panels.iter().all(|row| row.len() == 6));
+        let mut seen = 0;
+        for (pi, row) in panels.iter().enumerate() {
+            for (vk, panel) in row.iter().enumerate() {
+                for e in &panel.entries {
+                    assert_eq!(d.row_owner(e.row as usize), pi);
+                    assert_eq!(d.inner_virtual(e.col as usize), vk);
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, a.nnz_blocks(), "split must not lose blocks");
+    }
+
+    #[test]
+    fn split_b_places_blocks_at_their_panels() {
+        let grid = ProcGrid::new(2, 3).unwrap();
+        let l = BlockLayout::uniform(12, 2);
+        let d = Distribution2d::rand_permuted(&l, &l, &grid, 3);
+        let b = BlockCsrMatrix::random(&l, &l, 0.5, 5);
+        let panels = d.split_b(&b);
+        assert_eq!(panels.len(), 6);
+        assert!(panels.iter().all(|row| row.len() == 3));
+        let mut seen = 0;
+        for (vk, row) in panels.iter().enumerate() {
+            for (pj, panel) in row.iter().enumerate() {
+                for e in &panel.entries {
+                    assert_eq!(d.inner_virtual(e.row as usize), vk);
+                    assert_eq!(d.col_owner(e.col as usize), pj);
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, b.nnz_blocks());
+    }
+
+    #[test]
+    fn inner_map_shared_between_a_cols_and_b_rows() {
+        // The contraction is consistent because A's column map and B's
+        // row map are the SAME inner map: block products (r,k)x(k,c)
+        // meet at virtual index inner(k).
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let l = BlockLayout::uniform(10, 3);
+        let d = Distribution2d::rand_permuted(&l, &l, &grid, 11);
+        let m = BlockCsrMatrix::random(&l, &l, 0.6, 12);
+        let a_panels = d.split_a(&m);
+        let b_panels = d.split_b(&m);
+        for k in 0..10 {
+            let vk = d.inner_virtual(k);
+            // every A block with column k sits in panel column vk
+            for (pi, row) in a_panels.iter().enumerate() {
+                for (v, panel) in row.iter().enumerate() {
+                    for e in &panel.entries {
+                        if e.col as usize == k {
+                            assert_eq!((v, pi), (vk, d.row_owner(e.row as usize)));
+                        }
+                    }
+                }
+            }
+            // every B block with row k sits in panel row vk
+            for (v, row) in b_panels.iter().enumerate() {
+                for panel in row {
+                    for e in &panel.entries {
+                        if e.row as usize == k {
+                            assert_eq!(v, vk);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_homes_follow_the_placement_contract() {
+        let grid = ProcGrid::new(3, 4).unwrap();
+        let d = Distribution2d::identity(6, 6, 6, grid);
+        let v = grid.virtual_dim();
+        for vk in 0..v {
+            for pi in 0..3 {
+                assert_eq!(d.a_panel_home(pi, vk), grid.rank(pi, vk % 4));
+            }
+            for pj in 0..4 {
+                assert_eq!(d.b_panel_home(vk, pj), grid.rank(vk % 3, pj));
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_dimension_bookkeeping() {
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let d = Distribution2d::new_random(8, 10, 6, grid, 9);
+        assert_eq!((d.nbrows(), d.nbinner(), d.nbcols()), (8, 10, 6));
+        let lm = BlockLayout::uniform(8, 2);
+        let lk = BlockLayout::uniform(10, 2);
+        let ln = BlockLayout::uniform(6, 2);
+        let a = BlockCsrMatrix::random(&lm, &lk, 0.5, 1);
+        let b = BlockCsrMatrix::random(&lk, &ln, 0.5, 2);
+        assert_eq!(d.split_a(&a).len(), 2);
+        assert_eq!(d.split_b(&b).len(), grid.virtual_dim());
+    }
+}

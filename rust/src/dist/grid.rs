@@ -1,0 +1,200 @@
+//! 2D process grids (paper §2).
+//!
+//! DBCSR arranges the `P` MPI ranks in a `P_R × P_C` grid (row-major rank
+//! order here).  Cannon's algorithm generalizes to non-square grids
+//! through the *virtual* inner dimension `V = lcm(P_R, P_C)`: A panels
+//! circulate on rings of length `P_C`, B panels on rings of length `P_R`,
+//! and both residue systems are compatible exactly when the inner index
+//! space has `lcm(P_R, P_C)` slots (see `engines::schedule`).
+
+use thiserror::Error;
+
+/// Errors constructing a process grid.
+#[derive(Clone, Copy, Debug, Error, PartialEq, Eq)]
+pub enum GridError {
+    #[error("process grid needs at least one row and one column, got {rows}x{cols}")]
+    Empty { rows: usize, cols: usize },
+}
+
+/// A `P_R × P_C` grid of simulated MPI ranks, row-major rank order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProcGrid {
+    rows: usize,
+    cols: usize,
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+impl ProcGrid {
+    /// A grid with `rows` process rows and `cols` process columns.
+    pub fn new(rows: usize, cols: usize) -> Result<Self, GridError> {
+        if rows == 0 || cols == 0 {
+            return Err(GridError::Empty { rows, cols });
+        }
+        Ok(Self { rows, cols })
+    }
+
+    /// The most-square grid for `p` processes: the largest divisor pair
+    /// `(P_R, P_C)` with `P_R <= P_C` — what DBCSR picks for a node count
+    /// that is not a perfect square (prime counts degrade to `1 × p`).
+    pub fn squarest(p: usize) -> Result<Self, GridError> {
+        if p == 0 {
+            return Err(GridError::Empty { rows: 0, cols: 0 });
+        }
+        let mut best = 1;
+        let mut d = 1;
+        while d * d <= p {
+            if p % d == 0 {
+                best = d;
+            }
+            d += 1;
+        }
+        Self::new(best, p / best)
+    }
+
+    /// Number of process rows `P_R`.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of process columns `P_C`.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total number of processes `P = P_R · P_C`.
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// The virtual inner dimension `V = lcm(P_R, P_C)` (paper §2).
+    pub fn virtual_dim(&self) -> usize {
+        self.rows / gcd(self.rows, self.cols) * self.cols
+    }
+
+    /// Rank of grid position `(i, j)`.
+    pub fn rank(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) outside grid");
+        i * self.cols + j
+    }
+
+    /// Grid position of `rank`.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.size(), "rank {rank} outside grid");
+        (rank / self.cols, rank % self.cols)
+    }
+
+    /// Left neighbour (same row, wrapping) — where Cannon's A panels go.
+    pub fn left(&self, i: usize, j: usize) -> (usize, usize) {
+        (i, (j + self.cols - 1) % self.cols)
+    }
+
+    /// Right neighbour (same row, wrapping) — where Cannon's A panels
+    /// come from.
+    pub fn right(&self, i: usize, j: usize) -> (usize, usize) {
+        (i, (j + 1) % self.cols)
+    }
+
+    /// Upper neighbour (same column, wrapping) — where Cannon's B panels
+    /// go.
+    pub fn up(&self, i: usize, j: usize) -> (usize, usize) {
+        ((i + self.rows - 1) % self.rows, j)
+    }
+
+    /// Lower neighbour (same column, wrapping) — where Cannon's B panels
+    /// come from.
+    pub fn down(&self, i: usize, j: usize) -> (usize, usize) {
+        ((i + 1) % self.rows, j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coords_roundtrip() {
+        let g = ProcGrid::new(3, 5).unwrap();
+        assert_eq!(g.size(), 15);
+        for r in 0..g.size() {
+            let (i, j) = g.coords(r);
+            assert_eq!(g.rank(i, j), r);
+        }
+    }
+
+    #[test]
+    fn empty_grids_rejected() {
+        assert!(ProcGrid::new(0, 3).is_err());
+        assert!(ProcGrid::new(3, 0).is_err());
+        assert!(ProcGrid::squarest(0).is_err());
+    }
+
+    #[test]
+    fn virtual_dim_is_lcm() {
+        assert_eq!(ProcGrid::new(2, 2).unwrap().virtual_dim(), 2);
+        assert_eq!(ProcGrid::new(2, 3).unwrap().virtual_dim(), 6);
+        assert_eq!(ProcGrid::new(10, 20).unwrap().virtual_dim(), 20);
+        assert_eq!(ProcGrid::new(4, 6).unwrap().virtual_dim(), 12);
+        assert_eq!(ProcGrid::new(1, 7).unwrap().virtual_dim(), 7);
+    }
+
+    #[test]
+    fn squarest_paper_node_counts() {
+        // Table 2 node counts: 200, 400, 729, 1296, 2704.
+        let cases = [
+            (200, (10, 20)),
+            (400, (20, 20)),
+            (729, (27, 27)),
+            (1296, (36, 36)),
+            (2704, (52, 52)),
+        ];
+        for (p, (pr, pc)) in cases {
+            let g = ProcGrid::squarest(p).unwrap();
+            assert_eq!((g.rows(), g.cols()), (pr, pc), "p = {p}");
+            assert_eq!(g.size(), p);
+        }
+    }
+
+    #[test]
+    fn squarest_prime_and_nonsquare_counts() {
+        // Primes degrade to a 1 x p strip.
+        for p in [2usize, 13, 97] {
+            let g = ProcGrid::squarest(p).unwrap();
+            assert_eq!((g.rows(), g.cols()), (1, p));
+        }
+        // Non-square composites pick the most-square divisor pair.
+        let g = ProcGrid::squarest(12).unwrap();
+        assert_eq!((g.rows(), g.cols()), (3, 4));
+        let g = ProcGrid::squarest(800).unwrap();
+        assert_eq!((g.rows(), g.cols()), (25, 32));
+        // P_R <= P_C and the area is always exact.
+        for p in 1..200 {
+            let g = ProcGrid::squarest(p).unwrap();
+            assert!(g.rows() <= g.cols());
+            assert_eq!(g.size(), p);
+        }
+    }
+
+    #[test]
+    fn neighbours_wrap() {
+        let g = ProcGrid::new(3, 4).unwrap();
+        assert_eq!(g.left(1, 0), (1, 3));
+        assert_eq!(g.right(1, 3), (1, 0));
+        assert_eq!(g.up(0, 2), (2, 2));
+        assert_eq!(g.down(2, 2), (0, 2));
+        // left and right are inverses, as are up and down
+        for i in 0..3 {
+            for j in 0..4 {
+                let (li, lj) = g.left(i, j);
+                assert_eq!(g.right(li, lj), (i, j));
+                let (ui, uj) = g.up(i, j);
+                assert_eq!(g.down(ui, uj), (i, j));
+            }
+        }
+    }
+}

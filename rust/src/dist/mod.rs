@@ -1,0 +1,21 @@
+//! Process topology: 2D grids, randomized block distributions and the
+//! paper's 2.5D replication rules.
+//!
+//! This is the layer between [`crate::blocks`] (what a matrix *is*) and
+//! [`crate::engines`] (how it is multiplied):
+//!
+//! * [`grid`] — the `P_R × P_C` process grid with the generalized virtual
+//!   dimension `V = lcm(P_R, P_C)` that lets Cannon's algorithm run on
+//!   non-square grids (paper §2);
+//! * [`distribution`] — the mapping of block rows/columns to grid
+//!   coordinates, with the randomized permutations DBCSR uses for static
+//!   load balance (paper §2), plus the panel splits/homes the engines
+//!   consume;
+//! * [`topology25d`] — the 2.5D replication topology of paper §3
+//!   (Eq. 4/5): `L = L_R · L_C` replicas per C panel on a
+//!   `[side3D, side3D, L]` arrangement, with the "fall back to `L = 1`"
+//!   rule for non-ideal processor counts.
+
+pub mod distribution;
+pub mod grid;
+pub mod topology25d;

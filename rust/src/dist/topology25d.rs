@@ -1,0 +1,296 @@
+//! The 2.5D replication topology of paper §3 (Eq. 4/5).
+//!
+//! For a replication factor `L`, the `P = P_R · P_C` processes are viewed
+//! as a `[side3D, side3D, L]` arrangement: process `(i, j)` has reduced
+//! 2D coordinates `(i mod side3D, j mod side3D)` and replica coordinates
+//! `i3D = i / side3D`, `j3D = j / side3D`, giving the replica index
+//! `l = j3D · L_R + i3D`.  The computation of each C panel `(m, n)` is
+//! split over the `L = L_R · L_C` processes that share its reduced
+//! coordinates; each consumes `V/L` inner indices (`engines::schedule`
+//! derives which), buying the `√L` communication reduction of Eq. 7 at
+//! the cost of the `(L−1)·S_C` reduction traffic and `O(L)` buffers
+//! (Eq. 6).
+//!
+//! A topology is valid when the grid factors through the 3D arrangement:
+//! `side3D = √(P/L)` must be an integer dividing both `P_R` and `P_C`
+//! (so `L_R = P_R/side3D`, `L_C = P_C/side3D`), and `L` must divide the
+//! virtual dimension `V` so every replica gets the same number of ticks.
+//! When the requested `L` is not valid for the grid, the paper's rule is
+//! to *fall back to the 2D algorithm* (`L = 1`, always valid) — that is
+//! [`Topology25d::new_or_fallback`].
+
+use thiserror::Error;
+
+use crate::dist::grid::ProcGrid;
+
+/// Why a requested `(grid, L)` pair is not a valid 2.5D topology (§3's
+/// non-ideal cases).
+#[derive(Clone, Copy, Debug, Error, PartialEq, Eq)]
+pub enum TopologyError {
+    #[error("replication factor L must be >= 1")]
+    ZeroL,
+    #[error("L = {l} does not divide P = {p}")]
+    LNotDividingP { l: usize, p: usize },
+    #[error("P/L = {side_sq} is not a perfect square (no integer side3D)")]
+    SideNotIntegral { side_sq: usize },
+    #[error("side3D = {side3d} does not divide the {pr}x{pc} grid")]
+    SideNotAligned { side3d: usize, pr: usize, pc: usize },
+    #[error("L = {l} does not divide the virtual dimension V = {v}")]
+    LNotDividingV { l: usize, v: usize },
+}
+
+/// A validated 2.5D topology over a process grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology25d {
+    /// The underlying 2D grid.
+    pub grid: ProcGrid,
+    /// Virtual inner dimension `V = lcm(P_R, P_C)`.
+    pub v: usize,
+    /// Replication factor `L = L_R · L_C` (1 = plain 2D).
+    pub l: usize,
+    /// Replicas along the grid-row direction.
+    pub l_r: usize,
+    /// Replicas along the grid-column direction.
+    pub l_c: usize,
+    /// Side of the reduced 3D arrangement (`P_R = L_R · side3D`,
+    /// `P_C = L_C · side3D`; for `L = 1` it is `max(P_R, P_C)` so the
+    /// reduced coordinates are the plain 2D ones).
+    pub side3d: usize,
+}
+
+fn isqrt(n: usize) -> usize {
+    let mut s = (n as f64).sqrt() as usize;
+    while s * s > n {
+        s -= 1;
+    }
+    while (s + 1) * (s + 1) <= n {
+        s += 1;
+    }
+    s
+}
+
+impl Topology25d {
+    /// Validate `(grid, l)` against the §3 rules.
+    pub fn new(grid: ProcGrid, l: usize) -> Result<Self, TopologyError> {
+        let (pr, pc) = (grid.rows(), grid.cols());
+        let v = grid.virtual_dim();
+        if l == 0 {
+            return Err(TopologyError::ZeroL);
+        }
+        if l == 1 {
+            // Plain 2D: every process is its own replica.
+            return Ok(Self {
+                grid,
+                v,
+                l: 1,
+                l_r: 1,
+                l_c: 1,
+                side3d: pr.max(pc),
+            });
+        }
+        let p = grid.size();
+        if p % l != 0 {
+            return Err(TopologyError::LNotDividingP { l, p });
+        }
+        let side_sq = p / l;
+        let side3d = isqrt(side_sq);
+        if side3d * side3d != side_sq {
+            return Err(TopologyError::SideNotIntegral { side_sq });
+        }
+        if pr % side3d != 0 || pc % side3d != 0 {
+            return Err(TopologyError::SideNotAligned { side3d, pr, pc });
+        }
+        if v % l != 0 {
+            return Err(TopologyError::LNotDividingV { l, v });
+        }
+        Ok(Self {
+            grid,
+            v,
+            l,
+            l_r: pr / side3d,
+            l_c: pc / side3d,
+            side3d,
+        })
+    }
+
+    /// The paper's Algorithm 2 rule for non-ideal topologies: use the
+    /// requested `L` when valid, otherwise run the 2D algorithm (`L = 1`).
+    pub fn new_or_fallback(grid: ProcGrid, l: usize) -> Self {
+        Self::new(grid, l).unwrap_or_else(|_| Self::new(grid, 1).expect("L = 1 is valid"))
+    }
+
+    /// Number of ticks of Algorithm 2: each replica consumes `V/L` inner
+    /// indices.
+    pub fn nticks(&self) -> usize {
+        self.v / self.l
+    }
+
+    /// A-panel buffers Algorithm 2 needs: `max(2, L_R)` (the `L_R` panels
+    /// of a tick are all live at once; 2 gives double buffering at L = 1).
+    pub fn nbuffers_a(&self) -> usize {
+        self.l_r.max(2)
+    }
+
+    /// 3D coordinates of process `(i, j)`: `(i3D, j3D, l)` with the
+    /// replica index `l = j3D · L_R + i3D`.
+    pub fn coords3d(&self, i: usize, j: usize) -> (usize, usize, usize) {
+        let i3d = i / self.side3d;
+        let j3d = j / self.side3d;
+        (i3d, j3d, j3d * self.l_r + i3d)
+    }
+
+    /// Grid rows of the C panels process row `i` contributes to:
+    /// `m_a = a · side3D + (i mod side3D)` for `a in 0..L_R`.
+    pub fn c_panel_rows(&self, i: usize) -> Vec<usize> {
+        let i0 = i % self.side3d;
+        (0..self.l_r).map(|a| a * self.side3d + i0).collect()
+    }
+
+    /// Grid columns of the C panels process column `j` contributes to.
+    pub fn c_panel_cols(&self, j: usize) -> Vec<usize> {
+        let j0 = j % self.side3d;
+        (0..self.l_c).map(|b| b * self.side3d + j0).collect()
+    }
+
+    /// The `L` grid positions that hold a replica of C panel `(m, n)`:
+    /// every process sharing its reduced coordinates.
+    pub fn replicas_of_panel(&self, m: usize, n: usize) -> Vec<(usize, usize)> {
+        let (pr, pc) = (self.grid.rows(), self.grid.cols());
+        let i0 = m % self.side3d;
+        let j0 = n % self.side3d;
+        let mut out = Vec::with_capacity(self.l);
+        for i in (i0..pr).step_by(self.side3d) {
+            for j in (j0..pc).step_by(self.side3d) {
+                out.push((i, j));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(pr: usize, pc: usize, l: usize) -> Result<Topology25d, TopologyError> {
+        Topology25d::new(ProcGrid::new(pr, pc).unwrap(), l)
+    }
+
+    #[test]
+    fn l1_always_valid() {
+        for (pr, pc) in [(1, 1), (2, 3), (5, 5), (10, 20), (7, 1)] {
+            let t = topo(pr, pc, 1).unwrap();
+            assert_eq!((t.l, t.l_r, t.l_c), (1, 1, 1));
+            assert_eq!(t.side3d, pr.max(pc));
+            assert_eq!(t.nticks(), t.v);
+            assert_eq!(t.nbuffers_a(), 2);
+        }
+    }
+
+    #[test]
+    fn square_replication_shapes() {
+        let t = topo(4, 4, 4).unwrap();
+        assert_eq!((t.l_r, t.l_c, t.side3d), (2, 2, 2));
+        assert_eq!(t.nticks(), 1);
+        let t = topo(9, 9, 9).unwrap();
+        assert_eq!((t.l_r, t.l_c, t.side3d), (3, 3, 3));
+        assert_eq!(t.nbuffers_a(), 3);
+    }
+
+    #[test]
+    fn nonsquare_orientations() {
+        // Tall grid replicates along rows, wide along columns.
+        let t = topo(8, 4, 2).unwrap();
+        assert_eq!((t.l_r, t.l_c, t.side3d), (2, 1, 4));
+        let t = topo(4, 8, 2).unwrap();
+        assert_eq!((t.l_r, t.l_c, t.side3d), (1, 2, 4));
+        let t = topo(12, 4, 3).unwrap();
+        assert_eq!((t.l_r, t.l_c, t.side3d), (3, 1, 4));
+    }
+
+    #[test]
+    fn invalid_topologies_rejected() {
+        assert_eq!(topo(3, 3, 0), Err(TopologyError::ZeroL));
+        // L does not divide P.
+        assert!(matches!(topo(3, 3, 4), Err(TopologyError::LNotDividingP { .. })));
+        assert!(matches!(topo(5, 5, 4), Err(TopologyError::LNotDividingP { .. })));
+        // P/L not a perfect square.
+        assert!(matches!(topo(4, 4, 2), Err(TopologyError::SideNotIntegral { .. })));
+        // side3D does not divide the grid (P = 36, L = 4 -> side3D = 3,
+        // which divides neither 2 nor necessarily the other side).
+        assert!(matches!(topo(2, 18, 4), Err(TopologyError::SideNotAligned { .. })));
+        // ... while the same P/L on an aligned grid is fine.
+        assert!(topo(3, 12, 4).is_ok());
+        // L does not divide V (2x2: side3D = 1 works but V = 2).
+        assert!(matches!(topo(2, 2, 4), Err(TopologyError::LNotDividingV { .. })));
+    }
+
+    #[test]
+    fn fallback_degrades_to_l1_on_nonideal_shapes() {
+        // Paper §3: "set L = 1 if the topology is not valid".
+        for (pr, pc, l) in [(3, 3, 4), (5, 5, 4), (2, 2, 4), (7, 3, 9), (4, 4, 2)] {
+            assert!(topo(pr, pc, l).is_err(), "{pr}x{pc} L={l} should be invalid");
+            let t = Topology25d::new_or_fallback(ProcGrid::new(pr, pc).unwrap(), l);
+            assert_eq!(t.l, 1, "{pr}x{pc} L={l} must fall back to L=1");
+            assert_eq!(t.nticks(), t.v);
+        }
+        // A valid request is passed through unchanged.
+        let t = Topology25d::new_or_fallback(ProcGrid::new(4, 4).unwrap(), 4);
+        assert_eq!(t.l, 4);
+    }
+
+    #[test]
+    fn replicas_partition_the_grid() {
+        for (pr, pc, l) in [(4, 4, 4), (8, 4, 2), (2, 4, 2), (6, 2, 3), (9, 9, 9)] {
+            let t = topo(pr, pc, l).unwrap();
+            for m in 0..pr {
+                for n in 0..pc {
+                    let reps = t.replicas_of_panel(m, n);
+                    assert_eq!(reps.len(), t.l, "{pr}x{pc} L={l} panel ({m},{n})");
+                    assert!(reps.contains(&(m, n)));
+                    // The L replicas carry L distinct replica indices.
+                    let mut ls: Vec<usize> =
+                        reps.iter().map(|&(i, j)| t.coords3d(i, j).2).collect();
+                    ls.sort_unstable();
+                    assert_eq!(ls, (0..t.l).collect::<Vec<_>>());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn c_panels_include_home_position() {
+        for (pr, pc, l) in [(4, 4, 4), (8, 4, 2), (12, 4, 3), (3, 3, 1), (2, 3, 1)] {
+            let t = topo(pr, pc, l).unwrap();
+            for i in 0..pr {
+                for j in 0..pc {
+                    let rows = t.c_panel_rows(i);
+                    let cols = t.c_panel_cols(j);
+                    assert_eq!(rows.len(), t.l_r);
+                    assert_eq!(cols.len(), t.l_c);
+                    // The partial with index (i3D, j3D) is the home panel.
+                    let (i3d, j3d, _) = t.coords3d(i, j);
+                    assert_eq!(rows[i3d], i);
+                    assert_eq!(cols[j3d], j);
+                    // All panel coordinates stay inside the grid.
+                    assert!(rows.iter().all(|&m| m < pr));
+                    assert!(cols.iter().all(|&n| n < pc));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_l_values_at_table2_grids() {
+        // 200 nodes -> {2}; 400 -> {4}; 729 -> {9}; 1296 -> {4, 9};
+        // 2704 -> {4} (L > 1 columns of Table 2).
+        fn valid(p: usize, l: usize) -> bool {
+            Topology25d::new(ProcGrid::squarest(p).unwrap(), l).is_ok()
+        }
+        assert!(valid(200, 2) && !valid(200, 4) && !valid(200, 9));
+        assert!(!valid(400, 2) && valid(400, 4) && !valid(400, 9));
+        assert!(!valid(729, 2) && !valid(729, 4) && valid(729, 9));
+        assert!(!valid(1296, 2) && valid(1296, 4) && valid(1296, 9));
+        assert!(!valid(2704, 2) && valid(2704, 4) && !valid(2704, 9));
+    }
+}

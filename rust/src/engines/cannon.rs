@@ -23,8 +23,8 @@ use std::collections::HashMap;
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
-use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::comm::ptp::Request;
+use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::schedule::cannon_vk;
@@ -98,8 +98,9 @@ pub fn run_rank(
         let ra = comm.irecv(a_src, TAG_PRE_A, TrafficClass::MatrixA);
         let rb = comm.irecv(b_src, TAG_PRE_B, TrafficClass::MatrixB);
         let mut got = comm.wait_all(vec![sa, sb, ra, rb]);
-        let b: HashMap<u64, Panel> = got.pop().unwrap().unwrap().into_panel_set().into_iter().collect();
-        let a: HashMap<u64, Panel> = got.pop().unwrap().unwrap().into_panel_set().into_iter().collect();
+        let mut take = || got.pop().unwrap().unwrap().into_panel_set().into_iter().collect();
+        let b: HashMap<u64, Panel> = take();
+        let a: HashMap<u64, Panel> = take();
         (a, b)
     });
     log.pre_bytes = panelset_bytes(&comp_a) + panelset_bytes(&comp_b);
@@ -110,7 +111,8 @@ pub fn run_rank(
     for t in 0..v {
         // mpi_waitall: previous tick's shifts must have completed.
         if t > 0 {
-            let arrivals = timers.time("cannon/mpi_waitall", || comm.wait_all(std::mem::take(&mut pending)));
+            let reqs = std::mem::take(&mut pending);
+            let arrivals = timers.time("cannon/mpi_waitall", || comm.wait_all(reqs));
             let mut rec = TickRecord::default();
             for payload in arrivals.into_iter().flatten() {
                 let set = payload.into_panel_set();

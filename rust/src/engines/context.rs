@@ -16,9 +16,7 @@
 
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::dist::distribution::Distribution2d;
-use crate::engines::multiply::{
-    multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport,
-};
+use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport};
 
 /// Grow-only pool bookkeeping for one simulated rank set.
 #[derive(Clone, Debug, Default)]
@@ -99,6 +97,7 @@ impl MultContext {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::layout::BlockLayout;
     use crate::dist::grid::ProcGrid;
     use crate::engines::multiply::Engine;
@@ -148,11 +147,9 @@ mod tests {
         let a = BlockCsrMatrix::random(&l, &l, 0.4, 6);
         let b = BlockCsrMatrix::random(&l, &l, 0.4, 7);
         let via_ctx = c.multiply(&a, &b, None).unwrap();
-        let direct = multiply_distributed(&a, &b, None, &{
-            let grid = ProcGrid::new(2, 2).unwrap();
-            Distribution2d::rand_permuted(&l, &l, &grid, 1)
-        }, c.config())
-        .unwrap();
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 1);
+        let direct = multiply_distributed(&a, &b, None, &dist, c.config()).unwrap();
         assert_eq!(via_ctx.c.to_dense(), direct.c.to_dense());
     }
 }

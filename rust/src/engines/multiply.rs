@@ -6,11 +6,13 @@
 //! filter.  Returns the result together with the exact per-rank traffic
 //! counters and virtual-time logs the benchmarks consume.
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::filter::{filter_blocks, FilterConfig};
 use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::panel::Panel;
 use crate::comm::world::{CommStats, SimWorld};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
@@ -144,13 +146,13 @@ pub fn multiply_distributed(
     let b_panels = dist.split_b(b); // [vk][pj]
     let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
 
-    // Per-rank input slots (taken by each rank thread).
-    let mut inputs: Vec<(std::collections::HashMap<u64, crate::blocks::panel::Panel>,
-                         std::collections::HashMap<u64, crate::blocks::panel::Panel>)> =
-        (0..pr * pc).map(|_| Default::default()).collect();
+    // Per-rank input slots (taken by each rank thread): the A and B
+    // panel directories each rank starts from.
+    type RankInputs = (HashMap<u64, Panel>, HashMap<u64, Panel>);
+    let mut inputs: Vec<RankInputs> = (0..pr * pc).map(|_| Default::default()).collect();
     for (pi, row) in a_panels.into_iter().enumerate() {
         for (vk, panel) in row.into_iter().enumerate() {
-            let home = grid.rank(pi, vk % pc);
+            let home = dist.a_panel_home(pi, vk);
             // Cannon keys its circulating sets by vk alone; the one-sided
             // windows use win_key(pi, vk). Both fit u64 keys.
             let key = match cfg.engine {
@@ -162,7 +164,7 @@ pub fn multiply_distributed(
     }
     for (vk, row) in b_panels.into_iter().enumerate() {
         for (pj, panel) in row.into_iter().enumerate() {
-            let home = grid.rank(vk % pr, pj);
+            let home = dist.b_panel_home(vk, pj);
             let key = match cfg.engine {
                 Engine::PointToPoint => vk as u64,
                 Engine::OneSided { .. } => crate::comm::rma::win_key(vk, pj),
@@ -171,7 +173,7 @@ pub fn multiply_distributed(
         }
     }
     let _ = v;
-    let input_slots: Vec<Mutex<Option<(_, _)>>> =
+    let input_slots: Vec<Mutex<Option<RankInputs>>> =
         inputs.into_iter().map(|x| Mutex::new(Some(x))).collect();
 
     // ---- run the world ------------------------------------------------
@@ -277,6 +279,7 @@ pub fn multiply_oracle(
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::layout::BlockLayout;
     use crate::dist::grid::ProcGrid;
     use crate::util::testkit::property;

@@ -87,7 +87,8 @@ pub fn run_rank(
     let _max_pool = comm.iallreduce_wait(size_check);
 
     // L partial C accumulators: index (a, b) -> C panel (m(a), n(b)).
-    let mut partials: Vec<BlockAccumulator> = (0..topo.l).map(|_| BlockAccumulator::new()).collect();
+    let mut partials: Vec<BlockAccumulator> =
+        (0..topo.l).map(|_| BlockAccumulator::new()).collect();
     let rows = topo.c_panel_rows(i);
     let cols = topo.c_panel_cols(j);
     let mut peak_buffer_bytes = 0u64;

@@ -84,6 +84,7 @@ pub fn osl_panel_coverage(topo: &Topology25d, m: usize, n: usize) -> Vec<(usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::dist::grid::ProcGrid;
     use crate::util::testkit::property;
 

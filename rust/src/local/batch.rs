@@ -118,6 +118,7 @@ pub fn matrix_to_panel(m: &crate::blocks::matrix::BlockCsrMatrix) -> Panel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::layout::BlockLayout;
     use crate::blocks::matrix::BlockCsrMatrix;
 

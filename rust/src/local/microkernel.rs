@@ -95,6 +95,7 @@ pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::util::prng::Pcg64;
     use crate::util::testkit::{assert_allclose, property};
 

@@ -107,6 +107,7 @@ pub fn scatter_results(stack: &PackedStack, out: &[f32], acc: &mut BlockAccumula
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::local::batch::{assemble_tasks, LocalMultStats};
 
     fn uniform_panels(nb: usize, bs: usize, seeds: (u64, u64)) -> (Panel, Panel) {

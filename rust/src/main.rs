@@ -14,9 +14,7 @@
 use dbcsr::blocks::filter::FilterConfig;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
-use dbcsr::engines::multiply::{
-    multiply_distributed, multiply_oracle, Engine, MultiplyConfig,
-};
+use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
 use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::stats::report;
 use dbcsr::util::cli::Args;

@@ -206,6 +206,7 @@ pub fn critical_path(times: &[ModeledTime]) -> ModeledTime {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::perfmodel::machine::MachineModel;
 
     fn machine() -> MachineModel {

@@ -14,6 +14,13 @@
 //! threads, while the PJRT path serves the single-threaded drivers
 //! (quickstart, kernel validation, benches) — python stays off the
 //! request path either way.
+//!
+//! The PJRT client needs the vendored `xla` crate and the xla_extension
+//! native library, which only the original build image provides.  The
+//! real implementation is therefore gated behind the `pjrt` cargo
+//! feature; without it this module compiles a stub whose
+//! [`PjrtContext::load`] always errors, which every caller already treats
+//! as "skip the PJRT path" (manifest parsing stays available either way).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -72,11 +79,16 @@ pub fn parse_manifest(text: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
 /// A compiled artifact ready to execute.
 pub struct LoadedArtifact {
     pub spec: ArtifactSpec,
+    /// The compiled PJRT executable (real builds only).
+    #[cfg(feature = "pjrt")]
     pub exe: xla::PjRtLoadedExecutable,
 }
 
-/// The PJRT CPU client with every artifact compiled.
+/// The PJRT CPU client with every artifact compiled.  Without the `pjrt`
+/// feature this is a stub that can never be constructed: `load` reports
+/// why, and callers fall back to the native microkernel.
 pub struct PjrtContext {
+    #[cfg(feature = "pjrt")]
     pub client: xla::PjRtClient,
     artifacts: HashMap<String, LoadedArtifact>,
     dir: PathBuf,
@@ -84,6 +96,7 @@ pub struct PjrtContext {
 
 impl PjrtContext {
     /// Load and compile every artifact in `dir` (default: `artifacts/`).
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -111,6 +124,16 @@ impl PjrtContext {
             artifacts,
             dir,
         })
+    }
+
+    /// Stub loader: always errors so callers take their native fallback.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "PJRT support is disabled: {} not loaded (add the vendored `xla` crate to \
+             rust/Cargo.toml, then rebuild with `--features pjrt`; see rust/README.md)",
+            dir.as_ref().display()
+        )
     }
 
     /// Artifact directory this context was loaded from.
@@ -169,6 +192,13 @@ mod tests {
         assert!(parse_manifest(r#"[{"name": "x"}]"#).is_err());
     }
 
-    // Tests that actually load artifacts live in rust/tests/runtime.rs
-    // (they need `make artifacts` to have run).
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_disabled() {
+        let err = PjrtContext::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    // Tests that actually load artifacts live in rust/tests/runtime_pjrt.rs
+    // (they need `make artifacts` and `--features pjrt` to have run).
 }

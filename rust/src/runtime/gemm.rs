@@ -5,6 +5,10 @@
 //! this module feeds the stacks through the compiled PJRT executable and
 //! scatters the results, falling back to the native microkernel for
 //! blocks with no matching AOT variant.
+//!
+//! Without the `pjrt` cargo feature the executors below return an error
+//! unconditionally — consistent with the stub [`PjrtContext`], which can
+//! never be constructed in that configuration.
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
@@ -15,6 +19,7 @@ use crate::runtime::client::PjrtContext;
 /// Execute one packed stack on its AOT variant.  `eps` is the on-the-fly
 /// filter threshold (f32; padding slots have zero norms, so any
 /// `eps >= 0` filters them inside the kernel itself).
+#[cfg(feature = "pjrt")]
 pub fn execute_stack(
     ctx: &PjrtContext,
     stack: &PackedStack,
@@ -45,6 +50,16 @@ pub fn execute_stack(
     // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
     let out = result.to_tuple1()?;
     Ok(out.to_vec::<f32>()?)
+}
+
+/// Stub executor: the `pjrt` feature is off, so no artifact can run.
+#[cfg(not(feature = "pjrt"))]
+pub fn execute_stack(
+    _ctx: &PjrtContext,
+    _stack: &PackedStack,
+    _eps: f32,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::bail!("PJRT support is disabled (vendor `xla` and rebuild with `--features pjrt`)")
 }
 
 /// Local multiplication `C += A_panel · B_panel` through the AOT kernel.
@@ -89,6 +104,7 @@ pub fn multiply_panels_pjrt(
 }
 
 /// One dense sign-iteration step `X ← ½ X (3I − X²)` on the AOT artifact.
+#[cfg(feature = "pjrt")]
 pub fn sign_step_pjrt(ctx: &PjrtContext, n: usize, x: &[f32]) -> anyhow::Result<Vec<f32>> {
     anyhow::ensure!(x.len() == n * n, "x must be {n}x{n}");
     let variant = ctx
@@ -99,5 +115,12 @@ pub fn sign_step_pjrt(ctx: &PjrtContext, n: usize, x: &[f32]) -> anyhow::Result<
     Ok(result.to_tuple1()?.to_vec::<f32>()?)
 }
 
+/// Stub sign step: the `pjrt` feature is off.
+#[cfg(not(feature = "pjrt"))]
+pub fn sign_step_pjrt(_ctx: &PjrtContext, n: usize, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(x.len() == n * n, "x must be {n}x{n}");
+    anyhow::bail!("PJRT support is disabled (vendor `xla` and rebuild with `--features pjrt`)")
+}
+
 // Integration tests that require built artifacts live in
-// rust/tests/runtime.rs.
+// rust/tests/runtime_pjrt.rs.

@@ -82,6 +82,7 @@ pub fn density_matrix(
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::filter::FilterConfig;
     use crate::dist::grid::ProcGrid;
     use crate::engines::multiply::Engine;

@@ -87,6 +87,7 @@ pub fn scale_to_unit_norm(a: &BlockCsrMatrix) -> (BlockCsrMatrix, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::blocks::filter::FilterConfig;
     use crate::blocks::layout::BlockLayout;
     use crate::dist::grid::ProcGrid;

@@ -231,10 +231,7 @@ pub fn multiply_report_json(
             Json::obj([
                 ("requested_bytes", Json::Num(s.total_requested_bytes() as f64)),
                 ("window_bytes", Json::Num(s.window_bytes as f64)),
-                (
-                    "ab_msgs",
-                    Json::Num(s.ab_message_stats().0 as f64),
-                ),
+                ("ab_msgs", Json::Num(s.ab_message_stats().0 as f64)),
             ])
         })
         .collect();
@@ -302,11 +299,11 @@ mod tests {
         let grid = ProcGrid::new(2, 2).unwrap();
         let dist = Distribution2d::rand_permuted(&l, &l, &grid, 3);
         let engine = Engine::OneSided { l: 1 };
-        let rep = multiply_distributed(
-            &a, &b, None, &dist,
-            &MultiplyConfig { engine, ..Default::default() },
-        )
-        .unwrap();
+        let cfg = MultiplyConfig {
+            engine,
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
         let j = multiply_report_json(&rep, &engine);
         let text = j.to_string_compact();
         let back = Json::parse(&text).unwrap();

@@ -129,9 +129,9 @@ impl Args {
             }
         }
         for spec in &self.specs {
-            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(spec.name)
-            {
-                return Err(format!("missing required option --{}\n\n{}", spec.name, self.usage()));
+            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(spec.name) {
+                let usage = self.usage();
+                return Err(format!("missing required option --{}\n\n{usage}", spec.name));
             }
         }
         Ok(self)

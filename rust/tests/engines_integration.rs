@@ -7,9 +7,7 @@ use dbcsr::blocks::matrix::BlockCsrMatrix;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::dist::topology25d::Topology25d;
-use dbcsr::engines::multiply::{
-    multiply_distributed, multiply_oracle, Engine, MultiplyConfig,
-};
+use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
 use dbcsr::util::testkit::property;
 use dbcsr::workloads::generator::{banded_for_spec, random_for_spec};
 use dbcsr::workloads::spec::BenchSpec;
