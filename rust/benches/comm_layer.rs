@@ -1,13 +1,23 @@
 //! Bench: the simulated MPI fabric — PTP message rate, RMA get rate,
-//! collective latency; the L3 cost floor under the engines.
+//! collective latency; the L3 cost floor under the engines — plus the
+//! engine-level overlap summary (modeled vs **measured** wait residue),
+//! written to `BENCH_comm_overlap.json` so the perf trajectory of the
+//! prefetch pipelines is machine-readable.
 //!
 //! ```bash
 //! cargo bench --bench comm_layer
 //! ```
 
 use dbcsr::benchkit::{print_header, Bencher};
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
 use dbcsr::blocks::panel::Panel;
 use dbcsr::comm::world::{Payload, SimWorld, TrafficClass};
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::perfmodel::machine::MachineModel;
+use dbcsr::util::json::Json;
 use std::collections::HashMap;
 
 fn make_panel(blocks: usize, bs: usize) -> Panel {
@@ -86,4 +96,57 @@ fn main() {
         });
     });
     println!("{}", m.row(None));
+
+    // --- engine overlap: modeled vs measured wait residue -------------
+    print_header("comm/comp overlap (modeled vs measured wait residue)");
+    let layout = BlockLayout::uniform(24, 4);
+    let a = BlockCsrMatrix::random(&layout, &layout, 0.4, 1);
+    let b = BlockCsrMatrix::random(&layout, &layout, 0.4, 2);
+    let grid = ProcGrid::new(4, 4).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+    let scenarios: [(&str, Engine, f64); 4] = [
+        // 100 MF/s: compute covers the fetches -> overlap should show
+        ("ptp_computebound", Engine::PointToPoint, 1e8),
+        ("os1_computebound", Engine::OneSided { l: 1 }, 1e8),
+        ("os4_computebound", Engine::OneSided { l: 4 }, 1e8),
+        // absurd flop rate: nothing to hide behind -> wait ~= comm
+        ("os1_commbound", Engine::OneSided { l: 1 }, 5e15),
+    ];
+    let mut rows = Vec::new();
+    for (name, engine, flop_rate) in scenarios {
+        let cfg = MultiplyConfig {
+            engine,
+            machine: Some(MachineModel::piz_daint(flop_rate)),
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let o = rep.overlap_summary();
+        println!(
+            "{name:<20} tick wait {:>9.2}µs of {:>9.2}µs fetch comm \
+             ({:>5.1}% overlapped)  modeled wait {:>9.2}µs",
+            o.tick_wait_s * 1e6,
+            o.tick_comm_s * 1e6,
+            o.measured_overlap_frac() * 100.0,
+            o.modeled_wait_s * 1e6
+        );
+        rows.push(Json::obj([
+            ("scenario", Json::Str(name.to_string())),
+            ("engine", Json::Str(engine.label())),
+            ("flop_rate", Json::Num(flop_rate)),
+            ("tick_wait_s", Json::Num(o.tick_wait_s)),
+            ("tick_comm_s", Json::Num(o.tick_comm_s)),
+            ("total_wait_s", Json::Num(o.total_wait_s)),
+            ("modeled_wait_s", Json::Num(o.modeled_wait_s)),
+            ("modeled_comm_s", Json::Num(o.modeled_comm_s)),
+            ("measured_overlap_frac", Json::Num(o.measured_overlap_frac())),
+        ]));
+    }
+    let summary = Json::obj([
+        ("bench", Json::Str("comm_overlap".to_string())),
+        ("ranks", Json::Num(16.0)),
+        ("scenarios", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_comm_overlap.json", summary.to_string_compact())
+        .expect("write BENCH_comm_overlap.json");
+    println!("wrote BENCH_comm_overlap.json");
 }

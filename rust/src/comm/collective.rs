@@ -18,8 +18,26 @@ pub struct IallreduceMax {
 }
 
 impl Comm {
-    /// Synchronize all ranks.
+    /// Synchronize all ranks — in real time *and* in virtual time: every
+    /// rank leaves the barrier with its virtual clock at the max of the
+    /// entering clocks (a barrier cannot complete before its last
+    /// arrival).
     pub fn barrier(&self) {
+        {
+            let mut slots = self.shared.clock_slots.lock().unwrap();
+            slots[self.rank] = self.progress.borrow().now().to_bits();
+        }
+        self.shared.barrier.wait();
+        let max_now = {
+            let slots = self.shared.clock_slots.lock().unwrap();
+            slots
+                .iter()
+                .map(|&b| f64::from_bits(b))
+                .fold(0.0f64, f64::max)
+        };
+        self.progress.borrow_mut().sync_to(max_now);
+        // Second rendezvous so the slots can be rewritten by a later
+        // barrier only after everyone has read them.
         self.shared.barrier.wait();
     }
 

@@ -12,13 +12,20 @@
 //!   Algorithm 2 is built on; only the origin (receiver) synchronizes.
 //! * [`collective`] — barrier / allreduce (the window-pool size check).
 //!
+//! Requests complete through a per-rank [`progress`] engine with virtual
+//! timestamps: posting a transfer prices it on the α-β [`netmodel`] and
+//! data only materializes at the wait, so the *measured* non-overlapped
+//! wait residue of the executed schedule is observable per tick.
+//!
 //! All traffic is counted per rank and per matrix class, giving the
 //! *exact* "communicated data per process" quantity of paper Table 2.
 
 pub mod collective;
 pub mod netmodel;
+pub mod progress;
 pub mod ptp;
 pub mod rma;
 pub mod world;
 
+pub use progress::{FabricConfig, Transport};
 pub use world::{Comm, CommStats, Payload, SimWorld, TrafficClass};

@@ -2,17 +2,23 @@
 //!
 //! Semantics follow what Algorithm 1 relies on:
 //!
-//! * `isend` starts a buffered send and returns a request immediately
-//!   (the payload is moved into the destination mailbox right away; MPI
-//!   permits buffered completion for nonblocking sends);
+//! * `isend` starts a buffered send and returns a request immediately;
+//!   the payload is handed to the destination mailbox stamped with its
+//!   virtual **arrival timestamp** (the sender's clock plus the priced
+//!   transfer time — MPI permits buffered completion for nonblocking
+//!   sends);
 //! * `irecv` posts a receive for `(src, tag)` and returns a request;
 //! * `wait_all` blocks until every receive request has matched a message
-//!   (send requests are already complete), like `mpi_waitall`.
+//!   (send requests are already complete), like `mpi_waitall`.  The
+//!   receiver's virtual clock blocks up to the arrival stamp, so the
+//!   charged time is only the **non-overlapped residue** — compute done
+//!   between post and wait hides the transfer.
 //!
 //! Messages between the same (src, dst, tag) triple are delivered in
 //! send order (MPI non-overtaking rule).
 
-use crate::comm::world::{Comm, Payload, TrafficClass, DEADLOCK_TIMEOUT};
+use crate::comm::progress::Transport;
+use crate::comm::world::{Comm, Payload, TrafficClass};
 
 /// A pending communication request.
 pub enum Request {
@@ -28,22 +34,22 @@ pub enum Request {
 
 impl Comm {
     /// Nonblocking send of `payload` to `dest` under `tag`.
-    pub fn isend(
-        &self,
-        dest: usize,
-        tag: u64,
-        class: TrafficClass,
-        payload: Payload,
-    ) -> Request {
+    pub fn isend(&self, dest: usize, tag: u64, class: TrafficClass, payload: Payload) -> Request {
         let bytes = payload.wire_bytes();
         self.stats.borrow_mut().add_ptp_sent(class, bytes);
+        // Price the transfer on this rank's injection rail; the message
+        // arrives (virtually) when the transfer completes.
+        let ready_at = self
+            .progress
+            .borrow_mut()
+            .post(Transport::Ptp, class, bytes, false);
         let mb = &self.shared.mailboxes[dest];
         {
             let mut queues = mb.queues.lock().unwrap();
             queues
                 .entry((self.rank, tag))
                 .or_default()
-                .push_back(payload);
+                .push_back((ready_at, payload));
         }
         mb.cv.notify_all();
         Request::Send
@@ -59,19 +65,25 @@ impl Comm {
         match req {
             Request::Send => None,
             Request::Recv { src, tag, class } => {
+                let timeout = self.deadlock_timeout();
                 let mb = &self.shared.mailboxes[self.rank];
                 let mut queues = mb.queues.lock().unwrap();
                 loop {
                     if let Some(q) = queues.get_mut(&(src, tag)) {
-                        if let Some(p) = q.pop_front() {
-                            self.stats.borrow_mut().add_ptp_recv(class, p.wire_bytes());
+                        if let Some((ready_at, p)) = q.pop_front() {
+                            drop(queues);
+                            let bytes = p.wire_bytes();
+                            self.stats.borrow_mut().add_ptp_recv(class, bytes);
+                            let mut prog = self.progress.borrow_mut();
+                            prog.complete(ready_at);
+                            prog.note_recv(Transport::Ptp, bytes);
                             return Some(p);
                         }
                     }
-                    let (g, timeout) = mb.cv.wait_timeout(queues, DEADLOCK_TIMEOUT).unwrap();
+                    let (g, res) = mb.cv.wait_timeout(queues, timeout).unwrap();
                     queues = g;
                     assert!(
-                        !timeout.timed_out(),
+                        !res.timed_out(),
                         "rank {} deadlocked waiting for (src={src}, tag={tag})",
                         self.rank
                     );
@@ -92,6 +104,7 @@ mod tests {
     use super::*;
 
     use crate::blocks::panel::Panel;
+    use crate::comm::progress::FabricConfig;
     use crate::comm::world::SimWorld;
 
     #[test]
@@ -100,12 +113,7 @@ mod tests {
         let sums = w.run(|c| {
             let right = (c.rank() + 1) % c.size();
             let left = (c.rank() + c.size() - 1) % c.size();
-            let s = c.isend(
-                right,
-                7,
-                TrafficClass::Other,
-                Payload::Usize(c.rank() * 10),
-            );
+            let s = c.isend(right, 7, TrafficClass::Other, Payload::Usize(c.rank() * 10));
             let r = c.irecv(left, 7, TrafficClass::Other);
             let got = c.wait_all(vec![s, r]);
             match got[1] {
@@ -186,5 +194,47 @@ mod tests {
         assert_eq!(stats[1].ptp_recv_msgs[0], 1);
         assert_eq!(stats[1].ptp_recv_bytes[0], stats[0].ptp_sent_bytes[0]);
         assert_eq!(stats[1].total_requested_bytes(), 4 * 8 + 16 + 8);
+    }
+
+    #[test]
+    fn recv_charges_wait_residue_on_virtual_clock() {
+        let w = SimWorld::new(2);
+        let waits = w.run(|c| {
+            if c.rank() == 0 {
+                c.isend(1, 1, TrafficClass::Other, Payload::Bytes(vec![0; 1 << 20]));
+                0.0
+            } else {
+                let r = c.irecv(0, 1, TrafficClass::Other);
+                let _ = c.wait(r);
+                let (wait, comm) = c.comm_time_totals();
+                assert!(wait > 0.0, "cold receive must expose the transfer");
+                assert!(
+                    wait <= comm + 1e-12,
+                    "wait {wait} cannot exceed raw comm {comm}"
+                );
+                wait
+            }
+        });
+        assert!(waits[1] > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlocked waiting for (src=1, tag=42)")]
+    fn deadlock_times_out_with_context() {
+        // A rank waiting on a never-sent message must panic with
+        // rank/tag context instead of hanging the whole simulation.
+        let w = SimWorld::with_fabric(
+            2,
+            FabricConfig {
+                deadlock_timeout: std::time::Duration::from_millis(100),
+                ..Default::default()
+            },
+        );
+        w.run(|c| {
+            if c.rank() == 0 {
+                let r = c.irecv(1, 42, TrafficClass::Other);
+                let _ = c.wait(r); // rank 1 never sends
+            }
+        });
     }
 }

@@ -7,6 +7,14 @@
 //! origin process synchronizes — no sender-side progress is needed
 //! (observation (2) in §4.1 for why this beats point-to-point waitalls).
 //!
+//! `rget` is **deferred**: posting only prices the transfer on the
+//! fabric's virtual clock and records where the data lives; the panel is
+//! materialized at [`RgetHandle::wait`], which also charges the clock the
+//! non-overlapped residue of the transfer.  Compute advanced between post
+//! and wait (see `Comm::advance_compute_flops`) hides the transfer — the
+//! executed-schedule overlap the engines' prefetch pipelines are built
+//! on.
+//!
 //! Window creation/destruction are collective (they barrier), matching
 //! `mpi_win_create`/`free`; the grow-only buffer-pool reuse trick (the
 //! `mpi_iallreduce` size check) lives in `collective.rs`.
@@ -15,7 +23,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::blocks::panel::Panel;
-use crate::comm::world::{Comm, TrafficClass};
+use crate::comm::progress::Transport;
+use crate::comm::world::{Comm, TrafficClass, WindowData};
 
 /// Key for a panel inside a window directory (packs a 2D coordinate).
 #[inline]
@@ -23,16 +32,34 @@ pub fn win_key(x: usize, y: usize) -> u64 {
     ((x as u64) << 32) | y as u64
 }
 
-/// A completed one-sided get (the data is fetched eagerly at `rget`;
-/// `wait` hands it out — valid for read-only windows where passive-target
-/// completion only orders the origin's accesses).
-pub struct RgetHandle {
-    panel: Panel,
+/// A posted (in-flight) one-sided get.  Holds a reference to the
+/// target's exposed directory — **not** a copy of the data — plus the
+/// transfer's virtual completion timestamp; [`RgetHandle::wait`]
+/// materializes the panel and charges the non-overlapped wait.
+pub struct RgetHandle<'c> {
+    comm: &'c Comm,
+    data: Arc<WindowData>,
+    key: u64,
+    bytes: usize,
+    ready_at_s: f64,
 }
 
-impl RgetHandle {
+impl RgetHandle<'_> {
+    /// Modeled wire size of the transfer.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Virtual timestamp at which the transfer completes.
+    pub fn ready_at_s(&self) -> f64 {
+        self.ready_at_s
+    }
+
+    /// Complete the get: block the virtual clock to the transfer's
+    /// completion, then (and only then) materialize the panel.
     pub fn wait(self) -> Panel {
-        self.panel
+        self.comm.progress.borrow_mut().complete(self.ready_at_s);
+        self.data.get(&self.key).cloned().unwrap_or_default()
     }
 }
 
@@ -58,22 +85,35 @@ impl Comm {
         self.barrier(); // collective: all exposures visible after this
     }
 
-    /// Passive-target get of the panel under `key` from `target`'s window.
-    /// No target-side synchronization.  Missing keys yield an empty panel
-    /// (an absent panel of a sparse matrix).
-    pub fn rget(&self, name: &str, target: usize, key: u64, class: TrafficClass) -> RgetHandle {
-        let wins = self.shared.windows.read().unwrap();
-        let slots = wins
-            .get(name)
-            .unwrap_or_else(|| panic!("window '{name}' does not exist"));
-        let data = slots[target]
-            .as_ref()
-            .unwrap_or_else(|| panic!("window '{name}' not exposed by rank {target}"));
-        let panel = data.get(&key).cloned().unwrap_or_default();
-        self.stats
+    /// Post a passive-target get of the panel under `key` from `target`'s
+    /// window.  No target-side synchronization, no data movement — the
+    /// returned handle materializes the panel at `wait`.  Missing keys
+    /// yield an empty panel (an absent panel of a sparse matrix).
+    pub fn rget(&self, name: &str, target: usize, key: u64, class: TrafficClass) -> RgetHandle<'_> {
+        let data = {
+            let wins = self.shared.windows.read().unwrap();
+            let slots = wins
+                .get(name)
+                .unwrap_or_else(|| panic!("window '{name}' does not exist"));
+            Arc::clone(
+                slots[target]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("window '{name}' not exposed by rank {target}")),
+            )
+        };
+        let bytes = data.get(&key).map(|p| p.wire_bytes()).unwrap_or(0);
+        self.stats.borrow_mut().add_rget(class, bytes);
+        let ready_at_s = self
+            .progress
             .borrow_mut()
-            .add_rget(class, panel.wire_bytes());
-        RgetHandle { panel }
+            .post(Transport::Rma, class, bytes, true);
+        RgetHandle {
+            comm: self,
+            data,
+            key,
+            bytes,
+            ready_at_s,
+        }
     }
 
     /// Collectively free window `name` (barriers like `mpi_win_free`).
@@ -131,7 +171,9 @@ mod tests {
         let w = SimWorld::new(2);
         let empties = w.run(|c| {
             c.win_create("w", HashMap::new());
-            let p = c.rget("w", 1 - c.rank(), win_key(9, 9), TrafficClass::MatrixB).wait();
+            let p = c
+                .rget("w", 1 - c.rank(), win_key(9, 9), TrafficClass::MatrixB)
+                .wait();
             c.win_free("w");
             p.is_empty()
         });
@@ -187,5 +229,65 @@ mod tests {
                 c.win_free("w");
             }
         });
+    }
+
+    #[test]
+    fn rget_defers_materialization_to_wait() {
+        // A posted handle references the target's exposed directory (Arc
+        // refcount goes up) instead of copying the panel — the eager
+        // implementation this replaces held a private clone.
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut dir = HashMap::new();
+            dir.insert(0, panel_with(c.rank() as f64));
+            c.win_create("w", dir);
+            let before = {
+                let wins = c.shared.windows.read().unwrap();
+                Arc::strong_count(wins.get("w").unwrap()[1 - c.rank()].as_ref().unwrap())
+            };
+            let handles: Vec<_> = (0..3)
+                .map(|_| c.rget("w", 1 - c.rank(), 0, TrafficClass::MatrixA))
+                .collect();
+            let during = {
+                let wins = c.shared.windows.read().unwrap();
+                Arc::strong_count(wins.get("w").unwrap()[1 - c.rank()].as_ref().unwrap())
+            };
+            assert!(
+                during >= before + 3,
+                "posted rgets must hold window references, not copies"
+            );
+            for h in handles {
+                assert_eq!(h.wait().block(0)[0], (1 - c.rank()) as f64);
+            }
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn overlapped_rget_costs_no_wait() {
+        let w = SimWorld::new(2);
+        let waits = w.run(|c| {
+            let mut dir = HashMap::new();
+            dir.insert(0, panel_with(3.0));
+            c.win_create("w", dir);
+            let h = c.rget("w", 1 - c.rank(), 0, TrafficClass::MatrixA);
+            // "compute" for much longer than the transfer takes
+            c.advance_compute(1.0);
+            let t0 = c.virtual_now();
+            let _ = h.wait();
+            let hidden_wait = c.virtual_now() - t0;
+            // and an un-overlapped one for contrast
+            let h = c.rget("w", 1 - c.rank(), 0, TrafficClass::MatrixA);
+            let t0 = c.virtual_now();
+            let _ = h.wait();
+            let exposed_wait = c.virtual_now() - t0;
+            c.win_free("w");
+            (hidden_wait, exposed_wait)
+        });
+        for (hidden, exposed) in waits {
+            assert_eq!(hidden, 0.0, "fully overlapped get must not wait");
+            assert!(exposed > 0.0, "back-to-back get must expose its latency");
+        }
     }
 }

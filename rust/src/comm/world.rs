@@ -6,6 +6,7 @@ use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::blocks::panel::Panel;
+use crate::comm::progress::{FabricConfig, Progress, Transport};
 
 /// How long a blocking wait may stall before the simulation declares a
 /// deadlock (a schedule bug) and panics with context.
@@ -68,7 +69,7 @@ impl TrafficClass {
         TrafficClass::Other,
     ];
 
-    fn index(self) -> usize {
+    pub(crate) fn index(self) -> usize {
         match self {
             TrafficClass::MatrixA => 0,
             TrafficClass::MatrixB => 1,
@@ -137,9 +138,10 @@ impl CommStats {
     }
 }
 
-/// One rank's mailbox: (src, tag) -> queue of payloads.
+/// One rank's mailbox: (src, tag) -> queue of payloads, each stamped
+/// with its virtual arrival timestamp (the sender's completion time).
 pub(crate) struct Mailbox {
-    pub(crate) queues: Mutex<HashMap<(usize, u64), VecDeque<Payload>>>,
+    pub(crate) queues: Mutex<HashMap<(usize, u64), VecDeque<(f64, Payload)>>>,
     pub(crate) cv: Condvar,
 }
 
@@ -166,18 +168,27 @@ pub(crate) struct Shared {
     pub(crate) reduce_slots: Mutex<Vec<u64>>,
     pub(crate) reduce_result: AtomicU64,
     pub(crate) reduce_barrier: Barrier,
+    /// Virtual-clock scratch for the barrier's time synchronization
+    /// (f64 bits; see `Comm::barrier`).
+    pub(crate) clock_slots: Mutex<Vec<u64>>,
 }
 
 /// The simulated world; spawns rank closures on threads.
 pub struct SimWorld {
     n: usize,
+    fabric: FabricConfig,
 }
 
 impl SimWorld {
-    /// Create a world of `n` ranks.
+    /// Create a world of `n` ranks with the default fabric pricing.
     pub fn new(n: usize) -> Self {
+        Self::with_fabric(n, FabricConfig::default())
+    }
+
+    /// Create a world of `n` ranks pricing virtual time on `fabric`.
+    pub fn with_fabric(n: usize, fabric: FabricConfig) -> Self {
         assert!(n > 0, "world needs at least one rank");
-        Self { n }
+        Self { n, fabric }
     }
 
     pub fn size(&self) -> usize {
@@ -199,7 +210,9 @@ impl SimWorld {
             reduce_slots: Mutex::new(vec![0; self.n]),
             reduce_result: AtomicU64::new(0),
             reduce_barrier: Barrier::new(self.n),
+            clock_slots: Mutex::new(vec![0; self.n]),
         });
+        let fabric = self.fabric;
         let mut out: Vec<Option<T>> = (0..self.n).map(|_| None).collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(self.n);
@@ -211,6 +224,7 @@ impl SimWorld {
                         rank,
                         shared,
                         stats: std::cell::RefCell::new(CommStats::default()),
+                        progress: std::cell::RefCell::new(Progress::new(fabric)),
                     };
                     *slot = Some(f(comm));
                 }));
@@ -230,6 +244,7 @@ pub struct Comm {
     pub(crate) rank: usize,
     pub(crate) shared: Arc<Shared>,
     pub(crate) stats: std::cell::RefCell<CommStats>,
+    pub(crate) progress: std::cell::RefCell<Progress>,
 }
 
 impl Comm {
@@ -246,6 +261,50 @@ impl Comm {
     /// Snapshot of this rank's traffic counters.
     pub fn stats(&self) -> CommStats {
         self.stats.borrow().clone()
+    }
+
+    /// This rank's virtual clock, seconds.
+    pub fn virtual_now(&self) -> f64 {
+        self.progress.borrow().now()
+    }
+
+    /// Advance the virtual clock by a local computation of `flops`
+    /// (priced at the fabric's `flop_rate`) — what overlaps in-flight
+    /// transfers.
+    pub fn advance_compute_flops(&self, flops: f64) {
+        self.progress.borrow_mut().advance_flops(flops);
+    }
+
+    /// Advance the virtual clock by `dt_s` seconds of local work.
+    pub fn advance_compute(&self, dt_s: f64) {
+        self.progress.borrow_mut().advance(dt_s);
+    }
+
+    /// Drain the measured wait residue accumulated since the last call
+    /// (engines call this once per tick).
+    pub fn take_wait_epoch(&self) -> f64 {
+        self.progress.borrow_mut().take_wait_epoch()
+    }
+
+    /// Whole-run (measured wait, raw requested-transfer time) totals in
+    /// virtual seconds.
+    pub fn comm_time_totals(&self) -> (f64, f64) {
+        self.progress.borrow().totals()
+    }
+
+    /// Price one point-to-point transfer of `bytes` on this fabric.
+    pub fn price_ptp(&self, bytes: usize) -> f64 {
+        self.progress.borrow().price(Transport::Ptp, bytes)
+    }
+
+    /// Price one one-sided get of `bytes` on this fabric.
+    pub fn price_rma(&self, bytes: usize) -> f64 {
+        self.progress.borrow().price(Transport::Rma, bytes)
+    }
+
+    /// The wall-clock bound on blocking waits (deadlock detection).
+    pub(crate) fn deadlock_timeout(&self) -> Duration {
+        self.progress.borrow().config().deadlock_timeout
     }
 }
 

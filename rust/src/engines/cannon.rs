@@ -12,12 +12,17 @@
 //!    `vk = (i + j + t) mod V` is resident and multiplied into the local
 //!    C accumulation, while the whole resident sets are simultaneously
 //!    forwarded one step left (A) / up (B) with `mpi_isend`/`mpi_irecv`;
-//!    `mpi_waitall` at the top of the next tick (comm/comp double
-//!    buffering — the 4 temporary buffers of §2).
+//!    the `mpi_waitall` at the top of the next tick pays only the
+//!    transfer residue the multiplication did not hide — §2's four
+//!    temporary buffers (a comp + comm pair per matrix), realized here
+//!    as a [`TickWindow`] over a [`BufferPool`] of four slots.
 //!
 //! The per-tick message is a rank's full resident set (`V/P_C` A panels,
 //! `V/P_R` B panels), so each process communicates `V·|A|/P + V·|B|/P`
-//! bytes in total — the `O(1/√P)` scaling of §2.
+//! bytes in total — the `O(1/√P)` scaling of §2.  Each tick records the
+//! **measured** non-overlapped wait residue from the fabric's virtual
+//! clock next to the priced transfer time, which is what the paper's
+//! `mpi_waitall` timer region reports.
 
 use std::collections::HashMap;
 
@@ -27,6 +32,7 @@ use crate::comm::ptp::Request;
 use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
+use crate::engines::pipeline::{BufferPool, TickWindow};
 use crate::engines::schedule::cannon_vk;
 use crate::local::batch::{multiply_panels_native, LocalMultStats};
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
@@ -45,6 +51,9 @@ pub struct RankOutput {
     pub mult_stats: LocalMultStats,
     pub timers: Timers,
     pub log: RankLog,
+    /// Peak bytes across the four comp/comm set buffers (§2's temporary
+    /// buffer inventory, measured on the executed pipeline).
+    pub peak_buffer_bytes: u64,
 }
 
 /// Inputs handed to each rank: its initial panel shares.
@@ -98,25 +107,45 @@ pub fn run_rank(
         let ra = comm.irecv(a_src, TAG_PRE_A, TrafficClass::MatrixA);
         let rb = comm.irecv(b_src, TAG_PRE_B, TrafficClass::MatrixB);
         let mut got = comm.wait_all(vec![sa, sb, ra, rb]);
-        let mut take = || got.pop().unwrap().unwrap().into_panel_set().into_iter().collect();
+        let mut take = || {
+            got.pop()
+                .unwrap()
+                .unwrap()
+                .into_panel_set()
+                .into_iter()
+                .collect()
+        };
         let b: HashMap<u64, Panel> = take();
         let a: HashMap<u64, Panel> = take();
         (a, b)
     });
     log.pre_bytes = panelset_bytes(&comp_a) + panelset_bytes(&comp_b);
     log.pre_msgs = 2;
+    log.pre_wait_s = comm.take_wait_epoch();
+
+    // §2's four temporary buffers: a comp + comm set pair per matrix.
+    // The comp pair holds the sets being multiplied; the comm pair is
+    // claimed while a shift is in flight (the receive targets) and the
+    // pairs swap at the waitall — so all four coexist exactly when the
+    // arrivals land next to the still-live comp sets, which is the peak
+    // the pool series records.
+    let mut pool = BufferPool::new("cannon/set_buffers", 4);
+    let (mut cur_a_bytes, mut cur_b_bytes) = (panelset_bytes(&comp_a), panelset_bytes(&comp_b));
+    pool.acquire(cur_a_bytes);
+    pool.acquire(cur_b_bytes);
+    let mut shifts: TickWindow<Vec<Request>> = TickWindow::new();
 
     // --- V ticks ------------------------------------------------------
-    let mut pending: Vec<Request> = Vec::new();
     for t in 0..v {
-        // mpi_waitall: previous tick's shifts must have completed.
-        if t > 0 {
-            let reqs = std::mem::take(&mut pending);
+        // mpi_waitall: the previous tick's shifts must have completed;
+        // only the residue the multiplication did not hide is paid.
+        if let Some(reqs) = shifts.claim(t) {
             let arrivals = timers.time("cannon/mpi_waitall", || comm.wait_all(reqs));
             let mut rec = TickRecord::default();
             for payload in arrivals.into_iter().flatten() {
                 let set = payload.into_panel_set();
                 let bytes: u64 = set.iter().map(|(_, p)| 8 + p.wire_bytes() as u64).sum();
+                rec.comm_s += comm.price_ptp(bytes as usize);
                 // A sets come from the right (same row), B from below; we
                 // distinguish by reassembling in tag order: first is A.
                 if rec.a_msgs == 0 {
@@ -129,15 +158,29 @@ pub fn run_rank(
                     comp_b = set.into_iter().collect();
                 }
             }
+            // Swap comm -> comp: the arrivals coexist with the old comp
+            // sets for a moment (the four-buffer peak), then the old
+            // pair is dropped.
+            pool.release(0);
+            pool.release(0);
+            pool.acquire(rec.a_bytes);
+            pool.acquire(rec.b_bytes);
+            pool.release(cur_a_bytes);
+            pool.release(cur_b_bytes);
+            (cur_a_bytes, cur_b_bytes) = (rec.a_bytes, rec.b_bytes);
+            rec.wait_s = comm.take_wait_epoch();
             log.ticks.push(rec);
         } else {
             log.ticks.push(TickRecord::default());
         }
 
-        // Start next tick's shifts (overlapped with the multiplication).
+        // Start next tick's shifts (overlapped with the multiplication):
+        // claim the comm buffer pair the arrivals will land in.
         if t + 1 < v {
             let (li, lj) = grid.left(i, j);
             let (ui, uj) = grid.up(i, j);
+            pool.acquire(0);
+            pool.acquire(0);
             let sa = comm.isend(
                 grid.rank(li, lj),
                 TAG_A | (t as u64),
@@ -154,28 +197,30 @@ pub fn run_rank(
             let (di, dj) = grid.down(i, j);
             let ra = comm.irecv(grid.rank(ri, rj), TAG_A | (t as u64), TrafficClass::MatrixA);
             let rb = comm.irecv(grid.rank(di, dj), TAG_B | (t as u64), TrafficClass::MatrixB);
-            pending = vec![sa, sb, ra, rb];
+            shifts.stash(t + 1, vec![sa, sb, ra, rb]);
         }
 
-        // Local multiplication of the aligned panel pair.
+        // Local multiplication of the aligned panel pair (its virtual
+        // compute time is what hides the in-flight shift).
         let vk = cannon_vk(topo, i, j, t) as u64;
         let (pa, pb) = (comp_a.get(&vk), comp_b.get(&vk));
         if let (Some(pa), Some(pb)) = (pa, pb) {
             let s = timers.time("cannon/local_multiply", || {
                 multiply_panels_native(pa, pb, eps, &mut c_acc)
             });
+            comm.advance_compute_flops(s.flops);
             mult_stats.merge(&s);
             log.ticks.last_mut().unwrap().flops += s.flops;
         }
     }
-    // Drain the final tick's shifts if any remained (t == v-1 posts none).
-    let _ = comm.wait_all(pending);
-
+    // t == v-1 posts no shift, so nothing is left in flight after the
+    // loop: every stash(t+1) with t+1 <= v-1 was claimed at tick t+1.
     RankOutput {
         c_acc,
         mult_stats,
         timers,
         log,
+        peak_buffer_bytes: pool.peak_bytes(),
     }
 }
 

@@ -13,13 +13,16 @@ use crate::blocks::build::BlockAccumulator;
 use crate::blocks::filter::{filter_blocks, FilterConfig};
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::blocks::panel::Panel;
+use crate::comm::progress::FabricConfig;
 use crate::comm::world::{CommStats, SimWorld};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
 use crate::engines::{cannon, osl};
 use crate::local::batch::LocalMultStats;
 use crate::perfmodel::machine::MachineModel;
-use crate::perfmodel::virtual_time::{critical_path, model_rank_time, ModeledTime, RankLog};
+use crate::perfmodel::virtual_time::{
+    critical_path, crosscheck_overlap, model_rank_time, ModeledTime, OverlapCheck, RankLog,
+};
 use crate::stats::timers::Timers;
 
 /// Which multiplication engine to run.
@@ -55,6 +58,10 @@ pub struct MultiplyConfig {
     pub filter: FilterConfig,
     /// Reject (error) instead of falling back to L=1 on invalid L.
     pub strict_topology: bool,
+    /// Machine the fabric prices virtual time with (network for the
+    /// transfers, flop rate for the compute that hides them).  Defaults
+    /// to the 50 GF/s Piz Daint calibration.
+    pub machine: Option<MachineModel>,
 }
 
 /// Result + instrumentation of one distributed multiplication.
@@ -74,8 +81,17 @@ pub struct MultiplyReport {
     pub wall_s: f64,
     /// Result blocks removed by the post-filter.
     pub post_filtered: usize,
-    /// Peak temporary buffer bytes over ranks (Eq. 6 observable).
+    /// Peak live temporary-buffer bytes over ranks, measured on the
+    /// executed pipeline: fetch buffers + partial C (Eq. 6 observable).
     pub peak_buffer_bytes: u64,
+    /// Peak of the A/B fetch-buffer component alone, bounded by the
+    /// Algorithm 2 budget `max(2, L_R)·S_A + 2·S_B` (2.5D engine only;
+    /// zero for PTP, whose buffers are all in `peak_buffer_bytes`).
+    pub peak_fetch_bytes: u64,
+    /// Peak bytes of the partial-C accumulations (2.5D only).
+    pub peak_partial_c_bytes: u64,
+    /// Machine the fabric priced virtual time with.
+    pub fabric_machine: MachineModel,
     /// Topology actually used (after any fallback).
     pub topo: Topology25d,
 }
@@ -101,6 +117,28 @@ impl MultiplyReport {
             .map(|s| s.total_requested_bytes() as f64)
             .sum::<f64>()
             / self.per_rank_stats.len() as f64
+    }
+
+    /// Per-rank measured-vs-modeled overlap cross-checks, both priced on
+    /// the machine the fabric executed with.
+    pub fn overlap_checks(&self) -> Vec<OverlapCheck> {
+        self.per_rank_logs
+            .iter()
+            .map(|l| crosscheck_overlap(l, &self.fabric_machine))
+            .collect()
+    }
+
+    /// Run-level overlap summary: sums of the per-rank cross-checks.
+    pub fn overlap_summary(&self) -> OverlapCheck {
+        let mut out = OverlapCheck::default();
+        for c in self.overlap_checks() {
+            out.modeled_wait_s += c.modeled_wait_s;
+            out.modeled_comm_s += c.modeled_comm_s;
+            out.tick_wait_s += c.tick_wait_s;
+            out.tick_comm_s += c.tick_comm_s;
+            out.total_wait_s += c.total_wait_s;
+        }
+        out
     }
 }
 
@@ -144,7 +182,7 @@ pub fn multiply_distributed(
     // ---- split global matrices into home panels ----------------------
     let a_panels = dist.split_a(a); // [pi][vk]
     let b_panels = dist.split_b(b); // [vk][pj]
-    let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
+    let (pr, pc) = (grid.rows(), grid.cols());
 
     // Per-rank input slots (taken by each rank thread): the A and B
     // panel directories each rank starts from.
@@ -172,12 +210,17 @@ pub fn multiply_distributed(
             inputs[home].1.insert(key, panel);
         }
     }
-    let _ = v;
     let input_slots: Vec<Mutex<Option<RankInputs>>> =
         inputs.into_iter().map(|x| Mutex::new(Some(x))).collect();
 
     // ---- run the world ------------------------------------------------
-    let world = SimWorld::new(pr * pc);
+    let machine = cfg.machine.unwrap_or_else(|| MachineModel::piz_daint(50e9));
+    let fabric = FabricConfig {
+        net: machine.net,
+        flop_rate: machine.flop_rate,
+        ..Default::default()
+    };
+    let world = SimWorld::with_fabric(pr * pc, fabric);
     let eps = cfg.filter.on_the_fly_eps;
     let t0 = std::time::Instant::now();
     let engine = cfg.engine;
@@ -195,7 +238,14 @@ pub fn multiply_distributed(
                     },
                     eps,
                 );
-                (out.c_acc, out.mult_stats, out.timers, out.log, comm.stats(), 0u64)
+                (
+                    out.c_acc,
+                    out.mult_stats,
+                    out.timers,
+                    out.log,
+                    comm.stats(),
+                    [out.peak_buffer_bytes, 0u64, 0u64],
+                )
             }
             Engine::OneSided { .. } => {
                 let out = osl::run_rank(
@@ -214,7 +264,11 @@ pub fn multiply_distributed(
                     out.timers,
                     out.log,
                     comm.stats(),
-                    out.peak_buffer_bytes,
+                    [
+                        out.peak_buffer_bytes,
+                        out.peak_fetch_bytes,
+                        out.peak_partial_c_bytes,
+                    ],
                 )
             }
         }
@@ -228,14 +282,18 @@ pub fn multiply_distributed(
     let mut mult_stats = LocalMultStats::default();
     let mut timers_per_rank = Vec::with_capacity(results.len());
     let mut peak_buffer_bytes = 0u64;
-    for (acc, ms, timers, log, stats, peak) in results {
+    let mut peak_fetch_bytes = 0u64;
+    let mut peak_partial_c_bytes = 0u64;
+    for (acc, ms, timers, log, stats, peaks) in results {
         let panel = acc.into_panel();
         global.add_panel(&panel);
         mult_stats.merge(&ms);
         per_rank_stats.push(stats);
         per_rank_logs.push(log);
         timers_per_rank.push(timers);
-        peak_buffer_bytes = peak_buffer_bytes.max(peak);
+        peak_buffer_bytes = peak_buffer_bytes.max(peaks[0]);
+        peak_fetch_bytes = peak_fetch_bytes.max(peaks[1]);
+        peak_partial_c_bytes = peak_partial_c_bytes.max(peaks[2]);
     }
     let mut c = global.into_matrix(a.row_layout_arc(), b.col_layout_arc());
     if let Some(c0) = c0 {
@@ -252,6 +310,9 @@ pub fn multiply_distributed(
         wall_s,
         post_filtered,
         peak_buffer_bytes,
+        peak_fetch_bytes,
+        peak_partial_c_bytes,
+        fabric_machine: machine,
         topo,
     })
 }
@@ -396,6 +457,86 @@ mod tests {
             ..Default::default()
         };
         assert!(multiply_distributed(&a, &b, None, &dist, &cfg).is_err());
+    }
+
+    #[test]
+    fn osl_measured_wait_bounded_by_comm_per_tick() {
+        // The pipeline invariant for origin-priced transports: a tick's
+        // measured mpi_waitall residue can never exceed the raw priced
+        // transfer time of the data it waited on.
+        for (engine, pr, pc) in [
+            (Engine::OneSided { l: 1 }, 3, 3),
+            (Engine::OneSided { l: 1 }, 2, 4),
+            (Engine::OneSided { l: 4 }, 4, 4),
+            (Engine::OneSided { l: 2 }, 4, 2),
+        ] {
+            let (a, b, l) = setup(16, 3, 0.4, 50);
+            let grid = ProcGrid::new(pr, pc).unwrap();
+            let dist = Distribution2d::rand_permuted(&l, &l, &grid, 51);
+            let cfg = MultiplyConfig {
+                engine,
+                ..Default::default()
+            };
+            let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            for (r, log) in rep.per_rank_logs.iter().enumerate() {
+                for (t, rec) in log.ticks.iter().enumerate() {
+                    assert!(
+                        rec.wait_s <= rec.comm_s + 1e-12,
+                        "{} {pr}x{pc} rank {r} tick {t}: wait {} > comm {}",
+                        engine.label(),
+                        rec.wait_s,
+                        rec.comm_s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn osl_pipeline_overlaps_communication() {
+        // With compute slow enough to cover the fetches, the executed
+        // pipeline must actually hide them: measured tick wait well
+        // under half the raw transfer time, and the analytic model must
+        // agree with the executed schedule.
+        let (a, b, l) = setup(20, 4, 0.5, 60);
+        let grid = ProcGrid::new(4, 4).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 61);
+        // 100 MF/s: at sim scale a tick's ~4k flops then take ~40µs,
+        // far over the ~3µs the tick's two panel fetches need.
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l: 1 },
+            machine: Some(MachineModel::piz_daint(1e8)),
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let sum = rep.overlap_summary();
+        assert!(sum.tick_comm_s > 0.0, "no transfers recorded");
+        assert!(
+            sum.tick_wait_s < 0.5 * sum.tick_comm_s,
+            "overlap not happening: wait {} vs comm {}",
+            sum.tick_wait_s,
+            sum.tick_comm_s
+        );
+        // the analytic overlap model agrees the run is compute-bound
+        assert!(sum.modeled_wait_s < 0.5 * sum.modeled_comm_s);
+    }
+
+    #[test]
+    fn cannon_records_measured_waits() {
+        let (a, b, l) = setup(16, 3, 0.4, 70);
+        let grid = ProcGrid::new(3, 3).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 71);
+        let cfg = MultiplyConfig::default();
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        // the blocking pre-shift must expose wait somewhere
+        assert!(rep.per_rank_logs.iter().any(|log| log.pre_wait_s > 0.0));
+        // per-tick comm is priced for every arrival tick
+        for log in &rep.per_rank_logs {
+            for rec in log.ticks.iter().skip(1) {
+                assert!(rec.comm_s > 0.0, "arrival tick without priced comm");
+            }
+        }
+        assert!(rep.peak_buffer_bytes > 0, "cannon must report §2 buffers");
     }
 
     #[test]

@@ -7,15 +7,24 @@
 //!   **windows**; every fetch is an `mpi_rget` (passive target) straight
 //!   from the panel's *home* position in the 2D grid — **no pre-shift,
 //!   no neighbour chains, receiver-only synchronization**.
+//! * Fetches run through the double-buffered prefetch pipeline of
+//!   `engines::pipeline` under Algorithm 2's buffer budget — `max(2,
+//!   L_R)` A buffers, 2 B buffers: tick `t+1`'s gets are posted while
+//!   tick `t` computes (whenever the budget has room), so the per-tick
+//!   `mpi_waitall` pays only the **non-overlapped residue**, measured on
+//!   the fabric's virtual clock and recorded per tick.
 //! * The computation of each C panel is split over `L` processes (the
 //!   2.5D replication); each process accumulates `L` *partial* C panels
-//!   and, at the end, sends `L−1` of them to their 2D owners
-//!   (point-to-point, overlapped with the last tick), keeping the one
-//!   that is already home for the final accumulation.
+//!   and sends the `L−1` that are not home to their 2D owners **from
+//!   inside the last tick** — each partial leaves the moment its final
+//!   product completes, overlapping the remaining products; the matching
+//!   receives are posted before the last tick starts.
 //! * `V/L` ticks; per tick `L_R` A panels + `L_C` B panels are fetched
 //!   and reused across the tick's `L` products (`engines::schedule`),
 //!   cutting A/B traffic by `√L` at the cost of `(L−1)·S_C` C traffic
-//!   and `O(L)` memory — Eq. 6/7.
+//!   and `O(L)` memory — Eq. 6/7.  The reported `peak_buffer_bytes` is
+//!   the executed pipeline's live-byte maximum (fetch buffers + partial
+//!   C), i.e. the Eq. 6 observable itself.
 //! * Window pools are grow-only across multiplications; a nonblocking
 //!   allreduce checks the required size while initialization proceeds
 //!   (here: the `iallreduce_max` call).
@@ -28,6 +37,7 @@ use crate::comm::rma::win_key;
 use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
+use crate::engines::pipeline::{BatchPrefetch, FetchDesc, PrefetchQueue};
 use crate::engines::schedule::{osl_tick_products, osl_vk};
 use crate::local::batch::{multiply_panels_native, LocalMultStats};
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
@@ -52,8 +62,21 @@ pub struct RankOutput {
     pub mult_stats: LocalMultStats,
     pub timers: Timers,
     pub log: RankLog,
-    /// Peak bytes held in temporary A/B/C buffers (memory model, Eq. 6).
+    /// Peak live bytes of the executed pipeline: fetch buffers (held +
+    /// in flight) plus the partial-C accumulations — the Eq. 6
+    /// observable.
     pub peak_buffer_bytes: u64,
+    /// Peak of the A/B fetch-buffer component alone (bounded by the
+    /// Algorithm 2 budget: `max(2, L_R)·S_A + 2·S_B`).
+    pub peak_fetch_bytes: u64,
+    /// Peak bytes held in the L partial-C accumulations.
+    pub peak_partial_c_bytes: u64,
+}
+
+/// Estimated in-memory footprint of a partial-C accumulation (data +
+/// block directory).
+fn acc_bytes(acc: &BlockAccumulator) -> u64 {
+    (acc.nelements() * 8 + acc.nblocks() * 24) as u64
 }
 
 /// Run Algorithm 2 on one rank.
@@ -91,120 +114,175 @@ pub fn run_rank(
         (0..topo.l).map(|_| BlockAccumulator::new()).collect();
     let rows = topo.c_panel_rows(i);
     let cols = topo.c_panel_cols(j);
-    let mut peak_buffer_bytes = 0u64;
+    let nticks = topo.nticks();
 
-    // --- V/L ticks ----------------------------------------------------
-    for big_t in 0..topo.nticks() {
-        let vk = osl_vk(topo, i, j, big_t);
-        // Fetch the tick's L_R A panels and L_C B panels from their homes
-        // (passive-target rget; the paper's mpi_waitall for these fetches
-        // is the per-tick synchronization point).
-        let mut rec = TickRecord::default();
-        let (a_bufs, b_bufs) = timers.time("osl/rget_waitall", || {
-            let a_bufs: Vec<Panel> = rows
-                .iter()
-                .map(|&m| {
-                    let home = dist.a_panel_home(m, vk);
-                    comm.rget("osl_a", home, win_key(m, vk), TrafficClass::MatrixA)
-                        .wait()
+    // Build the whole multiplication's fetch schedule up front and hand
+    // it to the prefetch pipelines: per tick, the L_R A panels as one
+    // batch (all live at once) and the L_C B panels as a stream (each
+    // consumed over L_R consecutive products — 2 buffers suffice).
+    let a_batches: Vec<Vec<FetchDesc>> = (0..nticks)
+        .map(|t| {
+            let vk = osl_vk(topo, i, j, t);
+            rows.iter()
+                .map(|&m| FetchDesc {
+                    window: "osl_a",
+                    target: dist.a_panel_home(m, vk),
+                    key: win_key(m, vk),
+                    class: TrafficClass::MatrixA,
                 })
-                .collect();
-            let b_bufs: Vec<Panel> = cols
-                .iter()
-                .map(|&n| {
-                    let home = dist.b_panel_home(vk, n);
-                    comm.rget("osl_b", home, win_key(vk, n), TrafficClass::MatrixB)
-                        .wait()
+                .collect()
+        })
+        .collect();
+    let b_stream: Vec<FetchDesc> = (0..nticks)
+        .flat_map(|t| {
+            let vk = osl_vk(topo, i, j, t);
+            cols.iter()
+                .map(move |&n| FetchDesc {
+                    window: "osl_b",
+                    target: dist.b_panel_home(vk, n),
+                    key: win_key(vk, n),
+                    class: TrafficClass::MatrixB,
                 })
-                .collect();
-            (a_bufs, b_bufs)
-        });
-        rec.a_msgs = a_bufs.len() as u32;
-        rec.a_bytes = a_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
-        rec.b_msgs = b_bufs.len() as u32;
-        rec.b_bytes = b_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
-        peak_buffer_bytes = peak_buffer_bytes.max(rec.a_bytes + rec.b_bytes);
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let mut a_fetch = BatchPrefetch::new(comm, "osl/a_buffers", topo.nbuffers_a(), a_batches);
+    let mut b_fetch = PrefetchQueue::new(comm, "osl/b_buffers", 2, b_stream);
 
-        // The tick's L products, A-index fastest (Algorithm 2 sub-steps).
-        for (a, b, _m, _n) in osl_tick_products(topo, i, j) {
-            let s = timers.time("osl/local_multiply", || {
-                multiply_panels_native(
-                    &a_bufs[a],
-                    &b_bufs[b],
-                    eps,
-                    &mut partials[b * topo.l_r + a],
-                )
-            });
-            mult_stats.merge(&s);
-            rec.flops += s.flops;
-            rec.mults += 1;
-        }
-        log.ticks.push(rec);
-    }
-
-    // --- C reduction (overlapped with the last tick in the paper) -----
-    // Send the L-1 partials that are not home; keep the home one.
+    // The tick's L products, A-index fastest (Algorithm 2 sub-steps);
+    // identical for every tick.
+    let products = osl_tick_products(topo, i, j);
     let my_partial_idx = {
         let (i3d, j3d, _) = topo.coords3d(i, j);
         j3d * topo.l_r + i3d
     };
-    let mut c_acc = BlockAccumulator::new();
+
     let mut send_reqs = Vec::new();
-    let mut expected: usize = 0;
-    timers.time("osl/c_reduce", || {
-        for (idx, acc) in partials.drain(..).enumerate() {
-            let a = idx % topo.l_r;
-            let b = idx / topo.l_r;
-            let (m, n) = (rows[a], cols[b]);
-            if idx == my_partial_idx {
-                // Home panel: keep locally.
-                debug_assert_eq!((m, n), (i, j));
-                c_acc = acc;
-            } else {
-                let owner = grid.rank(m, n);
+    let mut recv_reqs = Vec::new();
+    let mut peak_buffer_bytes = 0u64;
+    let mut peak_partial_c_bytes = 0u64;
+    let _ = comm.take_wait_epoch(); // window setup is not tick wait
+
+    // --- V/L ticks ----------------------------------------------------
+    for big_t in 0..nticks {
+        let last_tick = big_t + 1 == nticks;
+        if last_tick && topo.l > 1 {
+            // Post the receives for our C panel's L-1 incoming partials
+            // now, so their transfers overlap this tick's products.
+            for &(ri, rj) in topo
+                .replicas_of_panel(i, j)
+                .iter()
+                .filter(|&&r| r != (i, j))
+            {
+                recv_reqs.push(comm.irecv(
+                    grid.rank(ri, rj),
+                    TAG_C | ((ri * grid.cols() + rj) as u64),
+                    TrafficClass::MatrixC,
+                ));
+            }
+        }
+
+        let mut rec = TickRecord::default();
+        // The per-tick mpi_waitall for the A batch (fetched ahead when
+        // the buffer budget allowed).
+        let a_bufs: Vec<Panel> = timers.time("osl/rget_waitall", || a_fetch.take());
+        rec.a_msgs = a_bufs.len() as u32;
+        rec.a_bytes = a_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
+        rec.comm_s += a_bufs
+            .iter()
+            .map(|p| comm.price_rma(p.wire_bytes()))
+            .sum::<f64>();
+
+        let mut cur_b: Option<(usize, Panel)> = None;
+        for &(a, b, m, n) in &products {
+            if cur_b.as_ref().map(|&(bb, _)| bb) != Some(b) {
+                let pb = timers
+                    .time("osl/rget_waitall", || b_fetch.fetch_next())
+                    .expect("B fetch stream exhausted early");
+                rec.b_msgs += 1;
+                rec.b_bytes += pb.wire_bytes() as u64;
+                rec.comm_s += comm.price_rma(pb.wire_bytes());
+                cur_b = Some((b, pb));
+            }
+            let idx = b * topo.l_r + a;
+            let pb = &cur_b.as_ref().unwrap().1;
+            let s = timers.time("osl/local_multiply", || {
+                multiply_panels_native(&a_bufs[a], pb, eps, &mut partials[idx])
+            });
+            comm.advance_compute_flops(s.flops);
+            mult_stats.merge(&s);
+            rec.flops += s.flops;
+            rec.mults += 1;
+
+            if last_tick {
+                // The Eq. 6 maximum occurs inside the last tick: every
+                // partial is at (or near) full size and they leave one
+                // by one as they ship — sample before each departure.
+                let partial_bytes: u64 = partials.iter().map(acc_bytes).sum();
+                let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
+                peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
+                peak_buffer_bytes = peak_buffer_bytes.max(live);
+            }
+            if last_tick && topo.l > 1 && idx != my_partial_idx {
+                // This product was the partial's last contribution: ship
+                // it to its 2D owner overlapped with the rest of the
+                // tick (the paper's overlapped C reduction).
+                let acc = std::mem::take(&mut partials[idx]);
                 let panel = acc.into_panel();
                 log.c_bytes += panel.wire_bytes() as u64;
                 log.c_msgs += 1;
                 send_reqs.push(comm.isend(
-                    owner,
+                    grid.rank(m, n),
                     TAG_C | ((i * grid.cols() + j) as u64),
                     TrafficClass::MatrixC,
                     Payload::Panel(panel),
                 ));
             }
         }
-        // Receive L-1 partials from the other replicas of OUR C panel.
-        if topo.l > 1 {
-            for (ri, rj) in topo.replicas_of_panel(i, j) {
-                if (ri, rj) == (i, j) {
-                    continue;
-                }
-                expected += 1;
-                let req = comm.irecv(
-                    grid.rank(ri, rj),
-                    TAG_C | ((ri * grid.cols() + rj) as u64),
-                    TrafficClass::MatrixC,
-                );
-                let panel = comm.wait(req).unwrap().into_panel();
-                log.c_accum_elems += panel.data.len() as u64;
-                c_acc.add_panel(&panel);
-            }
+
+        // Eq. 6 series: live fetch buffers (held + in flight) + partials.
+        let partial_bytes: u64 = partials.iter().map(acc_bytes).sum();
+        let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
+        peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
+        peak_buffer_bytes = peak_buffer_bytes.max(live);
+
+        a_fetch.release_front(); // frees the budget -> prefetch next tick
+        rec.wait_s = comm.take_wait_epoch();
+        log.ticks.push(rec);
+    }
+
+    // --- C reduction tail ---------------------------------------------
+    // The sends left from inside the last tick; only the receives that
+    // did not fully overlap it remain to be paid for here.
+    let mut c_acc = std::mem::take(&mut partials[my_partial_idx]);
+    debug_assert_eq!(
+        (rows[my_partial_idx % topo.l_r], cols[my_partial_idx / topo.l_r]),
+        (i, j)
+    );
+    timers.time("osl/c_reduce", || {
+        for req in recv_reqs.drain(..) {
+            let panel = comm.wait(req).unwrap().into_panel();
+            log.c_accum_elems += panel.data.len() as u64;
+            c_acc.add_panel(&panel);
         }
         let _ = comm.wait_all(send_reqs);
     });
-    let _ = expected;
+    log.c_wait_s = comm.take_wait_epoch();
 
     timers.time("osl/win_free", || {
         comm.win_free("osl_a");
         comm.win_free("osl_b");
     });
 
+    let peak_fetch_bytes = a_fetch.peak_bytes() + b_fetch.peak_bytes();
     RankOutput {
         c_acc,
         mult_stats,
         timers,
         log,
         peak_buffer_bytes,
+        peak_fetch_bytes,
+        peak_partial_c_bytes,
     }
 }
 
@@ -217,5 +295,13 @@ mod tests {
         // C tags never collide with rank encodings up to 2^56.
         assert!(TAG_C > (1u64 << 55));
         assert_eq!(TAG_C | 42, TAG_C + 42);
+    }
+
+    #[test]
+    fn acc_bytes_counts_data_and_directory() {
+        let mut acc = BlockAccumulator::new();
+        acc.add_block(0, 0, 2, 2, &[1.0; 4]);
+        acc.add_block(1, 0, 1, 3, &[2.0; 3]);
+        assert_eq!(acc_bytes(&acc), 7 * 8 + 2 * 24);
     }
 }

@@ -1,0 +1,456 @@
+//! Shared double-buffered prefetch machinery for both engines.
+//!
+//! Paper Algorithm 2 prescribes the buffer budget that makes
+//! communication/computation overlap possible without unbounded memory:
+//! `max(2, L_R)` A-panel buffers and 2 B-panel buffers per rank (§3); the
+//! Cannon engine's equivalent is §2's four temporary buffers (a comp +
+//! comm pair per matrix).  This module provides
+//!
+//! * [`BufferPool`] — slot- and byte-accounting with a hard budget (a
+//!   fetch may only be posted into an available buffer) and the live-byte
+//!   series that makes `peak_buffer_bytes` a real Eq. 6 observable;
+//! * [`BatchPrefetch`] — per-tick batches of `rget`s (the A side: all
+//!   `L_R` panels of a tick are live at once), posted as soon as the pool
+//!   has room — one tick ahead when the budget allows (`L_R = 1` ⇒
+//!   double buffering);
+//! * [`PrefetchQueue`] — a streaming prefetcher (the B side: each panel
+//!   is consumed once, over `L_R` consecutive products), always keeping
+//!   the budget's worth of fetches in flight ahead of the consumer;
+//! * [`TickWindow`] — the two-slot comp/comm rotation Cannon's shifts
+//!   use (post tick `t+1`'s requests while tick `t` computes).
+
+use std::collections::VecDeque;
+
+use crate::blocks::panel::Panel;
+use crate::comm::rma::RgetHandle;
+use crate::comm::world::{Comm, TrafficClass};
+
+/// A fetch to be issued later by a prefetcher: one `rget` worth of
+/// coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct FetchDesc {
+    /// Window name (lives for the whole multiplication).
+    pub window: &'static str,
+    /// Rank that is home for the panel.
+    pub target: usize,
+    /// Panel key inside the window directory.
+    pub key: u64,
+    pub class: TrafficClass,
+}
+
+/// Slot/byte accounting for a class of temporary buffers with a hard
+/// budget.  Tracks the peak of the live bytes so the engines can report
+/// the executed (not analytically summed) Eq. 6 footprint.
+#[derive(Debug)]
+pub struct BufferPool {
+    label: &'static str,
+    budget: usize,
+    in_use: usize,
+    bytes_in_use: u64,
+    peak_bytes: u64,
+}
+
+impl BufferPool {
+    pub fn new(label: &'static str, budget: usize) -> Self {
+        assert!(budget >= 1, "{label}: buffer budget must be positive");
+        Self {
+            label,
+            budget,
+            in_use: 0,
+            bytes_in_use: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Claim one buffer of `bytes`.  Panics when the budget is exceeded —
+    /// a pipeline bug, not a recoverable condition.
+    pub fn acquire(&mut self, bytes: u64) {
+        assert!(
+            self.in_use < self.budget,
+            "{}: buffer budget {} exceeded",
+            self.label,
+            self.budget
+        );
+        self.in_use += 1;
+        self.bytes_in_use += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.bytes_in_use);
+    }
+
+    /// Return one buffer of `bytes` to the pool.
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(self.in_use > 0, "{}: release without acquire", self.label);
+        debug_assert!(self.bytes_in_use >= bytes);
+        self.in_use -= 1;
+        self.bytes_in_use -= bytes;
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.budget - self.in_use
+    }
+
+    /// Bytes currently held or in flight.
+    pub fn bytes_in_use(&self) -> u64 {
+        self.bytes_in_use
+    }
+
+    /// Max of `bytes_in_use` over the pool's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+/// Per-tick batched prefetcher over one-sided gets (the A side of
+/// Algorithm 2).  Batches must be taken in order; a batch's buffers stay
+/// claimed from post until [`BatchPrefetch::release_front`], and the next
+/// batch is posted the moment the pool can hold it.
+pub struct BatchPrefetch<'c> {
+    comm: &'c Comm,
+    batches: Vec<Vec<FetchDesc>>,
+    pool: BufferPool,
+    /// Posted-but-not-taken batches, in tick order.
+    posted: VecDeque<Vec<RgetHandle<'c>>>,
+    /// Byte totals of taken-but-not-released batches, in tick order.
+    held_bytes: VecDeque<u64>,
+    next_post: usize,
+    released: usize,
+}
+
+impl<'c> BatchPrefetch<'c> {
+    pub fn new(
+        comm: &'c Comm,
+        label: &'static str,
+        budget: usize,
+        batches: Vec<Vec<FetchDesc>>,
+    ) -> Self {
+        let max_batch = batches.iter().map(|b| b.len()).max().unwrap_or(0);
+        assert!(
+            budget >= max_batch,
+            "{label}: budget {budget} cannot hold a batch of {max_batch}"
+        );
+        let mut s = Self {
+            comm,
+            batches,
+            pool: BufferPool::new(label, budget),
+            posted: VecDeque::new(),
+            held_bytes: VecDeque::new(),
+            next_post: 0,
+            released: 0,
+        };
+        s.fill();
+        s
+    }
+
+    /// Post whole batches while the pool has room for them.
+    fn fill(&mut self) {
+        while self.next_post < self.batches.len()
+            && self.pool.free_slots() >= self.batches[self.next_post].len()
+        {
+            let descs = self.batches[self.next_post].clone();
+            let mut handles = Vec::with_capacity(descs.len());
+            for d in descs {
+                let h = self.comm.rget(d.window, d.target, d.key, d.class);
+                self.pool.acquire(h.bytes() as u64);
+                handles.push(h);
+            }
+            self.posted.push_back(handles);
+            self.next_post += 1;
+        }
+    }
+
+    /// Complete the next batch in tick order: waits its transfers (the
+    /// per-tick `mpi_waitall`) and hands out the panels.  The buffers
+    /// stay claimed until `release_front`.
+    pub fn take(&mut self) -> Vec<Panel> {
+        self.fill();
+        let handles = self
+            .posted
+            .pop_front()
+            .expect("BatchPrefetch::take beyond the last batch");
+        let mut bytes = 0u64;
+        let panels: Vec<Panel> = handles
+            .into_iter()
+            .map(|h| {
+                bytes += h.bytes() as u64;
+                h.wait()
+            })
+            .collect();
+        self.held_bytes.push_back(bytes);
+        panels
+    }
+
+    /// Release the oldest taken batch's buffers (its panels are dead),
+    /// then immediately prefetch as far ahead as the pool now allows.
+    pub fn release_front(&mut self) {
+        let bytes = self
+            .held_bytes
+            .pop_front()
+            .expect("release_front without a held batch");
+        // One pool slot per fetch of the batch; byte attribution within
+        // the batch does not matter for the live-bytes series, so the
+        // total rides on the first slot.
+        let batch_len = self.batches[self.released].len();
+        for i in 0..batch_len {
+            self.pool.release(if i == 0 { bytes } else { 0 });
+        }
+        self.released += 1;
+        self.fill();
+    }
+
+    /// Bytes currently claimed (held + in flight).
+    pub fn bytes_live(&self) -> u64 {
+        self.pool.bytes_in_use()
+    }
+
+    /// Peak claimed bytes over the pipeline's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.pool.peak_bytes()
+    }
+}
+
+/// Streaming prefetcher over one-sided gets (the B side of Algorithm 2):
+/// fetches are consumed one at a time in order; at most `budget` buffers
+/// are claimed (the buffer handed to the consumer plus the in-flight
+/// prefetches), giving double buffering at `budget = 2`.
+pub struct PrefetchQueue<'c> {
+    comm: &'c Comm,
+    descs: Vec<FetchDesc>,
+    pool: BufferPool,
+    posted: VecDeque<RgetHandle<'c>>,
+    current_bytes: Option<u64>,
+    cursor: usize,
+}
+
+impl<'c> PrefetchQueue<'c> {
+    pub fn new(comm: &'c Comm, label: &'static str, budget: usize, descs: Vec<FetchDesc>) -> Self {
+        let mut s = Self {
+            comm,
+            descs,
+            pool: BufferPool::new(label, budget),
+            posted: VecDeque::new(),
+            current_bytes: None,
+            cursor: 0,
+        };
+        s.fill();
+        s
+    }
+
+    fn fill(&mut self) {
+        while self.cursor < self.descs.len() && self.pool.free_slots() > 0 {
+            let d = self.descs[self.cursor];
+            let h = self.comm.rget(d.window, d.target, d.key, d.class);
+            self.pool.acquire(h.bytes() as u64);
+            self.posted.push_back(h);
+            self.cursor += 1;
+        }
+    }
+
+    /// Hand out the next panel in sequence: releases the previous one's
+    /// buffer, tops up the prefetch window, then completes the head
+    /// transfer.  Returns `None` when the stream is exhausted.  (Not an
+    /// `Iterator`: the handed-out panel logically occupies a pool buffer
+    /// until the following call.)
+    pub fn fetch_next(&mut self) -> Option<Panel> {
+        if let Some(bytes) = self.current_bytes.take() {
+            self.pool.release(bytes);
+        }
+        self.fill();
+        let h = self.posted.pop_front()?;
+        self.current_bytes = Some(h.bytes() as u64);
+        Some(h.wait())
+    }
+
+    pub fn bytes_live(&self) -> u64 {
+        self.pool.bytes_in_use()
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.pool.peak_bytes()
+    }
+}
+
+/// Two-slot comp/comm rotation: stash tick `t+1`'s in-flight state while
+/// tick `t` computes, claim it back at the top of tick `t+1` (Cannon's
+/// `mpi_waitall` double buffering, §2).
+pub struct TickWindow<H> {
+    slots: [Option<(usize, H)>; 2],
+}
+
+impl<H> TickWindow<H> {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self {
+            slots: [None, None],
+        }
+    }
+
+    /// Park in-flight state for `tick`.
+    pub fn stash(&mut self, tick: usize, h: H) {
+        let slot = &mut self.slots[tick % 2];
+        assert!(slot.is_none(), "TickWindow slot for tick {tick} occupied");
+        *slot = Some((tick, h));
+    }
+
+    /// Claim the state parked for `tick`, if any.
+    pub fn claim(&mut self, tick: usize) -> Option<H> {
+        match self.slots[tick % 2].take() {
+            Some((t, h)) if t == tick => Some(h),
+            Some(other) => {
+                self.slots[tick % 2] = Some(other);
+                None
+            }
+            None => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::collections::HashMap;
+
+    use crate::comm::rma::win_key;
+    use crate::comm::world::SimWorld;
+
+    fn panel_of(bs: usize, v: f64) -> Panel {
+        let mut p = Panel::new();
+        p.push_block(0, 0, bs as u16, bs as u16, &vec![v; bs * bs]);
+        p
+    }
+
+    #[test]
+    fn pool_budget_is_hard() {
+        let mut pool = BufferPool::new("t", 2);
+        pool.acquire(10);
+        pool.acquire(20);
+        assert_eq!(pool.bytes_in_use(), 30);
+        assert_eq!(pool.peak_bytes(), 30);
+        pool.release(20);
+        pool.acquire(5);
+        assert_eq!(pool.bytes_in_use(), 15);
+        assert_eq!(pool.peak_bytes(), 30);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.acquire(1)));
+        assert!(r.is_err(), "third acquire must blow the budget");
+    }
+
+    #[test]
+    fn prefetch_queue_streams_in_order_within_budget() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut dir = HashMap::new();
+            for k in 0..6u64 {
+                dir.insert(k, panel_of(2, k as f64));
+            }
+            c.win_create("w", dir);
+            let descs: Vec<FetchDesc> = (0..6u64)
+                .map(|k| FetchDesc {
+                    window: "w",
+                    target: 1 - c.rank(),
+                    key: k,
+                    class: TrafficClass::MatrixB,
+                })
+                .collect();
+            let mut q = PrefetchQueue::new(&c, "b", 2, descs);
+            for k in 0..6u64 {
+                let p = q.fetch_next().expect("stream too short");
+                assert_eq!(p.block(0)[0], k as f64);
+                assert!(q.pool.in_use() <= 2);
+            }
+            assert!(q.fetch_next().is_none());
+            drop(q);
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn batch_prefetch_double_buffers_when_room() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut dir = HashMap::new();
+            for t in 0..4u64 {
+                dir.insert(win_key(t as usize, 0), panel_of(3, t as f64));
+            }
+            c.win_create("w", dir);
+            let batches: Vec<Vec<FetchDesc>> = (0..4)
+                .map(|t| {
+                    vec![FetchDesc {
+                        window: "w",
+                        target: 1 - c.rank(),
+                        key: win_key(t, 0),
+                        class: TrafficClass::MatrixA,
+                    }]
+                })
+                .collect();
+            let mut a = BatchPrefetch::new(&c, "a", 2, batches);
+            // batch size 1, budget 2: tick 0 and tick 1 are both in flight
+            assert_eq!(a.pool.in_use(), 2);
+            for t in 0..4 {
+                let panels = a.take();
+                assert_eq!(panels.len(), 1);
+                assert_eq!(panels[0].block(0)[0], t as f64);
+                a.release_front();
+            }
+            assert!(a.peak_bytes() > 0);
+            drop(a);
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn batch_prefetch_serializes_full_width_batches() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut dir = HashMap::new();
+            for t in 0..3usize {
+                for m in 0..2usize {
+                    dir.insert(win_key(m, t), panel_of(2, (t * 2 + m) as f64));
+                }
+            }
+            c.win_create("w", dir);
+            let batches: Vec<Vec<FetchDesc>> = (0..3)
+                .map(|t| {
+                    (0..2)
+                        .map(|m| FetchDesc {
+                            window: "w",
+                            target: 1 - c.rank(),
+                            key: win_key(m, t),
+                            class: TrafficClass::MatrixA,
+                        })
+                        .collect()
+                })
+                .collect();
+            // budget == batch width: no lookahead possible, but every
+            // batch must still arrive complete and in order
+            let mut a = BatchPrefetch::new(&c, "a", 2, batches);
+            for t in 0..3 {
+                let panels = a.take();
+                assert_eq!(panels.len(), 2);
+                assert_eq!(panels[0].block(0)[0], (t * 2) as f64);
+                assert_eq!(panels[1].block(0)[0], (t * 2 + 1) as f64);
+                assert!(a.pool.in_use() <= 2);
+                a.release_front();
+            }
+            drop(a);
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn tick_window_rotates() {
+        let mut tw: TickWindow<u32> = TickWindow::new();
+        tw.stash(1, 11);
+        assert_eq!(tw.claim(0), None);
+        tw.stash(2, 22);
+        assert_eq!(tw.claim(1), Some(11));
+        assert_eq!(tw.claim(2), Some(22));
+        assert_eq!(tw.claim(3), None);
+    }
+}

@@ -22,8 +22,9 @@ pub enum GemmBackend {
 ///
 /// 4-row register blocking: each pass streams one `b` row against four
 /// `a` scalars, giving LLVM a branch-free inner loop it vectorizes and
-/// amortizing every `b` load over four FMAs.  Measured on this box
-/// (EXPERIMENTS.md §Perf): 8.6–10.7 GFLOP/s at the paper's block sizes,
+/// amortizing every `b` load over four FMAs.  Measured on the tuning box
+/// (`rust/EXPERIMENTS.md` §Perf, regenerate with `cargo bench --bench
+/// local_multiply`): 8.6–10.7 GFLOP/s at the paper's block sizes,
 /// 2.3–2.7× over the naive ikj/unroll-by-4 form — the earlier version's
 /// `a == 0` skip *defeated* vectorization and cost 2× on dense blocks.
 #[inline]

@@ -110,9 +110,13 @@ fn cmd_multiply() -> i32 {
     let b = random_for_spec(&spec, seed ^ 0xBEEF);
     let layout = spec.layout();
     let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
+    // One machine for both views: the fabric executes (and the measured
+    // overlap is priced) on the same calibration the analytic model uses.
+    let machine = MachineModel::piz_daint(spec.node_flop_rate);
     let cfg = MultiplyConfig {
         engine,
         filter: FilterConfig::uniform(args.get_as("eps")),
+        machine: Some(machine),
         ..Default::default()
     };
     println!(
@@ -126,7 +130,6 @@ fn cmd_multiply() -> i32 {
         engine.label()
     );
     let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
-    let machine = MachineModel::piz_daint(spec.node_flop_rate);
     let (_, crit) = report.model(&machine);
     println!(
         "C: {} blocks ({:.2}% occupied), {} products, {} filtered",
@@ -142,6 +145,16 @@ fn cmd_multiply() -> i32 {
         crit.total_s * 1e3,
         crit.waitall_s * 1e3,
         report.wall_s * 1e3
+    );
+    let overlap = report.overlap_summary();
+    println!(
+        "pipeline: tick wait {:.3} ms of {:.3} ms fetch comm \
+         ({:.0}% overlapped); total wait {:.3} ms; modeled wait {:.3} ms",
+        overlap.tick_wait_s * 1e3,
+        overlap.tick_comm_s * 1e3,
+        overlap.measured_overlap_frac() * 100.0,
+        overlap.total_wait_s * 1e3,
+        overlap.modeled_wait_s * 1e3
     );
     println!("{}", report.timers.render());
     if args.is_set("json") {

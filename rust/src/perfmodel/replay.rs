@@ -106,6 +106,7 @@ pub fn build_rank_log(cfg: &ReplayConfig) -> RankLog {
                     b_msgs: u32::from(t + 1 < topo.v),
                     flops: flops_per_rank / v,
                     mults: 1,
+                    ..Default::default()
                 });
             }
             log
@@ -126,6 +127,7 @@ pub fn build_rank_log(cfg: &ReplayConfig) -> RankLog {
                     b_msgs: topo.l_c as u32,
                     flops: flops_per_rank / topo.nticks() as f64,
                     mults: topo.l as u32,
+                    ..Default::default()
                 });
             }
             // C reduction: L-1 partial panels out, L-1 in (count the

@@ -12,6 +12,13 @@
 //! The same logs are produced by the real engines (counted bytes) and by
 //! the paper-scale analytic replay (modeled bytes), so one pricing code
 //! path serves both.
+//!
+//! Since the engines run on the genuinely asynchronous fabric
+//! (`comm::progress`), their logs additionally carry the **measured**
+//! per-tick wait residue of the executed pipeline next to the priced
+//! transfer time; [`crosscheck_overlap`] compares that executed schedule
+//! against this module's analytic overlap model, validating one against
+//! the other.
 
 use crate::perfmodel::machine::MachineModel;
 
@@ -41,6 +48,13 @@ pub struct TickRecord {
     /// Number of local multiplications in this tick (1 for Cannon, L for
     /// the 2.5D engine — the launch/assembly overhead count).
     pub mults: u32,
+    /// **Measured** non-overlapped wait residue of this tick on the
+    /// executed pipeline (virtual seconds; zero for analytic replays).
+    pub wait_s: f64,
+    /// Raw priced transfer time of this tick's fetches on the fabric
+    /// (virtual seconds; zero for analytic replays).  The pipeline
+    /// invariant is `wait_s <= comm_s` for origin-priced transports.
+    pub comm_s: f64,
 }
 
 /// Whole-multiplication log of one rank.
@@ -50,12 +64,17 @@ pub struct RankLog {
     /// Cannon pre-shift traffic (zero for one-sided).
     pub pre_bytes: u64,
     pub pre_msgs: u32,
+    /// Measured wait of the blocking pre-shift (virtual s; engines only).
+    pub pre_wait_s: f64,
     pub ticks: Vec<TickRecord>,
     /// 2.5D C-panel reduction traffic (zero for L = 1 / Cannon).
     pub c_bytes: u64,
     pub c_msgs: u32,
     /// Elements accumulated CPU-side in the C reduction.
     pub c_accum_elems: u64,
+    /// Measured wait of the C-reduction tail that did not overlap the
+    /// last tick (virtual s; engines only).
+    pub c_wait_s: f64,
 }
 
 impl RankLog {
@@ -64,10 +83,12 @@ impl RankLog {
             engine,
             pre_bytes: 0,
             pre_msgs: 0,
+            pre_wait_s: 0.0,
             ticks: Vec::new(),
             c_bytes: 0,
             c_msgs: 0,
             c_accum_elems: 0,
+            c_wait_s: 0.0,
         }
     }
 
@@ -85,6 +106,21 @@ impl RankLog {
     /// Total FLOPs.
     pub fn total_flops(&self) -> f64 {
         self.ticks.iter().map(|t| t.flops).sum()
+    }
+
+    /// Measured per-tick wait residue, summed (executed pipeline).
+    pub fn measured_tick_wait_s(&self) -> f64 {
+        self.ticks.iter().map(|t| t.wait_s).sum()
+    }
+
+    /// Raw priced transfer time of the tick fetches, summed.
+    pub fn measured_tick_comm_s(&self) -> f64 {
+        self.ticks.iter().map(|t| t.comm_s).sum()
+    }
+
+    /// Whole-run measured wait: pre-shift + ticks + C-reduction tail.
+    pub fn measured_wait_s(&self) -> f64 {
+        self.pre_wait_s + self.measured_tick_wait_s() + self.c_wait_s
     }
 }
 
@@ -191,6 +227,55 @@ pub fn model_rank_time(log: &RankLog, machine: &MachineModel) -> ModeledTime {
     }
 }
 
+/// Measured-vs-modeled comparison of one rank's communication overlap:
+/// the executed pipeline's wait residue (recorded tick by tick on the
+/// fabric's virtual clock) against this module's analytic overlap model
+/// priced on the same machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapCheck {
+    /// Analytic `mpi_waitall` residue (model_rank_time's `waitall_s`).
+    pub modeled_wait_s: f64,
+    /// Analytic raw communication time.
+    pub modeled_comm_s: f64,
+    /// Executed-pipeline wait residue of the tick fetches (same scope as
+    /// `tick_comm_s`; the pipeline invariant is `tick_wait <= tick_comm`
+    /// for origin-priced transports).
+    pub tick_wait_s: f64,
+    /// Raw priced transfer time of the tick fetches.
+    pub tick_comm_s: f64,
+    /// Whole-run measured wait: pre-shift + ticks + C tail.  May exceed
+    /// `tick_comm_s` for Cannon, whose blocking pre-shift produces no
+    /// tick record — compare it against `modeled_comm_s`, not the tick
+    /// scope.
+    pub total_wait_s: f64,
+}
+
+impl OverlapCheck {
+    /// Fraction of the raw tick-fetch transfer time the executed
+    /// pipeline hid behind computation (1 = fully overlapped).
+    pub fn measured_overlap_frac(&self) -> f64 {
+        if self.tick_comm_s > 0.0 {
+            1.0 - self.tick_wait_s / self.tick_comm_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Compare a rank's executed pipeline against the analytic overlap model
+/// on `machine`.  For an apples-to-apples check, `machine` should be the
+/// one the fabric priced with (`MultiplyReport::fabric_machine`).
+pub fn crosscheck_overlap(log: &RankLog, machine: &MachineModel) -> OverlapCheck {
+    let modeled = model_rank_time(log, machine);
+    OverlapCheck {
+        modeled_wait_s: modeled.waitall_s,
+        modeled_comm_s: modeled.comm_s,
+        tick_wait_s: log.measured_tick_wait_s(),
+        tick_comm_s: log.measured_tick_comm_s(),
+        total_wait_s: log.measured_wait_s(),
+    }
+}
+
 /// Merge per-rank modeled times the way the paper reports them: the
 /// multiplication finishes when the slowest rank does.
 pub fn critical_path(times: &[ModeledTime]) -> ModeledTime {
@@ -223,6 +308,7 @@ mod tests {
                 b_msgs: 1,
                 flops,
                 mults: 1,
+                ..Default::default()
             });
         }
         log
@@ -296,5 +382,41 @@ mod tests {
     fn empty_log_zero_time() {
         let t = model_rank_time(&RankLog::new(EngineKind::Ptp), &machine());
         assert_eq!(t.total_s, 0.0);
+    }
+
+    #[test]
+    fn crosscheck_reads_measured_fields() {
+        let m = machine();
+        let mut log = log_with(EngineKind::OneSided, 4, 1000, 1e9);
+        for (t, rec) in log.ticks.iter_mut().enumerate() {
+            rec.comm_s = 1e-3;
+            // only tick 0 exposes its transfer; the rest are hidden
+            rec.wait_s = if t == 0 { 1e-3 } else { 0.0 };
+        }
+        let chk = crosscheck_overlap(&log, &m);
+        assert!((chk.tick_comm_s - 4e-3).abs() < 1e-12);
+        assert!((chk.tick_wait_s - 1e-3).abs() < 1e-12);
+        assert!((chk.total_wait_s - 1e-3).abs() < 1e-12);
+        assert!((chk.measured_overlap_frac() - 0.75).abs() < 1e-9);
+        assert!(chk.modeled_comm_s > 0.0);
+        // both views agree the run is compute-bound: residues are a
+        // small fraction of the raw communication time
+        assert!(chk.modeled_wait_s < 0.5 * chk.modeled_comm_s);
+        assert!(chk.tick_wait_s < 0.5 * chk.tick_comm_s);
+    }
+
+    #[test]
+    fn measured_wait_sums_all_phases() {
+        let mut log = RankLog::new(EngineKind::Ptp);
+        log.pre_wait_s = 1.0;
+        log.c_wait_s = 0.25;
+        log.ticks.push(TickRecord {
+            wait_s: 0.5,
+            comm_s: 2.0,
+            ..Default::default()
+        });
+        assert!((log.measured_tick_wait_s() - 0.5).abs() < 1e-12);
+        assert!((log.measured_tick_comm_s() - 2.0).abs() < 1e-12);
+        assert!((log.measured_wait_s() - 1.75).abs() < 1e-12);
     }
 }

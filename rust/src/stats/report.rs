@@ -235,6 +235,7 @@ pub fn multiply_report_json(
             ])
         })
         .collect();
+    let overlap = rep.overlap_summary();
     Json::obj([
         ("engine", Json::Str(engine.label())),
         ("l", Json::Num(rep.topo.l as f64)),
@@ -248,6 +249,14 @@ pub fn multiply_report_json(
         ("wall_s", Json::Num(rep.wall_s)),
         ("avg_requested_bytes", Json::Num(rep.avg_requested_bytes())),
         ("peak_buffer_bytes", Json::Num(rep.peak_buffer_bytes as f64)),
+        ("peak_fetch_bytes", Json::Num(rep.peak_fetch_bytes as f64)),
+        ("peak_partial_c_bytes", Json::Num(rep.peak_partial_c_bytes as f64)),
+        ("tick_wait_s", Json::Num(overlap.tick_wait_s)),
+        ("tick_comm_s", Json::Num(overlap.tick_comm_s)),
+        ("total_wait_s", Json::Num(overlap.total_wait_s)),
+        ("modeled_wait_s", Json::Num(overlap.modeled_wait_s)),
+        ("modeled_comm_s", Json::Num(overlap.modeled_comm_s)),
+        ("measured_overlap_frac", Json::Num(overlap.measured_overlap_frac())),
         ("per_rank", Json::Arr(stats_arr)),
     ])
 }
@@ -308,11 +317,12 @@ mod tests {
         let text = j.to_string_compact();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("engine").unwrap().as_str().unwrap(), "OS1");
-        assert_eq!(
-            back.get("per_rank").unwrap().as_arr().unwrap().len(),
-            4
-        );
+        assert_eq!(back.get("per_rank").unwrap().as_arr().unwrap().len(), 4);
         assert!(back.get("products").unwrap().as_f64().unwrap() > 0.0);
+        // the executed pipeline's overlap observables ride along
+        assert!(back.get("tick_comm_s").unwrap().as_f64().unwrap() > 0.0);
+        let wait = back.get("tick_wait_s").unwrap().as_f64().unwrap();
+        assert!(wait >= 0.0);
     }
 
     #[test]

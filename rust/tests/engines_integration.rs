@@ -181,6 +181,64 @@ fn empty_and_degenerate_matrices() {
 }
 
 #[test]
+fn property_eq6_buffer_bound_random_topologies() {
+    // Paper Eq. 6 via the buffer budget of Algorithm 2: the executed
+    // pipeline's peak live bytes can never exceed
+    //   (max(2, L_R) + 2) x (largest A/B panel) + (partial-C bytes).
+    let topologies: [(usize, usize, usize); 7] = [
+        (2, 2, 1),
+        (3, 3, 1),
+        (4, 4, 4),
+        (2, 4, 2),
+        (4, 2, 2),
+        (2, 6, 3),
+        (6, 2, 3),
+    ];
+    property("eq6 buffer bound", 91, 8, |rng, _| {
+        let (pr, pc, ll) = topologies[rng.usize_below(topologies.len())];
+        let nb = 8 + rng.usize_below(12);
+        let bs = 2 + rng.usize_below(3);
+        let occ = 0.2 + rng.f64() * 0.5;
+        let layout = BlockLayout::uniform(nb, bs);
+        let a = BlockCsrMatrix::random(&layout, &layout, occ, rng.next_u64());
+        let b = BlockCsrMatrix::random(&layout, &layout, occ, rng.next_u64());
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, rng.next_u64());
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l: ll },
+            strict_topology: true,
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg)
+            .map_err(|e| e.to_string())?;
+        let topo = rep.topo;
+        let max_panel_bytes = dist
+            .split_a(&a)
+            .into_iter()
+            .flatten()
+            .chain(dist.split_b(&b).into_iter().flatten())
+            .map(|p| p.wire_bytes() as u64)
+            .max()
+            .unwrap_or(0);
+        let fetch_bound = (topo.nbuffers_a() + 2) as u64 * max_panel_bytes;
+        if rep.peak_fetch_bytes > fetch_bound {
+            return Err(format!(
+                "{pr}x{pc} L={ll}: fetch peak {} > budget bound {fetch_bound}",
+                rep.peak_fetch_bytes
+            ));
+        }
+        let bound = fetch_bound + rep.peak_partial_c_bytes;
+        if rep.peak_buffer_bytes > bound {
+            return Err(format!(
+                "{pr}x{pc} L={ll}: peak {} > Eq.6 bound {bound}",
+                rep.peak_buffer_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_random_everything() {
     property("full random integration", 2024, 10, |rng, _| {
         let pr = 1 + rng.usize_below(4);

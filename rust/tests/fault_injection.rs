@@ -44,6 +44,37 @@ fn payload_type_confusion_panics() {
 }
 
 #[test]
+fn deadlock_panics_with_rank_and_tag_context() {
+    // A rank blocking on a message nobody sends must fail loudly with
+    // enough context to find the schedule bug — not hang the suite.
+    use dbcsr::comm::progress::FabricConfig;
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let w = SimWorld::with_fabric(
+            2,
+            FabricConfig {
+                deadlock_timeout: std::time::Duration::from_millis(100),
+                ..Default::default()
+            },
+        );
+        w.run(|c| {
+            if c.rank() == 1 {
+                let r = c.irecv(0, 77, TrafficClass::Other);
+                let _ = c.wait(r); // rank 0 never sends tag 77
+            }
+        });
+    }));
+    let payload = result.expect_err("deadlocked wait must panic");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_default();
+    assert!(
+        msg.contains("rank 1") && msg.contains("src=0") && msg.contains("tag=77"),
+        "deadlock panic lacks context: {msg}"
+    );
+}
+
+#[test]
 fn rank_panic_propagates_to_driver() {
     let result = catch_unwind(AssertUnwindSafe(|| {
         let w = SimWorld::new(3);
