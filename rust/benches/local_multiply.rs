@@ -1,24 +1,43 @@
-//! Bench: the node-local hot path — microkernel GEMM, batch assembly,
-//! full panel products, and the PJRT/Pallas artifact path.
+//! Bench: the node-local hot path — microkernel GEMM, the stack-flow
+//! multiply (vs the pre-refactor HashMap path) with a `threads_per_rank`
+//! sweep, and the PJRT/Pallas artifact path.
+//!
+//! Writes `BENCH_local_multiply.json` (GFLOP/s per block-size variant,
+//! stack fill, threads sweep) so the local-multiply perf trajectory is
+//! machine-readable like `BENCH_comm_overlap.json`.
 //!
 //! ```bash
-//! cargo bench --bench local_multiply
+//! cargo bench --bench local_multiply            # full run
+//! cargo bench --bench local_multiply -- --smoke # CI smoke profile
 //! ```
 
 use dbcsr::benchkit::{print_header, Bencher};
 use dbcsr::blocks::build::BlockAccumulator;
 use dbcsr::blocks::layout::BlockLayout;
 use dbcsr::blocks::matrix::BlockCsrMatrix;
-use dbcsr::local::batch::{assemble_tasks, matrix_to_panel, multiply_panels_native, LocalMultStats};
+use dbcsr::local::batch::{
+    assemble_tasks, matrix_to_panel, multiply_panels_reference, multiply_panels_stacked,
+    LocalMultStats,
+};
 use dbcsr::local::microkernel::{gemm_acc, gemm_flops};
+use dbcsr::local::stackflow::NativeStackExecutor;
+use dbcsr::util::json::Json;
 use dbcsr::util::prng::Pcg64;
 
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
 fn main() {
-    let bencher = Bencher::default();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let bencher = if smoke {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
 
     // --- raw microkernel at the paper's block sizes --------------------
     print_header("microkernel gemm_acc (paper block sizes)");
     let mut rng = Pcg64::new(1);
+    let mut kernel_rows = Vec::new();
     for &s in &[6usize, 23, 32] {
         let a: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
@@ -27,30 +46,85 @@ fn main() {
             gemm_acc(s, s, s, &a, &b, &mut c);
             c[0]
         });
-        println!("{}", m.row(Some((gemm_flops(s, s, s), "FLOP"))));
+        let fl = gemm_flops(s, s, s);
+        println!("{}", m.row(Some((fl, "FLOP"))));
+        kernel_rows.push(Json::obj([
+            ("block_size", Json::Num(s as f64)),
+            ("gflops", Json::Num(m.throughput(fl) / 1e9)),
+        ]));
     }
 
-    // --- batch assembly + full panel multiply --------------------------
-    print_header("panel multiply (assembly + filter + execute)");
+    // --- stack-flow panel multiply vs the pre-refactor path ------------
+    // The legacy baseline is the path the engines ran before the
+    // stack-flow refactor: per-call HashMap row index + per-product
+    // HashMap accumulation, single-threaded.
+    print_header("panel multiply: stack-flow (threads sweep) vs pre-refactor");
+    let mut variant_rows = Vec::new();
     for (nb, bs, occ) in [(64usize, 6usize, 0.3), (32, 23, 0.3), (24, 32, 1.0)] {
         let l = BlockLayout::uniform(nb, bs);
         let a = BlockCsrMatrix::random(&l, &l, occ, 7);
         let b = BlockCsrMatrix::random(&l, &l, occ, 8);
         let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
         let mut st = LocalMultStats::default();
-        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut st);
-        let flops: f64 = tasks.len() as f64 * gemm_flops(bs, bs, bs);
-        let m = bencher.run(&format!("panel {nb}x{nb} b{bs} occ {occ}"), || {
+        let ntasks = assemble_tasks(&pa, &pb, -1.0, &mut st).len();
+        let flops = ntasks as f64 * gemm_flops(bs, bs, bs);
+
+        let name = format!("panel {nb}x{nb} b{bs} occ {occ}");
+        let m_legacy = bencher.run(&format!("{name} legacy"), || {
             let mut acc = BlockAccumulator::new();
-            multiply_panels_native(&pa, &pb, -1.0, &mut acc);
+            multiply_panels_reference(&pa, &pb, -1.0, &mut acc);
             acc.nblocks()
         });
-        println!("{}", m.row(Some((flops, "FLOP"))));
-        let m = bencher.run(&format!("assemble-only {nb}x{nb} b{bs}"), || {
+        println!("{}", m_legacy.row(Some((flops, "FLOP"))));
+        let gflops_legacy = m_legacy.throughput(flops) / 1e9;
+
+        // stack fill of this workload (thread-independent bookkeeping)
+        let stack_fill = {
+            let mut acc = BlockAccumulator::new();
+            let stats =
+                multiply_panels_stacked(&pa, &pb, -1.0, &mut acc, &NativeStackExecutor::single())
+                    .unwrap();
+            stats.stack_fill()
+        };
+
+        let mut thread_rows = Vec::new();
+        for threads in THREAD_SWEEP {
+            let exec = NativeStackExecutor::new(threads);
+            let m = bencher.run(&format!("{name} stack-flow t={threads}"), || {
+                let mut acc = BlockAccumulator::new();
+                multiply_panels_stacked(&pa, &pb, -1.0, &mut acc, &exec).unwrap();
+                acc.nblocks()
+            });
+            let gflops = m.throughput(flops) / 1e9;
+            println!(
+                "{}  ({:.2}x vs legacy)",
+                m.row(Some((flops, "FLOP"))),
+                gflops / gflops_legacy
+            );
+            thread_rows.push(Json::obj([
+                ("threads", Json::Num(threads as f64)),
+                ("gflops", Json::Num(gflops)),
+                ("speedup_vs_legacy", Json::Num(gflops / gflops_legacy)),
+            ]));
+        }
+        let m_assemble = bencher.run(&format!("{name} assemble-only"), || {
             let mut st = LocalMultStats::default();
             assemble_tasks(&pa, &pb, -1.0, &mut st).len()
         });
-        println!("{}", m.row(None));
+        println!("{}", m_assemble.row(None));
+
+        variant_rows.push(Json::obj([
+            ("name", Json::Str(name)),
+            ("nblocks", Json::Num(nb as f64)),
+            ("block_size", Json::Num(bs as f64)),
+            ("occupancy", Json::Num(occ)),
+            ("products", Json::Num(ntasks as f64)),
+            ("flops", Json::Num(flops)),
+            ("stack_fill", Json::Num(stack_fill)),
+            ("gflops_legacy", Json::Num(gflops_legacy)),
+            ("assemble_s", Json::Num(m_assemble.mean_s)),
+            ("threads", Json::Arr(thread_rows)),
+        ]));
     }
 
     // --- PJRT / Pallas artifact path ------------------------------------
@@ -76,4 +150,16 @@ fn main() {
         }
         Err(e) => println!("\npjrt benches skipped: {e}"),
     }
+
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let summary = Json::obj([
+        ("bench", Json::Str("local_multiply".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("host_threads", Json::Num(host_threads as f64)),
+        ("microkernel", Json::Arr(kernel_rows)),
+        ("variants", Json::Arr(variant_rows)),
+    ]);
+    std::fs::write("BENCH_local_multiply.json", summary.to_string_compact())
+        .expect("write BENCH_local_multiply.json");
+    println!("wrote BENCH_local_multiply.json");
 }

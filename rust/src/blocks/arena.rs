@@ -1,0 +1,326 @@
+//! Dense C arena: the hot-path accumulation target of the stack-flow
+//! local multiplication.
+//!
+//! DBCSR's per-product cost is dominated not by the small GEMM itself but
+//! by *finding* the C block to accumulate into.  The arena removes that
+//! lookup from the inner loop: once per local multiplication (one tick's
+//! panel product) it lays out every C block a rank can touch — the
+//! distinct block rows of the A panel × the distinct block columns of
+//! the B panel — contiguously in one `f64` buffer with a precomputed
+//! per-(row, col) offset table.  Stack entries then carry plain offsets,
+//! and the microkernel writes straight into the slab.
+//!
+//! The row-major block layout additionally gives the intra-rank worker
+//! pool a safe partition: all blocks of one arena row are contiguous, so
+//! [`CArena::split_rows`] hands out disjoint `&mut [f64]` row views and
+//! the executor assigns whole rows to workers — no two workers ever
+//! share a C block, and no locks are needed.
+//!
+//! The arena is *per-tick* scratch; [`CArena::drain_into`] folds the
+//! touched blocks back into the [`BlockAccumulator`], which remains the
+//! (HashMap-keyed) builder for the assembly and 2.5D-reduction edges.
+
+use crate::blocks::build::BlockAccumulator;
+use crate::blocks::panel::Panel;
+
+/// The arena's shape: which (row, col) blocks exist and where they live
+/// in the data slab.  Shared read-only by the worker threads while the
+/// data is split into per-row views.
+#[derive(Clone, Debug, Default)]
+pub struct ArenaGeometry {
+    /// Distinct C block rows `(global block row, row dim)`, ascending.
+    rows: Vec<(u32, u16)>,
+    /// Distinct C block cols `(global block col, col dim)`, ascending.
+    cols: Vec<(u32, u16)>,
+    /// Prefix sums of the col dims (`len == cols.len() + 1`).
+    col_prefix: Vec<u32>,
+    /// Slab offset of each arena row of blocks (`len == rows.len() + 1`).
+    row_ptr: Vec<usize>,
+}
+
+impl ArenaGeometry {
+    /// Number of arena rows.
+    pub fn nrows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Number of arena cols.
+    pub fn ncols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// `(global block row, row dim)` of arena row `ri`.
+    pub fn row_coord(&self, ri: usize) -> (u32, u16) {
+        self.rows[ri]
+    }
+
+    /// `(global block col, col dim)` of arena col `ci`.
+    pub fn col_coord(&self, ci: usize) -> (u32, u16) {
+        self.cols[ci]
+    }
+
+    /// Arena coordinates of global block `(row, col)`, if present.
+    pub fn locate(&self, row: u32, col: u32) -> Option<(usize, usize)> {
+        let ri = self.rows.binary_search_by_key(&row, |&(r, _)| r).ok()?;
+        let ci = self.cols.binary_search_by_key(&col, |&(c, _)| c).ok()?;
+        Some((ri, ci))
+    }
+
+    /// Slab length of arena row `ri` (all its blocks).
+    pub fn row_len(&self, ri: usize) -> usize {
+        self.row_ptr[ri + 1] - self.row_ptr[ri]
+    }
+
+    /// Offset of block `(ri, ci)` *within its row view*.
+    pub fn offset_in_row(&self, ri: usize, ci: usize) -> usize {
+        self.rows[ri].1 as usize * self.col_prefix[ci] as usize
+    }
+
+    /// Element count of block `(ri, ci)`.
+    pub fn block_len(&self, ri: usize, ci: usize) -> usize {
+        self.rows[ri].1 as usize * self.cols[ci].1 as usize
+    }
+}
+
+/// Dense accumulation arena for one local multiplication.
+#[derive(Clone, Debug, Default)]
+pub struct CArena {
+    geom: ArenaGeometry,
+    data: Vec<f64>,
+    /// Row-major touch map (`nrows × ncols`): only touched blocks are
+    /// non-zero and drained — the arena must not invent empty C blocks.
+    touched: Vec<bool>,
+}
+
+/// Distinct `(key, dim)` pairs, ascending by key (dims are consistent
+/// per key: they come from one block layout).
+fn distinct_dims(mut v: Vec<(u32, u16)>) -> Vec<(u32, u16)> {
+    v.sort_unstable();
+    v.dedup_by_key(|x| x.0);
+    v
+}
+
+impl CArena {
+    /// Lay out the arena over the full panel tile: rows from A's
+    /// distinct block rows, cols from B's distinct block cols.  The
+    /// multiply hot path uses [`CArena::for_pairs`] instead, which only
+    /// allocates the rows/cols the surviving products touch.
+    pub fn build(a: &Panel, b: &Panel) -> CArena {
+        let rows = a.entries.iter().map(|e| (e.row, e.nr)).collect();
+        let cols = b.entries.iter().map(|e| (e.col, e.nc)).collect();
+        Self::from_dims(rows, cols)
+    }
+
+    /// Lay out the arena for exactly the `(a_entry, b_entry)` product
+    /// pairs that survived the filter: under aggressive filtering the
+    /// touched row/col sets are far smaller than the full
+    /// `|A rows| × |B cols|` tile, so slab size (and its zero-fill
+    /// cost) stays proportional to the actual work.
+    pub fn for_pairs<I>(a: &Panel, b: &Panel, pairs: I) -> CArena
+    where
+        I: IntoIterator<Item = (usize, usize)>,
+    {
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        for (ae, be) in pairs {
+            let aen = &a.entries[ae];
+            rows.push((aen.row, aen.nr));
+            let ben = &b.entries[be];
+            cols.push((ben.col, ben.nc));
+        }
+        Self::from_dims(rows, cols)
+    }
+
+    fn from_dims(rows: Vec<(u32, u16)>, cols: Vec<(u32, u16)>) -> CArena {
+        let rows = distinct_dims(rows);
+        let cols = distinct_dims(cols);
+        let mut col_prefix = Vec::with_capacity(cols.len() + 1);
+        let mut acc = 0u32;
+        col_prefix.push(0);
+        for &(_, nc) in &cols {
+            acc += nc as u32;
+            col_prefix.push(acc);
+        }
+        let total_nc = acc as usize;
+        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+        let mut off = 0usize;
+        row_ptr.push(0);
+        for &(_, nr) in &rows {
+            off += nr as usize * total_nc;
+            row_ptr.push(off);
+        }
+        let touched = vec![false; rows.len() * cols.len()];
+        let geom = ArenaGeometry {
+            rows,
+            cols,
+            col_prefix,
+            row_ptr,
+        };
+        CArena {
+            data: vec![0.0; off],
+            geom,
+            touched,
+        }
+    }
+
+    /// The arena's shape.
+    pub fn geometry(&self) -> &ArenaGeometry {
+        &self.geom
+    }
+
+    /// Mark block `(ri, ci)` as written (done during stack assembly,
+    /// before the workers run).
+    pub fn mark(&mut self, ri: usize, ci: usize) {
+        self.touched[ri * self.geom.ncols() + ci] = true;
+    }
+
+    /// Mutable view of block `(ri, ci)`, marked touched (single-threaded
+    /// accumulation paths, e.g. the PJRT scatter).
+    pub fn block_mut(&mut self, ri: usize, ci: usize) -> &mut [f64] {
+        self.touched[ri * self.geom.ncols() + ci] = true;
+        let off = self.geom.row_ptr[ri] + self.geom.offset_in_row(ri, ci);
+        let len = self.geom.block_len(ri, ci);
+        &mut self.data[off..off + len]
+    }
+
+    /// Split the slab into disjoint per-arena-row mutable views (plus
+    /// the shared geometry) — the partition the worker pool distributes
+    /// so that no two workers share a C block.
+    pub fn split_rows(&mut self) -> (&ArenaGeometry, Vec<&mut [f64]>) {
+        let geom = &self.geom;
+        let mut views = Vec::with_capacity(geom.nrows());
+        let mut rest = self.data.as_mut_slice();
+        for ri in 0..geom.nrows() {
+            let (head, tail) = rest.split_at_mut(geom.row_len(ri));
+            views.push(head);
+            rest = tail;
+        }
+        (geom, views)
+    }
+
+    /// Fold every touched block into the accumulator (the hand-off from
+    /// the per-tick hot path back to the HashMap-keyed builder).
+    pub fn drain_into(&self, acc: &mut BlockAccumulator) {
+        let ncols = self.geom.ncols();
+        for ri in 0..self.geom.nrows() {
+            let (row, nr) = self.geom.rows[ri];
+            for ci in 0..ncols {
+                if !self.touched[ri * ncols + ci] {
+                    continue;
+                }
+                let (col, nc) = self.geom.cols[ci];
+                let off = self.geom.row_ptr[ri] + self.geom.offset_in_row(ri, ci);
+                let len = nr as usize * nc as usize;
+                acc.add_block(row, col, nr, nc, &self.data[off..off + len]);
+            }
+        }
+    }
+
+    /// Slab footprint in bytes (scratch memory the stack-flow path holds
+    /// per tick).
+    pub fn data_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn panels() -> (Panel, Panel) {
+        // A: rows {0 (nr 2), 2 (nr 3)}, inner cols {1, 4}
+        let mut a = Panel::new();
+        a.push_block(0, 1, 2, 2, &[1.0; 4]);
+        a.push_block(2, 1, 3, 2, &[2.0; 6]);
+        a.push_block(0, 4, 2, 1, &[3.0; 2]);
+        // B: inner rows {1, 4}, cols {0 (nc 2), 3 (nc 1)}
+        let mut b = Panel::new();
+        b.push_block(1, 0, 2, 2, &[1.0; 4]);
+        b.push_block(4, 3, 1, 1, &[5.0]);
+        (a.with_index(), b.with_index())
+    }
+
+    #[test]
+    fn geometry_from_panels() {
+        let (a, b) = panels();
+        let arena = CArena::build(&a, &b);
+        let g = arena.geometry();
+        assert_eq!(g.nrows(), 2);
+        assert_eq!(g.ncols(), 2);
+        assert_eq!(g.row_coord(0), (0, 2));
+        assert_eq!(g.row_coord(1), (2, 3));
+        assert_eq!(g.col_coord(0), (0, 2));
+        assert_eq!(g.col_coord(1), (3, 1));
+        // row 0: nr 2 over total nc 3 = 6 elements; row 1: 3*3 = 9
+        assert_eq!(g.row_len(0), 6);
+        assert_eq!(g.row_len(1), 9);
+        assert_eq!(arena.data_bytes(), (6 + 9) * 8);
+        assert_eq!(g.locate(2, 3), Some((1, 1)));
+        assert_eq!(g.locate(1, 3), None);
+        assert_eq!(g.offset_in_row(1, 1), 3 * 2);
+        assert_eq!(g.block_len(1, 0), 6);
+    }
+
+    #[test]
+    fn block_mut_and_drain_roundtrip() {
+        let (a, b) = panels();
+        let mut arena = CArena::build(&a, &b);
+        arena.block_mut(0, 0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        arena.block_mut(1, 1).copy_from_slice(&[7.0, 8.0, 9.0]);
+        let mut acc = BlockAccumulator::new();
+        arena.drain_into(&mut acc);
+        assert_eq!(acc.nblocks(), 2, "untouched blocks must not be drained");
+        let p = acc.into_panel();
+        assert_eq!(p.block(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.block(1), &[7.0, 8.0, 9.0]);
+        let coords: Vec<(u32, u32)> = p.entries.iter().map(|e| (e.row, e.col)).collect();
+        assert_eq!(coords, vec![(0, 0), (2, 3)]);
+    }
+
+    #[test]
+    fn split_rows_views_are_disjoint_and_complete() {
+        let (a, b) = panels();
+        let mut arena = CArena::build(&a, &b);
+        let (geom, views) = arena.split_rows();
+        assert_eq!(views.len(), geom.nrows());
+        let total: usize = views.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 6 + 9);
+        // writes through a row view land at the geometry's offsets
+        let nrows = geom.nrows();
+        let off = geom.offset_in_row(1, 1);
+        let len = geom.block_len(1, 1);
+        let mut views = views;
+        views[nrows - 1][off..off + len].copy_from_slice(&[1.5, 2.5, 3.5]);
+        arena.mark(1, 1);
+        let mut acc = BlockAccumulator::new();
+        arena.drain_into(&mut acc);
+        let p = acc.into_panel();
+        assert_eq!(p.block(0), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn for_pairs_allocates_only_touched_rows_and_cols() {
+        let (a, b) = panels();
+        // single surviving product: A entry 1 (row 2) × B entry 1 (col 3)
+        let arena = CArena::for_pairs(&a, &b, [(1usize, 1usize)]);
+        let g = arena.geometry();
+        assert_eq!((g.nrows(), g.ncols()), (1, 1));
+        assert_eq!(g.row_coord(0), (2, 3));
+        assert_eq!(g.col_coord(0), (3, 1));
+        assert_eq!(arena.data_bytes(), 3 * 8);
+        assert_eq!(g.locate(2, 3), Some((0, 0)));
+        assert_eq!(g.locate(0, 0), None, "untouched blocks are not laid out");
+        // the full tile is strictly larger
+        assert!(CArena::build(&a, &b).data_bytes() > arena.data_bytes());
+    }
+
+    #[test]
+    fn empty_panels_empty_arena() {
+        let arena = CArena::build(&Panel::new(), &Panel::new());
+        assert_eq!(arena.geometry().nrows(), 0);
+        assert_eq!(arena.data_bytes(), 0);
+        let mut acc = BlockAccumulator::new();
+        arena.drain_into(&mut acc);
+        assert!(acc.is_empty());
+    }
+}

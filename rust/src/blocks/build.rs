@@ -25,12 +25,26 @@ impl BlockAccumulator {
     }
 
     /// Add (accumulate) a block contribution of dims `nr × nc`.
+    ///
+    /// Panics on a shape mismatch: a contribution whose dims disagree
+    /// with the already-accumulated block would silently corrupt the sum
+    /// (the old `debug_assert` vanished in release builds), so the check
+    /// is unconditional and carries full context.
     pub fn add_block(&mut self, row: u32, col: u32, nr: u16, nc: u16, data: &[f64]) {
-        debug_assert_eq!(data.len(), nr as usize * nc as usize);
+        assert_eq!(
+            data.len(),
+            nr as usize * nc as usize,
+            "add_block({row},{col}): data length {} does not match dims {nr}x{nc}",
+            data.len()
+        );
         match self.blocks.entry((row, col)) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 let (enr, enc, acc) = e.get_mut();
-                debug_assert_eq!((*enr, *enc), (nr, nc), "block shape changed");
+                assert!(
+                    (*enr, *enc) == (nr, nc),
+                    "add_block({row},{col}): block shape changed — accumulated \
+                     {enr}x{enc}, contribution is {nr}x{nc}"
+                );
                 for (x, &y) in acc.iter_mut().zip(data) {
                     *x += y;
                 }
@@ -43,12 +57,18 @@ impl BlockAccumulator {
 
     /// Mutable access to the block at `(row, col)`, zero-initialized if
     /// absent — the in-place accumulation target the microkernel writes
-    /// into (avoids a temporary product buffer).
+    /// into (avoids a temporary product buffer).  Panics (with context)
+    /// if the block exists with different dims.
     pub fn block_mut(&mut self, row: u32, col: u32, nr: u16, nc: u16) -> &mut [f64] {
-        let (_, _, data) = self
+        let (enr, enc, data) = self
             .blocks
             .entry((row, col))
             .or_insert_with(|| (nr, nc, vec![0.0; nr as usize * nc as usize]));
+        assert!(
+            (*enr, *enc) == (nr, nc),
+            "block_mut({row},{col}): block shape changed — accumulated \
+             {enr}x{enc}, requested {nr}x{nc}"
+        );
         data
     }
 
@@ -74,7 +94,11 @@ impl BlockAccumulator {
     }
 
     /// Convert into a panel (entries sorted by (row, col) for
-    /// determinism).
+    /// determinism).  Deliberately *not* indexed: these panels flow into
+    /// the C-reduction/assembly edges (`add_panel`, `into_matrix`),
+    /// which never consult a [`crate::blocks::panel::PanelIndex`]; the
+    /// rare multiplied consumer hits `assemble_tasks`' cold-cache
+    /// fallback instead.
     pub fn into_panel(self) -> Panel {
         let mut items: Vec<((u32, u32), (u16, u16, Vec<f64>))> =
             self.blocks.into_iter().collect();
@@ -157,6 +181,22 @@ mod tests {
         let p = acc.into_panel();
         let coords: Vec<(u32, u32)> = p.entries.iter().map(|e| (e.row, e.col)).collect();
         assert_eq!(coords, vec![(0, 1), (0, 3), (1, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape changed")]
+    fn add_block_rejects_shape_change() {
+        let mut acc = BlockAccumulator::new();
+        acc.add_block(3, 5, 2, 2, &[1.0; 4]);
+        acc.add_block(3, 5, 1, 4, &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape changed")]
+    fn block_mut_rejects_shape_change() {
+        let mut acc = BlockAccumulator::new();
+        acc.block_mut(0, 1, 2, 3);
+        acc.block_mut(0, 1, 3, 2);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! Blocked rows and columns form a grid of blocks stored in blocked
 //! compressed-sparse-row format.
 
+pub mod arena;
 pub mod build;
 pub mod dense;
 pub mod filter;

@@ -24,14 +24,109 @@ pub struct PanelEntry {
     pub off: usize,
 }
 
-/// A block-sparse matrix fragment with contiguous data storage.
+/// Sorted CSR-style grouping of entry indices by one key (block row or
+/// block column): `ids` holds entry indices grouped by ascending key,
+/// `offs` delimits the groups.  Built once, by sorting — no hashing on
+/// the assembly hot path.
 #[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrIndex {
+    /// Distinct keys, ascending.
+    keys: Vec<u32>,
+    /// Group boundaries into `ids` (`len == keys.len() + 1`).
+    offs: Vec<u32>,
+    /// Entry indices, grouped by key; within a group, ascending.
+    ids: Vec<u32>,
+}
+
+impl CsrIndex {
+    /// Build from the per-entry keys (entry `i` has key `keys[i]`).
+    pub fn build<I: IntoIterator<Item = u32>>(entry_keys: I) -> CsrIndex {
+        let mut pairs: Vec<(u32, u32)> = entry_keys
+            .into_iter()
+            .enumerate()
+            .map(|(i, k)| (k, i as u32))
+            .collect();
+        pairs.sort_unstable();
+        let mut keys = Vec::new();
+        let mut offs = Vec::new();
+        let mut ids = Vec::with_capacity(pairs.len());
+        for (k, id) in pairs {
+            if keys.last() != Some(&k) {
+                keys.push(k);
+                offs.push(ids.len() as u32);
+            }
+            ids.push(id);
+        }
+        offs.push(ids.len() as u32);
+        CsrIndex { keys, offs, ids }
+    }
+
+    /// Number of distinct keys.
+    pub fn ngroups(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// The `g`-th distinct key (ascending order).
+    pub fn key(&self, g: usize) -> u32 {
+        self.keys[g]
+    }
+
+    /// Entry indices of the `g`-th group.
+    pub fn group(&self, g: usize) -> &[u32] {
+        &self.ids[self.offs[g] as usize..self.offs[g + 1] as usize]
+    }
+
+    /// Entry indices with the given key (binary search; empty if absent).
+    pub fn lookup(&self, key: u32) -> &[u32] {
+        match self.keys.binary_search(&key) {
+            Ok(g) => self.group(g),
+            Err(_) => &[],
+        }
+    }
+}
+
+/// The panel's sorted row/column directory, built once at construction
+/// (see [`Panel::reindex`]).  The merge-join task assembly of
+/// `local::batch::assemble_tasks` walks `a.by_col` against `b.by_row`
+/// instead of rebuilding a `HashMap` per call.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PanelIndex {
+    /// Entries grouped by block row.
+    pub by_row: CsrIndex,
+    /// Entries grouped by block column.
+    pub by_col: CsrIndex,
+}
+
+impl PanelIndex {
+    /// Build both groupings for a panel.
+    pub fn build(entries: &[PanelEntry]) -> PanelIndex {
+        PanelIndex {
+            by_row: CsrIndex::build(entries.iter().map(|e| e.row)),
+            by_col: CsrIndex::build(entries.iter().map(|e| e.col)),
+        }
+    }
+}
+
+/// A block-sparse matrix fragment with contiguous data storage.
+#[derive(Clone, Debug, Default)]
 pub struct Panel {
     pub entries: Vec<PanelEntry>,
     pub data: Vec<f64>,
     /// Cached per-entry Frobenius norms (computed on construction; the
     /// on-the-fly filter reads these instead of re-reducing block data).
     pub norms: Vec<f64>,
+    /// Cached row/column directory; `None` after mutation, rebuilt by
+    /// [`Panel::reindex`].  Travels with clones, so a panel indexed at
+    /// its home rank arrives indexed after a (simulated) transfer.
+    index: Option<Box<PanelIndex>>,
+}
+
+/// Equality is over the block content only — the cached [`PanelIndex`]
+/// is derived data and must not distinguish panels.
+impl PartialEq for Panel {
+    fn eq(&self, other: &Self) -> bool {
+        self.entries == other.entries && self.data == other.data && self.norms == other.norms
+    }
 }
 
 impl Panel {
@@ -39,7 +134,8 @@ impl Panel {
         Self::default()
     }
 
-    /// Append one block (data copied; norm cached).
+    /// Append one block (data copied; norm cached).  Invalidates the
+    /// cached index; call [`Panel::reindex`] after the last push.
     pub fn push_block(&mut self, row: u32, col: u32, nr: u16, nc: u16, data: &[f64]) {
         debug_assert_eq!(data.len(), nr as usize * nc as usize);
         self.entries.push(PanelEntry {
@@ -51,6 +147,27 @@ impl Panel {
         });
         self.norms.push(block_norm(data));
         self.data.extend_from_slice(data);
+        self.index = None;
+    }
+
+    /// (Re)build the sorted row/column directory.  Construction helpers
+    /// whose panels get *multiplied* (`matrix_to_panel`, the
+    /// distribution splits) call this once after the last `push_block`,
+    /// so the multiply hot path never rebuilds an index; panels on the
+    /// reduction/assembly edges stay unindexed on purpose.
+    pub fn reindex(&mut self) {
+        self.index = Some(Box::new(PanelIndex::build(&self.entries)));
+    }
+
+    /// Builder-style [`Panel::reindex`].
+    pub fn with_index(mut self) -> Self {
+        self.reindex();
+        self
+    }
+
+    /// The cached index, if the panel is unchanged since `reindex`.
+    pub fn index(&self) -> Option<&PanelIndex> {
+        self.index.as_deref()
     }
 
     /// Number of blocks.
@@ -95,7 +212,8 @@ impl Panel {
     }
 
     /// Merge another panel into this one (concatenation; no dedup —
-    /// panels from disjoint owners never overlap).
+    /// panels from disjoint owners never overlap).  Invalidates the
+    /// cached index.
     pub fn extend_from(&mut self, other: &Panel) {
         let base = self.data.len();
         for en in &other.entries {
@@ -106,6 +224,7 @@ impl Panel {
         }
         self.data.extend_from_slice(&other.data);
         self.norms.extend_from_slice(&other.norms);
+        self.index = None;
     }
 }
 
@@ -169,5 +288,55 @@ mod tests {
         let p = Panel::new();
         assert!(p.is_empty());
         assert_eq!(p.wire_bytes(), 0);
+    }
+
+    #[test]
+    fn csr_index_groups_match_hashmap() {
+        let p = sample();
+        let ix = PanelIndex::build(&p.entries);
+        // by_row: row 0 -> {0, 2}, row 3 -> {1}
+        assert_eq!(ix.by_row.ngroups(), 2);
+        assert_eq!(ix.by_row.key(0), 0);
+        assert_eq!(ix.by_row.group(0), &[0, 2]);
+        assert_eq!(ix.by_row.lookup(3), &[1]);
+        assert_eq!(ix.by_row.lookup(7), &[] as &[u32]);
+        // by_col: col 1 -> {0, 1}, col 2 -> {2}
+        assert_eq!(ix.by_col.lookup(1), &[0, 1]);
+        assert_eq!(ix.by_col.lookup(2), &[2]);
+        // agreement with the HashMap helpers
+        for (k, v) in p.index_by_row() {
+            assert_eq!(
+                ix.by_row.lookup(k),
+                v.iter().map(|&x| x as u32).collect::<Vec<_>>().as_slice()
+            );
+        }
+    }
+
+    #[test]
+    fn index_cached_and_invalidated() {
+        let mut p = sample();
+        assert!(p.index().is_none(), "raw pushes leave the panel unindexed");
+        p.reindex();
+        assert!(p.index().is_some());
+        let q = p.clone();
+        assert!(q.index().is_some(), "index travels with clones");
+        p.push_block(9, 9, 1, 1, &[1.0]);
+        assert!(p.index().is_none(), "push invalidates");
+        p.reindex();
+        let mut r = p.clone();
+        r.extend_from(&q);
+        assert!(r.index().is_none(), "extend invalidates");
+        // equality ignores the cached index
+        let mut s = sample();
+        assert_eq!(s, s.clone().with_index());
+        s.reindex();
+        assert_eq!(s, sample());
+    }
+
+    #[test]
+    fn csr_index_empty() {
+        let ix = CsrIndex::build(std::iter::empty());
+        assert_eq!(ix.ngroups(), 0);
+        assert_eq!(ix.lookup(0), &[] as &[u32]);
     }
 }

@@ -159,6 +159,11 @@ impl Distribution2d {
                 blk,
             );
         }
+        for row in &mut panels {
+            for p in row {
+                p.reindex();
+            }
+        }
         panels
     }
 
@@ -176,6 +181,11 @@ impl Distribution2d {
                 b.col_layout().size(c) as u16,
                 blk,
             );
+        }
+        for row in &mut panels {
+            for p in row {
+                p.reindex();
+            }
         }
         panels
     }

@@ -34,7 +34,8 @@ use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::pipeline::{BufferPool, TickWindow};
 use crate::engines::schedule::cannon_vk;
-use crate::local::batch::{multiply_panels_native, LocalMultStats};
+use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
+use crate::local::stackflow::NativeStackExecutor;
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
 use crate::stats::timers::Timers;
 
@@ -68,17 +69,20 @@ fn panelset_bytes(set: &HashMap<u64, Panel>) -> u64 {
     set.values().map(|p| 8 + p.wire_bytes() as u64).sum()
 }
 
-/// Run Algorithm 1 on one rank.  `eps` is the on-the-fly filter threshold.
+/// Run Algorithm 1 on one rank.  `eps` is the on-the-fly filter
+/// threshold; `threads` sizes the intra-rank stack-executor worker pool.
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
     topo: &Topology25d,
     input: RankInput,
     eps: f64,
+    threads: usize,
 ) -> RankOutput {
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
     let v = topo.v;
+    let exec = NativeStackExecutor::new(threads);
     let mut timers = Timers::new();
     let mut log = RankLog::new(EngineKind::Ptp);
     let mut mult_stats = LocalMultStats::default();
@@ -206,7 +210,8 @@ pub fn run_rank(
         let (pa, pb) = (comp_a.get(&vk), comp_b.get(&vk));
         if let (Some(pa), Some(pb)) = (pa, pb) {
             let s = timers.time("cannon/local_multiply", || {
-                multiply_panels_native(pa, pb, eps, &mut c_acc)
+                multiply_panels_stacked(pa, pb, eps, &mut c_acc, &exec)
+                    .expect("native stack executor is infallible")
             });
             comm.advance_compute_flops(s.flops);
             mult_stats.merge(&s);

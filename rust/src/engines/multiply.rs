@@ -52,7 +52,7 @@ impl Engine {
 }
 
 /// Multiplication configuration.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct MultiplyConfig {
     pub engine: Engine,
     pub filter: FilterConfig,
@@ -62,6 +62,23 @@ pub struct MultiplyConfig {
     /// transfers, flop rate for the compute that hides them).  Defaults
     /// to the 50 GF/s Piz Daint calibration.
     pub machine: Option<MachineModel>,
+    /// Intra-rank worker threads of the native stack executor (paper §4:
+    /// 1 rank × 8 OpenMP threads).  Virtual compute time is priced at
+    /// `flop_rate × thread_efficiency(threads)`; see
+    /// [`MachineModel::thread_efficiency`].
+    pub threads_per_rank: usize,
+}
+
+impl Default for MultiplyConfig {
+    fn default() -> Self {
+        Self {
+            engine: Engine::default(),
+            filter: FilterConfig::default(),
+            strict_topology: false,
+            machine: None,
+            threads_per_rank: 1,
+        }
+    }
 }
 
 /// Result + instrumentation of one distributed multiplication.
@@ -90,7 +107,9 @@ pub struct MultiplyReport {
     pub peak_fetch_bytes: u64,
     /// Peak bytes of the partial-C accumulations (2.5D only).
     pub peak_partial_c_bytes: u64,
-    /// Machine the fabric priced virtual time with.
+    /// Machine the fabric priced virtual time with — already scaled by
+    /// `thread_efficiency(threads_per_rank)`, so modeling/cross-checking
+    /// against it matches the executed schedule.
     pub fabric_machine: MachineModel,
     /// Topology actually used (after any fallback).
     pub topo: Topology25d,
@@ -214,7 +233,14 @@ pub fn multiply_distributed(
         inputs.into_iter().map(|x| Mutex::new(Some(x))).collect();
 
     // ---- run the world ------------------------------------------------
-    let machine = cfg.machine.unwrap_or_else(|| MachineModel::piz_daint(50e9));
+    let threads = cfg.threads_per_rank.max(1);
+    // The fabric executes (and the overlap model prices) compute at the
+    // thread-scaled effective rate, so wait/comm cross-checks stay honest
+    // with node parallelism.
+    let machine = cfg
+        .machine
+        .unwrap_or_else(|| MachineModel::piz_daint(50e9))
+        .with_threads(threads);
     let fabric = FabricConfig {
         net: machine.net,
         flop_rate: machine.flop_rate,
@@ -237,6 +263,7 @@ pub fn multiply_distributed(
                         b_panels: b_in,
                     },
                     eps,
+                    threads,
                 );
                 (
                     out.c_acc,
@@ -257,6 +284,7 @@ pub fn multiply_distributed(
                         b_window: b_in,
                     },
                     eps,
+                    threads,
                 );
                 (
                     out.c_acc,
@@ -444,6 +472,34 @@ mod tests {
             let diff = report.c.to_dense().max_abs_diff(&want.to_dense());
             assert!(diff < 1e-10, "{}: {diff}", engine.label());
         }
+    }
+
+    #[test]
+    fn worker_threads_preserve_results_and_scale_pricing() {
+        let (a, b, l) = setup(16, 3, 0.4, 90);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 91);
+        let run = |threads: usize| {
+            let cfg = MultiplyConfig {
+                engine: Engine::OneSided { l: 1 },
+                threads_per_rank: threads,
+                ..Default::default()
+            };
+            multiply_distributed(&a, &b, None, &dist, &cfg).unwrap()
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        // identical numerics (worker partition preserves per-block order)
+        assert_eq!(r1.c.to_dense().max_abs_diff(&r4.c.to_dense()), 0.0);
+        assert_eq!(r1.mult_stats.products, r4.mult_stats.products);
+        // the fabric machine carries the Amdahl-scaled flop rate
+        let base = MachineModel::piz_daint(50e9);
+        assert_eq!(r1.fabric_machine.flop_rate, base.flop_rate);
+        let scaled = base.flop_rate * base.thread_efficiency(4);
+        assert_eq!(r4.fabric_machine.flop_rate, scaled);
+        // stack-flow accounting reaches the merged report
+        assert!(r1.mult_stats.stacks > 0);
+        assert!(!r1.mult_stats.by_dims.is_empty());
     }
 
     #[test]

@@ -39,7 +39,8 @@ use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::pipeline::{BatchPrefetch, FetchDesc, PrefetchQueue};
 use crate::engines::schedule::{osl_tick_products, osl_vk};
-use crate::local::batch::{multiply_panels_native, LocalMultStats};
+use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
+use crate::local::stackflow::NativeStackExecutor;
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
 use crate::stats::timers::Timers;
 
@@ -79,16 +80,19 @@ fn acc_bytes(acc: &BlockAccumulator) -> u64 {
     (acc.nelements() * 8 + acc.nblocks() * 24) as u64
 }
 
-/// Run Algorithm 2 on one rank.
+/// Run Algorithm 2 on one rank.  `threads` sizes the intra-rank
+/// stack-executor worker pool.
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
     topo: &Topology25d,
     input: RankInput,
     eps: f64,
+    threads: usize,
 ) -> RankOutput {
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
+    let exec = NativeStackExecutor::new(threads);
     let mut timers = Timers::new();
     let mut log = RankLog::new(EngineKind::OneSided);
     let mut mult_stats = LocalMultStats::default();
@@ -207,7 +211,8 @@ pub fn run_rank(
             let idx = b * topo.l_r + a;
             let pb = &cur_b.as_ref().unwrap().1;
             let s = timers.time("osl/local_multiply", || {
-                multiply_panels_native(&a_bufs[a], pb, eps, &mut partials[idx])
+                multiply_panels_stacked(&a_bufs[a], pb, eps, &mut partials[idx], &exec)
+                    .expect("native stack executor is infallible")
             });
             comm.advance_compute_flops(s.flops);
             mult_stats.merge(&s);

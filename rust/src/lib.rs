@@ -18,9 +18,12 @@
 //!   with point-to-point communication (paper Algorithm 1, the baseline)
 //!   and the 2.5D one-sided algorithm (paper Algorithm 2, the
 //!   contribution);
-//! * [`local`] — the node-local batched block multiplication with
-//!   DBCSR's on-the-fly norm filter (the LIBSMM role), feeding either a
-//!   native microkernel or the AOT-compiled Pallas kernel via [`runtime`];
+//! * [`local`] — the node-local stack-flow multiplication with DBCSR's
+//!   on-the-fly norm filter (the LIBSMM role): merge-join task assembly,
+//!   homogeneous per-shape stacks and a dense C arena, executed by the
+//!   native microkernel under an intra-rank worker pool
+//!   (`threads_per_rank`) or by the AOT-compiled Pallas kernel via
+//!   [`runtime`];
 //! * [`runtime`] — PJRT CPU client that loads `artifacts/*.hlo.txt`
 //!   produced by `python/compile/aot.py`;
 //! * [`perfmodel`] — virtual-time replay of both engines' schedules at

@@ -1,15 +1,21 @@
 //! Batch assembly + execution of one local multiplication
 //! `C_panel += A_panel · B_panel` with DBCSR's on-the-fly filter.
 //!
-//! Block pairs are matched on the inner dimension (`A.col == B.row`),
-//! their norm product is tested against the filtering threshold, and the
-//! surviving products are executed — by the native microkernel here, or
-//! packed into fixed-capacity stacks for the AOT Pallas kernel
-//! (`stacks.rs` / `runtime/gemm.rs`).
+//! Block pairs are matched on the inner dimension (`A.col == B.row`) by a
+//! **merge-join** over the panels' sorted CSR indices (built once at
+//! panel construction — no per-call `HashMap`), their norm product is
+//! tested against the filtering threshold, and the surviving products
+//! flow through the stack machinery of [`crate::local::stackflow`]:
+//! binned into homogeneous per-`(bm, bk, bn)` stacks and dispatched to a
+//! [`StackExecutor`] — the native microkernel with an intra-rank worker
+//! pool, or the AOT Pallas kernel via PJRT — which accumulates into a
+//! dense [`CArena`].
 
+use crate::blocks::arena::CArena;
 use crate::blocks::build::BlockAccumulator;
-use crate::blocks::panel::Panel;
+use crate::blocks::panel::{CsrIndex, Panel};
 use crate::local::microkernel::{gemm_acc, gemm_flops};
+use crate::local::stackflow::{build_stacks, NativeStackExecutor, StackExecutor};
 
 /// One surviving block product: indices into the A and B panels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -18,8 +24,20 @@ pub struct ProductTask {
     pub b_entry: usize,
 }
 
+/// Per-`(bm, bk, bn)` slice of the executed-flop histogram.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DimsFlops {
+    pub bm: u16,
+    pub bk: u16,
+    pub bn: u16,
+    /// Products executed at these dims.
+    pub products: u64,
+    /// FLOPs executed at these dims.
+    pub flops: f64,
+}
+
 /// Statistics of one local multiplication.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LocalMultStats {
     /// Products that passed the norm filter and were executed.
     pub products: u64,
@@ -27,6 +45,15 @@ pub struct LocalMultStats {
     pub filtered: u64,
     /// FLOPs actually executed.
     pub flops: f64,
+    /// Homogeneous stacks dispatched to an executor.
+    pub stacks: u64,
+    /// Dispatch slots of those stacks (`stacks × capacity`); the packed
+    /// PJRT path pads to its artifact capacity, the native path batches
+    /// at [`crate::local::stackflow::STACK_CAPACITY`].
+    pub stack_slots: u64,
+    /// Executed-flop histogram per block-product dims, sorted by
+    /// `(bm, bk, bn)`.
+    pub by_dims: Vec<DimsFlops>,
 }
 
 impl LocalMultStats {
@@ -34,40 +61,110 @@ impl LocalMultStats {
         self.products += other.products;
         self.filtered += other.filtered;
         self.flops += other.flops;
+        self.stacks += other.stacks;
+        self.stack_slots += other.stack_slots;
+        for d in &other.by_dims {
+            self.record_dims(d.bm, d.bk, d.bn, d.products, d.flops);
+        }
+    }
+
+    /// Fold `products` executed products of shape `bm×bk×bn` into the
+    /// histogram (kept sorted by dims).
+    pub fn record_dims(&mut self, bm: u16, bk: u16, bn: u16, products: u64, flops: f64) {
+        match self
+            .by_dims
+            .binary_search_by_key(&(bm, bk, bn), |d| (d.bm, d.bk, d.bn))
+        {
+            Ok(i) => {
+                self.by_dims[i].products += products;
+                self.by_dims[i].flops += flops;
+            }
+            Err(i) => self.by_dims.insert(
+                i,
+                DimsFlops {
+                    bm,
+                    bk,
+                    bn,
+                    products,
+                    flops,
+                },
+            ),
+        }
+    }
+
+    /// Average stack fill: executed products per dispatch slot (1.0 =
+    /// every dispatched stack ran full).
+    pub fn stack_fill(&self) -> f64 {
+        if self.stack_slots == 0 {
+            0.0
+        } else {
+            self.products as f64 / self.stack_slots as f64
+        }
     }
 }
 
 /// Enumerate the surviving products of `A_panel · B_panel`.
 ///
-/// `eps < 0` disables the filter.  Matching indexes the B panel by block
-/// row and streams A entries: `O(|A| + |B| + matches)`.
+/// `eps < 0` disables the filter.  Matching merge-joins A's by-column
+/// index against B's by-row index — both cached on the panels (falling
+/// back to a one-off sort for hand-built panels): `O(|A| + |B| +
+/// matches)` with no hashing.
 pub fn assemble_tasks(
     a: &Panel,
     b: &Panel,
     eps: f64,
     stats: &mut LocalMultStats,
 ) -> Vec<ProductTask> {
-    let b_by_row = b.index_by_row();
+    let a_tmp;
+    let a_by_col = match a.index() {
+        Some(ix) => &ix.by_col,
+        None => {
+            a_tmp = CsrIndex::build(a.entries.iter().map(|e| e.col));
+            &a_tmp
+        }
+    };
+    let b_tmp;
+    let b_by_row = match b.index() {
+        Some(ix) => &ix.by_row,
+        None => {
+            b_tmp = CsrIndex::build(b.entries.iter().map(|e| e.row));
+            &b_tmp
+        }
+    };
     let mut tasks = Vec::new();
-    for (ae, aen) in a.entries.iter().enumerate() {
-        if let Some(bes) = b_by_row.get(&aen.col) {
-            let an = a.norms[ae];
-            for &be in bes {
-                if eps < 0.0 || an * b.norms[be] > eps {
-                    tasks.push(ProductTask {
-                        a_entry: ae,
-                        b_entry: be,
-                    });
-                } else {
-                    stats.filtered += 1;
+    let (mut ga, mut gb) = (0usize, 0usize);
+    while ga < a_by_col.ngroups() && gb < b_by_row.ngroups() {
+        let (ka, kb) = (a_by_col.key(ga), b_by_row.key(gb));
+        if ka < kb {
+            ga += 1;
+        } else if kb < ka {
+            gb += 1;
+        } else {
+            for &ae in a_by_col.group(ga) {
+                let an = a.norms[ae as usize];
+                for &be in b_by_row.group(gb) {
+                    if eps < 0.0 || an * b.norms[be as usize] > eps {
+                        tasks.push(ProductTask {
+                            a_entry: ae as usize,
+                            b_entry: be as usize,
+                        });
+                    } else {
+                        stats.filtered += 1;
+                    }
                 }
             }
+            ga += 1;
+            gb += 1;
         }
     }
     tasks
 }
 
-/// Execute tasks with the native microkernel, accumulating into `acc`.
+/// Execute tasks one by one with the native microkernel, accumulating
+/// straight into the HashMap-keyed `acc` — the **pre-stack-flow**
+/// execution path, kept as an independent correctness reference and as
+/// the baseline `benches/local_multiply.rs` measures the stack-flow
+/// speedup against.
 pub fn execute_tasks_native(
     a: &Panel,
     b: &Panel,
@@ -87,17 +184,70 @@ pub fn execute_tasks_native(
     }
 }
 
-/// One-call local multiplication: assemble + execute natively.
-pub fn multiply_panels_native(
+/// Pre-refactor reference multiplication: per-call `HashMap` row index +
+/// per-product HashMap accumulation (what the local layer did before the
+/// stack-flow refactor).  Benchmarked against, never on the engine path.
+pub fn multiply_panels_reference(
     a: &Panel,
     b: &Panel,
     eps: f64,
     acc: &mut BlockAccumulator,
 ) -> LocalMultStats {
     let mut stats = LocalMultStats::default();
-    let tasks = assemble_tasks(a, b, eps, &mut stats);
+    let b_by_row = b.index_by_row();
+    let mut tasks = Vec::new();
+    for (ae, aen) in a.entries.iter().enumerate() {
+        if let Some(bes) = b_by_row.get(&aen.col) {
+            let an = a.norms[ae];
+            for &be in bes {
+                if eps < 0.0 || an * b.norms[be] > eps {
+                    tasks.push(ProductTask {
+                        a_entry: ae,
+                        b_entry: be,
+                    });
+                } else {
+                    stats.filtered += 1;
+                }
+            }
+        }
+    }
     execute_tasks_native(a, b, &tasks, acc, &mut stats);
     stats
+}
+
+/// One-call stack-flow local multiplication: assemble (merge-join +
+/// filter), bin into homogeneous stacks, execute on `exec` into a dense
+/// C arena, and drain the arena into `acc`.
+pub fn multiply_panels_stacked(
+    a: &Panel,
+    b: &Panel,
+    eps: f64,
+    acc: &mut BlockAccumulator,
+    exec: &dyn StackExecutor,
+) -> anyhow::Result<LocalMultStats> {
+    let mut stats = LocalMultStats::default();
+    let tasks = assemble_tasks(a, b, eps, &mut stats);
+    if tasks.is_empty() {
+        return Ok(stats);
+    }
+    let mut arena = CArena::for_pairs(a, b, tasks.iter().map(|t| (t.a_entry, t.b_entry)));
+    let stacks = build_stacks(a, b, &tasks, &mut arena);
+    exec.execute(a, b, &stacks, &mut arena, &mut stats)?;
+    arena.drain_into(acc);
+    Ok(stats)
+}
+
+/// One-call local multiplication on the native single-threaded stack
+/// executor (the oracle path and the engines' `threads_per_rank = 1`
+/// configuration).
+pub fn multiply_panels_native(
+    a: &Panel,
+    b: &Panel,
+    eps: f64,
+    acc: &mut BlockAccumulator,
+) -> LocalMultStats {
+    multiply_panels_stacked(a, b, eps, acc, &NativeStackExecutor::single())
+        .expect("native stack executor is infallible")
 }
 
 /// Convert a whole matrix into one panel (single-rank / oracle path).
@@ -112,7 +262,7 @@ pub fn matrix_to_panel(m: &crate::blocks::matrix::BlockCsrMatrix) -> Panel {
             blk,
         );
     }
-    p
+    p.with_index()
 }
 
 #[cfg(test)]
@@ -135,6 +285,60 @@ mod tests {
         let c = acc.into_matrix(a.row_layout_arc(), b.col_layout_arc());
         let want = a.to_dense().matmul(&b.to_dense());
         assert!(c.to_dense().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn merge_join_matches_hashmap_assembly() {
+        // The merge-join assembly must enumerate exactly the products
+        // the old HashMap path did (as a set), with identical filter
+        // accounting — on ragged layouts and with the index cache cold.
+        let l = BlockLayout::from_sizes(vec![2, 3, 1, 4, 2]);
+        let a = BlockCsrMatrix::random(&l, &l, 0.7, 11);
+        let b = BlockCsrMatrix::random(&l, &l, 0.7, 12);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        for eps in [-1.0, 0.4] {
+            let mut s_new = LocalMultStats::default();
+            let new: Vec<(usize, usize)> = assemble_tasks(&pa, &pb, eps, &mut s_new)
+                .iter()
+                .map(|t| (t.a_entry, t.b_entry))
+                .collect();
+            let mut acc = BlockAccumulator::new();
+            let old_stats = multiply_panels_reference(&pa, &pb, eps, &mut acc);
+            assert_eq!(new.len() as u64, old_stats.products, "eps={eps}");
+            assert_eq!(s_new.filtered, old_stats.filtered, "eps={eps}");
+            // cold cache (hand-built panel without reindex) agrees too
+            let mut cold = pa.clone();
+            cold.push_block(0, 0, 2, 2, &[0.0; 4]); // invalidate, zero block
+            let mut s_cold = LocalMultStats::default();
+            let cold_tasks = assemble_tasks(&cold, &pb, eps, &mut s_cold);
+            assert!(cold.index().is_none());
+            assert!(cold_tasks.len() >= new.len());
+        }
+    }
+
+    #[test]
+    fn stacked_equals_reference_numerically() {
+        let l = BlockLayout::from_sizes(vec![3, 2, 3, 1, 2, 3]);
+        let a = BlockCsrMatrix::random(&l, &l, 0.6, 21);
+        let b = BlockCsrMatrix::random(&l, &l, 0.6, 22);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let mut acc_new = BlockAccumulator::new();
+        let s_new = multiply_panels_native(&pa, &pb, -1.0, &mut acc_new);
+        let mut acc_old = BlockAccumulator::new();
+        let s_old = multiply_panels_reference(&pa, &pb, -1.0, &mut acc_old);
+        assert_eq!(s_new.products, s_old.products);
+        assert_eq!(s_new.flops, s_old.flops);
+        let c_new = acc_new.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+        let c_old = acc_old.into_matrix(a.row_layout_arc(), b.col_layout_arc());
+        assert!(c_new.to_dense().max_abs_diff(&c_old.to_dense()) < 1e-12);
+        // stack-flow bookkeeping is populated
+        assert!(s_new.stacks > 0);
+        assert!(s_new.stack_slots >= s_new.products);
+        assert!(s_new.stack_fill() > 0.0 && s_new.stack_fill() <= 1.0);
+        let hist_products: u64 = s_new.by_dims.iter().map(|d| d.products).sum();
+        let hist_flops: f64 = s_new.by_dims.iter().map(|d| d.flops).sum();
+        assert_eq!(hist_products, s_new.products);
+        assert!((hist_flops - s_new.flops).abs() < 1e-9);
     }
 
     #[test]
@@ -206,5 +410,8 @@ mod tests {
         // 3x3 grid of blocks, all present: 3*3*3 = 27 products of 4x4x4
         assert_eq!(s.products, 27);
         assert_eq!(s.flops, 27.0 * 2.0 * 64.0);
+        // one uniform shape in the histogram
+        assert_eq!(s.by_dims.len(), 1);
+        assert_eq!(s.by_dims[0].products, 27);
     }
 }

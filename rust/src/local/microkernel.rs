@@ -22,11 +22,16 @@ pub enum GemmBackend {
 ///
 /// 4-row register blocking: each pass streams one `b` row against four
 /// `a` scalars, giving LLVM a branch-free inner loop it vectorizes and
-/// amortizing every `b` load over four FMAs.  Measured on the tuning box
-/// (`rust/EXPERIMENTS.md` §Perf, regenerate with `cargo bench --bench
-/// local_multiply`): 8.6–10.7 GFLOP/s at the paper's block sizes,
-/// 2.3–2.7× over the naive ikj/unroll-by-4 form — the earlier version's
-/// `a == 0` skip *defeated* vectorization and cost 2× on dense blocks.
+/// amortizing every `b` load over four FMAs — 2.3–2.7× over the naive
+/// ikj/unroll-by-4 form on the tuning box (the earlier version's
+/// `a == 0` skip *defeated* vectorization and cost 2× on dense blocks).
+/// Since the stack-flow refactor this kernel is dispatched per
+/// homogeneous stack by the [`crate::local::stackflow`] executors and
+/// accumulates into the dense C arena, so the per-kernel rate is no
+/// longer the local-multiply throughput: see `rust/EXPERIMENTS.md`
+/// §Perf for the current single-kernel and whole-path numbers and the
+/// `threads_per_rank` scaling table (regenerate both with `cargo bench
+/// --bench local_multiply`, which writes `BENCH_local_multiply.json`).
 #[inline]
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);

@@ -1,6 +1,10 @@
-//! Node-local multiplication: batch assembly, the native microkernel and
-//! the fixed-capacity stacks for the AOT/PJRT path.
+//! Node-local multiplication, stack-flow style: merge-join batch
+//! assembly, homogeneous product stacks dispatched through a
+//! [`stackflow::StackExecutor`] (native microkernel with an intra-rank
+//! worker pool, or the AOT Pallas kernel via the fixed-capacity packed
+//! stacks of [`stacks`]).
 
 pub mod batch;
 pub mod microkernel;
+pub mod stackflow;
 pub mod stacks;

@@ -8,9 +8,11 @@
 //! norm filter maps to exact-zero products — and scatters the results
 //! back into the block accumulator.
 
+use crate::blocks::arena::CArena;
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
 use crate::local::batch::ProductTask;
+use crate::local::stackflow::Stack;
 
 /// A packed batch ready for one kernel invocation.
 #[derive(Clone, Debug)]
@@ -91,6 +93,56 @@ pub fn pack_stacks(
     (stacks, leftovers)
 }
 
+/// Pack one homogeneous [`Stack`] into fixed-capacity f32 stacks for the
+/// AOT kernel (chunking at `capacity`, zero-padding the tail) — the
+/// bridge from the stack-flow binning to the PJRT artifact's static
+/// shape.
+pub fn pack_stack(a: &Panel, b: &Panel, stack: &Stack, capacity: usize) -> Vec<PackedStack> {
+    let (bm, bk, bn) = (stack.bm as usize, stack.bk as usize, stack.bn as usize);
+    let mut out = Vec::new();
+    for chunk in stack.entries.chunks(capacity.max(1)) {
+        let mut ps = PackedStack {
+            a: vec![0.0; capacity * bm * bk],
+            b: vec![0.0; capacity * bk * bn],
+            targets: Vec::with_capacity(chunk.len()),
+            capacity,
+            bm,
+            bk,
+            bn,
+        };
+        for (slot, e) in chunk.iter().enumerate() {
+            for (i, &v) in a.block(e.a_entry as usize).iter().enumerate() {
+                ps.a[slot * bm * bk + i] = v as f32;
+            }
+            for (i, &v) in b.block(e.b_entry as usize).iter().enumerate() {
+                ps.b[slot * bk * bn + i] = v as f32;
+            }
+            let aen = &a.entries[e.a_entry as usize];
+            let ben = &b.entries[e.b_entry as usize];
+            ps.targets.push((aen.row, ben.col));
+        }
+        out.push(ps);
+    }
+    out
+}
+
+/// Scatter a kernel output stack (`[n, bm, bn]` f32) into the dense C
+/// arena (the stack-flow accumulation target).
+pub fn scatter_results_arena(stack: &PackedStack, out: &[f32], arena: &mut CArena) {
+    assert_eq!(out.len(), stack.capacity * stack.bm * stack.bn);
+    let blk = stack.bm * stack.bn;
+    for (slot, &(row, col)) in stack.targets.iter().enumerate() {
+        let (ri, ci) = arena
+            .geometry()
+            .locate(row, col)
+            .expect("packed-stack target outside the C arena");
+        let dst = arena.block_mut(ri, ci);
+        for (d, &s) in dst.iter_mut().zip(&out[slot * blk..(slot + 1) * blk]) {
+            *d += s as f64;
+        }
+    }
+}
+
 /// Scatter a kernel output stack (`[n, bm, bn]` f32) into the accumulator.
 pub fn scatter_results(stack: &PackedStack, out: &[f32], acc: &mut BlockAccumulator) {
     assert_eq!(out.len(), stack.capacity * stack.bm * stack.bn);
@@ -155,6 +207,47 @@ mod tests {
         let packed: usize = stacks.iter().map(|s| s.len()).sum();
         assert_eq!(packed + leftovers.len(), tasks.len());
         assert!(packed > 0 && !leftovers.is_empty());
+    }
+
+    #[test]
+    fn pack_stack_chunks_and_scatters_into_arena() {
+        use crate::local::stackflow::build_stacks;
+        let (pa, pb) = uniform_panels(4, 2, (7, 8));
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let mut arena = CArena::build(&pa, &pb);
+        let stacks = build_stacks(&pa, &pb, &tasks, &mut arena);
+        assert_eq!(stacks.len(), 1, "uniform layout: one shape");
+        let packed = pack_stack(&pa, &pb, &stacks[0], 4);
+        let total: usize = packed.iter().map(|p| p.len()).sum();
+        assert_eq!(total, tasks.len());
+        assert!(packed.iter().all(|p| p.capacity == 4 && p.len() <= 4));
+        // emulate the kernel in f32 and scatter into the arena
+        for ps in &packed {
+            let mut out = vec![0.0f32; ps.capacity * 4];
+            for slot in 0..ps.capacity {
+                for i in 0..2 {
+                    for j in 0..2 {
+                        let mut v = 0.0f32;
+                        for p in 0..2 {
+                            v += ps.a[slot * 4 + i * 2 + p] * ps.b[slot * 4 + p * 2 + j];
+                        }
+                        out[slot * 4 + i * 2 + j] = v;
+                    }
+                }
+            }
+            scatter_results_arena(ps, &out, &mut arena);
+        }
+        let mut acc = BlockAccumulator::new();
+        arena.drain_into(&mut acc);
+        let mut acc64 = BlockAccumulator::new();
+        crate::local::batch::multiply_panels_native(&pa, &pb, -1.0, &mut acc64);
+        use crate::blocks::layout::BlockLayout;
+        use std::sync::Arc;
+        let l = Arc::new(BlockLayout::uniform(4, 2));
+        let c32 = acc.into_matrix(Arc::clone(&l), Arc::clone(&l));
+        let c64 = acc64.into_matrix(Arc::clone(&l), l);
+        assert!(c32.to_dense().max_abs_diff(&c64.to_dense()) < 1e-5);
     }
 
     #[test]

@@ -90,6 +90,7 @@ fn cmd_multiply() -> i32 {
         .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
         .opt("eps", "-1", "filter threshold (<0 = off)")
         .opt("seed", "42", "rng seed")
+        .opt("threads", "1", "intra-rank worker threads (stack executor)")
         .flag("verify", "compare against the dense oracle")
         .flag("json", "emit a machine-readable JSON report line")
         .parse_env(1)
@@ -113,24 +114,28 @@ fn cmd_multiply() -> i32 {
     // One machine for both views: the fabric executes (and the measured
     // overlap is priced) on the same calibration the analytic model uses.
     let machine = MachineModel::piz_daint(spec.node_flop_rate);
+    let threads: usize = args.get_as("threads");
     let cfg = MultiplyConfig {
         engine,
         filter: FilterConfig::uniform(args.get_as("eps")),
         machine: Some(machine),
+        threads_per_rank: threads,
         ..Default::default()
     };
     println!(
-        "benchmark={} blocks={}x{} (block size {}) grid={}x{} engine={}",
+        "benchmark={} blocks={}x{} (block size {}) grid={}x{} engine={} threads={}",
         spec.name,
         spec.nblocks,
         spec.nblocks,
         spec.block_size,
         grid.rows(),
         grid.cols(),
-        engine.label()
+        engine.label(),
+        threads.max(1)
     );
     let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
-    let (_, crit) = report.model(&machine);
+    // model on the thread-scaled machine the fabric executed with
+    let (_, crit) = report.model(&report.fabric_machine);
     println!(
         "C: {} blocks ({:.2}% occupied), {} products, {} filtered",
         report.c.nnz_blocks(),
@@ -160,7 +165,7 @@ fn cmd_multiply() -> i32 {
     if args.is_set("json") {
         println!(
             "{}",
-            dbcsr::stats::report::multiply_report_json(&report, &engine).to_string_compact()
+            dbcsr::stats::report::multiply_report_json(&report, &cfg).to_string_compact()
         );
     }
     if args.is_set("verify") {
@@ -183,6 +188,7 @@ fn cmd_sign() -> i32 {
         .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
         .opt("eps", "1e-7", "filter threshold")
         .opt("seed", "7", "rng seed")
+        .opt("threads", "1", "intra-rank worker threads (stack executor)")
         .parse_env(1)
     {
         Ok(a) => a,
@@ -201,6 +207,7 @@ fn cmd_sign() -> i32 {
     let cfg = MultiplyConfig {
         engine: parse_engine(args.get("engine")),
         filter: FilterConfig::uniform(args.get_as("eps")),
+        threads_per_rank: args.get_as("threads"),
         ..Default::default()
     };
     let (p, sign) =

@@ -17,7 +17,8 @@ use crate::comm::netmodel::NetModel;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MachineModel {
     pub net: NetModel,
-    /// Effective SpGEMM FLOP rate per rank (FLOP/s).
+    /// Effective SpGEMM FLOP rate per rank (FLOP/s) at one worker
+    /// thread; see [`MachineModel::thread_efficiency`] for the scaling.
     pub flop_rate: f64,
     /// Fixed per-tick overhead (batch/stack assembly, kernel launch,
     /// bookkeeping) — the strong-scaling floor that keeps compute from
@@ -27,6 +28,10 @@ pub struct MachineModel {
     /// CPU-only per the paper ("the accumulation operations are entirely
     /// executed by the CPU").
     pub accum_rate: f64,
+    /// Fraction of the local multiplication that parallelizes over the
+    /// intra-rank worker pool (Amdahl): stack execution scales, task
+    /// assembly / arena setup / the drain do not.
+    pub parallel_frac: f64,
 }
 
 impl MachineModel {
@@ -39,7 +44,32 @@ impl MachineModel {
             // 8 SNB cores streaming add: ~6 GB/s effective on pageable
             // buffers -> ~0.75e9 f64 accumulations/s.
             accum_rate: 0.75e9,
+            parallel_frac: 0.95,
         }
+    }
+
+    /// Effective speedup of `threads` intra-rank workers over one
+    /// (Amdahl's law with [`MachineModel::parallel_frac`]): compute is
+    /// priced in virtual time as
+    /// `flops / (flop_rate × thread_efficiency(threads))`, which is what
+    /// keeps the overlap cross-checks honest when the engines run with
+    /// `threads_per_rank > 1`.  `thread_efficiency(1) == 1` exactly.
+    pub fn thread_efficiency(&self, threads: usize) -> f64 {
+        if threads <= 1 {
+            return 1.0;
+        }
+        let t = threads as f64;
+        1.0 / ((1.0 - self.parallel_frac) + self.parallel_frac / t)
+    }
+
+    /// The machine as seen by a rank running `threads` stack workers:
+    /// the same network, with compute priced at
+    /// `flop_rate × thread_efficiency(threads)`.  Both the executing
+    /// fabric and the analytic overlap model use this scaled machine, so
+    /// measured-vs-modeled comparisons stay apples-to-apples.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.flop_rate *= self.thread_efficiency(threads);
+        self
     }
 
     /// Calibrations for the three paper benchmarks at a given job size.
@@ -60,6 +90,7 @@ impl MachineModel {
             flop_rate: rate,
             tick_overhead_s: overhead,
             accum_rate: 0.75e9,
+            parallel_frac: 0.95,
         }
     }
 }
@@ -87,5 +118,28 @@ mod tests {
         let m = MachineModel::piz_daint(1e9);
         assert_eq!(m.net, NetModel::aries());
         assert!(m.accum_rate > 0.0);
+    }
+
+    #[test]
+    fn thread_efficiency_is_amdahl() {
+        let m = MachineModel::piz_daint(1e9);
+        assert_eq!(m.thread_efficiency(1), 1.0);
+        assert_eq!(m.thread_efficiency(0), 1.0, "clamped to one worker");
+        let e2 = m.thread_efficiency(2);
+        let e8 = m.thread_efficiency(8);
+        assert!(e2 > 1.0 && e2 < 2.0, "sublinear: {e2}");
+        assert!(e8 > e2 && e8 < 8.0, "monotone but bounded: {e8}");
+        // Amdahl ceiling: 1 / (1 - parallel_frac)
+        assert!(m.thread_efficiency(1_000_000) < 1.0 / (1.0 - m.parallel_frac) + 1e-9);
+    }
+
+    #[test]
+    fn with_threads_scales_only_flop_rate() {
+        let m = MachineModel::piz_daint(1e9);
+        let m4 = m.with_threads(4);
+        assert_eq!(m4.flop_rate, 1e9 * m.thread_efficiency(4));
+        assert_eq!(m4.net, m.net);
+        assert_eq!(m4.accum_rate, m.accum_rate);
+        assert_eq!(m.with_threads(1), m);
     }
 }

@@ -19,6 +19,12 @@
 //! transfer time; [`crosscheck_overlap`] compares that executed schedule
 //! against this module's analytic overlap model, validating one against
 //! the other.
+//!
+//! With `threads_per_rank > 1` workers in the stack executor, compute is
+//! priced as `flops / (flop_rate × thread_efficiency(threads))`: the
+//! driver hands both the fabric and this model the *thread-scaled*
+//! machine (`MachineModel::with_threads`), so the cross-checks remain
+//! apples-to-apples under node parallelism.
 
 use crate::perfmodel::machine::MachineModel;
 

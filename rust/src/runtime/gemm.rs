@@ -1,19 +1,26 @@
 //! Execute the AOT Pallas batched-GEMM (and sign-step) artifacts.
 //!
-//! The L3 side of the three-layer contract: `local/stacks.rs` packs the
-//! surviving block products into the kernel's static `[N, bm, bk]` shape;
-//! this module feeds the stacks through the compiled PJRT executable and
-//! scatters the results, falling back to the native microkernel for
-//! blocks with no matching AOT variant.
+//! The L3 side of the three-layer contract, unified behind the
+//! stack-flow seam: [`PjrtStackExecutor`] implements
+//! [`StackExecutor`](crate::local::stackflow::StackExecutor), so the
+//! same homogeneous stacks the native worker pool consumes are packed
+//! (`local/stacks.rs`) into the kernel's static `[N, bm, bk]` shape,
+//! run through the compiled PJRT executable and scattered into the dense
+//! C arena — falling back to the native microkernel for shapes with no
+//! matching AOT variant.  The executor is single-threaded by design: the
+//! CPU PJRT client is not thread-safe (see `runtime/client.rs`), so
+//! `threads_per_rank > 1` belongs to the native executor only.
 //!
 //! Without the `pjrt` cargo feature the executors below return an error
 //! unconditionally — consistent with the stub [`PjrtContext`], which can
 //! never be constructed in that configuration.
 
+use crate::blocks::arena::CArena;
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
-use crate::local::batch::{assemble_tasks, execute_tasks_native, LocalMultStats};
-use crate::local::stacks::{pack_stacks, scatter_results, PackedStack};
+use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
+use crate::local::stackflow::{NativeStackExecutor, Stack, StackExecutor};
+use crate::local::stacks::{pack_stack, scatter_results_arena, PackedStack};
 use crate::runtime::client::PjrtContext;
 
 /// Execute one packed stack on its AOT variant.  `eps` is the on-the-fly
@@ -62,12 +69,65 @@ pub fn execute_stack(
     anyhow::bail!("PJRT support is disabled (vendor `xla` and rebuild with `--features pjrt`)")
 }
 
+/// The AOT-kernel stack executor: every homogeneous stack with a
+/// matching artifact variant runs on the Pallas kernel (packed f32,
+/// padded to the artifact capacity), everything else falls back to the
+/// single-threaded native microkernel — both into the same dense C
+/// arena.
+pub struct PjrtStackExecutor<'a> {
+    pub ctx: &'a PjrtContext,
+}
+
+impl StackExecutor for PjrtStackExecutor<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(
+        &self,
+        a: &Panel,
+        b: &Panel,
+        stacks: &[Stack],
+        arena: &mut CArena,
+        stats: &mut LocalMultStats,
+    ) -> anyhow::Result<()> {
+        for stack in stacks {
+            let (bm, bk, bn) = (stack.bm as usize, stack.bk as usize, stack.bn as usize);
+            match self.ctx.gemm_variant(bm, bk, bn) {
+                Some(variant) => {
+                    let cap = variant.spec.capacity;
+                    for ps in &pack_stack(a, b, stack, cap) {
+                        // The filter already ran in assemble_tasks;
+                        // eps < 0 keeps every real slot, and zero
+                        // padding contributes zero.
+                        let out = execute_stack(self.ctx, ps, -1.0)?;
+                        scatter_results_arena(ps, &out, arena);
+                        let n = ps.len() as u64;
+                        let fl = n as f64 * 2.0 * (bm * bk * bn) as f64;
+                        stats.products += n;
+                        stats.flops += fl;
+                        stats.stacks += 1;
+                        stats.stack_slots += cap as u64;
+                        stats.record_dims(stack.bm, stack.bk, stack.bn, n, fl);
+                    }
+                }
+                None => {
+                    let native = NativeStackExecutor::single();
+                    native.execute(a, b, std::slice::from_ref(stack), arena, stats)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Local multiplication `C += A_panel · B_panel` through the AOT kernel.
 ///
-/// Uniform-shaped products go through the Pallas artifact in batches of
-/// its capacity; ragged leftovers run on the native microkernel.  The
-/// numeric contract is f32 on the kernel path (documented deviation from
-/// DBCSR's f64; the validation tests bound the error).
+/// Stack-flow with the PJRT executor: products with a matching AOT
+/// variant go through the Pallas artifact in batches of its capacity;
+/// ragged leftovers run on the native microkernel.  The numeric contract
+/// is f32 on the kernel path (documented deviation from DBCSR's f64; the
+/// validation tests bound the error).
 pub fn multiply_panels_pjrt(
     ctx: &PjrtContext,
     a: &Panel,
@@ -75,32 +135,7 @@ pub fn multiply_panels_pjrt(
     eps: f64,
     acc: &mut BlockAccumulator,
 ) -> anyhow::Result<LocalMultStats> {
-    let mut stats = LocalMultStats::default();
-    let tasks = assemble_tasks(a, b, eps, &mut stats);
-    if tasks.is_empty() {
-        return Ok(stats);
-    }
-    // Group by the (single) dominant uniform shape; leftovers go native.
-    let aen = &a.entries[tasks[0].a_entry];
-    let ben = &b.entries[tasks[0].b_entry];
-    let (bm, bk, bn) = (aen.nr as usize, aen.nc as usize, ben.nc as usize);
-    match ctx.gemm_variant(bm, bk, bn) {
-        Some(variant) => {
-            let cap = variant.spec.capacity;
-            let (stacks, leftovers) = pack_stacks(a, b, &tasks, bm, bk, bn, cap);
-            for stack in &stacks {
-                // The filter already ran in assemble_tasks; eps < 0 keeps
-                // every real slot, and zero padding contributes zero.
-                let out = execute_stack(ctx, stack, -1.0)?;
-                scatter_results(stack, &out, acc);
-                stats.products += stack.len() as u64;
-                stats.flops += stack.len() as f64 * 2.0 * (bm * bk * bn) as f64;
-            }
-            execute_tasks_native(a, b, &leftovers, acc, &mut stats);
-        }
-        None => execute_tasks_native(a, b, &tasks, acc, &mut stats),
-    }
-    Ok(stats)
+    multiply_panels_stacked(a, b, eps, acc, &PjrtStackExecutor { ctx })
 }
 
 /// One dense sign-iteration step `X ← ½ X (3I − X²)` on the AOT artifact.

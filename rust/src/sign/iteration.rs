@@ -9,7 +9,7 @@ use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyErr
 use crate::local::batch::LocalMultStats;
 
 /// Per-iteration trace entry.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SignIterStats {
     pub iter: usize,
     /// ‖X_{n+1} − X_n‖_F (convergence monitor).

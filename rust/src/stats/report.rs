@@ -221,7 +221,7 @@ pub fn fig4() -> String {
 /// (`dbcsr multiply --json`).
 pub fn multiply_report_json(
     rep: &crate::engines::multiply::MultiplyReport,
-    engine: &Engine,
+    cfg: &crate::engines::multiply::MultiplyConfig,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     let stats_arr: Vec<Json> = rep
@@ -235,16 +235,34 @@ pub fn multiply_report_json(
             ])
         })
         .collect();
+    let flop_hist: Vec<Json> = rep
+        .mult_stats
+        .by_dims
+        .iter()
+        .map(|d| {
+            Json::obj([
+                ("bm", Json::Num(d.bm as f64)),
+                ("bk", Json::Num(d.bk as f64)),
+                ("bn", Json::Num(d.bn as f64)),
+                ("products", Json::Num(d.products as f64)),
+                ("flops", Json::Num(d.flops)),
+            ])
+        })
+        .collect();
     let overlap = rep.overlap_summary();
     Json::obj([
-        ("engine", Json::Str(engine.label())),
+        ("engine", Json::Str(cfg.engine.label())),
         ("l", Json::Num(rep.topo.l as f64)),
         ("nticks", Json::Num(rep.topo.nticks() as f64)),
+        ("threads_per_rank", Json::Num(cfg.threads_per_rank.max(1) as f64)),
         ("c_nnz_blocks", Json::Num(rep.c.nnz_blocks() as f64)),
         ("c_occupancy", Json::Num(rep.c.occupancy())),
         ("products", Json::Num(rep.mult_stats.products as f64)),
         ("filtered", Json::Num(rep.mult_stats.filtered as f64)),
         ("flops", Json::Num(rep.mult_stats.flops)),
+        ("stacks", Json::Num(rep.mult_stats.stacks as f64)),
+        ("stack_fill", Json::Num(rep.mult_stats.stack_fill())),
+        ("flop_hist", Json::Arr(flop_hist)),
         ("post_filtered", Json::Num(rep.post_filtered as f64)),
         ("wall_s", Json::Num(rep.wall_s)),
         ("avg_requested_bytes", Json::Num(rep.avg_requested_bytes())),
@@ -313,7 +331,7 @@ mod tests {
             ..Default::default()
         };
         let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
-        let j = multiply_report_json(&rep, &engine);
+        let j = multiply_report_json(&rep, &cfg);
         let text = j.to_string_compact();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("engine").unwrap().as_str().unwrap(), "OS1");
@@ -323,6 +341,18 @@ mod tests {
         assert!(back.get("tick_comm_s").unwrap().as_f64().unwrap() > 0.0);
         let wait = back.get("tick_wait_s").unwrap().as_f64().unwrap();
         assert!(wait >= 0.0);
+        // stack-flow observables ride along too
+        assert_eq!(back.get("threads_per_rank").unwrap().as_f64().unwrap(), 1.0);
+        assert!(back.get("stacks").unwrap().as_f64().unwrap() > 0.0);
+        let fill = back.get("stack_fill").unwrap().as_f64().unwrap();
+        assert!(fill > 0.0 && fill <= 1.0);
+        let hist = back.get("flop_hist").unwrap().as_arr().unwrap();
+        assert!(!hist.is_empty());
+        let hist_products: f64 = hist
+            .iter()
+            .map(|h| h.get("products").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(hist_products, back.get("products").unwrap().as_f64().unwrap());
     }
 
     #[test]

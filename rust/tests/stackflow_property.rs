@@ -1,0 +1,112 @@
+//! Integration: stack-flow correctness on *heterogeneous* block layouts.
+//!
+//! Property: random ragged layouts multiplied through both engines (PTP
+//! and OS{l}) match the dense reference — with and without filtering, at
+//! 1 and N intra-rank worker threads.  This is the correctness net under
+//! the stack-flow refactor: homogeneous-stack binning, the dense C
+//! arena and the worker partition must be invisible in the numerics.
+
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
+use dbcsr::util::prng::Pcg64;
+use dbcsr::util::testkit::property;
+
+fn hetero_layout(rng: &mut Pcg64, nblocks: usize) -> BlockLayout {
+    BlockLayout::from_sizes((0..nblocks).map(|_| 1 + rng.usize_below(6)).collect())
+}
+
+#[test]
+fn hetero_layouts_match_dense_reference() {
+    // (engine, grid) pairs: the PTP baseline on a non-square grid and a
+    // genuinely replicated 2.5D topology (L = 4 valid on 4x4).
+    let cases: [(Engine, usize, usize); 2] = [
+        (Engine::PointToPoint, 2, 3),
+        (Engine::OneSided { l: 4 }, 4, 4),
+    ];
+    property("stack-flow hetero vs dense", 0xA11CE, 5, |rng, _| {
+        let nb = 6 + rng.usize_below(5);
+        let layout = hetero_layout(rng, nb);
+        let a = BlockCsrMatrix::random(&layout, &layout, 0.6, rng.next_u64());
+        let b = BlockCsrMatrix::random(&layout, &layout, 0.6, rng.next_u64());
+        let dense = a.to_dense().matmul(&b.to_dense());
+        let filter = FilterConfig {
+            on_the_fly_eps: 0.05,
+            post_eps: 0.02,
+        };
+        let filtered_want = multiply_oracle(&a, &b, None, &filter);
+        for (engine, pr, pc) in cases {
+            let grid = ProcGrid::new(pr, pc).unwrap();
+            let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, rng.next_u64());
+            for threads in [1usize, 4] {
+                // unfiltered: must reproduce the dense product
+                let cfg = MultiplyConfig {
+                    engine,
+                    threads_per_rank: threads,
+                    ..Default::default()
+                };
+                let rep =
+                    multiply_distributed(&a, &b, None, &dist, &cfg).map_err(|e| e.to_string())?;
+                let diff = rep.c.to_dense().max_abs_diff(&dense);
+                if diff > 1e-10 {
+                    return Err(format!(
+                        "{} {pr}x{pc} t={threads} unfiltered: diff {diff}",
+                        engine.label()
+                    ));
+                }
+                // filtered: must match the single-rank oracle with the
+                // same filter semantics
+                let cfg = MultiplyConfig {
+                    engine,
+                    filter,
+                    threads_per_rank: threads,
+                    ..Default::default()
+                };
+                let rep =
+                    multiply_distributed(&a, &b, None, &dist, &cfg).map_err(|e| e.to_string())?;
+                let diff = rep.c.to_dense().max_abs_diff(&filtered_want.to_dense());
+                if diff > 1e-10 {
+                    return Err(format!(
+                        "{} {pr}x{pc} t={threads} filtered: diff {diff}",
+                        engine.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn thread_count_invisible_in_engine_results() {
+    // The worker partition is by C-block ownership, so per-block
+    // accumulation order — and therefore the bits — cannot depend on
+    // the thread count.
+    let layout = BlockLayout::from_sizes(vec![2, 5, 3, 1, 4, 2, 3, 5]);
+    let a = BlockCsrMatrix::random(&layout, &layout, 0.5, 404);
+    let b = BlockCsrMatrix::random(&layout, &layout, 0.5, 405);
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 406);
+    for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+        let run = |threads: usize| {
+            let cfg = MultiplyConfig {
+                engine,
+                threads_per_rank: threads,
+                ..Default::default()
+            };
+            multiply_distributed(&a, &b, None, &dist, &cfg).unwrap().c.to_dense()
+        };
+        let c1 = run(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                c1.max_abs_diff(&run(threads)),
+                0.0,
+                "{} t={threads}: thread count changed the bits",
+                engine.label()
+            );
+        }
+    }
+}
