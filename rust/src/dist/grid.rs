@@ -57,6 +57,25 @@ impl ProcGrid {
         Self::new(best, p / best)
     }
 
+    /// All `P_R × P_C` factorizations of `p` (both orientations),
+    /// sorted squarest-first — the grid-shape candidate set the planner
+    /// (`engines::planner`) prices.  Empty for `p = 0`.
+    pub fn divisor_grids(p: usize) -> Vec<ProcGrid> {
+        let mut out = Vec::new();
+        let mut d = 1;
+        while d * d <= p {
+            if p % d == 0 {
+                out.push(Self { rows: d, cols: p / d });
+                if d != p / d {
+                    out.push(Self { rows: p / d, cols: d });
+                }
+            }
+            d += 1;
+        }
+        out.sort_by_key(|g| (g.rows.abs_diff(g.cols), g.rows));
+        out
+    }
+
     /// Number of process rows `P_R`.
     pub fn rows(&self) -> usize {
         self.rows
@@ -178,6 +197,29 @@ mod tests {
             assert!(g.rows() <= g.cols());
             assert_eq!(g.size(), p);
         }
+    }
+
+    #[test]
+    fn divisor_grids_enumerate_all_shapes() {
+        assert!(ProcGrid::divisor_grids(0).is_empty());
+        let one = ProcGrid::divisor_grids(1);
+        assert_eq!(one.len(), 1);
+        assert_eq!((one[0].rows(), one[0].cols()), (1, 1));
+        // 12 = 1x12, 12x1, 2x6, 6x2, 3x4, 4x3 — squarest first.
+        let g12 = ProcGrid::divisor_grids(12);
+        assert_eq!(g12.len(), 6);
+        assert_eq!((g12[0].rows(), g12[0].cols()), (3, 4));
+        assert_eq!((g12[1].rows(), g12[1].cols()), (4, 3));
+        for g in &g12 {
+            assert_eq!(g.size(), 12);
+        }
+        // primes only have the two strips
+        let g13 = ProcGrid::divisor_grids(13);
+        assert_eq!(g13.len(), 2);
+        // perfect squares include the square exactly once
+        let g16 = ProcGrid::divisor_grids(16);
+        assert_eq!(g16.len(), 5);
+        assert_eq!((g16[0].rows(), g16[0].cols()), (4, 4));
     }
 
     #[test]

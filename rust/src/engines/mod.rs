@@ -1,10 +1,12 @@
 //! Multiplication engines: Cannon/PTP (Algorithm 1) and 2.5D/RMA
-//! (Algorithm 2), plus the shared tick schedule and the double-buffered
-//! prefetch pipeline they are both built on.
+//! (Algorithm 2), plus the shared tick schedule, the double-buffered
+//! prefetch pipeline they are both built on, and the cost-model planner
+//! that chooses between them per workload.
 
 pub mod cannon;
 pub mod context;
 pub mod multiply;
 pub mod osl;
 pub mod pipeline;
+pub mod planner;
 pub mod schedule;

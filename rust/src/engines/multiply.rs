@@ -17,6 +17,7 @@ use crate::comm::progress::FabricConfig;
 use crate::comm::world::{CommStats, SimWorld};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
+use crate::engines::planner::{Plan, PlanError, Planner};
 use crate::engines::{cannon, osl};
 use crate::local::batch::LocalMultStats;
 use crate::perfmodel::machine::MachineModel;
@@ -24,6 +25,7 @@ use crate::perfmodel::virtual_time::{
     critical_path, crosscheck_overlap, model_rank_time, ModeledTime, OverlapCheck, RankLog,
 };
 use crate::stats::timers::Timers;
+use crate::workloads::spec::BenchSpec;
 
 /// Which multiplication engine to run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -78,6 +80,33 @@ impl Default for MultiplyConfig {
             machine: None,
             threads_per_rank: 1,
         }
+    }
+}
+
+impl MultiplyConfig {
+    /// Plan-driven constructor: ask `planner` for the best engine /
+    /// grid shape / `L` / thread count for `spec` and return the
+    /// configuration next to the full ranked [`Plan`] (the provenance
+    /// for `--json` reports).  The caller lays the distribution out on
+    /// `plan.choice.grid`; the filter starts at its default and can be
+    /// overridden afterwards — filtering is a numerics policy, not a
+    /// performance choice the cost model ranks.
+    ///
+    /// The config is strict about topology: the planner only emits `L`
+    /// values that are valid on the chosen grid, so a fallback could
+    /// only mean the caller ran the config on a *different* grid —
+    /// better a hard [`MultiplyError::Topology`] than silently
+    /// executing L=1 under an L>1 plan provenance.
+    pub fn auto(spec: &BenchSpec, planner: &Planner) -> Result<(Self, Plan), PlanError> {
+        let plan = planner.plan(spec)?;
+        let cfg = Self {
+            engine: plan.choice.engine,
+            filter: FilterConfig::default(),
+            strict_topology: true,
+            machine: Some(planner.machine),
+            threads_per_rank: plan.choice.threads,
+        };
+        Ok((cfg, plan))
     }
 }
 
@@ -173,6 +202,8 @@ pub enum MultiplyError {
     },
     #[error("invalid 2.5D topology: {0}")]
     Topology(#[from] TopologyError),
+    #[error("planning failed: {0}")]
+    Plan(#[from] PlanError),
 }
 
 /// Distributed `C = C + A·B` over the simulated world.

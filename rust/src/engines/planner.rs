@@ -1,0 +1,541 @@
+//! Cost-model-driven multiplication planner (the "which algorithm?" layer).
+//!
+//! The paper's central result is situational: the one-sided 2.5D engine
+//! wins (up to 1.80x) only when communication dominates, and the right
+//! replication factor `L` depends on the process count, the §3 topology
+//! rules (Eq. 4/5), the Eq. 6 memory bound and the sparsity pattern.
+//! [`Planner`] automates that choice instead of leaving `engine`, `L`,
+//! grid shape and `threads_per_rank` to hand-picking:
+//!
+//! 1. **Enumerate** every candidate a rank budget allows: Cannon/PTP vs
+//!    one-sided 2.5D, every topology-valid `L`
+//!    ([`paper_l_values`](crate::perfmodel::replay::paper_l_values) over
+//!    [`Topology25d`](crate::dist::topology25d::Topology25d)), every
+//!    grid factorization of the budget ([`ProcGrid::divisor_grids`] —
+//!    squarest first, skewed shapes included so the `lcm(P_R, P_C)`
+//!    tick blowup is priced, not assumed), and every thread count in
+//!    [`Planner::thread_candidates`].
+//! 2. **Price** each candidate with the same analytic replay that
+//!    regenerates the paper's tables:
+//!    [`build_rank_log`](crate::perfmodel::replay::build_rank_log) for
+//!    the schedule's exact traffic, [`model_rank_time`] for the
+//!    double-buffered overlap model, on the machine scaled by
+//!    [`MachineModel::with_threads`] (Amdahl).
+//! 3. **Bound** memory with
+//!    [`modeled_peak_memory`](crate::perfmodel::replay::modeled_peak_memory)
+//!    (the §3 buffer inventory / Eq. 6): candidates above
+//!    [`Planner::mem_cap_bytes`] are kept in the report but marked
+//!    infeasible and never chosen.
+//! 4. **Choose** the fastest feasible candidate, breaking ties within
+//!    [`Planner::tie_epsilon`] toward the *cheapest* plan (smallest
+//!    modeled peak memory, then fewest threads, then smallest `L`).
+//!    When the model cannot distinguish two configurations, prefer the
+//!    one holding fewer resources — this is what makes a compute-bound
+//!    workload settle on `L = 1` instead of paying the 2.5D reduction
+//!    buffers for nothing.
+//!
+//! The returned [`Plan`] carries the full ranked candidate list with
+//! per-candidate predicted compute / communication / exposed-wait times
+//! as a machine-readable justification; it rides into the `--json`
+//! report via `stats::report::multiply_report_json_planned`.
+
+use crate::dist::grid::ProcGrid;
+use crate::dist::topology25d::Topology25d;
+use crate::engines::multiply::Engine;
+use crate::perfmodel::machine::MachineModel;
+use crate::perfmodel::replay::{build_rank_log, modeled_peak_memory, paper_l_values, ReplayConfig};
+use crate::perfmodel::virtual_time::{model_rank_time, ModeledTime};
+use crate::util::json::Json;
+use crate::workloads::spec::BenchSpec;
+
+/// Why planning failed.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum PlanError {
+    #[error("rank budget must be >= 1")]
+    ZeroRanks,
+    #[error(
+        "no feasible plan under the {cap_bytes:.3e}-byte memory cap \
+         (cheapest candidate needs {min_bytes:.3e} bytes)"
+    )]
+    NoFeasiblePlan { cap_bytes: f64, min_bytes: f64 },
+}
+
+/// One priced candidate configuration.
+#[derive(Clone, Debug)]
+pub struct CandidatePlan {
+    pub engine: Engine,
+    pub grid: ProcGrid,
+    /// Effective replication factor (validated; equals `engine.l()`).
+    pub l: usize,
+    /// Intra-rank worker threads.
+    pub threads: usize,
+    /// Predicted time of ONE multiplication on the thread-scaled
+    /// machine (`total_s` is the ranking key; `comp_s` / `comm_s` /
+    /// `waitall_s` are the justification).
+    pub modeled: ModeledTime,
+    /// Modeled peak memory per process (Eq. 6 observable).
+    pub peak_mem_bytes: f64,
+    /// Within the planner's memory cap.
+    pub feasible: bool,
+}
+
+impl CandidatePlan {
+    /// Compact human label, e.g. `OS4@36x36 t8`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}@{}x{} t{}",
+            self.engine.label(),
+            self.grid.rows(),
+            self.grid.cols(),
+            self.threads
+        )
+    }
+
+    /// Machine-readable justification of this candidate's pricing.
+    pub fn to_json(&self) -> Json {
+        let hidden = (self.modeled.comm_s - self.modeled.waitall_s).max(0.0);
+        Json::obj([
+            ("engine", Json::Str(self.engine.label())),
+            ("grid_rows", Json::Num(self.grid.rows() as f64)),
+            ("grid_cols", Json::Num(self.grid.cols() as f64)),
+            ("l", Json::Num(self.l as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("total_s", Json::Num(self.modeled.total_s)),
+            ("comp_s", Json::Num(self.modeled.comp_s)),
+            ("comm_s", Json::Num(self.modeled.comm_s)),
+            ("waitall_s", Json::Num(self.modeled.waitall_s)),
+            ("overlap_hidden_s", Json::Num(hidden)),
+            ("peak_mem_bytes", Json::Num(self.peak_mem_bytes)),
+            ("feasible", Json::Bool(self.feasible)),
+        ])
+    }
+}
+
+/// A ranked plan: the chosen candidate plus every priced alternative.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The configuration the planner selected.
+    pub choice: CandidatePlan,
+    /// Every candidate, ranked by predicted time (infeasible ones are
+    /// included, marked, for the justification trail).
+    pub candidates: Vec<CandidatePlan>,
+    /// Name of the spec the plan was priced for.
+    pub spec_name: String,
+    /// Occupancy the spec carried when priced (re-planning trigger
+    /// input for iterative workloads).
+    pub spec_occupancy: f64,
+}
+
+impl Plan {
+    /// Fastest feasible predicted time over the candidate set (the
+    /// brute-force baseline the planner is measured against).
+    pub fn best_feasible_s(&self) -> f64 {
+        self.candidates
+            .iter()
+            .filter(|c| c.feasible)
+            .map(|c| c.modeled.total_s)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Relative regret of the choice vs the brute-force best
+    /// (0 = optimal; bounded by the tie-break epsilon by construction).
+    pub fn regret(&self) -> f64 {
+        let best = self.best_feasible_s();
+        if best > 0.0 && best.is_finite() {
+            self.choice.modeled.total_s / best - 1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Machine-readable provenance: choice, regret, per-candidate
+    /// pricing.  Embedded in the `--json` reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("spec", Json::Str(self.spec_name.clone())),
+            ("spec_occupancy", Json::Num(self.spec_occupancy)),
+            ("chosen", self.choice.to_json()),
+            ("regret_vs_best", Json::Num(self.regret())),
+            (
+                "candidates",
+                Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human table of the top `top` candidates.
+    pub fn render(&self, top: usize) -> String {
+        let mut s = format!(
+            "plan[{}] occ {:.3}%: {} candidates, chose {} \
+             (modeled {:.3} ms/mult, regret {:.2}%)\n",
+            self.spec_name,
+            self.spec_occupancy * 100.0,
+            self.candidates.len(),
+            self.choice.label(),
+            self.choice.modeled.total_s * 1e3,
+            self.regret() * 100.0
+        );
+        s.push_str(&format!(
+            "{:<5} {:<22} {:>10} {:>10} {:>10} {:>10} {:>9}  {}\n",
+            "rank", "candidate", "total(ms)", "comp(ms)", "comm(ms)", "wait(ms)", "mem(MB)", "ok"
+        ));
+        for (i, c) in self.candidates.iter().take(top).enumerate() {
+            s.push_str(&format!(
+                "{:<5} {:<22} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>9.2}  {}\n",
+                i + 1,
+                c.label(),
+                c.modeled.total_s * 1e3,
+                c.modeled.comp_s * 1e3,
+                c.modeled.comm_s * 1e3,
+                c.modeled.waitall_s * 1e3,
+                c.peak_mem_bytes / 1e6,
+                if c.feasible { "yes" } else { "MEM" }
+            ));
+        }
+        s
+    }
+}
+
+/// The planner: a machine calibration plus the resource budgets the
+/// candidate enumeration runs under.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    /// Base (one-thread) machine candidates are priced on; threads are
+    /// applied per candidate via [`MachineModel::with_threads`].
+    pub machine: MachineModel,
+    /// Rank budget `P`: every candidate grid satisfies
+    /// `P_R · P_C = max_ranks`.
+    pub max_ranks: usize,
+    /// Eq. 6 memory cap per process (bytes); `INFINITY` = uncapped.
+    pub mem_cap_bytes: f64,
+    /// Thread counts to price (paper §4 runs 1 rank × 8 OpenMP threads;
+    /// the default sweep is `[1, 2, 4, 8]`).
+    pub thread_candidates: Vec<usize>,
+    /// Relative window around the fastest feasible candidate inside
+    /// which ties are broken toward the cheapest plan (default 1%).
+    pub tie_epsilon: f64,
+}
+
+impl Planner {
+    /// A planner over `max_ranks` ranks with the default thread sweep,
+    /// no memory cap and a 1% tie-break window.
+    pub fn new(machine: MachineModel, max_ranks: usize) -> Self {
+        Self {
+            machine,
+            max_ranks,
+            mem_cap_bytes: f64::INFINITY,
+            thread_candidates: vec![1, 2, 4, 8],
+            tie_epsilon: 0.01,
+        }
+    }
+
+    /// Builder: set the Eq. 6 per-process memory cap in bytes.
+    pub fn with_memory_cap(mut self, bytes: f64) -> Self {
+        self.mem_cap_bytes = bytes;
+        self
+    }
+
+    /// Builder: replace the thread-count sweep.
+    pub fn with_thread_candidates(mut self, threads: Vec<usize>) -> Self {
+        assert!(!threads.is_empty(), "thread sweep must be non-empty");
+        self.thread_candidates = threads;
+        self
+    }
+
+    /// Enumerate and price every candidate for `spec`, ranked by
+    /// predicted time (feasible and infeasible alike).
+    pub fn candidates(&self, spec: &BenchSpec) -> Vec<CandidatePlan> {
+        let mut out = Vec::new();
+        for grid in ProcGrid::divisor_grids(self.max_ranks) {
+            let mut engines = vec![Engine::PointToPoint];
+            for l in paper_l_values(&grid) {
+                engines.push(Engine::OneSided { l });
+            }
+            for engine in engines {
+                let cfg = ReplayConfig {
+                    spec: spec.clone(),
+                    grid,
+                    engine,
+                    no_dmapp: false,
+                };
+                let log = build_rank_log(&cfg);
+                let mem = modeled_peak_memory(&cfg);
+                // All enumerated L values are topology-valid, so the
+                // fallback is the identity here; it still pins `l` to
+                // the validated factor.
+                let l = Topology25d::new_or_fallback(grid, engine.l()).l;
+                for &threads in &self.thread_candidates {
+                    let machine = self.machine.with_threads(threads);
+                    out.push(CandidatePlan {
+                        engine,
+                        grid,
+                        l,
+                        threads,
+                        modeled: model_rank_time(&log, &machine),
+                        peak_mem_bytes: mem,
+                        feasible: mem <= self.mem_cap_bytes,
+                    });
+                }
+            }
+        }
+        out.sort_by(|a, b| a.modeled.total_s.partial_cmp(&b.modeled.total_s).unwrap());
+        out
+    }
+
+    /// Plan the multiplication of `spec`: price all candidates, reject
+    /// the ones over the memory cap, pick the fastest feasible one with
+    /// the cheapest-plan tie-break.
+    pub fn plan(&self, spec: &BenchSpec) -> Result<Plan, PlanError> {
+        if self.max_ranks == 0 {
+            return Err(PlanError::ZeroRanks);
+        }
+        let candidates = self.candidates(spec);
+        let best = match candidates.iter().find(|c| c.feasible) {
+            Some(best) => best,
+            None => {
+                let min_bytes = candidates
+                    .iter()
+                    .map(|c| c.peak_mem_bytes)
+                    .fold(f64::INFINITY, f64::min);
+                return Err(PlanError::NoFeasiblePlan {
+                    cap_bytes: self.mem_cap_bytes,
+                    min_bytes,
+                });
+            }
+        };
+        let cutoff = best.modeled.total_s * (1.0 + self.tie_epsilon);
+        let choice = candidates
+            .iter()
+            .filter(|c| c.feasible && c.modeled.total_s <= cutoff)
+            .min_by(|a, b| {
+                let ka = (a.peak_mem_bytes, a.threads, a.l, a.grid.rows(), a.grid.cols());
+                let kb = (b.peak_mem_bytes, b.threads, b.l, b.grid.rows(), b.grid.cols());
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .expect("the fastest feasible candidate is inside its own tie window")
+            .clone();
+        Ok(Plan {
+            choice,
+            candidates,
+            spec_name: spec.name.to_string(),
+            spec_occupancy: spec.occupancy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::util::testkit::property;
+
+    fn comm_dominated_machine() -> MachineModel {
+        // Compute is effectively free: every candidate's time is its
+        // exposed communication + overheads.
+        MachineModel::piz_daint(1e15)
+    }
+
+    fn compute_dominated_machine() -> MachineModel {
+        // Compute dwarfs every transfer by orders of magnitude.
+        MachineModel::piz_daint(1e6)
+    }
+
+    #[test]
+    fn comm_dominated_picks_replicated_one_sided() {
+        let planner = Planner::new(comm_dominated_machine(), 1296);
+        let plan = planner.plan(&BenchSpec::dense()).unwrap();
+        assert!(
+            matches!(plan.choice.engine, Engine::OneSided { .. }),
+            "comm-dominated should pick RMA: {}",
+            plan.choice.label()
+        );
+        assert!(
+            plan.choice.l > 1,
+            "comm-dominated should replicate (Eq. 7 volume cut): {}",
+            plan.choice.label()
+        );
+        // Communication cannot be hidden, so extra workers buy nothing
+        // and the cheapest-plan tie-break keeps one thread.
+        assert_eq!(plan.choice.threads, 1, "{}", plan.choice.label());
+    }
+
+    #[test]
+    fn compute_dominated_picks_l1_and_max_threads() {
+        let planner = Planner::new(compute_dominated_machine(), 1296);
+        let plan = planner.plan(&BenchSpec::dense()).unwrap();
+        assert_eq!(
+            plan.choice.l,
+            1,
+            "compute-bound pays the 2.5D buffers for nothing: {}",
+            plan.choice.label()
+        );
+        let max_threads = *planner.thread_candidates.iter().max().unwrap();
+        assert_eq!(
+            plan.choice.threads,
+            max_threads,
+            "Amdahl still pays when compute-bound: {}",
+            plan.choice.label()
+        );
+    }
+
+    #[test]
+    fn sign_workload_plan_within_five_percent_of_brute_force() {
+        // The acceptance bar: the chosen plan's replay-modeled time is
+        // within 5% of the exhaustive best over the candidate set.  The
+        // tie-break window (1%) makes this structural, but assert it on
+        // the actual sign-iteration-shaped workload.
+        let spec = BenchSpec::observed("sign", 12, 6, 0.4);
+        for budget in [4usize, 16, 36] {
+            let planner = Planner::new(MachineModel::piz_daint(50e9), budget);
+            let plan = planner.plan(&spec).unwrap();
+            assert!(
+                plan.regret() <= 0.05,
+                "P={budget}: regret {} above 5%",
+                plan.regret()
+            );
+            assert_eq!(plan.choice.grid.size(), budget);
+        }
+    }
+
+    #[test]
+    fn memory_cap_rejects_replication() {
+        let spec = BenchSpec::dense();
+        let uncapped = Planner::new(comm_dominated_machine(), 1296);
+        let free = uncapped.plan(&spec).unwrap();
+        assert!(free.choice.l > 1, "precondition: uncapped plan replicates");
+        // Cap just above the cheapest L=1 footprint: every L>1
+        // candidate must become infeasible and the planner must degrade
+        // to L=1 instead of erroring.
+        let l1_mem = free
+            .candidates
+            .iter()
+            .filter(|c| c.l == 1)
+            .map(|c| c.peak_mem_bytes)
+            .fold(f64::INFINITY, f64::min);
+        let capped = uncapped.with_memory_cap(l1_mem * 1.01).plan(&spec).unwrap();
+        assert_eq!(capped.choice.l, 1);
+        assert!(capped.choice.peak_mem_bytes <= l1_mem * 1.01);
+        assert!(capped.candidates.iter().any(|c| !c.feasible));
+    }
+
+    #[test]
+    fn impossible_cap_is_a_clean_error() {
+        let err = Planner::new(MachineModel::piz_daint(50e9), 16)
+            .with_memory_cap(1.0)
+            .plan(&BenchSpec::dense())
+            .unwrap_err();
+        assert!(matches!(err, PlanError::NoFeasiblePlan { .. }));
+        assert!(err.to_string().contains("memory cap"));
+    }
+
+    #[test]
+    fn zero_rank_budget_rejected() {
+        let err = Planner::new(MachineModel::piz_daint(50e9), 0)
+            .plan(&BenchSpec::dense())
+            .unwrap_err();
+        assert_eq!(err, PlanError::ZeroRanks);
+    }
+
+    #[test]
+    fn property_chosen_plans_are_valid_and_within_cap() {
+        property("plans valid + within cap", 2024, 24, |rng, _| {
+            let budget = 1 + rng.usize_below(64);
+            let spec = BenchSpec::observed(
+                "prop",
+                8 + rng.usize_below(56),
+                1 + rng.usize_below(32),
+                rng.range_f64(0.01, 0.9),
+            );
+            let machine = MachineModel::piz_daint(rng.range_f64(1e8, 1e13));
+            let planner = Planner::new(machine, budget);
+            // Sample the cap from the candidate footprints so both the
+            // feasible and the all-infeasible branches get exercised.
+            let mems: Vec<f64> = planner
+                .candidates(&spec)
+                .iter()
+                .map(|c| c.peak_mem_bytes)
+                .collect();
+            let cap = mems[rng.usize_below(mems.len())] * rng.range_f64(0.9, 1.1);
+            match planner.with_memory_cap(cap).plan(&spec) {
+                Ok(plan) => {
+                    let c = &plan.choice;
+                    if Topology25d::new(c.grid, c.l).is_err() {
+                        return Err(format!("invalid topology: {}", c.label()));
+                    }
+                    if c.grid.size() != budget {
+                        return Err(format!("rank budget violated: {}", c.label()));
+                    }
+                    if c.peak_mem_bytes > cap {
+                        return Err(format!(
+                            "memory cap violated: {} > {cap}",
+                            c.peak_mem_bytes
+                        ));
+                    }
+                    if plan.regret() > 0.05 {
+                        return Err(format!("regret {} above 5%", plan.regret()));
+                    }
+                    Ok(())
+                }
+                Err(PlanError::NoFeasiblePlan { .. }) => {
+                    if mems.iter().all(|&m| m > cap) {
+                        Ok(())
+                    } else {
+                        Err("NoFeasiblePlan despite a fitting candidate".to_string())
+                    }
+                }
+                Err(e) => Err(format!("unexpected error: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn candidates_are_ranked_and_exhaustive() {
+        let planner = Planner::new(MachineModel::piz_daint(50e9), 36);
+        let cands = planner.candidates(&BenchSpec::h2o_dft_ls());
+        // ranked by predicted time
+        for w in cands.windows(2) {
+            assert!(w[0].modeled.total_s <= w[1].modeled.total_s);
+        }
+        // every grid factorization of 36 appears (9 ordered pairs)
+        let grids: std::collections::BTreeSet<(usize, usize)> = cands
+            .iter()
+            .map(|c| (c.grid.rows(), c.grid.cols()))
+            .collect();
+        assert_eq!(grids.len(), 9);
+        // replication shows up where §3 allows it: L=4 needs side3D=3
+        // (e.g. 3x12, V=12), L=9 needs side3D=2 (e.g. 2x18, V=18);
+        // the square 6x6 grid has V=6, so neither divides V there.
+        let labels: std::collections::BTreeSet<String> =
+            cands.iter().map(|c| c.engine.label()).collect();
+        assert!(labels.contains("PTP") && labels.contains("OS1"));
+        assert!(labels.contains("OS4") && labels.contains("OS9"));
+        assert!(!cands
+            .iter()
+            .any(|c| c.grid.rows() == 6 && c.grid.cols() == 6 && c.l > 1));
+        // threads sweep is priced for each engine/grid pair
+        assert_eq!(cands.len() % planner.thread_candidates.len(), 0);
+    }
+
+    #[test]
+    fn plan_json_carries_per_candidate_pricing() {
+        let plan = Planner::new(MachineModel::piz_daint(50e9), 4)
+            .plan(&BenchSpec::observed("json", 8, 4, 0.5))
+            .unwrap();
+        let j = plan.to_json();
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("spec").unwrap().as_str().unwrap(), "json");
+        let chosen = back.get("chosen").unwrap();
+        assert!(chosen.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        let cands = back.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), plan.candidates.len());
+        for c in cands {
+            assert!(c.get("comp_s").unwrap().as_f64().is_some());
+            assert!(c.get("comm_s").unwrap().as_f64().is_some());
+            assert!(c.get("waitall_s").unwrap().as_f64().is_some());
+            assert!(c.get("peak_mem_bytes").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let regret = back.get("regret_vs_best").unwrap().as_f64().unwrap();
+        assert!((0.0..=0.05).contains(&regret));
+    }
+}

@@ -2,50 +2,62 @@
 //!
 //! Reproduction of *"Increasing the Efficiency of Sparse Matrix-Matrix
 //! Multiplication with a 2.5D Algorithm and One-Sided MPI"* (Lazzaro,
-//! VandeVondele, Hutter, Schütt — PASC '17) as a three-layer
-//! Rust + JAX + Pallas stack.
+//! VandeVondele, Hutter, Schütt — PASC '17, arXiv:1705.10218) as a
+//! three-layer Rust + JAX + Pallas stack.
 //!
 //! The crate implements a distributed **block-sparse** matrix-matrix
-//! multiplication library in the spirit of DBCSR:
+//! multiplication library in the spirit of DBCSR.  `ARCHITECTURE.md`
+//! (repository root of the crate) maps every paper section and equation
+//! to the modules below and walks one multiplication tick through the
+//! stack; start there for the big picture.
 //!
-//! * [`blocks`] — blocked-CSR storage, block norms, threshold filtering;
-//! * [`dist`] — 2D process grids, randomized permutations, the 2.5D
-//!   topology rules of the paper (§3, Eq. 4/5);
-//! * [`comm`] — a simulated MPI layer: ranks as threads, point-to-point
-//!   `isend`/`irecv`/`wait_all`, one-sided windows with `rget` (passive
-//!   target), collectives, and exact per-rank byte accounting;
-//! * [`engines`] — the two multiplication engines: Cannon's algorithm
-//!   with point-to-point communication (paper Algorithm 1, the baseline)
-//!   and the 2.5D one-sided algorithm (paper Algorithm 2, the
-//!   contribution);
-//! * [`local`] — the node-local stack-flow multiplication with DBCSR's
-//!   on-the-fly norm filter (the LIBSMM role): merge-join task assembly,
-//!   homogeneous per-shape stacks and a dense C arena, executed by the
-//!   native microkernel under an intra-rank worker pool
-//!   (`threads_per_rank`) or by the AOT-compiled Pallas kernel via
-//!   [`runtime`];
-//! * [`runtime`] — PJRT CPU client that loads `artifacts/*.hlo.txt`
-//!   produced by `python/compile/aot.py`;
-//! * [`perfmodel`] — virtual-time replay of both engines' schedules at
-//!   paper scale (200–3844 nodes) over an α-β network model;
-//! * [`workloads`] — synthetic CP2K-benchmark generators (Table 1);
-//! * [`sign`] — the linear-scaling-DFT matrix-sign iteration (Eq. 1–3);
-//! * [`stats`] — region timers and the table/figure printers.
+//! ## Module map
 //!
-//! ## Quickstart
+//! | layer | module | role (paper anchor) |
+//! |-------|--------|---------------------|
+//! | storage | [`blocks`] | blocked-CSR matrices, block norms, threshold filtering (§1) |
+//! | layout | [`dist`] | process grids, randomized 2D distributions (§2), the 2.5D topology rules (§3, Eq. 4/5) |
+//! | transport | [`comm`] | simulated MPI: ranks as threads, `isend`/`irecv`/`wait_all`, passive-target `rget` windows, the asynchronous virtual-time fabric, exact byte accounting |
+//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines; the cost-model [`engines::planner`] that chooses between them |
+//! | node-local | [`local`] | stack-flow multiplication with the on-the-fly norm filter (the LIBSMM role) |
+//! | kernels | [`runtime`] | optional PJRT client for the AOT-compiled Pallas microkernel |
+//! | modeling | [`perfmodel`] | α-β virtual-time replay of both schedules at paper scale (200–3844 nodes), machine calibrations, overlap cross-checks |
+//! | workloads | [`workloads`] | synthetic CP2K benchmark generators (Table 1) |
+//! | application | [`sign`] | the linear-scaling-DFT matrix-sign iteration (Eq. 1–3), with planner-driven re-planning on fill-in |
+//! | reporting | [`stats`] | region timers, table/figure regenerators, `--json` reports |
 //!
-//! ```no_run
+//! ## Quickstart: a planned multiplication
+//!
+//! The planner picks engine, grid shape, replication factor `L` and
+//! thread count from the cost model; the caller only describes the
+//! workload and the budgets (this example runs in the test suite):
+//!
+//! ```
 //! use dbcsr::prelude::*;
 //!
-//! let layout = BlockLayout::uniform(64, 8); // 64 block-rows of size 8
-//! let grid = ProcGrid::new(2, 2).unwrap();
-//! let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 42);
-//! let a = BlockCsrMatrix::random(&layout, &layout, 0.2, 1);
-//! let b = BlockCsrMatrix::random(&layout, &layout, 0.2, 2);
-//! let cfg = MultiplyConfig { engine: Engine::OneSided { l: 1 }, ..Default::default() };
+//! // Describe the workload: 8x8 blocks of 4x4, about half occupied.
+//! let spec = BenchSpec::observed("quickstart", 8, 4, 0.5);
+//!
+//! // Plan it onto 4 simulated ranks (no memory cap here; add one with
+//! // `.with_memory_cap(bytes)` to enforce Eq. 6).
+//! let planner = Planner::new(MachineModel::piz_daint(50e9), 4);
+//! let (cfg, plan) = MultiplyConfig::auto(&spec, &planner).unwrap();
+//! assert_eq!(plan.choice.grid.size(), 4);
+//! assert!(plan.regret() <= 0.05); // within 5% of the brute-force best
+//!
+//! // Lay the matrices out on the planned grid and run for real.
+//! let layout = spec.layout();
+//! let dist = Distribution2d::rand_permuted(&layout, &layout, &plan.choice.grid, 42);
+//! let a = BlockCsrMatrix::random(&layout, &layout, 0.5, 1);
+//! let b = BlockCsrMatrix::random(&layout, &layout, 0.5, 2);
 //! let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
-//! println!("C nnz blocks = {}", report.c.nnz_blocks());
+//! assert!(report.c.nnz_blocks() > 0);
 //! ```
+//!
+//! Fixed configurations work too — set [`prelude::MultiplyConfig`]'s
+//! `engine` (e.g. `Engine::OneSided { l: 4 }`) by hand, as the paper's
+//! own strong-scaling tables do; `dbcsr multiply --help` exposes both
+//! styles on the CLI (`--plan manual|auto`).
 
 pub mod benchkit;
 pub mod blocks;
@@ -71,6 +83,7 @@ pub mod prelude {
     pub use crate::engines::multiply::{
         multiply_distributed, Engine, MultiplyConfig, MultiplyReport,
     };
+    pub use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
     pub use crate::local::microkernel::GemmBackend;
     pub use crate::perfmodel::machine::MachineModel;
     pub use crate::perfmodel::replay::{replay_multiplication, ReplayConfig};

@@ -15,6 +15,7 @@ use dbcsr::blocks::filter::FilterConfig;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
+use dbcsr::engines::planner::Planner;
 use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::stats::report;
 use dbcsr::util::cli::Args;
@@ -86,11 +87,13 @@ fn cmd_multiply() -> i32 {
     let args = match Args::new("dbcsr multiply", "one distributed multiplication")
         .opt("bench", "dense", "benchmark: h2o|s-e|dense")
         .opt("nblocks", "32", "matrix size in blocks (scaled run)")
-        .opt("grid", "4x4", "process grid PRxPC")
-        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
+        .opt("grid", "4x4", "process grid PRxPC (auto mode: rank budget)")
+        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9 (manual mode)")
+        .opt("plan", "manual", "manual|auto (planner picks engine/grid/L/threads)")
+        .opt("mem-cap-gb", "inf", "planner Eq. 6 memory cap per rank, GB (auto mode)")
         .opt("eps", "-1", "filter threshold (<0 = off)")
         .opt("seed", "42", "rng seed")
-        .opt("threads", "1", "intra-rank worker threads (stack executor)")
+        .opt("threads", "1", "intra-rank worker threads (manual mode)")
         .flag("verify", "compare against the dense oracle")
         .flag("json", "emit a machine-readable JSON report line")
         .parse_env(1)
@@ -103,25 +106,48 @@ fn cmd_multiply() -> i32 {
     };
     let spec = BenchSpec::by_name(args.get("bench")).expect("unknown benchmark");
     let spec = spec.scaled(args.get_as("nblocks"));
-    let grid = parse_grid(args.get("grid"));
-    let engine = parse_engine(args.get("engine"));
     let seed: u64 = args.get_as("seed");
+    // One machine for both views: the fabric executes (and the measured
+    // overlap is priced) on the same calibration the analytic model uses.
+    let machine = MachineModel::piz_daint(spec.node_flop_rate);
+    let filter = FilterConfig::uniform(args.get_as("eps"));
+
+    let (grid, cfg, plan) = match args.get("plan") {
+        "auto" => {
+            let budget = parse_grid(args.get("grid")).size();
+            let cap_gb: f64 = args.get_as("mem-cap-gb");
+            let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+            let (mut cfg, plan) = match MultiplyConfig::auto(&spec, &planner) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    return 2;
+                }
+            };
+            cfg.filter = filter;
+            print!("{}", plan.render(8));
+            (plan.choice.grid, cfg, Some(plan))
+        }
+        "manual" => {
+            let cfg = MultiplyConfig {
+                engine: parse_engine(args.get("engine")),
+                filter,
+                machine: Some(machine),
+                threads_per_rank: args.get_as("threads"),
+                ..Default::default()
+            };
+            (parse_grid(args.get("grid")), cfg, None)
+        }
+        other => {
+            eprintln!("unknown plan mode '{other}' (use manual|auto)");
+            return 2;
+        }
+    };
 
     let a = random_for_spec(&spec, seed);
     let b = random_for_spec(&spec, seed ^ 0xBEEF);
     let layout = spec.layout();
     let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
-    // One machine for both views: the fabric executes (and the measured
-    // overlap is priced) on the same calibration the analytic model uses.
-    let machine = MachineModel::piz_daint(spec.node_flop_rate);
-    let threads: usize = args.get_as("threads");
-    let cfg = MultiplyConfig {
-        engine,
-        filter: FilterConfig::uniform(args.get_as("eps")),
-        machine: Some(machine),
-        threads_per_rank: threads,
-        ..Default::default()
-    };
     println!(
         "benchmark={} blocks={}x{} (block size {}) grid={}x{} engine={} threads={}",
         spec.name,
@@ -130,8 +156,8 @@ fn cmd_multiply() -> i32 {
         spec.block_size,
         grid.rows(),
         grid.cols(),
-        engine.label(),
-        threads.max(1)
+        cfg.engine.label(),
+        cfg.threads_per_rank.max(1)
     );
     let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
     // model on the thread-scaled machine the fabric executed with
@@ -165,7 +191,8 @@ fn cmd_multiply() -> i32 {
     if args.is_set("json") {
         println!(
             "{}",
-            dbcsr::stats::report::multiply_report_json(&report, &cfg).to_string_compact()
+            dbcsr::stats::report::multiply_report_json_planned(&report, &cfg, plan.as_ref())
+                .to_string_compact()
         );
     }
     if args.is_set("verify") {
@@ -184,11 +211,15 @@ fn cmd_sign() -> i32 {
     let args = match Args::new("dbcsr sign", "linear-scaling DFT sign-iteration driver")
         .opt("nblocks", "12", "system size in blocks")
         .opt("block-size", "6", "block edge")
-        .opt("grid", "2x2", "process grid PRxPC")
-        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9")
+        .opt("grid", "2x2", "process grid PRxPC (auto mode: rank budget)")
+        .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9 (manual mode)")
+        .opt("plan", "manual", "manual: Eq. 1 density pipeline; auto: planned sign(H-muS)")
+        .opt("mem-cap-gb", "inf", "planner Eq. 6 memory cap per rank, GB (auto mode)")
+        .opt("replan-drift", "0.25", "relative occupancy drift that triggers a re-plan")
         .opt("eps", "1e-7", "filter threshold")
         .opt("seed", "7", "rng seed")
-        .opt("threads", "1", "intra-rank worker threads (stack executor)")
+        .opt("threads", "1", "intra-rank worker threads (manual mode)")
+        .flag("json", "emit a machine-readable JSON report line")
         .parse_env(1)
     {
         Ok(a) => a,
@@ -197,16 +228,32 @@ fn cmd_sign() -> i32 {
             return 2;
         }
     };
-    let grid = parse_grid(args.get("grid"));
     let sys = dbcsr::workloads::hamiltonian::synthetic_system(
         args.get_as("nblocks"),
         args.get_as("block-size"),
         args.get_as("seed"),
     );
+    let filter = FilterConfig::uniform(args.get_as("eps"));
+    match args.get("plan") {
+        "auto" => cmd_sign_auto(&args, &sys, filter),
+        "manual" => cmd_sign_manual(&args, &sys, filter),
+        other => {
+            eprintln!("unknown plan mode '{other}' (use manual|auto)");
+            2
+        }
+    }
+}
+
+fn cmd_sign_manual(
+    args: &Args,
+    sys: &dbcsr::workloads::hamiltonian::SyntheticSystem,
+    filter: FilterConfig,
+) -> i32 {
+    let grid = parse_grid(args.get("grid"));
     let dist = Distribution2d::rand_permuted(&sys.layout, &sys.layout, &grid, 3);
     let cfg = MultiplyConfig {
         engine: parse_engine(args.get("engine")),
-        filter: FilterConfig::uniform(args.get_as("eps")),
+        filter,
         threads_per_rank: args.get_as("threads"),
         ..Default::default()
     };
@@ -231,7 +278,79 @@ fn cmd_sign() -> i32 {
         p.nnz_blocks(),
         p.occupancy() * 100.0
     );
+    if args.is_set("json") {
+        println!("{}", report::sign_result_json(&sign).to_string_compact());
+    }
     i32::from(!sign.converged)
+}
+
+/// Planner-driven run of the raw sign-iteration workload,
+/// `sign(H − µS)` — NOT the manual mode's full Eq. 1 density pipeline
+/// (no S⁻¹ stage, no density matrix): this mode isolates the stream of
+/// SpGEMMs the planner adapts to.  The planner picks the initial
+/// configuration from the observed occupancy and re-plans when
+/// Newton–Schulz fill-in drifts it past `--replan-drift`.
+fn cmd_sign_auto(
+    args: &Args,
+    sys: &dbcsr::workloads::hamiltonian::SyntheticSystem,
+    filter: FilterConfig,
+) -> i32 {
+    use dbcsr::sign::iteration::{scale_to_unit_norm, sign_iteration_planned};
+    let budget = parse_grid(args.get("grid")).size();
+    let cap_gb: f64 = args.get_as("mem-cap-gb");
+    let machine = MachineModel::piz_daint(50e9);
+    let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+    let hm = sys.h.add_scaled(-sys.mu, &sys.s);
+    let (x0, _) = scale_to_unit_norm(&hm);
+    // Same rule as sign::density: convergence tolerance must sit above
+    // the filtering noise floor (residuals are O(eps·√nnzb) per step).
+    let floor = filter.post_eps.max(filter.on_the_fly_eps).max(0.0);
+    let tol = (floor * 1e2).max(1e-9);
+    let out = match sign_iteration_planned(
+        &x0,
+        &planner,
+        filter,
+        args.get_as("replan-drift"),
+        tol,
+        // same iteration budget as the manual mode's density pipeline
+        80,
+        args.get_as("seed"),
+    ) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("planned sign iteration failed: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "planned sign iteration: {} iterations, converged = {}, {} re-plan(s)",
+        out.result.iters.len(),
+        out.result.converged,
+        out.replans
+    );
+    for ev in &out.plans {
+        println!(
+            "  plan @ iter {:>2} (occ {:>6.2}%): {} — modeled {:.3} ms/mult, regret {:.2}%",
+            ev.iter,
+            ev.occupancy * 100.0,
+            ev.plan.choice.label(),
+            ev.plan.choice.modeled.total_s * 1e3,
+            ev.plan.regret() * 100.0
+        );
+    }
+    for s in &out.result.iters {
+        println!(
+            "  iter {:>2}: delta {:>10.3e}  occupancy {:>6.2}%  products {}",
+            s.iter,
+            s.delta,
+            s.occupancy * 100.0,
+            s.mult_stats.products
+        );
+    }
+    if args.is_set("json") {
+        println!("{}", report::sign_report_json(&out).to_string_compact());
+    }
+    i32::from(!out.result.converged)
 }
 
 fn cmd_selftest() -> i32 {

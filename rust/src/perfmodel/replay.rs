@@ -171,11 +171,19 @@ pub fn modeled_peak_memory(cfg: &ReplayConfig) -> f64 {
     matrices + buffers
 }
 
-/// Run the replay for one Table-2 cell.
+/// Run the replay for one Table-2 cell on its calibrated machine.
 pub fn replay_multiplication(cfg: &ReplayConfig) -> ReplaySummary {
     let machine = MachineModel::for_benchmark(cfg.spec.name, cfg.grid.size());
+    replay_multiplication_on(cfg, &machine)
+}
+
+/// Replay `cfg` priced on an explicit machine — the planner's entry
+/// point: candidates are priced on the caller's calibration (possibly
+/// thread-scaled via `MachineModel::with_threads`) instead of the
+/// per-benchmark Table 2 fit.
+pub fn replay_multiplication_on(cfg: &ReplayConfig, machine: &MachineModel) -> ReplaySummary {
     let log = build_rank_log(cfg);
-    let t: ModeledTime = model_rank_time(&log, &machine);
+    let t: ModeledTime = model_rank_time(&log, machine);
     let n_mults = cfg.spec.n_mults as f64;
 
     let a_bytes: u64 = log.ticks.iter().map(|r| r.a_bytes).sum();
@@ -330,6 +338,23 @@ mod tests {
             no_dmapp: false,
         });
         assert!(m9 > m1 * 1.2, "L=9 memory {m9} vs L=1 {m1}");
+    }
+
+    #[test]
+    fn replay_on_explicit_machine() {
+        let config = cfg(BenchSpec::h2o_dft_ls(), 400, Engine::OneSided { l: 1 });
+        let default = replay_multiplication(&config);
+        let machine = MachineModel::for_benchmark("H2O-DFT-LS", 400);
+        let explicit = replay_multiplication_on(&config, &machine);
+        assert_eq!(default.exec_time_s, explicit.exec_time_s);
+        // a thread-scaled machine computes faster, never slower
+        let scaled = replay_multiplication_on(&config, &machine.with_threads(8));
+        assert!(scaled.exec_time_s < explicit.exec_time_s);
+        // volumes are schedule facts, independent of the machine
+        assert_eq!(
+            scaled.comm_bytes_per_process,
+            explicit.comm_bytes_per_process
+        );
     }
 
     #[test]

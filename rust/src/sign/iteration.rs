@@ -3,10 +3,13 @@
 //! arithmetic with filtering — the workload that makes linear-scaling
 //! DFT a stream of SpGEMMs (>80% of runtime, §1).
 
+use crate::blocks::filter::FilterConfig;
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::dist::distribution::Distribution2d;
 use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyError};
+use crate::engines::planner::{Plan, Planner};
 use crate::local::batch::LocalMultStats;
+use crate::workloads::spec::BenchSpec;
 
 /// Per-iteration trace entry.
 #[derive(Clone, Debug)]
@@ -27,6 +30,29 @@ pub struct SignResult {
     pub converged: bool,
 }
 
+/// One Newton–Schulz step `X' = ½ X (3I − X²)`: two distributed
+/// multiplications; returns the new iterate and their merged stats.
+fn sign_step(
+    x: &BlockCsrMatrix,
+    eye: &BlockCsrMatrix,
+    dist: &Distribution2d,
+    cfg: &MultiplyConfig,
+) -> Result<(BlockCsrMatrix, LocalMultStats), MultiplyError> {
+    // X2 = X·X
+    let r1 = multiply_distributed(x, x, None, dist, cfg)?;
+    // Y = 3I - X2
+    let mut y = eye.clone();
+    y.scale(3.0);
+    let y = y.add_scaled(-1.0, &r1.c);
+    // X' = 0.5 * X · Y
+    let r2 = multiply_distributed(x, &y, None, dist, cfg)?;
+    let mut xn = r2.c;
+    xn.scale(0.5);
+    let mut ms = r1.mult_stats;
+    ms.merge(&r2.mult_stats);
+    Ok((xn, ms))
+}
+
 /// Run the Newton–Schulz sign iteration on `x0` (must be pre-scaled so
 /// `‖X₀‖₂ ≤ 1`, e.g. via [`scale_to_unit_norm`]).  Each iteration costs
 /// two distributed multiplications (paper §1).
@@ -42,20 +68,8 @@ pub fn sign_iteration(
     let mut converged = false;
     let eye = BlockCsrMatrix::identity(x.row_layout());
     for it in 0..max_iter {
-        // X2 = X·X
-        let r1 = multiply_distributed(&x, &x, None, dist, cfg)?;
-        // Y = 3I - X2
-        let mut y = eye.clone();
-        y.scale(3.0);
-        let y = y.add_scaled(-1.0, &r1.c);
-        // X' = 0.5 * X · Y
-        let r2 = multiply_distributed(&x, &y, None, dist, cfg)?;
-        let mut xn = r2.c;
-        xn.scale(0.5);
-
+        let (xn, ms) = sign_step(&x, &eye, dist, cfg)?;
         let delta = xn.add_scaled(-1.0, &x).frob_norm();
-        let mut ms = r1.mult_stats;
-        ms.merge(&r2.mult_stats);
         iters.push(SignIterStats {
             iter: it,
             delta,
@@ -72,6 +86,118 @@ pub fn sign_iteration(
         sign: x,
         iters,
         converged,
+    })
+}
+
+/// One planning event of a planned sign run.
+#[derive(Clone, Debug)]
+pub struct PlanEvent {
+    /// Iteration before which the plan was taken (0 = initial plan).
+    pub iter: usize,
+    /// X occupancy the plan was priced at.
+    pub occupancy: f64,
+    pub plan: Plan,
+}
+
+/// Result of [`sign_iteration_planned`]: the sign result plus the full
+/// planning trail.
+pub struct PlannedSignResult {
+    pub result: SignResult,
+    /// Every plan taken, in order (`plans[0]` is the initial one).
+    pub plans: Vec<PlanEvent>,
+    /// Re-plans triggered by occupancy drift (`plans.len() - 1`).
+    pub replans: usize,
+}
+
+/// Planner-driven sign iteration: the engine / grid / `L` / thread
+/// configuration is chosen by `planner` from the *observed* occupancy
+/// of the iterate, and re-chosen whenever fill-in moves the occupancy
+/// by more than `drift_threshold` (relative) since the last plan —
+/// Newton–Schulz fill-in shifts the comm/comp balance, which can change
+/// the winning algorithm mid-run (the paper's Table 2 crossovers, but
+/// across iterations of one workload).
+pub fn sign_iteration_planned(
+    x0: &BlockCsrMatrix,
+    planner: &Planner,
+    filter: FilterConfig,
+    drift_threshold: f64,
+    tol: f64,
+    max_iter: usize,
+    seed: u64,
+) -> Result<PlannedSignResult, MultiplyError> {
+    let layout = x0.row_layout().clone();
+    let nblocks = layout.nblocks();
+    // Pricing input only: non-uniform layouts are approximated by their
+    // mean block edge (the cost model prices panel volumes, which the
+    // mean preserves; numerics are unaffected).
+    let block_size = layout.dim() / nblocks.max(1);
+    // Same plan-to-config wiring as `dbcsr multiply --plan auto`: the
+    // filter stays the caller's numerics policy, everything else comes
+    // from the plan.
+    let plan_cfg = |occ: f64| -> Result<(MultiplyConfig, Plan), MultiplyError> {
+        let spec = BenchSpec::observed("sign", nblocks, block_size, occ);
+        let (mut cfg, plan) = MultiplyConfig::auto(&spec, planner)?;
+        cfg.filter = filter;
+        Ok((cfg, plan))
+    };
+
+    let mut planned_occ = x0.occupancy();
+    let (mut cfg, plan0) = plan_cfg(planned_occ)?;
+    let mut dist = Distribution2d::rand_permuted(&layout, &layout, &plan0.choice.grid, seed);
+    let mut plans = vec![PlanEvent {
+        iter: 0,
+        occupancy: planned_occ,
+        plan: plan0,
+    }];
+
+    let mut x = x0.clone();
+    let mut iters = Vec::new();
+    let mut converged = false;
+    let eye = BlockCsrMatrix::identity(&layout);
+    for it in 0..max_iter {
+        let (xn, ms) = sign_step(&x, &eye, &dist, &cfg)?;
+        let delta = xn.add_scaled(-1.0, &x).frob_norm();
+        let occ = xn.occupancy();
+        iters.push(SignIterStats {
+            iter: it,
+            delta,
+            occupancy: occ,
+            mult_stats: ms,
+        });
+        x = xn;
+        if delta < tol {
+            converged = true;
+            break;
+        }
+        // Fill-in check: re-plan when the occupancy the current plan
+        // was priced at no longer describes the iterate.  Skip on the
+        // last iteration — a plan no multiplication will execute must
+        // not appear in the trail.
+        let drift = (occ - planned_occ).abs() / planned_occ.max(1e-12);
+        if drift > drift_threshold && it + 1 < max_iter {
+            planned_occ = occ;
+            let (new_cfg, new_plan) = plan_cfg(planned_occ)?;
+            if new_plan.choice.grid != dist.grid {
+                let grid = &new_plan.choice.grid;
+                dist = Distribution2d::rand_permuted(&layout, &layout, grid, seed);
+            }
+            cfg = new_cfg;
+            plans.push(PlanEvent {
+                iter: it + 1,
+                occupancy: planned_occ,
+                plan: new_plan,
+            });
+        }
+    }
+    let replans = plans.len() - 1;
+    Ok(PlannedSignResult {
+        result: SignResult {
+            sign: x,
+            iters,
+            converged,
+        },
+        plans,
+        replans,
     })
 }
 
@@ -146,6 +272,32 @@ mod tests {
         let s2 = s.matmul(&s);
         let eye = crate::blocks::dense::DenseMatrix::eye(s.rows);
         assert!(s2.max_abs_diff(&eye) < 1e-4);
+    }
+
+    #[test]
+    fn planned_sign_converges_and_replans_on_fill_in() {
+        use crate::perfmodel::machine::MachineModel;
+        let a = gapped_matrix(8, 3, 7);
+        let (x0, _) = scale_to_unit_norm(&a);
+        let planner = Planner::new(MachineModel::piz_daint(50e9), 4);
+        let out = sign_iteration_planned(&x0, &planner, FilterConfig::none(), 0.10, 1e-8, 60, 9)
+            .unwrap();
+        assert!(out.result.converged, "planned run did not converge");
+        // the banded start fills in well past 10%: drift must re-plan
+        assert!(out.replans >= 1, "no re-plan despite fill-in");
+        assert_eq!(out.plans.len(), out.replans + 1);
+        // every plan in the trail respects the rank budget and is
+        // priced at the occupancy that triggered it
+        for ev in &out.plans {
+            assert_eq!(ev.plan.choice.grid.size(), 4);
+            assert!((ev.plan.spec_occupancy - ev.occupancy).abs() < 1e-12);
+            assert!(ev.plan.regret() <= 0.05);
+        }
+        // numerics agree with a fixed-configuration run
+        let manual = run(Engine::PointToPoint, FilterConfig::none());
+        let planned = out.result.sign.to_dense();
+        let diff = planned.max_abs_diff(&manual.sign.to_dense());
+        assert!(diff < 1e-6, "planned vs manual sign differ: {diff}");
     }
 
     #[test]

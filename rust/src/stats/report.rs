@@ -223,6 +223,18 @@ pub fn multiply_report_json(
     rep: &crate::engines::multiply::MultiplyReport,
     cfg: &crate::engines::multiply::MultiplyConfig,
 ) -> crate::util::json::Json {
+    multiply_report_json_planned(rep, cfg, None)
+}
+
+/// [`multiply_report_json`] plus the planner provenance block when the
+/// configuration came from `MultiplyConfig::auto` (`--plan auto`): the
+/// chosen candidate, its regret vs the brute-force best, and the
+/// per-candidate pricing.
+pub fn multiply_report_json_planned(
+    rep: &crate::engines::multiply::MultiplyReport,
+    cfg: &crate::engines::multiply::MultiplyConfig,
+    plan: Option<&crate::engines::planner::Plan>,
+) -> crate::util::json::Json {
     use crate::util::json::Json;
     let stats_arr: Vec<Json> = rep
         .per_rank_stats
@@ -250,7 +262,7 @@ pub fn multiply_report_json(
         })
         .collect();
     let overlap = rep.overlap_summary();
-    Json::obj([
+    let mut out = Json::obj([
         ("engine", Json::Str(cfg.engine.label())),
         ("l", Json::Num(rep.topo.l as f64)),
         ("nticks", Json::Num(rep.topo.nticks() as f64)),
@@ -276,7 +288,62 @@ pub fn multiply_report_json(
         ("modeled_comm_s", Json::Num(overlap.modeled_comm_s)),
         ("measured_overlap_frac", Json::Num(overlap.measured_overlap_frac())),
         ("per_rank", Json::Arr(stats_arr)),
+    ]);
+    if let Some(plan) = plan {
+        if let Json::Obj(m) = &mut out {
+            m.insert("plan".to_string(), plan.to_json());
+        }
+    }
+    out
+}
+
+/// Machine-readable summary of a sign-iteration run
+/// (`dbcsr sign --json`): convergence plus the per-iteration trace.
+pub fn sign_result_json(res: &crate::sign::iteration::SignResult) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let iters: Vec<Json> = res
+        .iters
+        .iter()
+        .map(|s| {
+            Json::obj([
+                ("iter", Json::Num(s.iter as f64)),
+                ("delta", Json::Num(s.delta)),
+                ("occupancy", Json::Num(s.occupancy)),
+                ("products", Json::Num(s.mult_stats.products as f64)),
+                ("filtered", Json::Num(s.mult_stats.filtered as f64)),
+            ])
+        })
+        .collect();
+    Json::obj([
+        ("converged", Json::Bool(res.converged)),
+        ("iterations", Json::Arr(iters)),
     ])
+}
+
+/// [`sign_result_json`] plus the planning trail of a planner-driven run
+/// (`dbcsr sign --plan auto --json`): one entry per (re-)planning event
+/// with the full choice + per-candidate pricing.
+pub fn sign_report_json(
+    out: &crate::sign::iteration::PlannedSignResult,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let plans: Vec<Json> = out
+        .plans
+        .iter()
+        .map(|ev| {
+            Json::obj([
+                ("iter", Json::Num(ev.iter as f64)),
+                ("occupancy", Json::Num(ev.occupancy)),
+                ("plan", ev.plan.to_json()),
+            ])
+        })
+        .collect();
+    let mut j = sign_result_json(&out.result);
+    if let Json::Obj(m) = &mut j {
+        m.insert("replans".to_string(), Json::Num(out.replans as f64));
+        m.insert("plans".to_string(), Json::Arr(plans));
+    }
+    j
 }
 
 #[cfg(test)]
@@ -353,6 +420,34 @@ mod tests {
             .map(|h| h.get("products").unwrap().as_f64().unwrap())
             .sum();
         assert_eq!(hist_products, back.get("products").unwrap().as_f64().unwrap());
+    }
+
+    #[test]
+    fn planned_json_carries_plan_provenance() {
+        use crate::blocks::matrix::BlockCsrMatrix;
+        use crate::dist::distribution::Distribution2d;
+        use crate::engines::multiply::{multiply_distributed, MultiplyConfig};
+        use crate::engines::planner::Planner;
+        use crate::perfmodel::machine::MachineModel;
+        use crate::util::json::Json;
+        let spec = BenchSpec::observed("plan-json", 8, 2, 0.5);
+        let layout = spec.layout();
+        let a = BlockCsrMatrix::random(&layout, &layout, 0.5, 1);
+        let b = BlockCsrMatrix::random(&layout, &layout, 0.5, 2);
+        let planner = Planner::new(MachineModel::piz_daint(50e9), 4);
+        let (cfg, plan) = MultiplyConfig::auto(&spec, &planner).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &plan.choice.grid, 3);
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let j = multiply_report_json_planned(&rep, &cfg, Some(&plan));
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        let pj = back.get("plan").expect("plan block missing");
+        let chosen_engine = pj.get("chosen").unwrap().get("engine").unwrap();
+        assert_eq!(chosen_engine.as_str().unwrap(), cfg.engine.label());
+        let cands = pj.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), plan.candidates.len());
+        // without a plan the block is absent (schema unchanged)
+        let plain = multiply_report_json(&rep, &cfg);
+        assert!(plain.get("plan").is_none());
     }
 
     #[test]

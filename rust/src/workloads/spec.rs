@@ -76,6 +76,32 @@ impl BenchSpec {
         }
     }
 
+    /// A spec observed from a live operand (the planner's input when
+    /// the workload is an in-memory matrix rather than a Table 1
+    /// benchmark — e.g. the sign iteration re-planning on fill-in):
+    /// occupancy as measured now, FLOPs the dense-equivalent
+    /// `2·dim³·occ²` expectation of ONE multiplication, and the
+    /// `S_C/S_{A,B}` ratio estimated from the fill-in a random-pattern
+    /// block product implies.
+    pub fn observed(name: &'static str, nblocks: usize, block_size: usize, occupancy: f64) -> Self {
+        let nb = nblocks.max(1);
+        let bs = block_size.max(1);
+        let occ = occupancy.clamp(1e-6, 1.0);
+        // A C block (i,j) survives unless all nb inner pairings miss.
+        let occ_c = 1.0 - (1.0 - occ * occ).powi(nb as i32);
+        let dim = (nb * bs) as f64;
+        Self {
+            name,
+            block_size: bs,
+            nblocks: nb,
+            occupancy: occ,
+            n_mults: 1,
+            flops: 2.0 * dim.powi(3) * occ * occ,
+            sc_ratio: (occ_c / occ).clamp(1.0, 4.0),
+            node_flop_rate: 50e9,
+        }
+    }
+
     /// The three strong-scaling benchmarks in paper order.
     pub fn all() -> Vec<Self> {
         vec![Self::h2o_dft_ls(), Self::s_e(), Self::dense()]
@@ -201,6 +227,22 @@ mod tests {
         assert_eq!(s.block_size, 32);
         assert_eq!(s.nblocks, 40);
         assert!(s.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn observed_spec_estimates_fill_in() {
+        // sparse operands: C denser than A/B, sc_ratio > 1
+        let s = BenchSpec::observed("obs", 32, 4, 0.2);
+        assert_eq!(s.dim(), 128);
+        assert_eq!(s.n_mults, 1);
+        assert!(s.sc_ratio > 1.0 && s.sc_ratio <= 4.0, "{}", s.sc_ratio);
+        // dense operands: nothing to fill in
+        let d = BenchSpec::observed("obs", 32, 4, 1.0);
+        assert_eq!(d.sc_ratio, 1.0);
+        assert!(d.flops > s.flops);
+        // degenerate inputs are clamped, not panics
+        let z = BenchSpec::observed("obs", 0, 0, 0.0);
+        assert!(z.occupancy > 0.0 && z.nblocks == 1 && z.block_size == 1);
     }
 
     #[test]

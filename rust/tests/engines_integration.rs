@@ -8,6 +8,8 @@ use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::dist::topology25d::Topology25d;
 use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
+use dbcsr::engines::planner::Planner;
+use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::util::testkit::property;
 use dbcsr::workloads::generator::{banded_for_spec, random_for_spec};
 use dbcsr::workloads::spec::BenchSpec;
@@ -20,6 +22,32 @@ fn engines_for(grid: &ProcGrid) -> Vec<Engine> {
         }
     }
     out
+}
+
+#[test]
+fn auto_planned_config_matches_oracle() {
+    // End-to-end `--plan auto` path: plan, lay out on the planned grid,
+    // run both a comm-shaped and a compute-shaped calibration, compare
+    // against the dense oracle.
+    let spec = BenchSpec::observed("auto", 16, 3, 0.4);
+    let layout = spec.layout();
+    let a = BlockCsrMatrix::random(&layout, &layout, spec.occupancy, 21);
+    let b = BlockCsrMatrix::random(&layout, &layout, spec.occupancy, 22);
+    let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+    for (budget, flop_rate) in [(4usize, 50e9), (9, 1e6), (16, 1e15)] {
+        let planner = Planner::new(MachineModel::piz_daint(flop_rate), budget);
+        let (cfg, plan) = MultiplyConfig::auto(&spec, &planner).unwrap();
+        assert_eq!(plan.choice.grid.size(), budget);
+        assert!(plan.regret() <= 0.05, "regret {}", plan.regret());
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &plan.choice.grid, 23);
+        let got = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let diff = got.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(
+            diff < 1e-10,
+            "planned {} on P={budget}: diff {diff}",
+            plan.choice.label()
+        );
+    }
 }
 
 #[test]
