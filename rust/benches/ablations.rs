@@ -8,27 +8,34 @@
 //! 5. wide vs narrow grids at equal P — the lcm(P_R,P_C) tick blowup;
 //! 6. cost-model planner vs a brute-force sweep of its candidate set —
 //!    regret of the chosen plan (must stay within the 5% acceptance
-//!    bound; see EXPERIMENTS.md §planner).
+//!    bound; see EXPERIMENTS.md §planner);
+//! 7. plan cache on the planned sign iteration — cached vs uncached
+//!    session (asserts hit rate > 50% and bitwise-identical results);
+//! 8. executed-run validation — plan ranking vs measured
+//!    `multiply_distributed` virtual times at simulation scale.
 //!
-//! Writes `BENCH_ablations.json` (the planner section, machine-readable)
-//! on every run.
+//! Writes `BENCH_ablations.json` (the planner/session/validation
+//! sections, machine-readable) on every run.
 //!
 //! ```bash
 //! cargo bench --bench ablations            # all sections
-//! cargo bench --bench ablations -- --smoke # CI profile: planner section only
+//! cargo bench --bench ablations -- --smoke # CI profile: sections 6–8 only
 //! ```
 
 use dbcsr::benchkit::{print_header, Bencher};
 use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
-use dbcsr::engines::context::MultContext;
+use dbcsr::engines::context::MultSession;
 use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
 use dbcsr::engines::planner::Planner;
 use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::perfmodel::replay::{replay_multiplication, ReplayConfig};
+use dbcsr::sign::iteration::{scale_to_unit_norm, sign_iteration_session};
 use dbcsr::util::json::Json;
 use dbcsr::workloads::generator::{banded_for_spec, random_for_spec};
+use dbcsr::workloads::hamiltonian::synthetic_system;
 use dbcsr::workloads::spec::BenchSpec;
 
 fn main() {
@@ -37,14 +44,176 @@ fn main() {
         classic_ablations();
     }
     let planner_rows = planner_ablation();
+    let session_row = session_ablation();
+    let exec_rows = executed_validation();
     let summary = Json::obj([
         ("bench", Json::Str("ablations".to_string())),
         ("smoke", Json::Bool(smoke)),
         ("planner", Json::Arr(planner_rows)),
+        ("session", session_row),
+        ("executed_validation", Json::Arr(exec_rows)),
     ]);
     std::fs::write("BENCH_ablations.json", summary.to_string_compact())
         .expect("write BENCH_ablations.json");
     println!("wrote BENCH_ablations.json");
+}
+
+/// 7. Plan cache on the planned sign iteration: run the same converging
+/// sign workload through a caching session and through the uncached
+/// (capacity-0) baseline.  Plans are priced at bucket centers either
+/// way, so the results must be bitwise identical while the cached run
+/// skips most of the candidate enumerations — the hit-rate floor (50%)
+/// is the CI gate for the session layer.
+fn session_ablation() -> Json {
+    print_header("ablation: plan cache on the planned sign iteration");
+    let sys = synthetic_system(8, 3, 7);
+    let hm = sys.h.add_scaled(-sys.mu, &sys.s);
+    let (x0, _) = scale_to_unit_norm(&hm);
+    let planner = Planner::new(MachineModel::piz_daint(50e9), 4);
+    let run = |capacity: usize| {
+        let mut session = MultSession::new(planner.clone(), 9).with_cache_capacity(capacity);
+        sign_iteration_session(&x0, &mut session, 0.25, 1e-9, 60).expect("planned sign run")
+    };
+    let cached = run(32);
+    let uncached = run(0);
+    assert!(cached.result.converged && uncached.result.converged);
+    let diff = cached
+        .result
+        .sign
+        .to_dense()
+        .max_abs_diff(&uncached.result.sign.to_dense());
+    assert_eq!(diff, 0.0, "cached vs uncached sign runs diverged: {diff}");
+    let s = &cached.session;
+    let hit_rate = s.cache_hit_rate();
+    println!(
+        "cached:   {} iters, {} lookups: {} priced / {} reused (hit rate {:.0}%), \
+         {} invalidation(s)",
+        cached.result.iters.len(),
+        s.plans_priced + s.plans_reused,
+        s.plans_priced,
+        s.plans_reused,
+        hit_rate * 100.0,
+        s.cache_invalidations
+    );
+    println!(
+        "uncached: {} priced / {} reused; results bitwise identical",
+        uncached.session.plans_priced, uncached.session.plans_reused
+    );
+    println!(
+        "windows:  pooled {} vs naive {} collectives ({} initial alloc, {} realloc)",
+        s.pool.pooled_collectives(),
+        s.pool.naive_collectives,
+        s.pool.initial_allocations,
+        s.pool.reallocations
+    );
+    assert!(
+        hit_rate > 0.5,
+        "plan-cache hit rate {hit_rate:.2} not above 50% on a converging sign run"
+    );
+    Json::obj([
+        ("iterations", Json::Num(cached.result.iters.len() as f64)),
+        ("hit_rate", Json::Num(hit_rate)),
+        ("plans_priced", Json::Num(s.plans_priced as f64)),
+        ("plans_reused", Json::Num(s.plans_reused as f64)),
+        (
+            "uncached_plans_priced",
+            Json::Num(uncached.session.plans_priced as f64),
+        ),
+        (
+            "cache_invalidations",
+            Json::Num(s.cache_invalidations as f64),
+        ),
+        (
+            "pooled_collectives",
+            Json::Num(s.pool.pooled_collectives() as f64),
+        ),
+        (
+            "naive_collectives",
+            Json::Num(s.pool.naive_collectives as f64),
+        ),
+        ("bitwise_identical", Json::Bool(true)),
+    ])
+}
+
+/// 8. Executed-run validation (ROADMAP): the planner ranks candidates
+/// within the analytic model; here every feasible single-thread
+/// candidate is *executed* through `multiply_distributed` at simulation
+/// scale and re-priced from its executed rank logs on the same machine.
+/// Records predicted vs measured virtual time per candidate plus the
+/// pairwise rank concordance, and gates loosely: the chosen plan's
+/// measured time must stay within 2x of the best measured candidate.
+fn executed_validation() -> Vec<Json> {
+    print_header("validation: plan ranking vs executed virtual times (simulation scale)");
+    let spec = BenchSpec::observed("exec-val", 16, 3, 0.4);
+    let machine = MachineModel::piz_daint(50e9);
+    let planner = Planner::new(machine, 4).with_thread_candidates(vec![1]);
+    let plan = planner.plan(&spec).expect("plannable");
+    let layout = spec.layout();
+    let a = BlockCsrMatrix::random(&layout, &layout, spec.occupancy, 31);
+    let b = BlockCsrMatrix::random(&layout, &layout, spec.occupancy, 32);
+    // (label, predicted s, measured s) per feasible candidate
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for cand in plan.candidates.iter().filter(|c| c.feasible) {
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &cand.grid, 33);
+        // the exact configuration the planner's candidate describes
+        let cfg = MultiplyConfig::from_candidate(cand, machine);
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).expect("executed candidate");
+        let (_, crit) = rep.model(&rep.fabric_machine);
+        println!(
+            "{:<22} predicted {:>9.4} ms   measured {:>9.4} ms",
+            cand.label(),
+            cand.modeled.total_s * 1e3,
+            crit.total_s * 1e3
+        );
+        rows.push((cand.label(), cand.modeled.total_s, crit.total_s));
+    }
+    let mut concordant = 0usize;
+    let mut pairs = 0usize;
+    for i in 0..rows.len() {
+        for j in i + 1..rows.len() {
+            pairs += 1;
+            if (rows[i].1 - rows[j].1) * (rows[i].2 - rows[j].2) >= 0.0 {
+                concordant += 1;
+            }
+        }
+    }
+    let concordance = concordant as f64 / pairs.max(1) as f64;
+    let best_measured = rows.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    let chosen_measured = rows
+        .iter()
+        .find(|r| r.0 == plan.choice.label())
+        .map(|r| r.2)
+        .expect("the chosen candidate is feasible and executed");
+    println!(
+        "rank concordance {concordant}/{pairs} ({:.0}%); chosen '{}' measured {:.4} ms \
+         vs best measured {:.4} ms",
+        concordance * 100.0,
+        plan.choice.label(),
+        chosen_measured * 1e3,
+        best_measured * 1e3
+    );
+    assert!(
+        chosen_measured <= 2.0 * best_measured,
+        "planner's choice measured {chosen_measured}s, over 2x the best measured \
+         {best_measured}s"
+    );
+    let mut out: Vec<Json> = rows
+        .iter()
+        .map(|(label, predicted, measured)| {
+            Json::obj([
+                ("candidate", Json::Str(label.clone())),
+                ("predicted_s", Json::Num(*predicted)),
+                ("measured_s", Json::Num(*measured)),
+            ])
+        })
+        .collect();
+    out.push(Json::obj([
+        ("candidate", Json::Str("summary".to_string())),
+        ("rank_concordance", Json::Num(concordance)),
+        ("chosen_measured_s", Json::Num(chosen_measured)),
+        ("best_measured_s", Json::Num(best_measured)),
+    ]));
+    out
 }
 
 /// 6. Planner vs brute force: the planner picks from an exhaustively
@@ -138,7 +307,6 @@ fn classic_ablations() {
     // and the random permutation destroys (paper §2).
     print_header("ablation: randomized permutation (load balance)");
     let a_banded = {
-        use dbcsr::blocks::matrix::BlockCsrMatrix;
         let dense_rows = BlockCsrMatrix::random(&layout, &layout, 0.9, 12);
         let d = dense_rows.to_dense();
         let mut out = dbcsr::blocks::dense::DenseMatrix::zeros(d.rows, d.cols);
@@ -188,22 +356,24 @@ fn classic_ablations() {
     print_header("ablation: grow-only window pool vs per-mult create/free");
     let a = random_for_spec(&spec, 6);
     let b = random_for_spec(&spec, 7);
-    let mut ctx = MultContext::new(
-        Distribution2d::rand_permuted(&layout, &layout, &grid, 8),
-        MultiplyConfig {
-            engine: Engine::OneSided { l: 1 },
-            ..Default::default()
-        },
+    let mut session = MultSession::new(
+        Planner::new(MachineModel::piz_daint(50e9), grid.size()),
+        8,
     );
+    let pool_cfg = MultiplyConfig {
+        engine: Engine::OneSided { l: 1 },
+        ..Default::default()
+    };
     for _ in 0..10 {
-        ctx.multiply(&a, &b, None).unwrap();
+        session.multiply_with(&pool_cfg, grid, &a, &b, None).unwrap();
     }
-    let p = ctx.pool_stats();
+    let p = session.pool_stats();
     println!(
         "10 multiplications: pooled collectives = {} vs naive = {} \
-         ({} reallocation(s), high-water {} KB/rank)",
+         ({} initial allocation(s), {} reallocation(s), high-water {} KB/rank)",
         p.pooled_collectives(),
         p.naive_collectives,
+        p.initial_allocations,
         p.reallocations,
         p.high_water_bytes / 1024
     );

@@ -1,30 +1,55 @@
-//! Persistent multiplication context: the paper's §3 window-pool reuse.
+//! Persistent multiplication session: the single entry point for
+//! *repeated* multiplication.
 //!
-//! "These buffers are read-only within each multiplication, and reused
+//! The paper's §3 window-pool reuse ("these buffers are ... reused
 //! between multiplications, by reallocating them only if the required
-//! size is larger than their actual size. ... an `mpi_iallreduce`
-//! operation is executed beforehand to check if any of the memory pool
-//! in the windows requires a reallocation. ... this optimization can
-//! give up to 5% overall speedup, mainly due to reduced
-//! synchronization."
+//! size is larger than their actual size ... up to 5% overall speedup,
+//! mainly due to reduced synchronization") only pays off across a
+//! *sequence* of multiplications, and DBCSR itself is organized around
+//! a persistent multiplication context rather than one-shot calls.
+//! [`MultSession`] is that context:
 //!
-//! [`MultContext`] owns grow-only per-rank window pools across a
-//! *sequence* of multiplications (e.g. the sign iteration's 2 SpGEMMs ×
-//! tens of iterations) and tracks how many reallocation collectives were
-//! actually needed versus the naive create/free-per-multiplication
-//! scheme — the ablation `bench: ablations` measures the difference.
+//! * it owns the [`Planner`] and a [`PlanCache`] keyed by the quantized
+//!   [`SparsitySignature`](crate::engines::plancache::SparsitySignature),
+//!   so iterative workloads stop paying the full candidate enumeration
+//!   every time occupancy drifts a little;
+//! * it owns the grow-only window pools ([`WindowPoolStats`]) and the
+//!   distribution, which persists across multiplications and is only
+//!   rebuilt when the planned grid actually changes;
+//! * [`MultSession::plan_seq`] schedules a *sequence* of
+//!   multiplications jointly: when two steps' individually-best grids
+//!   disagree, it looks for one common grid whose combined modeled time
+//!   stays within a small tolerance — per-step engine/thread switches
+//!   without redistribution.
+//!
+//! The sign iteration (`sign::iteration::sign_iteration_session`) and
+//! the CLI's `--plan auto` modes run on top of this; the ablation
+//! bench measures the pooled-vs-naive collective counts and the plan
+//! cache hit rate.
 
+use std::sync::Arc;
+
+use crate::blocks::filter::FilterConfig;
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::dist::distribution::Distribution2d;
-use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport};
+use crate::dist::grid::ProcGrid;
+use crate::engines::multiply::{
+    multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport,
+};
+use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
+use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
+use crate::workloads::spec::BenchSpec;
 
 /// Grow-only pool bookkeeping for one simulated rank set.
 #[derive(Clone, Debug, Default)]
 pub struct WindowPoolStats {
-    /// Multiplications driven through this context.
+    /// Multiplications driven through this session.
     pub multiplications: usize,
-    /// How many would have required a (collective) reallocation because
-    /// the needed pool size exceeded the high-water mark.
+    /// First-ever pool allocations (the pool was empty): 2 blocking
+    /// window creates, no frees of a prior pool.
+    pub initial_allocations: usize,
+    /// Growth reallocations past the high-water mark: 2 frees + 2
+    /// creates of the larger windows.
     pub reallocations: usize,
     /// How many blocking collectives the naive scheme would have issued
     /// (2 window creates + 2 frees per multiplication).
@@ -35,62 +60,482 @@ pub struct WindowPoolStats {
 
 impl WindowPoolStats {
     /// Collectives actually needed with the grow-only scheme: one
-    /// nonblocking size check per multiplication plus a blocking
-    /// (re)create only on growth.
+    /// nonblocking size check per multiplication, 2 creates for the
+    /// first allocation, and 2 frees + 2 creates per growth
+    /// reallocation.
     pub fn pooled_collectives(&self) -> usize {
-        self.multiplications + 4 * self.reallocations
+        self.multiplications + 2 * self.initial_allocations + 4 * self.reallocations
+    }
+
+    /// Account one multiplication needing `needed` pool bytes per rank.
+    fn record(&mut self, needed: u64) {
+        self.multiplications += 1;
+        self.naive_collectives += 4;
+        if needed > self.high_water_bytes {
+            if self.high_water_bytes == 0 {
+                self.initial_allocations += 1;
+            } else {
+                self.reallocations += 1;
+            }
+            self.high_water_bytes = needed;
+        }
     }
 }
 
-/// A persistent context for a sequence of multiplications sharing a
-/// distribution.
-pub struct MultContext {
-    dist: Distribution2d,
-    cfg: MultiplyConfig,
-    pool: WindowPoolStats,
+/// One planned step of a jointly scheduled sequence.
+#[derive(Clone, Debug)]
+pub struct SeqStep {
+    /// Runnable configuration (engine / L / threads from the candidate
+    /// selected for this step, filter from the session).
+    pub cfg: MultiplyConfig,
+    /// Grid the step executes on (the common grid when agreement was
+    /// reachable, the step's own choice otherwise).
+    pub grid: ProcGrid,
+    /// The full ranked plan the step was derived from.
+    pub plan: Arc<Plan>,
+    /// Whether that plan came from the session's cache.
+    pub cached: bool,
 }
 
-impl MultContext {
-    pub fn new(dist: Distribution2d, cfg: MultiplyConfig) -> Self {
+/// A jointly scheduled multiplication sequence.
+#[derive(Clone, Debug)]
+pub struct SeqPlan {
+    /// Per-step configurations, in execution order.
+    pub steps: Vec<SeqStep>,
+    /// All steps share one grid: engine switches between steps need no
+    /// redistribution.
+    pub grids_agree: bool,
+}
+
+/// Result of one multiplication through the session.
+pub struct SessionRun {
+    /// The executed multiplication's report.
+    pub report: MultiplyReport,
+    /// Configuration it ran under.
+    pub cfg: MultiplyConfig,
+    /// The plan that configuration came from.
+    pub plan: Arc<Plan>,
+    /// Whether the plan was a cache hit (no pricing ran).
+    pub cached: bool,
+}
+
+/// Point-in-time snapshot of a session's bookkeeping — the `session`
+/// block of the `--json` reports.
+#[derive(Clone, Debug)]
+pub struct SessionSummary {
+    /// Multiplications executed through the session.
+    pub multiplications: usize,
+    /// Plans priced by full candidate enumeration (cache misses).
+    pub plans_priced: usize,
+    /// Plans served from the cache (hits).
+    pub plans_reused: usize,
+    /// Cache entries dropped to make room (LRU).
+    pub cache_evictions: usize,
+    /// Cache entries dropped by drift invalidation.
+    pub cache_invalidations: usize,
+    /// Plans currently cached.
+    pub cache_entries: usize,
+    /// Joint sequence plans taken ([`MultSession::plan_seq`] calls).
+    pub seq_joint_plans: usize,
+    /// Consecutive sequence steps that shared a grid (no
+    /// redistribution between them).
+    pub grid_agreements: usize,
+    /// Distribution rebuilds after the first (grid or layout changed).
+    pub redistributions: usize,
+    /// Grow-only window-pool ledger.
+    pub pool: WindowPoolStats,
+}
+
+impl SessionSummary {
+    /// Fraction of plan lookups served from the cache (0 when no
+    /// lookup happened yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.plans_priced + self.plans_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.plans_reused as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct SessionCounters {
+    multiplications: usize,
+    seq_joint_plans: usize,
+    grid_agreements: usize,
+    redistributions: usize,
+}
+
+/// Pricing spec observed from a live operand pair: the row layout's
+/// block count, its mean block edge, and the operands' mean occupancy.
+/// This only drives planning — numerics are unaffected.
+pub fn observed_pair_spec(
+    name: &'static str,
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+) -> BenchSpec {
+    let nblocks = a.row_layout().nblocks().max(1);
+    let block_size = a.row_layout().dim() / nblocks;
+    let occ = 0.5 * (a.occupancy() + b.occupancy());
+    BenchSpec::observed(name, nblocks, block_size, occ)
+}
+
+/// A persistent planning session for a sequence of multiplications.
+pub struct MultSession {
+    planner: Planner,
+    cache: PlanCache,
+    filter: FilterConfig,
+    seed: u64,
+    /// Per-step relative slack accepted on a common sequence grid: a
+    /// step may run up to this much over its individual optimum to keep
+    /// the sequence on one distribution (default 3% — together with the
+    /// planner's 1% tie window this keeps every executed step within
+    /// the 5% regret acceptance bound).
+    seq_grid_tolerance: f64,
+    dist: Option<Distribution2d>,
+    pool: WindowPoolStats,
+    counters: SessionCounters,
+}
+
+impl MultSession {
+    /// A session over `planner` with the default plan-cache capacity,
+    /// no filtering, and `seed` driving the randomized distributions.
+    pub fn new(planner: Planner, seed: u64) -> Self {
         Self {
-            dist,
-            cfg,
+            planner,
+            cache: PlanCache::default(),
+            filter: FilterConfig::default(),
+            seed,
+            seq_grid_tolerance: 0.03,
+            dist: None,
             pool: WindowPoolStats::default(),
+            counters: SessionCounters::default(),
         }
     }
 
-    pub fn config(&self) -> &MultiplyConfig {
-        &self.cfg
+    /// Builder: the filter applied by every planned multiplication
+    /// (filtering is a numerics policy, not something the cost model
+    /// ranks).
+    pub fn with_filter(mut self, filter: FilterConfig) -> Self {
+        self.filter = filter;
+        self
     }
 
+    /// Builder: replace the plan cache with one of `capacity` entries
+    /// (0 disables caching — the uncached baseline).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache = PlanCache::new(capacity);
+        self
+    }
+
+    /// The planner this session prices with.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Plan-cache counters.
+    pub fn cache_stats(&self) -> &PlanCacheStats {
+        self.cache.stats()
+    }
+
+    /// Window-pool ledger.
     pub fn pool_stats(&self) -> &WindowPoolStats {
         &self.pool
     }
 
-    /// `C = C + A·B` through the context, updating the pool bookkeeping
-    /// the way the §3 scheme would: the pool grows to the max per-rank
-    /// window footprint and only a larger multiplication triggers the
-    /// blocking reallocation path.
-    pub fn multiply(
+    /// Snapshot of every session counter (the `--json` `session` block).
+    pub fn summary(&self) -> SessionSummary {
+        let cs = self.cache.stats();
+        SessionSummary {
+            multiplications: self.counters.multiplications,
+            plans_priced: cs.misses,
+            plans_reused: cs.hits,
+            cache_evictions: cs.evictions,
+            cache_invalidations: cs.invalidations,
+            cache_entries: self.cache.len(),
+            seq_joint_plans: self.counters.seq_joint_plans,
+            grid_agreements: self.counters.grid_agreements,
+            redistributions: self.counters.redistributions,
+            pool: self.pool.clone(),
+        }
+    }
+
+    /// The quantized signature `spec` keys the plan cache under.
+    pub fn spec_signature(&self, spec: &BenchSpec) -> SparsitySignature {
+        SparsitySignature::quantize(spec, &self.planner)
+    }
+
+    /// Drop the cached plan for `spec`'s signature bucket, if any — the
+    /// re-plan-on-drift path.  Returns whether an entry was removed.
+    pub fn invalidate_spec(&mut self, spec: &BenchSpec) -> bool {
+        let sig = SparsitySignature::quantize(spec, &self.planner);
+        self.cache.invalidate(&sig)
+    }
+
+    fn planned_cfg(&self, choice: &CandidatePlan) -> MultiplyConfig {
+        let mut cfg = MultiplyConfig::from_candidate(choice, self.planner.machine);
+        cfg.filter = self.filter;
+        cfg
+    }
+
+    /// Plan one multiplication of `spec` through the cache: returns the
+    /// runnable configuration, the plan, and whether it was a hit.
+    pub fn plan_spec(
         &mut self,
+        spec: &BenchSpec,
+    ) -> Result<(MultiplyConfig, Arc<Plan>, bool), PlanError> {
+        let (plan, hit) = self.cache.plan_for(&self.planner, spec)?;
+        Ok((self.planned_cfg(&plan.choice), plan, hit))
+    }
+
+    /// Jointly schedule a sequence of multiplications (one spec per
+    /// step).  Each step's plan goes through the cache; when the
+    /// per-step choice grids disagree, the scheduler searches for one
+    /// grid feasible for *every* step on which each step's best
+    /// candidate stays within the session's per-step tolerance of that
+    /// step's individual optimum — that keeps the whole sequence on one
+    /// distribution while still allowing per-step engine/L/thread
+    /// switches.  If no such grid exists, the steps keep their own
+    /// grids and the session redistributes between them.  Each step's
+    /// reported plan carries the candidate actually selected for
+    /// execution as its `choice`, so provenance always matches the
+    /// executed configuration.
+    pub fn plan_seq(&mut self, specs: &[BenchSpec]) -> Result<SeqPlan, PlanError> {
+        assert!(!specs.is_empty(), "plan_seq needs at least one step");
+        let mut fetched: Vec<(Arc<Plan>, bool)> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            fetched.push(self.cache.plan_for(&self.planner, spec)?);
+        }
+        self.counters.seq_joint_plans += 1;
+
+        let first_grid = fetched[0].0.choice.grid;
+        let all_agree = fetched.iter().all(|(p, _)| p.choice.grid == first_grid);
+        let own_choices = |session: &Self| -> Vec<SeqStep> {
+            fetched
+                .iter()
+                .map(|(p, hit)| SeqStep {
+                    cfg: session.planned_cfg(&p.choice),
+                    grid: p.choice.grid,
+                    plan: p.clone(),
+                    cached: *hit,
+                })
+                .collect()
+        };
+        let steps: Vec<SeqStep> = if all_agree {
+            own_choices(&*self)
+        } else {
+            // Common-grid search over the already priced candidate
+            // lists (no re-pricing): a grid qualifies when every step
+            // has a feasible candidate on it within the per-step
+            // tolerance of that step's own optimum; among qualifying
+            // grids, minimize the summed modeled time.
+            let mut grids: Vec<ProcGrid> = fetched[0]
+                .0
+                .candidates
+                .iter()
+                .filter(|c| c.feasible)
+                .map(|c| c.grid)
+                .collect();
+            grids.sort_by_key(|g| (g.rows(), g.cols()));
+            grids.dedup();
+            let mut best_total = f64::INFINITY;
+            let mut best_grid: Option<ProcGrid> = None;
+            for g in grids {
+                let mut total = 0.0;
+                let mut ok = true;
+                for (p, _) in &fetched {
+                    match p.best_feasible_on_grid(g) {
+                        Some(c)
+                            if c.modeled.total_s
+                                <= p.choice.modeled.total_s
+                                    * (1.0 + self.seq_grid_tolerance) =>
+                        {
+                            total += c.modeled.total_s;
+                        }
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok && total < best_total {
+                    best_total = total;
+                    best_grid = Some(g);
+                }
+            }
+            match best_grid {
+                Some(g) => fetched
+                    .iter()
+                    .map(|(p, hit)| {
+                        let c = p
+                            .best_feasible_on_grid(g)
+                            .expect("qualifying grid is feasible for every step")
+                            .clone();
+                        // Re-anchor the reported plan on the candidate
+                        // that will actually execute (share the plan
+                        // unchanged when it already is the choice).
+                        let unchanged = c.engine == p.choice.engine
+                            && c.grid == p.choice.grid
+                            && c.threads == p.choice.threads;
+                        let plan = if unchanged {
+                            p.clone()
+                        } else {
+                            Arc::new(Plan {
+                                choice: c.clone(),
+                                candidates: p.candidates.clone(),
+                                spec_name: p.spec_name.clone(),
+                                spec_occupancy: p.spec_occupancy,
+                            })
+                        };
+                        SeqStep {
+                            cfg: self.planned_cfg(&c),
+                            grid: g,
+                            plan,
+                            cached: *hit,
+                        }
+                    })
+                    .collect(),
+                None => own_choices(&*self),
+            }
+        };
+        let agreements = steps
+            .windows(2)
+            .filter(|w| w[0].grid == w[1].grid)
+            .count();
+        self.counters.grid_agreements += agreements;
+        let grids_agree = agreements == steps.len().saturating_sub(1);
+        Ok(SeqPlan { steps, grids_agree })
+    }
+
+    /// Rebuild the persistent distribution only when the grid or the
+    /// operand layouts actually changed.
+    fn ensure_dist(&mut self, a: &BlockCsrMatrix, b: &BlockCsrMatrix, grid: ProcGrid) {
+        let (nbr, nbi, nbc) = (
+            a.row_layout().nblocks(),
+            a.col_layout().nblocks(),
+            b.col_layout().nblocks(),
+        );
+        let fits = self.dist.as_ref().is_some_and(|d| {
+            d.grid == grid && d.nbrows() == nbr && d.nbinner() == nbi && d.nbcols() == nbc
+        });
+        if !fits {
+            if self.dist.is_some() {
+                self.counters.redistributions += 1;
+            }
+            self.dist = Some(Distribution2d::new_random(nbr, nbi, nbc, grid, self.seed));
+        }
+    }
+
+    /// Execute one multiplication on `grid` under `cfg`, maintaining
+    /// the distribution and the window-pool ledger.
+    fn run_one(
+        &mut self,
+        cfg: &MultiplyConfig,
+        grid: ProcGrid,
         a: &BlockCsrMatrix,
         b: &BlockCsrMatrix,
         c0: Option<&BlockCsrMatrix>,
     ) -> Result<MultiplyReport, MultiplyError> {
-        let report = multiply_distributed(a, b, c0, &self.dist, &self.cfg)?;
+        self.ensure_dist(a, b, grid);
+        let dist = self.dist.as_ref().expect("ensure_dist just built it");
+        let report = multiply_distributed(a, b, c0, dist, cfg)?;
         let needed: u64 = report
             .per_rank_stats
             .iter()
             .map(|s| s.window_bytes)
             .max()
             .unwrap_or(0);
-        self.pool.multiplications += 1;
-        self.pool.naive_collectives += 4;
-        if needed > self.pool.high_water_bytes {
-            self.pool.reallocations += 1;
-            self.pool.high_water_bytes = needed;
-        }
+        self.pool.record(needed);
+        self.counters.multiplications += 1;
         Ok(report)
+    }
+
+    /// Planned `C = C + A·B` priced for an explicit `spec` (the CLI's
+    /// `--plan auto` path, where the workload is a scaled Table 1
+    /// benchmark rather than the operands themselves).
+    pub fn multiply_spec(
+        &mut self,
+        spec: &BenchSpec,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        c0: Option<&BlockCsrMatrix>,
+    ) -> Result<SessionRun, MultiplyError> {
+        let (cfg, plan, cached) = self.plan_spec(spec)?;
+        let report = self.run_one(&cfg, plan.choice.grid, a, b, c0)?;
+        Ok(SessionRun {
+            report,
+            cfg,
+            plan,
+            cached,
+        })
+    }
+
+    /// Planned `C = C + A·B` priced from the operands' observed
+    /// sparsity.
+    pub fn multiply(
+        &mut self,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        c0: Option<&BlockCsrMatrix>,
+    ) -> Result<SessionRun, MultiplyError> {
+        let spec = observed_pair_spec("session", a, b);
+        self.multiply_spec(&spec, a, b, c0)
+    }
+
+    /// Execute step `step` of a jointly scheduled sequence.
+    pub fn multiply_step(
+        &mut self,
+        seq: &SeqPlan,
+        step: usize,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        c0: Option<&BlockCsrMatrix>,
+    ) -> Result<SessionRun, MultiplyError> {
+        let s = &seq.steps[step];
+        let report = self.run_one(&s.cfg, s.grid, a, b, c0)?;
+        Ok(SessionRun {
+            report,
+            cfg: s.cfg,
+            plan: s.plan.clone(),
+            cached: s.cached,
+        })
+    }
+
+    /// Plan and execute a whole sequence of independent multiplications
+    /// jointly (specs observed per operand pair).
+    pub fn multiply_seq(
+        &mut self,
+        pairs: &[(&BlockCsrMatrix, &BlockCsrMatrix)],
+    ) -> Result<Vec<SessionRun>, MultiplyError> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let specs: Vec<BenchSpec> = pairs
+            .iter()
+            .map(|(a, b)| observed_pair_spec("session-seq", a, b))
+            .collect();
+        let seq = self.plan_seq(&specs)?;
+        let mut out = Vec::with_capacity(pairs.len());
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            out.push(self.multiply_step(&seq, i, a, b, None)?);
+        }
+        Ok(out)
+    }
+
+    /// Escape hatch for hand-fixed configurations (the CLI's manual
+    /// mode, ablation baselines): run `cfg` on `grid` through the
+    /// session's pooled windows and persistent distribution, bypassing
+    /// the planner.  The caller's filter is respected as-is.
+    pub fn multiply_with(
+        &mut self,
+        cfg: &MultiplyConfig,
+        grid: ProcGrid,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        c0: Option<&BlockCsrMatrix>,
+    ) -> Result<MultiplyReport, MultiplyError> {
+        self.run_one(cfg, grid, a, b, c0)
     }
 }
 
@@ -99,57 +544,134 @@ mod tests {
     use super::*;
 
     use crate::blocks::layout::BlockLayout;
-    use crate::dist::grid::ProcGrid;
-    use crate::engines::multiply::Engine;
+    use crate::engines::multiply::{multiply_oracle, Engine};
+    use crate::perfmodel::machine::MachineModel;
 
-    fn ctx(engine: Engine) -> (MultContext, BlockLayout) {
-        let l = BlockLayout::uniform(12, 3);
-        let grid = ProcGrid::new(2, 2).unwrap();
-        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 1);
-        let cfg = MultiplyConfig {
+    fn planner(budget: usize) -> Planner {
+        Planner::new(MachineModel::piz_daint(50e9), budget)
+    }
+
+    fn fixed_cfg(engine: Engine) -> MultiplyConfig {
+        MultiplyConfig {
             engine,
             ..Default::default()
-        };
-        (MultContext::new(dist, cfg), l)
+        }
     }
 
     #[test]
-    fn pool_stabilizes_after_first_multiplications() {
-        let (mut c, l) = ctx(Engine::OneSided { l: 1 });
-        // same-sized multiplications: only the first allocates
+    fn pool_counts_first_allocation_separately() {
+        let l = BlockLayout::uniform(12, 3);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let mut s = MultSession::new(planner(4), 1);
+        let cfg = fixed_cfg(Engine::OneSided { l: 1 });
+        // same-sized multiplications: only the first allocates, and it
+        // is an initial allocation, not a reallocation
         let a = BlockCsrMatrix::random(&l, &l, 0.4, 2);
         let b = BlockCsrMatrix::random(&l, &l, 0.4, 3);
         for _ in 0..5 {
-            c.multiply(&a, &b, None).unwrap();
+            s.multiply_with(&cfg, grid, &a, &b, None).unwrap();
         }
-        assert_eq!(c.pool_stats().multiplications, 5);
-        assert_eq!(c.pool_stats().reallocations, 1);
-        assert!(c.pool_stats().pooled_collectives() < c.pool_stats().naive_collectives);
+        let p = s.pool_stats();
+        assert_eq!(p.multiplications, 5);
+        assert_eq!(p.initial_allocations, 1);
+        assert_eq!(p.reallocations, 0);
+        // 5 size checks + 2 creates = 7, vs 20 naive collectives
+        assert_eq!(p.pooled_collectives(), 7);
+        assert!(p.pooled_collectives() < p.naive_collectives);
     }
 
     #[test]
     fn growth_triggers_reallocation() {
-        let (mut c, l) = ctx(Engine::OneSided { l: 1 });
+        let l = BlockLayout::uniform(12, 3);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let mut s = MultSession::new(planner(4), 1);
+        let cfg = fixed_cfg(Engine::OneSided { l: 1 });
         let a_small = BlockCsrMatrix::random(&l, &l, 0.1, 4);
         let a_big = BlockCsrMatrix::random(&l, &l, 0.9, 5);
-        c.multiply(&a_small, &a_small, None).unwrap();
-        let after_small = c.pool_stats().reallocations;
-        c.multiply(&a_big, &a_big, None).unwrap();
-        assert_eq!(c.pool_stats().reallocations, after_small + 1);
+        s.multiply_with(&cfg, grid, &a_small, &a_small, None).unwrap();
+        assert_eq!(s.pool_stats().initial_allocations, 1);
+        assert_eq!(s.pool_stats().reallocations, 0);
+        s.multiply_with(&cfg, grid, &a_big, &a_big, None).unwrap();
+        assert_eq!(s.pool_stats().reallocations, 1);
         // shrinking back must NOT reallocate (grow-only)
-        c.multiply(&a_small, &a_small, None).unwrap();
-        assert_eq!(c.pool_stats().reallocations, after_small + 1);
+        s.multiply_with(&cfg, grid, &a_small, &a_small, None).unwrap();
+        assert_eq!(s.pool_stats().initial_allocations, 1);
+        assert_eq!(s.pool_stats().reallocations, 1);
     }
 
     #[test]
-    fn context_results_match_direct_calls() {
-        let (mut c, l) = ctx(Engine::PointToPoint);
+    fn planned_multiply_matches_oracle_and_caches() {
+        let l = BlockLayout::uniform(12, 3);
         let a = BlockCsrMatrix::random(&l, &l, 0.4, 6);
         let b = BlockCsrMatrix::random(&l, &l, 0.4, 7);
-        let via_ctx = c.multiply(&a, &b, None).unwrap();
-        let grid = ProcGrid::new(2, 2).unwrap();
-        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 1);
-        let direct = multiply_distributed(&a, &b, None, &dist, c.config()).unwrap();
-        assert_eq!(via_ctx.c.to_dense(), direct.c.to_dense());
+        let mut s = MultSession::new(planner(4), 9);
+        let r1 = s.multiply(&a, &b, None).unwrap();
+        let r2 = s.multiply(&a, &b, None).unwrap();
+        assert!(!r1.cached && r2.cached);
+        let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+        for r in [&r1, &r2] {
+            let diff = r.report.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(diff < 1e-10, "session multiply diverged: {diff}");
+        }
+        let sum = s.summary();
+        assert_eq!(sum.multiplications, 2);
+        assert_eq!(sum.plans_priced, 1);
+        assert_eq!(sum.plans_reused, 1);
+        assert_eq!(sum.redistributions, 0, "same grid must keep the dist");
+    }
+
+    #[test]
+    fn sequence_steps_share_distribution_when_grids_agree() {
+        let l = BlockLayout::uniform(12, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.35, 8);
+        let b = BlockCsrMatrix::random(&l, &l, 0.35, 9);
+        let mut s = MultSession::new(planner(4), 10);
+        let runs = s.multiply_seq(&[(&a, &b), (&b, &a)]).unwrap();
+        assert_eq!(runs.len(), 2);
+        for (run, (x, y)) in runs.iter().zip([(&a, &b), (&b, &a)]) {
+            let want = multiply_oracle(x, y, None, &FilterConfig::none());
+            let diff = run.report.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(diff < 1e-10, "seq step diverged: {diff}");
+        }
+        let sum = s.summary();
+        assert_eq!(sum.seq_joint_plans, 1);
+        // equal-occupancy pairs share a signature, a plan and a grid
+        assert_eq!(sum.grid_agreements, 1);
+        assert_eq!(sum.redistributions, 0);
+        assert_eq!(sum.plans_priced, 1);
+        assert_eq!(sum.plans_reused, 1);
+    }
+
+    #[test]
+    fn mixed_occupancy_sequence_stays_correct() {
+        let l = BlockLayout::uniform(12, 3);
+        let sparse = BlockCsrMatrix::random(&l, &l, 0.1, 11);
+        let dense = BlockCsrMatrix::random(&l, &l, 0.9, 12);
+        let mut s = MultSession::new(planner(4), 13);
+        let pairs: [(&BlockCsrMatrix, &BlockCsrMatrix); 2] =
+            [(&sparse, &sparse), (&dense, &dense)];
+        let runs = s.multiply_seq(&pairs).unwrap();
+        for (run, (x, y)) in runs.iter().zip(pairs) {
+            let want = multiply_oracle(x, y, None, &FilterConfig::none());
+            let diff = run.report.c.to_dense().max_abs_diff(&want.to_dense());
+            assert!(diff < 1e-10, "mixed seq step diverged: {diff}");
+        }
+        let sum = s.summary();
+        assert_eq!(sum.multiplications, 2);
+        assert_eq!(sum.plans_priced, 2, "distinct occupancy buckets price twice");
+    }
+
+    #[test]
+    fn session_filter_rides_into_planned_configs() {
+        let l = BlockLayout::uniform(10, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.5, 14);
+        let b = BlockCsrMatrix::random(&l, &l, 0.5, 15);
+        let filter = FilterConfig::uniform(1e-3);
+        let mut s = MultSession::new(planner(4), 16).with_filter(filter);
+        let run = s.multiply(&a, &b, None).unwrap();
+        assert_eq!(run.cfg.filter.post_eps, 1e-3);
+        let want = multiply_oracle(&a, &b, None, &filter);
+        let diff = run.report.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(diff < 1e-10, "filtered session multiply diverged: {diff}");
     }
 }

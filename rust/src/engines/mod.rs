@@ -1,12 +1,15 @@
 //! Multiplication engines: Cannon/PTP (Algorithm 1) and 2.5D/RMA
 //! (Algorithm 2), plus the shared tick schedule, the double-buffered
-//! prefetch pipeline they are both built on, and the cost-model planner
-//! that chooses between them per workload.
+//! prefetch pipeline they are both built on, the cost-model planner
+//! that chooses between them per workload, and the persistent
+//! multiplication session (plan cache + window pools) that amortizes
+//! that choice across a sequence of multiplications.
 
 pub mod cannon;
 pub mod context;
 pub mod multiply;
 pub mod osl;
 pub mod pipeline;
+pub mod plancache;
 pub mod planner;
 pub mod schedule;

@@ -17,7 +17,8 @@ use crate::comm::progress::FabricConfig;
 use crate::comm::world::{CommStats, SimWorld};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
-use crate::engines::planner::{Plan, PlanError, Planner};
+use crate::engines::plancache::PlanCache;
+use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
 use crate::engines::{cannon, osl};
 use crate::local::batch::LocalMultStats;
 use crate::perfmodel::machine::MachineModel;
@@ -99,14 +100,41 @@ impl MultiplyConfig {
     /// executing L=1 under an L>1 plan provenance.
     pub fn auto(spec: &BenchSpec, planner: &Planner) -> Result<(Self, Plan), PlanError> {
         let plan = planner.plan(spec)?;
-        let cfg = Self {
-            engine: plan.choice.engine,
+        let cfg = Self::from_candidate(&plan.choice, planner.machine);
+        Ok((cfg, plan))
+    }
+
+    /// [`MultiplyConfig::auto`] through a [`PlanCache`]: the plan is
+    /// served from the cache when `spec`'s quantized sparsity signature
+    /// was priced before, and priced (on the signature's canonical
+    /// spec) otherwise.  Returns the configuration, the plan and
+    /// whether it was a cache hit.  Standalone convenience for callers
+    /// managing their own cache; `engines::context::MultSession`
+    /// composes the same primitives (`PlanCache::plan_for` +
+    /// [`MultiplyConfig::from_candidate`]) and additionally applies its
+    /// session filter.
+    pub fn auto_cached(
+        spec: &BenchSpec,
+        planner: &Planner,
+        cache: &mut PlanCache,
+    ) -> Result<(Self, std::sync::Arc<Plan>, bool), PlanError> {
+        let (plan, hit) = cache.plan_for(planner, spec)?;
+        let cfg = Self::from_candidate(&plan.choice, planner.machine);
+        Ok((cfg, plan, hit))
+    }
+
+    /// Turn one priced [`CandidatePlan`] into a runnable configuration
+    /// on `machine` (the planner's base calibration).  Strict topology
+    /// for the same reason as [`MultiplyConfig::auto`]; the filter
+    /// starts at its default and stays the caller's numerics policy.
+    pub fn from_candidate(choice: &CandidatePlan, machine: MachineModel) -> Self {
+        Self {
+            engine: choice.engine,
             filter: FilterConfig::default(),
             strict_topology: true,
-            machine: Some(planner.machine),
-            threads_per_rank: plan.choice.threads,
-        };
-        Ok((cfg, plan))
+            machine: Some(machine),
+            threads_per_rank: choice.threads,
+        }
     }
 }
 
@@ -531,6 +559,20 @@ mod tests {
         // stack-flow accounting reaches the merged report
         assert!(r1.mult_stats.stacks > 0);
         assert!(!r1.mult_stats.by_dims.is_empty());
+    }
+
+    #[test]
+    fn auto_cached_hits_on_repeat_and_matches_auto() {
+        let spec = BenchSpec::observed("auto-cached", 10, 3, 0.4);
+        let planner = Planner::new(MachineModel::piz_daint(50e9), 4);
+        let mut cache = PlanCache::default();
+        let (c1, p1, hit1) = MultiplyConfig::auto_cached(&spec, &planner, &mut cache).unwrap();
+        let (c2, p2, hit2) = MultiplyConfig::auto_cached(&spec, &planner, &mut cache).unwrap();
+        assert!(!hit1 && hit2);
+        assert_eq!(c1.engine, c2.engine);
+        assert_eq!(c1.threads_per_rank, c2.threads_per_rank);
+        assert!(c1.strict_topology && c2.strict_topology);
+        assert_eq!(p1.choice.label(), p2.choice.label());
     }
 
     #[test]

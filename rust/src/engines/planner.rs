@@ -13,8 +13,10 @@
 //!    [`Topology25d`](crate::dist::topology25d::Topology25d)), every
 //!    grid factorization of the budget ([`ProcGrid::divisor_grids`] —
 //!    squarest first, skewed shapes included so the `lcm(P_R, P_C)`
-//!    tick blowup is priced, not assumed), and every thread count in
-//!    [`Planner::thread_candidates`].
+//!    tick blowup is priced, not assumed), every thread count in
+//!    [`Planner::thread_candidates`], and — for prime/awkward budgets —
+//!    squarer *sub-budget* grids `P' < P` that idle a few ranks
+//!    ([`Planner::rank_budgets`]).
 //! 2. **Price** each candidate with the same analytic replay that
 //!    regenerates the paper's tables:
 //!    [`build_rank_log`](crate::perfmodel::replay::build_rank_log) for
@@ -69,6 +71,10 @@ pub struct CandidatePlan {
     pub l: usize,
     /// Intra-rank worker threads.
     pub threads: usize,
+    /// Ranks of the budget this candidate leaves idle
+    /// (`max_ranks − grid.size()`; nonzero only for the sub-budget
+    /// grids priced for prime/awkward budgets).
+    pub idle_ranks: usize,
     /// Predicted time of ONE multiplication on the thread-scaled
     /// machine (`total_s` is the ranking key; `comp_s` / `comm_s` /
     /// `waitall_s` are the justification).
@@ -106,6 +112,7 @@ impl CandidatePlan {
             ("waitall_s", Json::Num(self.modeled.waitall_s)),
             ("overlap_hidden_s", Json::Num(hidden)),
             ("peak_mem_bytes", Json::Num(self.peak_mem_bytes)),
+            ("idle_ranks", Json::Num(self.idle_ranks as f64)),
             ("feasible", Json::Bool(self.feasible)),
         ])
     }
@@ -135,6 +142,16 @@ impl Plan {
             .filter(|c| c.feasible)
             .map(|c| c.modeled.total_s)
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Best (fastest) feasible candidate restricted to `grid`, if any —
+    /// what the session's joint sequence scheduler
+    /// (`engines::context::MultSession::plan_seq`) uses to keep
+    /// consecutive multiplications on one distribution.
+    pub fn best_feasible_on_grid(&self, grid: ProcGrid) -> Option<&CandidatePlan> {
+        self.candidates
+            .iter()
+            .find(|c| c.feasible && c.grid == grid)
     }
 
     /// Relative regret of the choice vs the brute-force best
@@ -204,7 +221,9 @@ pub struct Planner {
     /// applied per candidate via [`MachineModel::with_threads`].
     pub machine: MachineModel,
     /// Rank budget `P`: every candidate grid satisfies
-    /// `P_R · P_C = max_ranks`.
+    /// `P_R · P_C <= max_ranks` (strictly smaller only for the
+    /// sub-budget grids of prime/awkward budgets; see
+    /// [`Planner::rank_budgets`]).
     pub max_ranks: usize,
     /// Eq. 6 memory cap per process (bytes); `INFINITY` = uncapped.
     pub mem_cap_bytes: f64,
@@ -214,6 +233,21 @@ pub struct Planner {
     /// Relative window around the fastest feasible candidate inside
     /// which ties are broken toward the cheapest plan (default 1%).
     pub tie_epsilon: f64,
+}
+
+/// Aspect ratio (long/short side) of the squarest grid above which a
+/// budget counts as "awkward" and sub-budget grids are priced too.
+const SUB_BUDGET_ASPECT: f64 = 3.0;
+/// Sub-budgets must factor at least this square to be worth idling
+/// ranks for.
+const SUB_BUDGET_TARGET_ASPECT: f64 = 2.0;
+/// At most this many sub-budgets join the enumeration.
+const SUB_BUDGET_MAX: usize = 3;
+
+/// Aspect ratio (long/short side) of the squarest grid for `p` ranks.
+fn squarest_aspect(p: usize) -> f64 {
+    let g = ProcGrid::squarest(p).expect("positive rank count");
+    g.rows().max(g.cols()) as f64 / g.rows().min(g.cols()) as f64
 }
 
 impl Planner {
@@ -242,39 +276,66 @@ impl Planner {
         self
     }
 
+    /// Rank counts the enumeration prices: always the full budget, plus
+    /// — when the budget is prime/awkward (its squarest grid more
+    /// skewed than 3:1) — up to three sub-budgets `P' < P` in
+    /// `[P/2, P)` whose squarest grid is at most 2:1.  Idling `P − P'`
+    /// ranks buys a squarer grid with less communicated volume; the
+    /// per-candidate pricing (which sees the smaller grid's larger
+    /// per-rank panels) decides whether the trade pays.
+    pub fn rank_budgets(&self) -> Vec<usize> {
+        let p = self.max_ranks;
+        let mut out = vec![p];
+        if p < 4 || squarest_aspect(p) < SUB_BUDGET_ASPECT {
+            return out;
+        }
+        let mut q = p - 1;
+        while 2 * q >= p && q >= 1 && out.len() <= SUB_BUDGET_MAX {
+            if squarest_aspect(q) <= SUB_BUDGET_TARGET_ASPECT {
+                out.push(q);
+            }
+            q -= 1;
+        }
+        out
+    }
+
     /// Enumerate and price every candidate for `spec`, ranked by
     /// predicted time (feasible and infeasible alike).
     pub fn candidates(&self, spec: &BenchSpec) -> Vec<CandidatePlan> {
         let mut out = Vec::new();
-        for grid in ProcGrid::divisor_grids(self.max_ranks) {
-            let mut engines = vec![Engine::PointToPoint];
-            for l in paper_l_values(&grid) {
-                engines.push(Engine::OneSided { l });
-            }
-            for engine in engines {
-                let cfg = ReplayConfig {
-                    spec: spec.clone(),
-                    grid,
-                    engine,
-                    no_dmapp: false,
-                };
-                let log = build_rank_log(&cfg);
-                let mem = modeled_peak_memory(&cfg);
-                // All enumerated L values are topology-valid, so the
-                // fallback is the identity here; it still pins `l` to
-                // the validated factor.
-                let l = Topology25d::new_or_fallback(grid, engine.l()).l;
-                for &threads in &self.thread_candidates {
-                    let machine = self.machine.with_threads(threads);
-                    out.push(CandidatePlan {
-                        engine,
+        for budget in self.rank_budgets() {
+            let idle_ranks = self.max_ranks - budget;
+            for grid in ProcGrid::divisor_grids(budget) {
+                let mut engines = vec![Engine::PointToPoint];
+                for l in paper_l_values(&grid) {
+                    engines.push(Engine::OneSided { l });
+                }
+                for engine in engines {
+                    let cfg = ReplayConfig {
+                        spec: spec.clone(),
                         grid,
-                        l,
-                        threads,
-                        modeled: model_rank_time(&log, &machine),
-                        peak_mem_bytes: mem,
-                        feasible: mem <= self.mem_cap_bytes,
-                    });
+                        engine,
+                        no_dmapp: false,
+                    };
+                    let log = build_rank_log(&cfg);
+                    let mem = modeled_peak_memory(&cfg);
+                    // All enumerated L values are topology-valid, so the
+                    // fallback is the identity here; it still pins `l` to
+                    // the validated factor.
+                    let l = Topology25d::new_or_fallback(grid, engine.l()).l;
+                    for &threads in &self.thread_candidates {
+                        let machine = self.machine.with_threads(threads);
+                        out.push(CandidatePlan {
+                            engine,
+                            grid,
+                            l,
+                            threads,
+                            idle_ranks,
+                            modeled: model_rank_time(&log, &machine),
+                            peak_mem_bytes: mem,
+                            feasible: mem <= self.mem_cap_bytes,
+                        });
+                    }
                 }
             }
         }
@@ -462,8 +523,11 @@ mod tests {
                     if Topology25d::new(c.grid, c.l).is_err() {
                         return Err(format!("invalid topology: {}", c.label()));
                     }
-                    if c.grid.size() != budget {
-                        return Err(format!("rank budget violated: {}", c.label()));
+                    if c.grid.size() > budget {
+                        return Err(format!("rank budget exceeded: {}", c.label()));
+                    }
+                    if c.idle_ranks != budget - c.grid.size() {
+                        return Err(format!("idle-rank accounting off: {}", c.label()));
                     }
                     if c.peak_mem_bytes > cap {
                         return Err(format!(
@@ -486,6 +550,37 @@ mod tests {
                 Err(e) => Err(format!("unexpected error: {e}")),
             }
         });
+    }
+
+    #[test]
+    fn prime_budget_picks_squarer_sub_grid() {
+        // 13 ranks only factor as 1x13/13x1 strips; under a
+        // comm-dominated machine the planner must prefer idling a rank
+        // for a squarer sub-grid (12 = 3x4, 9 = 3x3, 8 = 2x4) over
+        // paying the strip's communication volume.
+        let planner = Planner::new(comm_dominated_machine(), 13);
+        assert_eq!(planner.rank_budgets(), vec![13, 12, 9, 8]);
+        let plan = planner
+            .plan(&BenchSpec::observed("prime", 32, 6, 0.3))
+            .unwrap();
+        assert!(
+            plan.choice.grid.rows() > 1 && plan.choice.grid.cols() > 1,
+            "strip grid chosen: {}",
+            plan.choice.label()
+        );
+        assert!(plan.choice.grid.size() < 13);
+        assert_eq!(plan.choice.idle_ranks, 13 - plan.choice.grid.size());
+        // the full-budget strips stay in the priced set as evidence
+        assert!(plan.candidates.iter().any(|c| c.grid.size() == 13));
+        // sub-budgets never idle more than half the budget
+        assert!(plan.candidates.iter().all(|c| c.grid.size() > 13 / 2));
+        // square-enough budgets don't grow sub-budget candidates
+        for nice in [4usize, 16, 36, 1296] {
+            assert_eq!(
+                Planner::new(comm_dominated_machine(), nice).rank_budgets(),
+                vec![nice]
+            );
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! | storage | [`blocks`] | blocked-CSR matrices, block norms, threshold filtering (§1) |
 //! | layout | [`dist`] | process grids, randomized 2D distributions (§2), the 2.5D topology rules (§3, Eq. 4/5) |
 //! | transport | [`comm`] | simulated MPI: ranks as threads, `isend`/`irecv`/`wait_all`, passive-target `rget` windows, the asynchronous virtual-time fabric, exact byte accounting |
-//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines; the cost-model [`engines::planner`] that chooses between them |
+//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines; the cost-model [`engines::planner`] that chooses between them; the persistent [`engines::context::MultSession`] (plan cache keyed by sparsity signature + §3 window pools) that amortizes the choice across repeated multiplications |
 //! | node-local | [`local`] | stack-flow multiplication with the on-the-fly norm filter (the LIBSMM role) |
 //! | kernels | [`runtime`] | optional PJRT client for the AOT-compiled Pallas microkernel |
 //! | modeling | [`perfmodel`] | α-β virtual-time replay of both schedules at paper scale (200–3844 nodes), machine calibrations, overlap cross-checks |
@@ -80,9 +80,13 @@ pub mod prelude {
     pub use crate::dist::distribution::Distribution2d;
     pub use crate::dist::grid::ProcGrid;
     pub use crate::dist::topology25d::Topology25d;
+    pub use crate::engines::context::{
+        MultSession, SeqPlan, SessionRun, SessionSummary, WindowPoolStats,
+    };
     pub use crate::engines::multiply::{
         multiply_distributed, Engine, MultiplyConfig, MultiplyReport,
     };
+    pub use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
     pub use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
     pub use crate::local::microkernel::GemmBackend;
     pub use crate::perfmodel::machine::MachineModel;

@@ -14,7 +14,10 @@
 use dbcsr::blocks::filter::FilterConfig;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
-use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
+use dbcsr::engines::context::MultSession;
+use dbcsr::engines::multiply::{
+    multiply_distributed, multiply_oracle, Engine, MultiplyConfig, MultiplyError,
+};
 use dbcsr::engines::planner::Planner;
 use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::stats::report;
@@ -112,21 +115,28 @@ fn cmd_multiply() -> i32 {
     let machine = MachineModel::piz_daint(spec.node_flop_rate);
     let filter = FilterConfig::uniform(args.get_as("eps"));
 
-    let (grid, cfg, plan) = match args.get("plan") {
+    let a = random_for_spec(&spec, seed);
+    let b = random_for_spec(&spec, seed ^ 0xBEEF);
+    let (report, cfg, grid, plan, session) = match args.get("plan") {
         "auto" => {
             let budget = parse_grid(args.get("grid")).size();
             let cap_gb: f64 = args.get_as("mem-cap-gb");
             let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
-            let (mut cfg, plan) = match MultiplyConfig::auto(&spec, &planner) {
-                Ok(x) => x,
-                Err(e) => {
+            let mut session = MultSession::new(planner, seed ^ 0xD157).with_filter(filter);
+            let run = match session.multiply_spec(&spec, &a, &b, None) {
+                Ok(run) => run,
+                Err(MultiplyError::Plan(e)) => {
                     eprintln!("planning failed: {e}");
                     return 2;
                 }
+                Err(e) => {
+                    eprintln!("multiplication failed: {e}");
+                    return 2;
+                }
             };
-            cfg.filter = filter;
-            print!("{}", plan.render(8));
-            (plan.choice.grid, cfg, Some(plan))
+            print!("{}", run.plan.render(8));
+            let grid = run.plan.choice.grid;
+            (run.report, run.cfg, grid, Some(run.plan), Some(session.summary()))
         }
         "manual" => {
             let cfg = MultiplyConfig {
@@ -136,18 +146,17 @@ fn cmd_multiply() -> i32 {
                 threads_per_rank: args.get_as("threads"),
                 ..Default::default()
             };
-            (parse_grid(args.get("grid")), cfg, None)
+            let grid = parse_grid(args.get("grid"));
+            let layout = spec.layout();
+            let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
+            let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            (report, cfg, grid, None, None)
         }
         other => {
             eprintln!("unknown plan mode '{other}' (use manual|auto)");
             return 2;
         }
     };
-
-    let a = random_for_spec(&spec, seed);
-    let b = random_for_spec(&spec, seed ^ 0xBEEF);
-    let layout = spec.layout();
-    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
     println!(
         "benchmark={} blocks={}x{} (block size {}) grid={}x{} engine={} threads={}",
         spec.name,
@@ -159,7 +168,6 @@ fn cmd_multiply() -> i32 {
         cfg.engine.label(),
         cfg.threads_per_rank.max(1)
     );
-    let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
     // model on the thread-scaled machine the fabric executed with
     let (_, crit) = report.model(&report.fabric_machine);
     println!(
@@ -188,11 +196,28 @@ fn cmd_multiply() -> i32 {
         overlap.modeled_wait_s * 1e3
     );
     println!("{}", report.timers.render());
+    if let Some(s) = &session {
+        println!(
+            "session: {} mult(s), {} plan(s) priced / {} reused ({:.0}% hit rate), \
+             pooled {} vs naive {} collectives",
+            s.multiplications,
+            s.plans_priced,
+            s.plans_reused,
+            s.cache_hit_rate() * 100.0,
+            s.pool.pooled_collectives(),
+            s.pool.naive_collectives
+        );
+    }
     if args.is_set("json") {
         println!(
             "{}",
-            dbcsr::stats::report::multiply_report_json_planned(&report, &cfg, plan.as_ref())
-                .to_string_compact()
+            dbcsr::stats::report::multiply_report_json_session(
+                &report,
+                &cfg,
+                plan.as_deref(),
+                session.as_ref()
+            )
+            .to_string_compact()
         );
     }
     if args.is_set("verify") {
@@ -215,7 +240,11 @@ fn cmd_sign() -> i32 {
         .opt("engine", "os1", "engine: ptp|os1|os2|os4|os9 (manual mode)")
         .opt("plan", "manual", "manual: Eq. 1 density pipeline; auto: planned sign(H-muS)")
         .opt("mem-cap-gb", "inf", "planner Eq. 6 memory cap per rank, GB (auto mode)")
-        .opt("replan-drift", "0.25", "relative occupancy drift that triggers a re-plan")
+        .opt(
+            "replan-drift",
+            "0.25",
+            "relative occupancy drift that triggers a re-plan (floored by the ~15% plan-cache bucket width)",
+        )
         .opt("eps", "1e-7", "filter threshold")
         .opt("seed", "7", "rng seed")
         .opt("threads", "1", "intra-rank worker threads (manual mode)")
@@ -330,14 +359,27 @@ fn cmd_sign_auto(
     );
     for ev in &out.plans {
         println!(
-            "  plan @ iter {:>2} (occ {:>6.2}%): {} — modeled {:.3} ms/mult, regret {:.2}%",
+            "  plan @ iter {:>2} (occ {:>6.2}%, {}): {} — modeled {:.3} ms/mult, regret {:.2}%",
             ev.iter,
             ev.occupancy * 100.0,
+            if ev.cached { "cache hit" } else { "priced" },
             ev.plan.choice.label(),
             ev.plan.choice.modeled.total_s * 1e3,
             ev.plan.regret() * 100.0
         );
     }
+    let s = &out.session;
+    println!(
+        "session: {} mult(s), {} plan(s) priced / {} reused ({:.0}% hit rate), \
+         {} invalidation(s), pooled {} vs naive {} collectives",
+        s.multiplications,
+        s.plans_priced,
+        s.plans_reused,
+        s.cache_hit_rate() * 100.0,
+        s.cache_invalidations,
+        s.pool.pooled_collectives(),
+        s.pool.naive_collectives
+    );
     for s in &out.result.iters {
         println!(
             "  iter {:>2}: delta {:>10.3e}  occupancy {:>6.2}%  products {}",

@@ -6,6 +6,7 @@
 use crate::blocks::filter::FilterConfig;
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::dist::distribution::Distribution2d;
+use crate::engines::context::{MultSession, SessionSummary};
 use crate::engines::multiply::{multiply_distributed, MultiplyConfig, MultiplyError};
 use crate::engines::planner::{Plan, Planner};
 use crate::local::batch::LocalMultStats;
@@ -94,28 +95,163 @@ pub fn sign_iteration(
 pub struct PlanEvent {
     /// Iteration before which the plan was taken (0 = initial plan).
     pub iter: usize,
-    /// X occupancy the plan was priced at.
+    /// X occupancy the iterate carried when the plan was taken (the
+    /// plan itself is priced at its signature bucket's center,
+    /// `plan.spec_occupancy`).
     pub occupancy: f64,
+    /// The plan was served from the session's cache (`true`) or freshly
+    /// priced by full candidate enumeration (`false`).
+    pub cached: bool,
+    /// The X·X step's plan.
     pub plan: Plan,
 }
 
 /// Result of [`sign_iteration_planned`]: the sign result plus the full
-/// planning trail.
+/// planning trail and the session's bookkeeping.
 pub struct PlannedSignResult {
     pub result: SignResult,
-    /// Every plan taken, in order (`plans[0]` is the initial one).
+    /// Every *distinct* planning outcome, in order (`plans[0]` is the
+    /// initial one): an entry is recorded whenever a plan was freshly
+    /// priced or the selected signature bucket changed.
     pub plans: Vec<PlanEvent>,
-    /// Re-plans triggered by occupancy drift (`plans.len() - 1`).
+    /// Plan changes after the initial one (`plans.len() - 1`).
     pub replans: usize,
+    /// Cache/pool/distribution counters of the run's session.
+    pub session: SessionSummary,
 }
 
-/// Planner-driven sign iteration: the engine / grid / `L` / thread
-/// configuration is chosen by `planner` from the *observed* occupancy
-/// of the iterate, and re-chosen whenever fill-in moves the occupancy
-/// by more than `drift_threshold` (relative) since the last plan —
-/// Newton–Schulz fill-in shifts the comm/comp balance, which can change
-/// the winning algorithm mid-run (the paper's Table 2 crossovers, but
-/// across iterations of one workload).
+/// Expected occupancy of `3I − X²` given X's block occupancy: the
+/// shared random-pattern fill-in model ([`BenchSpec::block_fill_in`],
+/// the same estimate `BenchSpec::observed` uses for its `sc_ratio`),
+/// with the identity keeping at least the diagonal blocks occupied.
+fn fill_in_occupancy(occ: f64, nblocks: usize) -> f64 {
+    BenchSpec::block_fill_in(nblocks, occ).max(1.0 / nblocks.max(1) as f64)
+}
+
+/// Planner-driven sign iteration on an explicit [`MultSession`]: every
+/// iteration plans its `X·X`-then-`X·Y` pair jointly through the
+/// session ([`MultSession::plan_seq`]), so steady-state iterations are
+/// served from the plan cache and the full candidate enumeration runs
+/// at most once per distinct sparsity-signature bucket.  Re-plan on
+/// drift becomes cache invalidation: when fill-in moves the occupancy
+/// by more than `drift_threshold` (relative) since the last pricing,
+/// the stale signature bucket is dropped and the next lookup re-prices.
+/// Because plans are priced at bucket centers, the effective re-plan
+/// granularity is floored at the ~15% bucket width
+/// ([`OCC_BUCKET_RATIO`](crate::engines::plancache::OCC_BUCKET_RATIO)):
+/// a `drift_threshold` below that cannot change a plan, since
+/// sub-bucket drift re-quantizes to the same priced spec
+/// — Newton–Schulz fill-in shifts the comm/comp balance, which can
+/// change the winning algorithm mid-run (the paper's Table 2
+/// crossovers, but across iterations of one workload).
+pub fn sign_iteration_session(
+    x0: &BlockCsrMatrix,
+    session: &mut MultSession,
+    drift_threshold: f64,
+    tol: f64,
+    max_iter: usize,
+) -> Result<PlannedSignResult, MultiplyError> {
+    let layout = x0.row_layout().clone();
+    let nblocks = layout.nblocks();
+    // Pricing input only: non-uniform layouts are approximated by their
+    // mean block edge (the cost model prices panel volumes, which the
+    // mean preserves; numerics are unaffected).
+    let block_size = layout.dim() / nblocks.max(1);
+    let pair_specs = |occ: f64| -> [BenchSpec; 2] {
+        // The X·Y step multiplies X (occupancy `occ`) by Y ≈ 3I − X²
+        // (fill-in occupancy); its pricing spec carries the pair mean —
+        // the same convention as `engines::context::observed_pair_spec`.
+        let xy_occ = 0.5 * (occ + fill_in_occupancy(occ, nblocks));
+        [
+            BenchSpec::observed("sign-xx", nblocks, block_size, occ),
+            BenchSpec::observed("sign-xy", nblocks, block_size, xy_occ),
+        ]
+    };
+
+    let mut x = x0.clone();
+    let eye = BlockCsrMatrix::identity(&layout);
+    let mut iters = Vec::new();
+    let mut plans: Vec<PlanEvent> = Vec::new();
+    let mut converged = false;
+    let mut planned_occ = x0.occupancy();
+    for it in 0..max_iter {
+        let occ = x.occupancy();
+        // Re-plan on drift, cache-style: drop the stale buckets the
+        // run has moved out of.  Plans are priced at bucket centers, so
+        // re-pricing a bucket the iterate still occupies would
+        // reproduce the identical plan — invalidation only applies to
+        // buckets actually left behind (hygiene for plans this run will
+        // not come back to).
+        let drift = (occ - planned_occ).abs() / planned_occ.max(1e-12);
+        if drift > drift_threshold {
+            let stale = pair_specs(planned_occ);
+            let fresh = pair_specs(occ);
+            for (old, new) in stale.iter().zip(fresh.iter()) {
+                if session.spec_signature(old) != session.spec_signature(new) {
+                    session.invalidate_spec(old);
+                }
+            }
+            planned_occ = occ;
+        }
+        let seq = session.plan_seq(&pair_specs(occ))?;
+        if !seq.steps[0].cached {
+            // a fresh pricing resets the drift baseline
+            planned_occ = occ;
+        }
+        let bucket_changed = match plans.last() {
+            Some(prev) => prev.plan.spec_occupancy != seq.steps[0].plan.spec_occupancy,
+            None => true,
+        };
+        if bucket_changed || !seq.steps[0].cached {
+            plans.push(PlanEvent {
+                iter: it,
+                occupancy: occ,
+                cached: seq.steps[0].cached,
+                plan: (*seq.steps[0].plan).clone(),
+            });
+        }
+        // X2 = X·X
+        let r1 = session.multiply_step(&seq, 0, &x, &x, None)?;
+        // Y = 3I − X²
+        let mut y = eye.clone();
+        y.scale(3.0);
+        let y = y.add_scaled(-1.0, &r1.report.c);
+        // X' = ½ X·Y — same distribution when the pair's grids agree
+        let r2 = session.multiply_step(&seq, 1, &x, &y, None)?;
+        let mut xn = r2.report.c;
+        xn.scale(0.5);
+        let delta = xn.add_scaled(-1.0, &x).frob_norm();
+        let mut ms = r1.report.mult_stats;
+        ms.merge(&r2.report.mult_stats);
+        iters.push(SignIterStats {
+            iter: it,
+            delta,
+            occupancy: xn.occupancy(),
+            mult_stats: ms,
+        });
+        x = xn;
+        if delta < tol {
+            converged = true;
+            break;
+        }
+    }
+    let replans = plans.len().saturating_sub(1);
+    Ok(PlannedSignResult {
+        result: SignResult {
+            sign: x,
+            iters,
+            converged,
+        },
+        plans,
+        replans,
+        session: session.summary(),
+    })
+}
+
+/// [`sign_iteration_session`] on a fresh session owning `planner` (the
+/// `dbcsr sign --plan auto` entry point): plan-cache capacity at its
+/// default, `filter` as the numerics policy, `seed` driving the
+/// randomized distributions.
 pub fn sign_iteration_planned(
     x0: &BlockCsrMatrix,
     planner: &Planner,
@@ -125,80 +261,8 @@ pub fn sign_iteration_planned(
     max_iter: usize,
     seed: u64,
 ) -> Result<PlannedSignResult, MultiplyError> {
-    let layout = x0.row_layout().clone();
-    let nblocks = layout.nblocks();
-    // Pricing input only: non-uniform layouts are approximated by their
-    // mean block edge (the cost model prices panel volumes, which the
-    // mean preserves; numerics are unaffected).
-    let block_size = layout.dim() / nblocks.max(1);
-    // Same plan-to-config wiring as `dbcsr multiply --plan auto`: the
-    // filter stays the caller's numerics policy, everything else comes
-    // from the plan.
-    let plan_cfg = |occ: f64| -> Result<(MultiplyConfig, Plan), MultiplyError> {
-        let spec = BenchSpec::observed("sign", nblocks, block_size, occ);
-        let (mut cfg, plan) = MultiplyConfig::auto(&spec, planner)?;
-        cfg.filter = filter;
-        Ok((cfg, plan))
-    };
-
-    let mut planned_occ = x0.occupancy();
-    let (mut cfg, plan0) = plan_cfg(planned_occ)?;
-    let mut dist = Distribution2d::rand_permuted(&layout, &layout, &plan0.choice.grid, seed);
-    let mut plans = vec![PlanEvent {
-        iter: 0,
-        occupancy: planned_occ,
-        plan: plan0,
-    }];
-
-    let mut x = x0.clone();
-    let mut iters = Vec::new();
-    let mut converged = false;
-    let eye = BlockCsrMatrix::identity(&layout);
-    for it in 0..max_iter {
-        let (xn, ms) = sign_step(&x, &eye, &dist, &cfg)?;
-        let delta = xn.add_scaled(-1.0, &x).frob_norm();
-        let occ = xn.occupancy();
-        iters.push(SignIterStats {
-            iter: it,
-            delta,
-            occupancy: occ,
-            mult_stats: ms,
-        });
-        x = xn;
-        if delta < tol {
-            converged = true;
-            break;
-        }
-        // Fill-in check: re-plan when the occupancy the current plan
-        // was priced at no longer describes the iterate.  Skip on the
-        // last iteration — a plan no multiplication will execute must
-        // not appear in the trail.
-        let drift = (occ - planned_occ).abs() / planned_occ.max(1e-12);
-        if drift > drift_threshold && it + 1 < max_iter {
-            planned_occ = occ;
-            let (new_cfg, new_plan) = plan_cfg(planned_occ)?;
-            if new_plan.choice.grid != dist.grid {
-                let grid = &new_plan.choice.grid;
-                dist = Distribution2d::rand_permuted(&layout, &layout, grid, seed);
-            }
-            cfg = new_cfg;
-            plans.push(PlanEvent {
-                iter: it + 1,
-                occupancy: planned_occ,
-                plan: new_plan,
-            });
-        }
-    }
-    let replans = plans.len() - 1;
-    Ok(PlannedSignResult {
-        result: SignResult {
-            sign: x,
-            iters,
-            converged,
-        },
-        plans,
-        replans,
-    })
+    let mut session = MultSession::new(planner.clone(), seed).with_filter(filter);
+    sign_iteration_session(x0, &mut session, drift_threshold, tol, max_iter)
 }
 
 /// Scale a matrix so the Newton–Schulz iteration converges:
@@ -276,6 +340,7 @@ mod tests {
 
     #[test]
     fn planned_sign_converges_and_replans_on_fill_in() {
+        use crate::engines::plancache::OCC_BUCKET_RATIO;
         use crate::perfmodel::machine::MachineModel;
         let a = gapped_matrix(8, 3, 7);
         let (x0, _) = scale_to_unit_norm(&a);
@@ -283,16 +348,28 @@ mod tests {
         let out = sign_iteration_planned(&x0, &planner, FilterConfig::none(), 0.10, 1e-8, 60, 9)
             .unwrap();
         assert!(out.result.converged, "planned run did not converge");
-        // the banded start fills in well past 10%: drift must re-plan
+        // the banded start fills in well past 10%: the plan must change
         assert!(out.replans >= 1, "no re-plan despite fill-in");
         assert_eq!(out.plans.len(), out.replans + 1);
         // every plan in the trail respects the rank budget and is
-        // priced at the occupancy that triggered it
+        // priced at the center of the bucket that triggered it
+        let half_bucket = OCC_BUCKET_RATIO.ln() / 2.0 + 1e-9;
         for ev in &out.plans {
             assert_eq!(ev.plan.choice.grid.size(), 4);
-            assert!((ev.plan.spec_occupancy - ev.occupancy).abs() < 1e-12);
+            let off = (ev.plan.spec_occupancy.ln() - ev.occupancy.ln()).abs();
+            assert!(
+                off <= half_bucket || ev.plan.spec_occupancy == 1.0,
+                "plan priced outside its bucket: {} vs {}",
+                ev.plan.spec_occupancy,
+                ev.occupancy
+            );
             assert!(ev.plan.regret() <= 0.05);
         }
+        // the session ran two multiplications per iteration and looked
+        // one plan pair up each time
+        let s = &out.session;
+        assert_eq!(s.multiplications, 2 * out.result.iters.len());
+        assert_eq!(s.plans_priced + s.plans_reused, 2 * out.result.iters.len());
         // numerics agree with a fixed-configuration run
         let manual = run(Engine::PointToPoint, FilterConfig::none());
         let planned = out.result.sign.to_dense();

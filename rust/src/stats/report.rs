@@ -297,6 +297,64 @@ pub fn multiply_report_json_planned(
     out
 }
 
+/// [`multiply_report_json_planned`] plus the `session` block when the
+/// multiplication ran through a persistent
+/// [`MultSession`](crate::engines::context::MultSession): plan-cache
+/// effectiveness and the §3 window-pool collectives ledger.
+pub fn multiply_report_json_session(
+    rep: &crate::engines::multiply::MultiplyReport,
+    cfg: &crate::engines::multiply::MultiplyConfig,
+    plan: Option<&crate::engines::planner::Plan>,
+    session: Option<&crate::engines::context::SessionSummary>,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut out = multiply_report_json_planned(rep, cfg, plan);
+    if let Some(s) = session {
+        if let Json::Obj(m) = &mut out {
+            m.insert("session".to_string(), session_json(s));
+        }
+    }
+    out
+}
+
+/// Machine-readable session summary (the `session` block of the
+/// `--json` reports): plans priced vs reused, cache hit rate, joint
+/// sequence scheduling, and pooled-vs-naive window collectives.
+pub fn session_json(
+    s: &crate::engines::context::SessionSummary,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj([
+        ("multiplications", Json::Num(s.multiplications as f64)),
+        ("plans_priced", Json::Num(s.plans_priced as f64)),
+        ("plans_reused", Json::Num(s.plans_reused as f64)),
+        ("cache_hit_rate", Json::Num(s.cache_hit_rate())),
+        ("cache_entries", Json::Num(s.cache_entries as f64)),
+        ("cache_evictions", Json::Num(s.cache_evictions as f64)),
+        (
+            "cache_invalidations",
+            Json::Num(s.cache_invalidations as f64),
+        ),
+        ("seq_joint_plans", Json::Num(s.seq_joint_plans as f64)),
+        ("grid_agreements", Json::Num(s.grid_agreements as f64)),
+        ("redistributions", Json::Num(s.redistributions as f64)),
+        (
+            "pool_initial_allocations",
+            Json::Num(s.pool.initial_allocations as f64),
+        ),
+        ("pool_reallocations", Json::Num(s.pool.reallocations as f64)),
+        (
+            "pooled_collectives",
+            Json::Num(s.pool.pooled_collectives() as f64),
+        ),
+        ("naive_collectives", Json::Num(s.pool.naive_collectives as f64)),
+        (
+            "pool_high_water_bytes",
+            Json::Num(s.pool.high_water_bytes as f64),
+        ),
+    ])
+}
+
 /// Machine-readable summary of a sign-iteration run
 /// (`dbcsr sign --json`): convergence plus the per-iteration trace.
 pub fn sign_result_json(res: &crate::sign::iteration::SignResult) -> crate::util::json::Json {
@@ -322,7 +380,8 @@ pub fn sign_result_json(res: &crate::sign::iteration::SignResult) -> crate::util
 
 /// [`sign_result_json`] plus the planning trail of a planner-driven run
 /// (`dbcsr sign --plan auto --json`): one entry per (re-)planning event
-/// with the full choice + per-candidate pricing.
+/// with the full choice + per-candidate pricing + whether the plan was
+/// a cache hit, and the run's `session` block.
 pub fn sign_report_json(
     out: &crate::sign::iteration::PlannedSignResult,
 ) -> crate::util::json::Json {
@@ -334,6 +393,7 @@ pub fn sign_report_json(
             Json::obj([
                 ("iter", Json::Num(ev.iter as f64)),
                 ("occupancy", Json::Num(ev.occupancy)),
+                ("cached", Json::Bool(ev.cached)),
                 ("plan", ev.plan.to_json()),
             ])
         })
@@ -342,6 +402,7 @@ pub fn sign_report_json(
     if let Json::Obj(m) = &mut j {
         m.insert("replans".to_string(), Json::Num(out.replans as f64));
         m.insert("plans".to_string(), Json::Arr(plans));
+        m.insert("session".to_string(), session_json(&out.session));
     }
     j
 }
@@ -448,6 +509,43 @@ mod tests {
         // without a plan the block is absent (schema unchanged)
         let plain = multiply_report_json(&rep, &cfg);
         assert!(plain.get("plan").is_none());
+    }
+
+    #[test]
+    fn session_block_rides_into_json_reports() {
+        use crate::blocks::layout::BlockLayout;
+        use crate::blocks::matrix::BlockCsrMatrix;
+        use crate::engines::context::MultSession;
+        use crate::engines::planner::Planner;
+        use crate::perfmodel::machine::MachineModel;
+        use crate::util::json::Json;
+        let l = BlockLayout::uniform(10, 2);
+        let a = BlockCsrMatrix::random(&l, &l, 0.5, 1);
+        let b = BlockCsrMatrix::random(&l, &l, 0.5, 2);
+        let mut session = MultSession::new(Planner::new(MachineModel::piz_daint(50e9), 4), 3);
+        session.multiply(&a, &b, None).unwrap();
+        let run = session.multiply(&a, &b, None).unwrap();
+        let summary = session.summary();
+        let j = multiply_report_json_session(
+            &run.report,
+            &run.cfg,
+            Some(run.plan.as_ref()),
+            Some(&summary),
+        );
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        let s = back.get("session").expect("session block missing");
+        assert_eq!(s.get("multiplications").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(s.get("plans_priced").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("plans_reused").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("cache_hit_rate").unwrap().as_f64().unwrap(), 0.5);
+        let pooled = s.get("pooled_collectives").unwrap().as_f64().unwrap();
+        let naive = s.get("naive_collectives").unwrap().as_f64().unwrap();
+        assert!(pooled < naive, "pooled {pooled} not below naive {naive}");
+        // the plan provenance block still rides along
+        assert!(back.get("plan").is_some());
+        // without a session the block is absent (schema unchanged)
+        let plain = multiply_report_json_planned(&run.report, &run.cfg, None);
+        assert!(plain.get("session").is_none());
     }
 
     #[test]

@@ -87,8 +87,7 @@ impl BenchSpec {
         let nb = nblocks.max(1);
         let bs = block_size.max(1);
         let occ = occupancy.clamp(1e-6, 1.0);
-        // A C block (i,j) survives unless all nb inner pairings miss.
-        let occ_c = 1.0 - (1.0 - occ * occ).powi(nb as i32);
+        let occ_c = Self::block_fill_in(nb, occ);
         let dim = (nb * bs) as f64;
         Self {
             name,
@@ -100,6 +99,17 @@ impl BenchSpec {
             sc_ratio: (occ_c / occ).clamp(1.0, 4.0),
             node_flop_rate: 50e9,
         }
+    }
+
+    /// Expected C-block occupancy of one random-pattern block product
+    /// at operand occupancy `occupancy`: a C block `(i, j)` survives
+    /// unless all `nblocks` inner pairings miss.  Shared by
+    /// [`BenchSpec::observed`]'s `sc_ratio` estimate and the sign
+    /// iteration's `X·Y` spec estimate.
+    pub fn block_fill_in(nblocks: usize, occupancy: f64) -> f64 {
+        let nb = nblocks.max(1);
+        let occ = occupancy.clamp(1e-6, 1.0);
+        1.0 - (1.0 - occ * occ).powi(nb as i32)
     }
 
     /// The three strong-scaling benchmarks in paper order.

@@ -1,0 +1,153 @@
+//! Integration: the planning session layer.
+//!
+//! Pins the PR's acceptance bar on the Hamiltonian workload: the
+//! planned sign iteration prices the full candidate set at most once
+//! per distinct sparsity-signature bucket (asserted via the `PlanEvent`
+//! trail and the session's cache stats), and a cached run is bitwise
+//! identical to the uncached (capacity-0) path.
+
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::engines::context::MultSession;
+use dbcsr::engines::multiply::multiply_oracle;
+use dbcsr::engines::planner::Planner;
+use dbcsr::perfmodel::machine::MachineModel;
+use dbcsr::sign::iteration::{scale_to_unit_norm, sign_iteration_session, PlannedSignResult};
+use dbcsr::workloads::hamiltonian::synthetic_system;
+use dbcsr::workloads::spec::BenchSpec;
+
+fn hamiltonian_x0() -> BlockCsrMatrix {
+    let sys = synthetic_system(8, 3, 7);
+    let hm = sys.h.add_scaled(-sys.mu, &sys.s);
+    scale_to_unit_norm(&hm).0
+}
+
+fn planner4() -> Planner {
+    Planner::new(MachineModel::piz_daint(50e9), 4)
+}
+
+fn planned_sign(cache_capacity: usize, drift: f64) -> PlannedSignResult {
+    let x0 = hamiltonian_x0();
+    let mut session = MultSession::new(planner4(), 9).with_cache_capacity(cache_capacity);
+    sign_iteration_session(&x0, &mut session, drift, 1e-9, 60).unwrap()
+}
+
+#[test]
+fn cached_sign_run_bitwise_identical_to_uncached() {
+    let cached = planned_sign(32, 0.25);
+    let uncached = planned_sign(0, 0.25);
+    assert!(cached.result.converged && uncached.result.converged);
+    assert_eq!(cached.result.iters.len(), uncached.result.iters.len());
+    // plans are priced on canonical (bucket-center) specs either way,
+    // so both paths run the exact same configurations: bitwise-equal
+    // iterates, not just numerically close ones
+    assert_eq!(
+        cached
+            .result
+            .sign
+            .to_dense()
+            .max_abs_diff(&uncached.result.sign.to_dense()),
+        0.0
+    );
+    for (a, b) in cached.result.iters.iter().zip(&uncached.result.iters) {
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.occupancy.to_bits(), b.occupancy.to_bits());
+    }
+    // the uncached baseline re-prices every lookup; the cached run reuses
+    assert_eq!(uncached.session.plans_reused, 0);
+    assert_eq!(
+        uncached.session.plans_priced,
+        2 * uncached.result.iters.len()
+    );
+    assert!(cached.session.plans_reused > 0);
+    assert!(cached.session.plans_priced < uncached.session.plans_priced);
+}
+
+#[test]
+fn sign_prices_each_signature_bucket_at_most_once() {
+    let out = planned_sign(32, 0.25);
+    assert!(out.result.converged, "sign run did not converge");
+    let s = &out.session;
+    // every pricing created one cache entry; entries only leave through
+    // drift invalidation (never eviction at this scale), so the full
+    // enumeration ran at most once per distinct live bucket
+    assert_eq!(s.cache_evictions, 0);
+    assert_eq!(s.cache_entries, s.plans_priced - s.cache_invalidations);
+    assert!(s.plans_reused > 0, "steady-state iterations must hit");
+    // one plan-pair lookup per iteration
+    assert_eq!(s.plans_priced + s.plans_reused, 2 * out.result.iters.len());
+    // the X·X trail never prices one bucket twice: fresh pricings carry
+    // pairwise-distinct bucket centers
+    let mut seen = std::collections::BTreeSet::new();
+    for ev in out.plans.iter().filter(|e| !e.cached) {
+        assert!(
+            seen.insert(ev.plan.spec_occupancy.to_bits()),
+            "bucket {} priced twice",
+            ev.plan.spec_occupancy
+        );
+    }
+    // the trail starts with a fresh pricing
+    assert!(!out.plans[0].cached);
+    assert_eq!(out.plans[0].iter, 0);
+    // Newton–Schulz fill-in on the banded start far exceeds the 25%
+    // drift threshold, so the stale bucket was invalidated at least once
+    assert!(s.cache_invalidations >= 1, "fill-in never invalidated");
+    assert!(out.replans >= 1);
+}
+
+#[test]
+fn drift_invalidation_reprices_stale_buckets() {
+    let planner = planner4();
+    let mut session = MultSession::new(planner, 1);
+    let spec = BenchSpec::observed("inv", 12, 3, 0.3);
+    let (_, _, hit0) = session.plan_spec(&spec).unwrap();
+    let (_, _, hit1) = session.plan_spec(&spec).unwrap();
+    assert!(!hit0 && hit1);
+    assert!(session.invalidate_spec(&spec));
+    let (_, _, hit2) = session.plan_spec(&spec).unwrap();
+    assert!(!hit2, "invalidated bucket must re-price");
+    let s = session.summary();
+    assert_eq!(s.plans_priced, 2);
+    assert_eq!(s.plans_reused, 1);
+    assert_eq!(s.cache_invalidations, 1);
+    assert_eq!(s.cache_entries, 1);
+}
+
+#[test]
+fn joint_sequence_matches_oracle_across_occupancies() {
+    let l = BlockLayout::uniform(14, 3);
+    let a = BlockCsrMatrix::random(&l, &l, 0.15, 1);
+    let b = BlockCsrMatrix::random(&l, &l, 0.45, 2);
+    let c = BlockCsrMatrix::random(&l, &l, 0.85, 3);
+    let mut session = MultSession::new(planner4(), 5);
+    let pairs: [(&BlockCsrMatrix, &BlockCsrMatrix); 3] = [(&a, &b), (&c, &c), (&a, &c)];
+    let runs = session.multiply_seq(&pairs).unwrap();
+    assert_eq!(runs.len(), 3);
+    for (run, (x, y)) in runs.iter().zip(pairs) {
+        let want = multiply_oracle(x, y, None, &FilterConfig::none());
+        let diff = run.report.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(diff < 1e-10, "seq step diverged: {diff}");
+    }
+    let s = session.summary();
+    assert_eq!(s.multiplications, 3);
+    assert_eq!(s.seq_joint_plans, 1);
+    // when the scheduler reached grid agreement, no redistribution may
+    // have happened mid-sequence
+    if s.grid_agreements == 2 {
+        assert_eq!(s.redistributions, 0);
+    }
+}
+
+#[test]
+fn planned_sign_converges_under_filtering_through_session() {
+    let x0 = hamiltonian_x0();
+    let mut session = MultSession::new(planner4(), 9).with_filter(FilterConfig::uniform(1e-8));
+    let out = sign_iteration_session(&x0, &mut session, 0.25, 1e-5, 80).unwrap();
+    assert!(out.result.converged);
+    // sign(A)² = I within the filtering noise floor
+    let s = out.result.sign.to_dense();
+    let s2 = s.matmul(&s);
+    let eye = dbcsr::blocks::dense::DenseMatrix::eye(s.rows);
+    assert!(s2.max_abs_diff(&eye) < 1e-3, "{}", s2.max_abs_diff(&eye));
+}
