@@ -1,0 +1,167 @@
+//! Symbolic-pass bench: communication volume vs occupancy.
+//!
+//! Runs both engines across an occupancy sweep, eager vs symbolic, and
+//! pins the three claims the symbolic pass makes:
+//!
+//! 1. **bitwise identity** — the symbolic C equals the eager C exactly,
+//!    at every occupancy, on both engines;
+//! 2. **superlinear drop** — on the one-sided (block-granular `rget`)
+//!    path, the symbolic volume falls *faster* than occupancy: eager
+//!    traffic scales ~linearly with occupancy while the symbolic
+//!    survival fraction `1-(1-occ)^k` shrinks on top of it, so the
+//!    symbolic volume ratio between the occupancy endpoints must
+//!    undercut the eager ratio with margin;
+//! 3. **planner accuracy** — `perfmodel::replay::modeled_fetch_bytes`
+//!    (what the planner prices candidates with when symbolic traffic is
+//!    on) predicts the executed one-sided fetch volume within 10%.
+//!
+//! Writes `BENCH_symbolic.json` (one row per engine × occupancy with
+//! eager/symbolic byte counts, plus the summary gates) on every run.
+//!
+//! ```bash
+//! cargo bench --bench symbolic_comm            # full sweep (3 seeds)
+//! cargo bench --bench symbolic_comm -- --smoke # CI profile (1 seed)
+//! ```
+
+use dbcsr::benchkit::print_header;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig, SymbolicMode};
+use dbcsr::perfmodel::replay::{modeled_fetch_bytes, ReplayConfig};
+use dbcsr::util::json::Json;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+const NBLOCKS: usize = 36;
+const BLOCK_SIZE: usize = 4;
+const OCCUPANCIES: [f64; 3] = [0.4, 0.2, 0.1];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seeds: &[u64] = if smoke { &[17] } else { &[17, 18, 19] };
+    let grid = ProcGrid::new(3, 3).unwrap();
+    let engines = [Engine::PointToPoint, Engine::OneSided { l: 1 }];
+
+    print_header("symbolic pass: comm volume vs occupancy (3x3, 36x36 blocks of 4)");
+    let mut rows: Vec<Json> = Vec::new();
+    // per (engine index, occupancy index): summed measured bytes
+    let mut eager_sum = [[0u64; OCCUPANCIES.len()]; 2];
+    let mut sym_sum = [[0u64; OCCUPANCIES.len()]; 2];
+    // one-sided planner check: summed prediction vs summed measurement
+    let mut predicted_os = 0.0f64;
+    let mut measured_os = 0u64;
+
+    for (ei, engine) in engines.into_iter().enumerate() {
+        for (oi, &occ) in OCCUPANCIES.iter().enumerate() {
+            for &seed in seeds {
+                let spec = BenchSpec::observed("symbolic-bench", NBLOCKS, BLOCK_SIZE, occ);
+                let a = random_for_spec(&spec, seed);
+                let b = random_for_spec(&spec, seed ^ 0xBEEF);
+                let layout = spec.layout();
+                let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD1);
+                let eager_cfg = MultiplyConfig {
+                    engine,
+                    symbolic: SymbolicMode::Off,
+                    ..Default::default()
+                };
+                let sym_cfg = MultiplyConfig {
+                    symbolic: SymbolicMode::On,
+                    ..eager_cfg
+                };
+                let eager = multiply_distributed(&a, &b, None, &dist, &eager_cfg).unwrap();
+                let sym = multiply_distributed(&a, &b, None, &dist, &sym_cfg).unwrap();
+                let diff = eager.c.to_dense().max_abs_diff(&sym.c.to_dense());
+                assert_eq!(
+                    diff,
+                    0.0,
+                    "{} occ={occ} seed={seed}: symbolic changed the bits",
+                    engine.label()
+                );
+                assert!(
+                    sym.symbolic.fetched_bytes <= sym.symbolic.eager_bytes,
+                    "{} occ={occ} seed={seed}: symbolic fetched more than eager",
+                    engine.label()
+                );
+                eager_sum[ei][oi] += sym.symbolic.eager_bytes;
+                sym_sum[ei][oi] += sym.symbolic.fetched_bytes;
+                if let Engine::OneSided { .. } = engine {
+                    // model the run at the *measured* occupancy
+                    let mocc = 0.5 * (a.occupancy() + b.occupancy());
+                    let rcfg = ReplayConfig {
+                        spec: BenchSpec::observed("symbolic-bench", NBLOCKS, BLOCK_SIZE, mocc),
+                        grid,
+                        engine,
+                        no_dmapp: false,
+                    };
+                    predicted_os += modeled_fetch_bytes(&rcfg, true) * grid.size() as f64;
+                    measured_os += sym.symbolic.fetched_bytes;
+                }
+            }
+            let saved = 1.0 - sym_sum[ei][oi] as f64 / eager_sum[ei][oi].max(1) as f64;
+            println!(
+                "{:<6} occ={occ:<4}: eager {:>10} B  symbolic {:>10} B  ({:>5.1}% saved)",
+                engine.label(),
+                eager_sum[ei][oi] / seeds.len() as u64,
+                sym_sum[ei][oi] / seeds.len() as u64,
+                saved * 100.0
+            );
+            rows.push(Json::obj([
+                ("engine", Json::Str(engine.label())),
+                ("occupancy", Json::Num(occ)),
+                (
+                    "eager_bytes",
+                    Json::Num(eager_sum[ei][oi] as f64 / seeds.len() as f64),
+                ),
+                (
+                    "symbolic_bytes",
+                    Json::Num(sym_sum[ei][oi] as f64 / seeds.len() as f64),
+                ),
+                ("saved_frac", Json::Num(saved)),
+            ]));
+        }
+    }
+
+    // 2. superlinear drop on the one-sided path: between the occupancy
+    // endpoints the symbolic volume must fall faster than the eager
+    // volume (which itself tracks occupancy ~linearly).
+    let lo = OCCUPANCIES.len() - 1; // sparsest
+    let os = 1; // OneSided row index
+    let eager_ratio = eager_sum[os][lo] as f64 / eager_sum[os][0] as f64;
+    let sym_ratio = sym_sum[os][lo] as f64 / sym_sum[os][0] as f64;
+    println!(
+        "one-sided occ {} -> {}: eager shrinks x{:.3}, symbolic shrinks x{:.3}",
+        OCCUPANCIES[0], OCCUPANCIES[lo], eager_ratio, sym_ratio
+    );
+    assert!(
+        sym_ratio <= 0.9 * eager_ratio,
+        "symbolic volume ratio {sym_ratio:.3} not superlinear vs eager ratio {eager_ratio:.3}"
+    );
+
+    // 3. planner traffic prediction within 10% of the executed volume.
+    let rel_err = (predicted_os - measured_os as f64).abs() / measured_os as f64;
+    println!(
+        "planner symbolic-traffic model: predicted {:.3e} B vs executed {:.3e} B \
+         ({:.1}% error)",
+        predicted_os,
+        measured_os as f64,
+        rel_err * 100.0
+    );
+    assert!(
+        rel_err <= 0.10,
+        "planner symbolic traffic prediction off by {:.1}% (> 10%)",
+        rel_err * 100.0
+    );
+
+    let summary = Json::obj([
+        ("bench", Json::Str("symbolic_comm".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(rows)),
+        ("eager_ratio_lo_over_hi", Json::Num(eager_ratio)),
+        ("symbolic_ratio_lo_over_hi", Json::Num(sym_ratio)),
+        ("planner_rel_err", Json::Num(rel_err)),
+        ("bitwise_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_symbolic.json", summary.to_string_compact())
+        .expect("write BENCH_symbolic.json");
+    println!("wrote BENCH_symbolic.json");
+}

@@ -14,3 +14,4 @@ pub mod layout;
 pub mod matrix;
 pub mod norms;
 pub mod panel;
+pub mod symbolic;

@@ -1,0 +1,318 @@
+//! Symbolic multiplication: structure-only panel views and the
+//! metadata-driven survivor computation.
+//!
+//! The symbolic pass exchanges only block *structure* — coordinates,
+//! dims and cached Frobenius norms, no numerical payload — before any
+//! panel data moves.  Running the same merge-join as
+//! [`crate::local::batch::assemble_tasks`] over two [`SymbolicPanel`]s
+//! yields exactly the set of blocks that contribute at least one
+//! surviving product, so the engines can fetch (or forward) only those
+//! blocks and still produce a bitwise-identical C: the filtered
+//! sub-panels preserve entry order, [`CsrIndex`] groups preserve
+//! relative order, hence the task stream — and therefore every stack
+//! and every accumulation — is unchanged.
+
+use crate::blocks::panel::{CsrIndex, Panel, PanelEntry};
+
+/// Structure of one block: coordinates and dims, no data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SymbolicEntry {
+    /// Global block row.
+    pub row: u32,
+    /// Global block column.
+    pub col: u32,
+    /// Block dims.
+    pub nr: u16,
+    pub nc: u16,
+}
+
+/// Structure-only view of a [`Panel`]: what the structure-exchange
+/// phase moves instead of the panel itself.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SymbolicPanel {
+    pub entries: Vec<SymbolicEntry>,
+    /// Cached per-block Frobenius norms, so the symbolic pass applies
+    /// the same on-the-fly filter predicate the eager multiply would.
+    pub norms: Vec<f64>,
+}
+
+impl SymbolicPanel {
+    /// Extract the structure of `p` (entry order preserved).
+    pub fn from_panel(p: &Panel) -> SymbolicPanel {
+        SymbolicPanel {
+            entries: p
+                .entries
+                .iter()
+                .map(|e| SymbolicEntry {
+                    row: e.row,
+                    col: e.col,
+                    nr: e.nr,
+                    nc: e.nc,
+                })
+                .collect(),
+            norms: p.norms.clone(),
+        }
+    }
+
+    /// Number of blocks described.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Wire bytes of the structure message itself: 12 B per entry
+    /// (row, col, dims packed) plus the 8 B norm.
+    pub fn wire_bytes(&self) -> usize {
+        self.entries.len() * 12 + self.norms.len() * 8
+    }
+
+    /// Wire bytes the *full* panel behind this structure occupies —
+    /// what the eager path would fetch (matches [`Panel::wire_bytes`]:
+    /// data + 16 B entry + 8 B norm per block).
+    pub fn panel_wire_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| e.nr as usize * e.nc as usize * 8 + 24)
+            .sum()
+    }
+
+    /// Wire bytes of the sub-panel selecting entries `ids`.
+    pub fn subset_wire_bytes(&self, ids: &[u32]) -> usize {
+        ids.iter()
+            .map(|&i| {
+                let e = &self.entries[i as usize];
+                e.nr as usize * e.nc as usize * 8 + 24
+            })
+            .sum()
+    }
+}
+
+/// Merge-join two structures exactly as `assemble_tasks` joins the
+/// panels (A by-column against B by-row, same `a_norm · b_norm > eps`
+/// predicate, `eps < 0` disables the filter) and mark every entry that
+/// contributes at least one surviving product.  `live_a` / `live_b`
+/// must be as long as the respective entry lists; marks accumulate, so
+/// one flag array can collect the union over several pairings (the 2.5D
+/// engine reuses each A panel against `L_C` B panels and vice versa).
+pub fn mark_live(
+    a: &SymbolicPanel,
+    b: &SymbolicPanel,
+    eps: f64,
+    live_a: &mut [bool],
+    live_b: &mut [bool],
+) {
+    debug_assert_eq!(live_a.len(), a.entries.len());
+    debug_assert_eq!(live_b.len(), b.entries.len());
+    let a_by_col = CsrIndex::build(a.entries.iter().map(|e| e.col));
+    let b_by_row = CsrIndex::build(b.entries.iter().map(|e| e.row));
+    let (mut ga, mut gb) = (0usize, 0usize);
+    while ga < a_by_col.ngroups() && gb < b_by_row.ngroups() {
+        let (ka, kb) = (a_by_col.key(ga), b_by_row.key(gb));
+        if ka < kb {
+            ga += 1;
+        } else if kb < ka {
+            gb += 1;
+        } else {
+            for &ae in a_by_col.group(ga) {
+                let an = a.norms[ae as usize];
+                for &be in b_by_row.group(gb) {
+                    if eps < 0.0 || an * b.norms[be as usize] > eps {
+                        live_a[ae as usize] = true;
+                        live_b[be as usize] = true;
+                    }
+                }
+            }
+            ga += 1;
+            gb += 1;
+        }
+    }
+}
+
+/// One-pairing convenience over [`mark_live`]: the ascending entry ids
+/// of A and B blocks with at least one surviving product.
+pub fn symbolic_live_sets(a: &SymbolicPanel, b: &SymbolicPanel, eps: f64) -> (Vec<u32>, Vec<u32>) {
+    let mut live_a = vec![false; a.entries.len()];
+    let mut live_b = vec![false; b.entries.len()];
+    mark_live(a, b, eps, &mut live_a, &mut live_b);
+    (live_ids(&live_a), live_ids(&live_b))
+}
+
+/// Ascending entry ids of the set flags.
+pub fn live_ids(live: &[bool]) -> Vec<u32> {
+    live.iter()
+        .enumerate()
+        .filter(|(_, &l)| l)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// The sub-panel of `p` selecting entries `ids` (ascending), indexed.
+/// Entry order — and therefore the downstream merge-join task order —
+/// is preserved, and `push_block` recomputes each norm from the same
+/// data, so the sub-panel is bit-identical to the corresponding slice
+/// of `p`.
+pub fn filter_panel(p: &Panel, ids: &[u32]) -> Panel {
+    let mut out = Panel::new();
+    for &i in ids {
+        let e = p.entries[i as usize];
+        out.push_block(e.row, e.col, e.nr, e.nc, p.block(i as usize));
+    }
+    out.reindex();
+    out
+}
+
+/// The sub-panel of `p` keeping entries satisfying `keep(entry, norm)`
+/// — the PTP fallback's global-ceiling filter (rank-independent
+/// predicate, so the filtered sets stay consistent under circulation).
+pub fn filter_panel_by<F: Fn(&PanelEntry, f64) -> bool>(p: &Panel, keep: F) -> Panel {
+    let ids: Vec<u32> = p
+        .entries
+        .iter()
+        .enumerate()
+        .filter(|(i, e)| keep(e, p.norms[*i]))
+        .map(|(i, _)| i as u32)
+        .collect();
+    filter_panel(p, &ids)
+}
+
+/// Presence-tagged norm encoding for the scalar max-allreduce: bit 63
+/// marks presence (free, since Frobenius norms are non-negative), the
+/// low bits carry the norm's IEEE-754 pattern — whose ordering matches
+/// the norms' for non-negative values, so the u64 max is the norm max
+/// and any present value beats the absent sentinel `0`.
+pub fn encode_norm_ceiling(norm: f64) -> u64 {
+    (1u64 << 63) | norm.to_bits()
+}
+
+/// Decode a reduced ceiling: `None` means no block exists globally.
+pub fn decode_norm_ceiling(v: u64) -> Option<f64> {
+    if v & (1u64 << 63) != 0 {
+        Some(f64::from_bits(v & !(1u64 << 63)))
+    } else {
+        None
+    }
+}
+
+/// Does an entry of norm `norm` survive against a global partner
+/// ceiling?  `None` (no partner block anywhere in the inner row/col)
+/// always drops; otherwise the entry survives unless *every* pairing
+/// would be filtered, i.e. unless `norm · ceiling ≤ eps` (`eps < 0`
+/// keeps every entry with a partner, matching the disabled filter).
+pub fn survives_ceiling(norm: f64, ceiling: Option<f64>, eps: f64) -> bool {
+    match ceiling {
+        None => false,
+        Some(c) => eps < 0.0 || norm * c > eps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::layout::BlockLayout;
+    use crate::blocks::matrix::BlockCsrMatrix;
+    use crate::local::batch::{assemble_tasks, matrix_to_panel, LocalMultStats};
+
+    fn random_panels(occ: f64, seed: u64) -> (Panel, Panel) {
+        let l = BlockLayout::from_sizes(vec![2, 3, 1, 4, 2, 3]);
+        let a = BlockCsrMatrix::random(&l, &l, occ, seed);
+        let b = BlockCsrMatrix::random(&l, &l, occ, seed + 1);
+        (matrix_to_panel(&a), matrix_to_panel(&b))
+    }
+
+    #[test]
+    fn structure_byte_accounting() {
+        let (pa, _) = random_panels(0.5, 7);
+        let s = SymbolicPanel::from_panel(&pa);
+        assert_eq!(s.len(), pa.nblocks());
+        assert_eq!(s.wire_bytes(), pa.nblocks() * 20);
+        assert!(s.wire_bytes() < pa.wire_bytes());
+        assert_eq!(s.panel_wire_bytes(), pa.wire_bytes());
+        let all: Vec<u32> = (0..s.len() as u32).collect();
+        assert_eq!(s.subset_wire_bytes(&all), pa.wire_bytes());
+        assert_eq!(s.subset_wire_bytes(&[]), 0);
+    }
+
+    #[test]
+    fn live_sets_match_assembled_tasks() {
+        let (pa, pb) = random_panels(0.4, 31);
+        let (sa, sb) = (SymbolicPanel::from_panel(&pa), SymbolicPanel::from_panel(&pb));
+        for eps in [-1.0, 0.3, 1e12] {
+            let mut stats = LocalMultStats::default();
+            let tasks = assemble_tasks(&pa, &pb, eps, &mut stats);
+            let mut want_a: Vec<u32> = tasks.iter().map(|t| t.a_entry as u32).collect();
+            let mut want_b: Vec<u32> = tasks.iter().map(|t| t.b_entry as u32).collect();
+            want_a.sort_unstable();
+            want_a.dedup();
+            want_b.sort_unstable();
+            want_b.dedup();
+            let (live_a, live_b) = symbolic_live_sets(&sa, &sb, eps);
+            assert_eq!(live_a, want_a, "eps={eps}");
+            assert_eq!(live_b, want_b, "eps={eps}");
+        }
+    }
+
+    #[test]
+    fn filtered_subpanel_reproduces_task_stream() {
+        // Multiplying the live sub-panels must enumerate exactly the
+        // surviving tasks of the full panels, in the same order, over
+        // bit-identical block data.
+        let (pa, pb) = random_panels(0.5, 55);
+        let (sa, sb) = (SymbolicPanel::from_panel(&pa), SymbolicPanel::from_panel(&pb));
+        let eps = 0.4;
+        let (live_a, live_b) = symbolic_live_sets(&sa, &sb, eps);
+        let (fa, fb) = (filter_panel(&pa, &live_a), filter_panel(&pb, &live_b));
+        assert_eq!(fa.wire_bytes(), sa.subset_wire_bytes(&live_a));
+
+        let mut s_full = LocalMultStats::default();
+        let full = assemble_tasks(&pa, &pb, eps, &mut s_full);
+        let mut s_sub = LocalMultStats::default();
+        let sub = assemble_tasks(&fa, &fb, eps, &mut s_sub);
+        assert_eq!(sub.len(), full.len());
+        for (t_sub, t_full) in sub.iter().zip(&full) {
+            assert_eq!(
+                fa.block(t_sub.a_entry),
+                pa.block(t_full.a_entry),
+                "A block data must be bit-identical"
+            );
+            assert_eq!(fb.block(t_sub.b_entry), pb.block(t_full.b_entry));
+            assert_eq!(fa.norms[t_sub.a_entry].to_bits(), pa.norms[t_full.a_entry].to_bits());
+        }
+    }
+
+    #[test]
+    fn union_marks_accumulate() {
+        let (pa, pb) = random_panels(0.3, 71);
+        let (pc, _) = random_panels(0.3, 99);
+        let sa = SymbolicPanel::from_panel(&pa);
+        let (sb, sc) = (SymbolicPanel::from_panel(&pb), SymbolicPanel::from_panel(&pc));
+        let mut union = vec![false; sa.len()];
+        let mut scratch_b = vec![false; sb.len()];
+        let mut scratch_c = vec![false; sc.len()];
+        mark_live(&sa, &sb, -1.0, &mut union, &mut scratch_b);
+        let after_first = live_ids(&union);
+        mark_live(&sa, &sc, -1.0, &mut union, &mut scratch_c);
+        let after_both = live_ids(&union);
+        assert!(after_both.len() >= after_first.len());
+        for id in after_first {
+            assert!(after_both.contains(&id), "marks must accumulate");
+        }
+    }
+
+    #[test]
+    fn norm_ceiling_encoding() {
+        assert_eq!(decode_norm_ceiling(0), None);
+        assert_eq!(decode_norm_ceiling(encode_norm_ceiling(0.0)), Some(0.0));
+        let (x, y) = (1.25f64, 7.5f64);
+        assert_eq!(decode_norm_ceiling(encode_norm_ceiling(x)), Some(x));
+        assert!(encode_norm_ceiling(x) < encode_norm_ceiling(y));
+        assert!(encode_norm_ceiling(0.0) > 0, "present zero beats absent");
+        // survival predicate: dropped without a partner, eager otherwise
+        assert!(!survives_ceiling(9.0, None, -1.0));
+        assert!(survives_ceiling(9.0, Some(0.0), -1.0));
+        assert!(!survives_ceiling(2.0, Some(3.0), 6.0));
+        assert!(survives_ceiling(2.0, Some(3.1), 6.0));
+    }
+}

@@ -8,9 +8,11 @@
 //! * [`ptp`] — nonblocking point-to-point (`isend`/`irecv`/`wait_all`),
 //!   which Algorithm 1 (Cannon) is built on; completion requires both
 //!   sender and receiver progress, like `mpi_waitall`.
-//! * [`rma`] — one-sided windows with passive-target `rget`, which
-//!   Algorithm 2 is built on; only the origin (receiver) synchronizes.
-//! * [`collective`] — barrier / allreduce (the window-pool size check).
+//! * [`rma`] — one-sided windows with passive-target `rget` (whole
+//!   panels, block subsets, or structure only), which Algorithm 2 is
+//!   built on; only the origin (receiver) synchronizes.
+//! * [`collective`] — barrier / allreduce (the window-pool size check
+//!   and the symbolic pass's norm-ceiling reduction).
 //!
 //! Requests complete through a per-rank [`progress`] engine with virtual
 //! timestamps: posting a transfer prices it on the α-β [`netmodel`] and
@@ -19,6 +21,9 @@
 //!
 //! All traffic is counted per rank and per matrix class, giving the
 //! *exact* "communicated data per process" quantity of paper Table 2.
+//! The classes cover the three matrices plus [`TrafficClass::Structure`]
+//! — the symbolic pass's metadata exchange, priced on its own rail so
+//! structure messages never contend with the panel fetches they shrink.
 
 pub mod collective;
 pub mod netmodel;

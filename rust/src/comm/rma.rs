@@ -2,16 +2,23 @@
 //!
 //! Mirrors the paper's §3 communication scheme: A and B panels are copied
 //! once into read-only buffers that back MPI windows; during the whole
-//! multiplication every process fetches panels directly from their *home*
+//! multiplication every process fetches directly from the data's *home*
 //! position in the 2D grid with `mpi_rget` (passive target), so only the
 //! origin process synchronizes — no sender-side progress is needed
 //! (observation (2) in §4.1 for why this beats point-to-point waitalls).
+//! Gets come at three granularities: whole panels ([`Comm::rget`], the
+//! eager path), **block subsets** of a panel ([`Comm::rget_blocks`], one
+//! coalesced get covering only the blocks the symbolic pass proved
+//! contributing), and **structure only** ([`Comm::rget_structure`],
+//! coordinates + dims + norms with no numerical payload, priced on the
+//! [`TrafficClass::Structure`] rail).
 //!
-//! `rget` is **deferred**: posting only prices the transfer on the
-//! fabric's virtual clock and records where the data lives; the panel is
-//! materialized at [`RgetHandle::wait`], which also charges the clock the
-//! non-overlapped residue of the transfer.  Compute advanced between post
-//! and wait (see `Comm::advance_compute_flops`) hides the transfer — the
+//! `rget`/`rget_blocks` are **deferred**: posting only prices the
+//! transfer on the fabric's virtual clock and records where the data
+//! lives; the panel is materialized at [`RgetHandle::wait`], which also
+//! charges the clock the non-overlapped residue of the transfer.
+//! Compute advanced between post and wait (see
+//! `Comm::advance_compute_flops`) hides the transfer — the
 //! executed-schedule overlap the engines' prefetch pipelines are built
 //! on.
 //!
@@ -23,6 +30,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::blocks::panel::Panel;
+use crate::blocks::symbolic::{filter_panel, SymbolicPanel};
 use crate::comm::progress::Transport;
 use crate::comm::world::{Comm, TrafficClass, WindowData};
 
@@ -42,6 +50,9 @@ pub struct RgetHandle<'c> {
     key: u64,
     bytes: usize,
     ready_at_s: f64,
+    /// `Some(ids)`: a block-granular get covering only these entries of
+    /// the target panel (ascending); `None`: the whole panel.
+    subset: Option<Vec<u32>>,
 }
 
 impl RgetHandle<'_> {
@@ -56,10 +67,15 @@ impl RgetHandle<'_> {
     }
 
     /// Complete the get: block the virtual clock to the transfer's
-    /// completion, then (and only then) materialize the panel.
+    /// completion, then (and only then) materialize the panel — whole,
+    /// or the requested block subset (indexed, entry order preserved).
     pub fn wait(self) -> Panel {
         self.comm.progress.borrow_mut().complete(self.ready_at_s);
-        self.data.get(&self.key).cloned().unwrap_or_default()
+        match (self.data.get(&self.key), &self.subset) {
+            (None, _) => Panel::default(),
+            (Some(p), None) => p.clone(),
+            (Some(p), Some(ids)) => filter_panel(p, ids),
+        }
     }
 }
 
@@ -90,17 +106,7 @@ impl Comm {
     /// returned handle materializes the panel at `wait`.  Missing keys
     /// yield an empty panel (an absent panel of a sparse matrix).
     pub fn rget(&self, name: &str, target: usize, key: u64, class: TrafficClass) -> RgetHandle<'_> {
-        let data = {
-            let wins = self.shared.windows.read().unwrap();
-            let slots = wins
-                .get(name)
-                .unwrap_or_else(|| panic!("window '{name}' does not exist"));
-            Arc::clone(
-                slots[target]
-                    .as_ref()
-                    .unwrap_or_else(|| panic!("window '{name}' not exposed by rank {target}")),
-            )
-        };
+        let data = self.window_slot(name, target);
         let bytes = data.get(&key).map(|p| p.wire_bytes()).unwrap_or(0);
         self.stats.borrow_mut().add_rget(class, bytes);
         let ready_at_s = self
@@ -113,7 +119,88 @@ impl Comm {
             key,
             bytes,
             ready_at_s,
+            subset: None,
         }
+    }
+
+    /// Post a **block-granular** passive-target get: one coalesced
+    /// transfer covering only entries `ids` (ascending) of the panel
+    /// under `key` — what the symbolic pass issues once it knows which
+    /// blocks contribute.  Priced by the subset's wire bytes; `wait`
+    /// materializes the filtered sub-panel.  An empty `ids` still posts
+    /// (and pays the fabric's latency for) an empty get, keeping the
+    /// prefetch pipeline's slot choreography identical to eager mode.
+    pub fn rget_blocks(
+        &self,
+        name: &str,
+        target: usize,
+        key: u64,
+        class: TrafficClass,
+        ids: Vec<u32>,
+    ) -> RgetHandle<'_> {
+        let data = self.window_slot(name, target);
+        let bytes = data
+            .get(&key)
+            .map(|p| {
+                ids.iter()
+                    .map(|&i| {
+                        let e = &p.entries[i as usize];
+                        e.nr as usize * e.nc as usize * 8 + 24
+                    })
+                    .sum()
+            })
+            .unwrap_or(0);
+        self.stats.borrow_mut().add_rget(class, bytes);
+        let ready_at_s = self
+            .progress
+            .borrow_mut()
+            .post(Transport::Rma, class, bytes, true);
+        RgetHandle {
+            comm: self,
+            data,
+            key,
+            bytes,
+            ready_at_s,
+            subset: Some(ids),
+        }
+    }
+
+    /// Blocking structure fetch: read only the block coordinates, dims
+    /// and cached norms of the panel under `key` — the symbolic pass's
+    /// metadata exchange.  Priced and accounted on the
+    /// [`TrafficClass::Structure`] rail; completes immediately (the
+    /// structure phase runs before any compute exists to overlap it).
+    pub fn rget_structure(&self, name: &str, target: usize, key: u64) -> SymbolicPanel {
+        let data = self.window_slot(name, target);
+        let structure = data
+            .get(&key)
+            .map(SymbolicPanel::from_panel)
+            .unwrap_or_default();
+        let bytes = structure.wire_bytes();
+        self.stats
+            .borrow_mut()
+            .add_rget(TrafficClass::Structure, bytes);
+        let ready_at_s =
+            self.progress
+                .borrow_mut()
+                .post(Transport::Rma, TrafficClass::Structure, bytes, true);
+        self.progress.borrow_mut().complete(ready_at_s);
+        structure
+    }
+
+    /// Resolve `target`'s exposure of window `name` (panics on a
+    /// missing window or exposure — a schedule bug, not a data race:
+    /// `win_create` barriers).
+    fn window_slot(&self, name: &str, target: usize) -> Arc<WindowData> {
+        let wins = self.shared.windows.read().unwrap();
+        let slots = wins
+            .get(name)
+            .unwrap_or_else(|| panic!("window '{name}' does not exist"));
+        Arc::clone(
+            slots[target]
+                .as_ref()
+                .unwrap_or_else(|| panic!("window '{name}' not exposed by rank {target}")),
+        )
     }
 
     /// Collectively free window `name` (barriers like `mpi_win_free`).
@@ -259,6 +346,74 @@ mod tests {
             for h in handles {
                 assert_eq!(h.wait().block(0)[0], (1 - c.rank()) as f64);
             }
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn rget_blocks_fetches_subset_bit_identically() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut p = Panel::new();
+            p.push_block(0, 0, 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+            p.push_block(1, 0, 1, 2, &[5.0, 6.0]);
+            p.push_block(2, 1, 2, 1, &[7.0, 8.0]);
+            let full_bytes = p.wire_bytes();
+            let mut dir = HashMap::new();
+            dir.insert(0, p.clone());
+            c.win_create("w", dir);
+
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 2]);
+            assert_eq!(h.bytes(), (4 * 8 + 24) + (2 * 8 + 24));
+            assert!(h.bytes() < full_bytes);
+            let sub = h.wait();
+            assert_eq!(sub.nblocks(), 2);
+            assert_eq!(sub.block(0), p.block(0));
+            assert_eq!(sub.block(1), p.block(2));
+            assert_eq!(sub.norms[1].to_bits(), p.norms[2].to_bits());
+            assert!(sub.index().is_some(), "sub-panel arrives indexed");
+
+            // all blocks selected == whole panel, both in bytes and data
+            let all = c
+                .rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 1, 2])
+                .wait();
+            assert_eq!(all, p);
+
+            // empty subset still posts a (zero-byte) get
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixB, vec![]);
+            assert_eq!(h.bytes(), 0);
+            assert!(h.wait().is_empty());
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn rget_structure_prices_metadata_only() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut p = Panel::new();
+            p.push_block(3, 1, 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+            p.push_block(0, 1, 1, 2, &[5.0, 6.0]);
+            let mut dir = HashMap::new();
+            dir.insert(7, p.clone());
+            c.win_create("w", dir);
+            let s = c.rget_structure("w", 1 - c.rank(), 7);
+            assert_eq!(s.len(), 2);
+            assert_eq!((s.entries[0].row, s.entries[0].col), (3, 1));
+            assert_eq!((s.entries[0].nr, s.entries[0].nc), (2, 2));
+            assert_eq!(s.norms[0].to_bits(), p.norms[0].to_bits());
+            assert_eq!(s.panel_wire_bytes(), p.wire_bytes());
+            let st = c.stats();
+            assert_eq!(
+                st.requested_bytes(TrafficClass::Structure),
+                s.wire_bytes() as u64
+            );
+            assert_eq!(st.requested_bytes(TrafficClass::MatrixA), 0);
+            // absent key: empty structure, zero structure bytes added
+            let none = c.rget_structure("w", 1 - c.rank(), 99);
+            assert!(none.is_empty());
             c.barrier();
             c.win_free("w");
         });

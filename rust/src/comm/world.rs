@@ -52,21 +52,26 @@ impl Payload {
 }
 
 /// Traffic classes, matching the paper's per-matrix accounting (Table 2
-/// counts A, B and C panel traffic separately).
+/// counts A, B and C panel traffic separately).  `Structure` carries the
+/// symbolic pass's metadata exchange (block coordinates + norms, no
+/// numerical payload) so the structure phase is priced on the fabric and
+/// reported separately from the data it saves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TrafficClass {
     MatrixA,
     MatrixB,
     MatrixC,
     Other,
+    Structure,
 }
 
 impl TrafficClass {
-    pub const ALL: [TrafficClass; 4] = [
+    pub const ALL: [TrafficClass; 5] = [
         TrafficClass::MatrixA,
         TrafficClass::MatrixB,
         TrafficClass::MatrixC,
         TrafficClass::Other,
+        TrafficClass::Structure,
     ];
 
     pub(crate) fn index(self) -> usize {
@@ -75,6 +80,7 @@ impl TrafficClass {
             TrafficClass::MatrixB => 1,
             TrafficClass::MatrixC => 2,
             TrafficClass::Other => 3,
+            TrafficClass::Structure => 4,
         }
     }
 }
@@ -83,14 +89,14 @@ impl TrafficClass {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// Point-to-point messages/bytes sent, per class.
-    pub ptp_sent_msgs: [u64; 4],
-    pub ptp_sent_bytes: [u64; 4],
+    pub ptp_sent_msgs: [u64; 5],
+    pub ptp_sent_bytes: [u64; 5],
     /// Point-to-point messages/bytes received, per class.
-    pub ptp_recv_msgs: [u64; 4],
-    pub ptp_recv_bytes: [u64; 4],
+    pub ptp_recv_msgs: [u64; 5],
+    pub ptp_recv_bytes: [u64; 5],
     /// One-sided gets issued by this rank (origin-side), per class.
-    pub rget_calls: [u64; 4],
-    pub rget_bytes: [u64; 4],
+    pub rget_calls: [u64; 5],
+    pub rget_bytes: [u64; 5],
     /// Bytes exposed in this rank's windows (window pool footprint).
     pub window_bytes: u64,
 }
@@ -302,6 +308,23 @@ impl Comm {
         self.progress.borrow().price(Transport::Rma, bytes)
     }
 
+    /// Account and price one blocking structure-exchange transfer of
+    /// `bytes` on the [`TrafficClass::Structure`] rail (the symbolic
+    /// pass's PTP fallback for Cannon, whose norm reduction rides the
+    /// unpriced scalar collectives).  The transfer completes
+    /// immediately: the exchange is a synchronizing prologue, not an
+    /// overlapped fetch.
+    pub fn note_structure_exchange(&self, bytes: usize) {
+        self.stats
+            .borrow_mut()
+            .add_ptp_recv(TrafficClass::Structure, bytes);
+        let ready = self
+            .progress
+            .borrow_mut()
+            .post(Transport::Ptp, TrafficClass::Structure, bytes, true);
+        self.progress.borrow_mut().complete(ready);
+    }
+
     /// The wall-clock bound on blocking waits (deadlock detection).
     pub(crate) fn deadlock_timeout(&self) -> Duration {
         self.progress.borrow().config().deadlock_timeout
@@ -339,6 +362,22 @@ mod tests {
         assert_eq!(s.requested_bytes(TrafficClass::MatrixA), 100);
         let (msgs, bytes) = s.ab_message_stats();
         assert_eq!((msgs, bytes), (2, 150));
+    }
+
+    #[test]
+    fn structure_class_accounted_and_priced() {
+        let w = SimWorld::new(1);
+        w.run(|c| {
+            c.note_structure_exchange(1 << 10);
+            let s = c.stats();
+            assert_eq!(s.requested_bytes(TrafficClass::Structure), 1024);
+            assert_eq!(s.total_requested_bytes(), 1024);
+            // Structure traffic never counts toward the A/B fetch stats.
+            let (msgs, bytes) = s.ab_message_stats();
+            assert_eq!((msgs, bytes), (0, 0));
+            let (_wait, comm) = c.comm_time_totals();
+            assert!(comm > 0.0, "structure exchange must be priced");
+        });
     }
 
     #[test]

@@ -28,6 +28,9 @@ use std::collections::HashMap;
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
+use crate::blocks::symbolic::{
+    decode_norm_ceiling, encode_norm_ceiling, filter_panel_by, survives_ceiling,
+};
 use crate::comm::ptp::Request;
 use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
@@ -55,6 +58,13 @@ pub struct RankOutput {
     /// Peak bytes across the four comp/comm set buffers (§2's temporary
     /// buffer inventory, measured on the executed pipeline).
     pub peak_buffer_bytes: u64,
+    /// A+B wire bytes the *eager* path receives for this rank's
+    /// circulation: `V` copies of the rank's own (unfiltered) panel
+    /// share.  Computable locally because the sets circulate intact.
+    pub eager_fetch_bytes: u64,
+    /// Virtual seconds this rank blocked in the structure-exchange
+    /// phase (0 in eager mode).
+    pub structure_wait_s: f64,
 }
 
 /// Inputs handed to each rank: its initial panel shares.
@@ -71,13 +81,17 @@ fn panelset_bytes(set: &HashMap<u64, Panel>) -> u64 {
 
 /// Run Algorithm 1 on one rank.  `eps` is the on-the-fly filter
 /// threshold; `threads` sizes the intra-rank stack-executor worker pool.
+/// With `symbolic` set, a norm-ceiling reduction runs before the
+/// pre-shift and globally dead blocks are dropped from the circulating
+/// sets — same surviving task stream, bitwise-identical C.
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
     topo: &Topology25d,
-    input: RankInput,
+    mut input: RankInput,
     eps: f64,
     threads: usize,
+    symbolic: bool,
 ) -> RankOutput {
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
@@ -87,6 +101,61 @@ pub fn run_rank(
     let mut log = RankLog::new(EngineKind::Ptp);
     let mut mult_stats = LocalMultStats::default();
     let mut c_acc = BlockAccumulator::new();
+
+    // The eager path circulates the initial panel sets intact, so this
+    // rank's eager receive volume is exactly `V` copies of its own
+    // share — computable locally from the *unfiltered* input.
+    let eager_fetch_bytes =
+        (v as u64) * (panelset_bytes(&input.a_panels) + panelset_bytes(&input.b_panels));
+
+    // --- Symbolic pass (structure-only exchange) ---------------------
+    // PTP forwarding moves whole sets, so block-granular fetching is not
+    // available here; instead the ranks agree on *global norm ceilings*
+    // per inner block index k: an A block `(r, k)` can contribute a
+    // surviving product on SOME rank only if a B block in inner row `k`
+    // exists anywhere whose norm clears Eq. 1 against it (and vice
+    // versa).  The predicate is rank-independent, so dropping dead
+    // blocks before the pre-shift shrinks every forwarded copy while
+    // leaving the surviving task stream — and the accumulation order —
+    // untouched on every rank.
+    let mut structure_wait_s = 0.0;
+    if symbolic {
+        let _ = comm.take_wait_epoch();
+        timers.time("cannon/structure_exchange", || {
+            let nk = dist.nbinner();
+            let mut loc_a = vec![0u64; nk];
+            let mut loc_b = vec![0u64; nk];
+            for p in input.a_panels.values() {
+                for (e, &norm) in p.entries.iter().zip(&p.norms) {
+                    let k = e.col as usize;
+                    loc_a[k] = loc_a[k].max(encode_norm_ceiling(norm));
+                }
+            }
+            for p in input.b_panels.values() {
+                for (e, &norm) in p.entries.iter().zip(&p.norms) {
+                    let k = e.row as usize;
+                    loc_b[k] = loc_b[k].max(encode_norm_ceiling(norm));
+                }
+            }
+            // One u64 max-allreduce per inner index and matrix: the
+            // presence tag + norm bits encoding makes `max` the norm
+            // maximum over all ranks (absent = 0 loses to any present).
+            let gmax_a: Vec<u64> = loc_a.iter().map(|&x| comm.allreduce_max(x)).collect();
+            let gmax_b: Vec<u64> = loc_b.iter().map(|&x| comm.allreduce_max(x)).collect();
+            comm.note_structure_exchange(2 * nk * 8);
+            for p in input.a_panels.values_mut() {
+                *p = filter_panel_by(p, |e, n| {
+                    survives_ceiling(n, decode_norm_ceiling(gmax_b[e.col as usize]), eps)
+                });
+            }
+            for p in input.b_panels.values_mut() {
+                *p = filter_panel_by(p, |e, n| {
+                    survives_ceiling(n, decode_norm_ceiling(gmax_a[e.row as usize]), eps)
+                });
+            }
+        });
+        structure_wait_s = comm.take_wait_epoch();
+    }
 
     // --- Pre-shift (blocking point-to-point) -------------------------
     // Row-wise shift of A by i: our set goes to (i, j - i); we receive
@@ -226,6 +295,8 @@ pub fn run_rank(
         timers,
         log,
         peak_buffer_bytes: pool.peak_bytes(),
+        eager_fetch_bytes,
+        structure_wait_s,
     }
 }
 

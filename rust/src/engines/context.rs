@@ -34,7 +34,7 @@ use crate::blocks::matrix::BlockCsrMatrix;
 use crate::dist::distribution::Distribution2d;
 use crate::dist::grid::ProcGrid;
 use crate::engines::multiply::{
-    multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport,
+    multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport, SymbolicMode,
 };
 use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
 use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
@@ -186,6 +186,7 @@ pub struct MultSession {
     planner: Planner,
     cache: PlanCache,
     filter: FilterConfig,
+    symbolic: SymbolicMode,
     seed: u64,
     /// Per-step relative slack accepted on a common sequence grid: a
     /// step may run up to this much over its individual optimum to keep
@@ -206,6 +207,7 @@ impl MultSession {
             planner,
             cache: PlanCache::default(),
             filter: FilterConfig::default(),
+            symbolic: SymbolicMode::default(),
             seed,
             seq_grid_tolerance: 0.03,
             dist: None,
@@ -226,6 +228,15 @@ impl MultSession {
     /// (0 disables caching — the uncached baseline).
     pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
         self.cache = PlanCache::new(capacity);
+        self
+    }
+
+    /// Builder: the symbolic (structure-first) mode every planned
+    /// multiplication runs under.  Like the filter, this rides into the
+    /// planned configurations unchanged — the pass never alters
+    /// numerics, only traffic.
+    pub fn with_symbolic(mut self, mode: SymbolicMode) -> Self {
+        self.symbolic = mode;
         self
     }
 
@@ -276,6 +287,7 @@ impl MultSession {
     fn planned_cfg(&self, choice: &CandidatePlan) -> MultiplyConfig {
         let mut cfg = MultiplyConfig::from_candidate(choice, self.planner.machine);
         cfg.filter = self.filter;
+        cfg.symbolic = self.symbolic;
         cfg
     }
 
@@ -659,6 +671,20 @@ mod tests {
         let sum = s.summary();
         assert_eq!(sum.multiplications, 2);
         assert_eq!(sum.plans_priced, 2, "distinct occupancy buckets price twice");
+    }
+
+    #[test]
+    fn session_symbolic_mode_rides_into_planned_configs() {
+        let l = BlockLayout::uniform(10, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.3, 17);
+        let b = BlockCsrMatrix::random(&l, &l, 0.3, 18);
+        let mut s = MultSession::new(planner(4), 19).with_symbolic(SymbolicMode::On);
+        let run = s.multiply(&a, &b, None).unwrap();
+        assert_eq!(run.cfg.symbolic, SymbolicMode::On);
+        assert!(run.report.symbolic.enabled);
+        let want = multiply_oracle(&a, &b, None, &FilterConfig::none());
+        let diff = run.report.c.to_dense().max_abs_diff(&want.to_dense());
+        assert!(diff < 1e-10, "symbolic session multiply diverged: {diff}");
     }
 
     #[test]

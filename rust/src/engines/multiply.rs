@@ -14,7 +14,7 @@ use crate::blocks::filter::{filter_blocks, FilterConfig};
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::blocks::panel::Panel;
 use crate::comm::progress::FabricConfig;
-use crate::comm::world::{CommStats, SimWorld};
+use crate::comm::world::{CommStats, SimWorld, TrafficClass};
 use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
 use crate::engines::plancache::PlanCache;
@@ -54,11 +54,58 @@ impl Engine {
     }
 }
 
+/// Whether the engines run the symbolic (structure-first) pass before
+/// moving panel data.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SymbolicMode {
+    /// Always run the structure exchange and fetch only contributing
+    /// blocks.
+    On,
+    /// Eager: fetch whole panels, no structure exchange (the paper's
+    /// baseline behavior).
+    #[default]
+    Off,
+    /// Decide from the inputs: symbolic iff the sparser operand's block
+    /// occupancy is below 0.5 (where structure metadata is cheap
+    /// relative to the panel bytes it saves).
+    Auto,
+}
+
+impl SymbolicMode {
+    /// Resolve the mode against the operands' occupancies.
+    pub fn resolve(self, a_occupancy: f64, b_occupancy: f64) -> bool {
+        match self {
+            SymbolicMode::On => true,
+            SymbolicMode::Off => false,
+            SymbolicMode::Auto => a_occupancy.min(b_occupancy) < 0.5,
+        }
+    }
+}
+
+/// What the symbolic pass did in one multiplication (all-rank totals).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SymbolicInfo {
+    /// Whether the structure-first pass actually ran (after resolving
+    /// [`SymbolicMode::Auto`]).
+    pub enabled: bool,
+    /// Structure-class bytes exchanged (coordinates + norms metadata).
+    pub structure_bytes: u64,
+    /// Virtual seconds ranks blocked in the structure phase (summed).
+    pub structure_wait_s: f64,
+    /// A+B bytes actually requested — `comm_volume_bytes` in reports.
+    pub fetched_bytes: u64,
+    /// A+B bytes the eager path would have moved on the same schedule
+    /// (equals `fetched_bytes` when the pass is off).
+    pub eager_bytes: u64,
+}
+
 /// Multiplication configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct MultiplyConfig {
     pub engine: Engine,
     pub filter: FilterConfig,
+    /// Structure-first communication avoidance; see [`SymbolicMode`].
+    pub symbolic: SymbolicMode,
     /// Reject (error) instead of falling back to L=1 on invalid L.
     pub strict_topology: bool,
     /// Machine the fabric prices virtual time with (network for the
@@ -77,6 +124,7 @@ impl Default for MultiplyConfig {
         Self {
             engine: Engine::default(),
             filter: FilterConfig::default(),
+            symbolic: SymbolicMode::default(),
             strict_topology: false,
             machine: None,
             threads_per_rank: 1,
@@ -131,6 +179,7 @@ impl MultiplyConfig {
         Self {
             engine: choice.engine,
             filter: FilterConfig::default(),
+            symbolic: SymbolicMode::default(),
             strict_topology: true,
             machine: Some(machine),
             threads_per_rank: choice.threads,
@@ -164,6 +213,10 @@ pub struct MultiplyReport {
     pub peak_fetch_bytes: u64,
     /// Peak bytes of the partial-C accumulations (2.5D only).
     pub peak_partial_c_bytes: u64,
+    /// What the symbolic pass did (all zeros + `enabled: false` on the
+    /// eager path except `fetched_bytes`/`eager_bytes`, which always
+    /// carry the measured A+B request volume).
+    pub symbolic: SymbolicInfo,
     /// Machine the fabric priced virtual time with — already scaled by
     /// `thread_efficiency(threads_per_rank)`, so modeling/cross-checking
     /// against it matches the executed schedule.
@@ -307,6 +360,7 @@ pub fn multiply_distributed(
     };
     let world = SimWorld::with_fabric(pr * pc, fabric);
     let eps = cfg.filter.on_the_fly_eps;
+    let symbolic = cfg.symbolic.resolve(a.occupancy(), b.occupancy());
     let t0 = std::time::Instant::now();
     let engine = cfg.engine;
     let results = world.run(|comm| {
@@ -323,6 +377,7 @@ pub fn multiply_distributed(
                     },
                     eps,
                     threads,
+                    symbolic,
                 );
                 (
                     out.c_acc,
@@ -331,6 +386,7 @@ pub fn multiply_distributed(
                     out.log,
                     comm.stats(),
                     [out.peak_buffer_bytes, 0u64, 0u64],
+                    (out.eager_fetch_bytes, out.structure_wait_s),
                 )
             }
             Engine::OneSided { .. } => {
@@ -344,6 +400,7 @@ pub fn multiply_distributed(
                     },
                     eps,
                     threads,
+                    symbolic,
                 );
                 (
                     out.c_acc,
@@ -356,6 +413,7 @@ pub fn multiply_distributed(
                         out.peak_fetch_bytes,
                         out.peak_partial_c_bytes,
                     ],
+                    (out.eager_fetch_bytes, out.structure_wait_s),
                 )
             }
         }
@@ -371,7 +429,9 @@ pub fn multiply_distributed(
     let mut peak_buffer_bytes = 0u64;
     let mut peak_fetch_bytes = 0u64;
     let mut peak_partial_c_bytes = 0u64;
-    for (acc, ms, timers, log, stats, peaks) in results {
+    let mut eager_bytes = 0u64;
+    let mut structure_wait_s = 0.0;
+    for (acc, ms, timers, log, stats, peaks, sym) in results {
         let panel = acc.into_panel();
         global.add_panel(&panel);
         mult_stats.merge(&ms);
@@ -381,7 +441,26 @@ pub fn multiply_distributed(
         peak_buffer_bytes = peak_buffer_bytes.max(peaks[0]);
         peak_fetch_bytes = peak_fetch_bytes.max(peaks[1]);
         peak_partial_c_bytes = peak_partial_c_bytes.max(peaks[2]);
+        eager_bytes += sym.0;
+        structure_wait_s += sym.1;
     }
+    let fetched_bytes: u64 = per_rank_stats
+        .iter()
+        .map(|s| {
+            s.requested_bytes(TrafficClass::MatrixA) + s.requested_bytes(TrafficClass::MatrixB)
+        })
+        .sum();
+    let structure_bytes: u64 = per_rank_stats
+        .iter()
+        .map(|s| s.requested_bytes(TrafficClass::Structure))
+        .sum();
+    let symbolic_info = SymbolicInfo {
+        enabled: symbolic,
+        structure_bytes,
+        structure_wait_s,
+        fetched_bytes,
+        eager_bytes: if symbolic { eager_bytes } else { fetched_bytes },
+    };
     let mut c = global.into_matrix(a.row_layout_arc(), b.col_layout_arc());
     if let Some(c0) = c0 {
         c = c.add_scaled(1.0, c0);
@@ -399,6 +478,7 @@ pub fn multiply_distributed(
         peak_buffer_bytes,
         peak_fetch_bytes,
         peak_partial_c_bytes,
+        symbolic: symbolic_info,
         fabric_machine: machine,
         topo,
     })
@@ -666,6 +746,42 @@ mod tests {
             }
         }
         assert!(rep.peak_buffer_bytes > 0, "cannon must report §2 buffers");
+    }
+
+    #[test]
+    fn symbolic_bitwise_identical_and_fetches_less() {
+        let (a, b, l) = setup(18, 3, 0.25, 80);
+        let grid = ProcGrid::new(3, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 81);
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let run = |mode| {
+                let cfg = MultiplyConfig {
+                    engine,
+                    symbolic: mode,
+                    ..Default::default()
+                };
+                multiply_distributed(&a, &b, None, &dist, &cfg).unwrap()
+            };
+            let eager = run(SymbolicMode::Off);
+            let sym = run(SymbolicMode::On);
+            // same task stream, same accumulation order: bit-identical C
+            let diff = eager.c.to_dense().max_abs_diff(&sym.c.to_dense());
+            assert_eq!(diff, 0.0, "{}", engine.label());
+            assert!(sym.symbolic.enabled && !eager.symbolic.enabled);
+            assert!(sym.symbolic.structure_bytes > 0);
+            // shrunken fetches never exceed the eager volume, and the
+            // symbolic run's eager estimate equals the measured eager run
+            assert!(sym.symbolic.fetched_bytes <= eager.symbolic.fetched_bytes);
+            assert_eq!(sym.symbolic.eager_bytes, eager.symbolic.fetched_bytes);
+            assert_eq!(eager.symbolic.eager_bytes, eager.symbolic.fetched_bytes);
+        }
+        // at 0.25 occupancy Auto resolves to the symbolic path
+        let cfg = MultiplyConfig {
+            symbolic: SymbolicMode::Auto,
+            ..Default::default()
+        };
+        let auto = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        assert!(auto.symbolic.enabled);
     }
 
     #[test]

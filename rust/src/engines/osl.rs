@@ -33,6 +33,7 @@ use std::collections::HashMap;
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
+use crate::blocks::symbolic::{live_ids, mark_live, SymbolicPanel};
 use crate::comm::rma::win_key;
 use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
@@ -72,6 +73,14 @@ pub struct RankOutput {
     pub peak_fetch_bytes: u64,
     /// Peak bytes held in the L partial-C accumulations.
     pub peak_partial_c_bytes: u64,
+    /// A+B wire bytes the *eager* path would fetch for this rank's
+    /// schedule.  In symbolic mode, computed from the exchanged
+    /// structures (full-panel equivalents of the shrunken gets); in
+    /// eager mode, the bytes actually fetched.
+    pub eager_fetch_bytes: u64,
+    /// Virtual seconds this rank blocked in the structure-exchange
+    /// phase (0 in eager mode).
+    pub structure_wait_s: f64,
 }
 
 /// Estimated in-memory footprint of a partial-C accumulation (data +
@@ -81,7 +90,10 @@ fn acc_bytes(acc: &BlockAccumulator) -> u64 {
 }
 
 /// Run Algorithm 2 on one rank.  `threads` sizes the intra-rank
-/// stack-executor worker pool.
+/// stack-executor worker pool.  With `symbolic` set, a structure-only
+/// exchange runs before any panel data moves and every fetch shrinks to
+/// the blocks that contribute at least one surviving product — same
+/// task stream, bitwise-identical C.
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
@@ -89,6 +101,7 @@ pub fn run_rank(
     input: RankInput,
     eps: f64,
     threads: usize,
+    symbolic: bool,
 ) -> RankOutput {
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
@@ -120,6 +133,64 @@ pub fn run_rank(
     let cols = topo.c_panel_cols(j);
     let nticks = topo.nticks();
 
+    // The tick's L products, A-index fastest (Algorithm 2 sub-steps);
+    // identical for every tick.
+    let products = osl_tick_products(topo, i, j);
+    let my_partial_idx = {
+        let (i3d, j3d, _) = topo.coords3d(i, j);
+        j3d * topo.l_r + i3d
+    };
+
+    // Symbolic pass: before any panel data moves, fetch only the block
+    // structure (coordinates + norms) of every panel in this rank's
+    // schedule, merge-join each tick's pairings, and record per panel
+    // the union of blocks with at least one surviving product.  The
+    // data fetches below then shrink to exactly those blocks;
+    // `eager_fetch_bytes` keeps the full-panel equivalent for the
+    // eager-vs-symbolic comparison.
+    let mut eager_fetch_bytes = 0u64;
+    let mut structure_wait_s = 0.0;
+    let mut live_sets: Option<(Vec<Vec<Vec<u32>>>, Vec<Vec<Vec<u32>>>)> = None;
+    if symbolic {
+        let _ = comm.take_wait_epoch(); // window setup is not structure wait
+        let sets = timers.time("osl/structure_exchange", || {
+            let mut a_ids: Vec<Vec<Vec<u32>>> = Vec::with_capacity(nticks);
+            let mut b_ids: Vec<Vec<Vec<u32>>> = Vec::with_capacity(nticks);
+            for t in 0..nticks {
+                let vk = osl_vk(topo, i, j, t);
+                let sa: Vec<SymbolicPanel> = rows
+                    .iter()
+                    .map(|&m| {
+                        comm.rget_structure("osl_a", dist.a_panel_home(m, vk), win_key(m, vk))
+                    })
+                    .collect();
+                let sb: Vec<SymbolicPanel> = cols
+                    .iter()
+                    .map(|&n| {
+                        comm.rget_structure("osl_b", dist.b_panel_home(vk, n), win_key(vk, n))
+                    })
+                    .collect();
+                eager_fetch_bytes += sa
+                    .iter()
+                    .chain(&sb)
+                    .map(|s| s.panel_wire_bytes() as u64)
+                    .sum::<u64>();
+                let mut la: Vec<Vec<bool>> = sa.iter().map(|s| vec![false; s.len()]).collect();
+                let mut lb: Vec<Vec<bool>> = sb.iter().map(|s| vec![false; s.len()]).collect();
+                for &(a, b, _, _) in &products {
+                    mark_live(&sa[a], &sb[b], eps, &mut la[a], &mut lb[b]);
+                }
+                a_ids.push(la.iter().map(|l| live_ids(l)).collect());
+                b_ids.push(lb.iter().map(|l| live_ids(l)).collect());
+            }
+            (a_ids, b_ids)
+        });
+        structure_wait_s = comm.take_wait_epoch();
+        live_sets = Some(sets);
+    }
+    let live_a = live_sets.as_ref().map(|(la, _)| la);
+    let live_b = live_sets.as_ref().map(|(_, lb)| lb);
+
     // Build the whole multiplication's fetch schedule up front and hand
     // it to the prefetch pipelines: per tick, the L_R A panels as one
     // batch (all live at once) and the L_C B panels as a stream (each
@@ -128,11 +199,13 @@ pub fn run_rank(
         .map(|t| {
             let vk = osl_vk(topo, i, j, t);
             rows.iter()
-                .map(|&m| FetchDesc {
+                .enumerate()
+                .map(|(a, &m)| FetchDesc {
                     window: "osl_a",
                     target: dist.a_panel_home(m, vk),
                     key: win_key(m, vk),
                     class: TrafficClass::MatrixA,
+                    blocks: live_a.map(|la| la[t][a].clone()),
                 })
                 .collect()
         })
@@ -141,25 +214,19 @@ pub fn run_rank(
         .flat_map(|t| {
             let vk = osl_vk(topo, i, j, t);
             cols.iter()
-                .map(move |&n| FetchDesc {
+                .enumerate()
+                .map(move |(b, &n)| FetchDesc {
                     window: "osl_b",
                     target: dist.b_panel_home(vk, n),
                     key: win_key(vk, n),
                     class: TrafficClass::MatrixB,
+                    blocks: live_b.map(|lb| lb[t][b].clone()),
                 })
                 .collect::<Vec<_>>()
         })
         .collect();
     let mut a_fetch = BatchPrefetch::new(comm, "osl/a_buffers", topo.nbuffers_a(), a_batches);
     let mut b_fetch = PrefetchQueue::new(comm, "osl/b_buffers", 2, b_stream);
-
-    // The tick's L products, A-index fastest (Algorithm 2 sub-steps);
-    // identical for every tick.
-    let products = osl_tick_products(topo, i, j);
-    let my_partial_idx = {
-        let (i3d, j3d, _) = topo.coords3d(i, j);
-        j3d * topo.l_r + i3d
-    };
 
     let mut send_reqs = Vec::new();
     let mut recv_reqs = Vec::new();
@@ -255,6 +322,11 @@ pub fn run_rank(
         rec.wait_s = comm.take_wait_epoch();
         log.ticks.push(rec);
     }
+    if !symbolic {
+        // Eager mode fetches whole panels, so the eager volume is just
+        // what actually moved.
+        eager_fetch_bytes = log.ticks.iter().map(|r| r.a_bytes + r.b_bytes).sum();
+    }
 
     // --- C reduction tail ---------------------------------------------
     // The sends left from inside the last tick; only the receives that
@@ -288,6 +360,8 @@ pub fn run_rank(
         peak_buffer_bytes,
         peak_fetch_bytes,
         peak_partial_c_bytes,
+        eager_fetch_bytes,
+        structure_wait_s,
     }
 }
 

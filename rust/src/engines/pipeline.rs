@@ -27,7 +27,7 @@ use crate::comm::world::{Comm, TrafficClass};
 
 /// A fetch to be issued later by a prefetcher: one `rget` worth of
 /// coordinates.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FetchDesc {
     /// Window name (lives for the whole multiplication).
     pub window: &'static str,
@@ -36,6 +36,22 @@ pub struct FetchDesc {
     /// Panel key inside the window directory.
     pub key: u64,
     pub class: TrafficClass,
+    /// `Some(ids)`: fetch only these entries of the panel (the symbolic
+    /// pass's surviving blocks, one coalesced `rget_blocks`); `None`:
+    /// the whole panel (eager mode).
+    pub blocks: Option<Vec<u32>>,
+}
+
+impl FetchDesc {
+    /// Issue this fetch on `comm` — whole-panel or block-granular.
+    fn post<'c>(&self, comm: &'c Comm) -> RgetHandle<'c> {
+        match &self.blocks {
+            None => comm.rget(self.window, self.target, self.key, self.class),
+            Some(ids) => {
+                comm.rget_blocks(self.window, self.target, self.key, self.class, ids.clone())
+            }
+        }
+    }
 }
 
 /// Slot/byte accounting for a class of temporary buffers with a hard
@@ -153,12 +169,16 @@ impl<'c> BatchPrefetch<'c> {
         while self.next_post < self.batches.len()
             && self.pool.free_slots() >= self.batches[self.next_post].len()
         {
-            let descs = self.batches[self.next_post].clone();
-            let mut handles = Vec::with_capacity(descs.len());
-            for d in descs {
-                let h = self.comm.rget(d.window, d.target, d.key, d.class);
-                self.pool.acquire(h.bytes() as u64);
+            let batch = &self.batches[self.next_post];
+            let mut handles = Vec::with_capacity(batch.len());
+            let mut bytes = Vec::with_capacity(batch.len());
+            for d in batch {
+                let h = d.post(self.comm);
+                bytes.push(h.bytes() as u64);
                 handles.push(h);
+            }
+            for b in bytes {
+                self.pool.acquire(b);
             }
             self.posted.push_back(handles);
             self.next_post += 1;
@@ -244,8 +264,7 @@ impl<'c> PrefetchQueue<'c> {
 
     fn fill(&mut self) {
         while self.cursor < self.descs.len() && self.pool.free_slots() > 0 {
-            let d = self.descs[self.cursor];
-            let h = self.comm.rget(d.window, d.target, d.key, d.class);
+            let h = self.descs[self.cursor].post(self.comm);
             self.pool.acquire(h.bytes() as u64);
             self.posted.push_back(h);
             self.cursor += 1;
@@ -356,6 +375,7 @@ mod tests {
                     target: 1 - c.rank(),
                     key: k,
                     class: TrafficClass::MatrixB,
+                    blocks: None,
                 })
                 .collect();
             let mut q = PrefetchQueue::new(&c, "b", 2, descs);
@@ -386,6 +406,7 @@ mod tests {
                         target: 1 - c.rank(),
                         key: win_key(t, 0),
                         class: TrafficClass::MatrixA,
+                        blocks: None,
                     }]
                 })
                 .collect();
@@ -423,6 +444,7 @@ mod tests {
                             target: 1 - c.rank(),
                             key: win_key(m, t),
                             class: TrafficClass::MatrixA,
+                            blocks: None,
                         })
                         .collect()
                 })

@@ -25,10 +25,18 @@
 //! `measured_specs_price_raw_and_key_exactly` the latter.
 //!
 //! A cache is tied to one [`Planner`] configuration (machine
-//! calibration, thread sweep, tie-break window): the signature carries
-//! the planner's rank budget and memory cap, but not its machine —
+//! calibration, thread sweep, tie-break window, symbolic-traffic
+//! pricing): the signature carries the planner's rank budget and memory
+//! cap, but not its machine —
 //! [`crate::engines::context::MultSession`] enforces the pairing by
 //! owning both.
+//!
+//! The occupancy bucket is deliberately coarse: with
+//! `Planner::symbolic_traffic` the per-candidate traffic is computed
+//! *exactly* from the survival model (replacing the earlier idea of
+//! refining the signature with a block-size histogram), so the
+//! signature only needs to distinguish occupancies that change the
+//! *choice*, not the volumes.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -45,7 +45,9 @@ use crate::dist::grid::ProcGrid;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::multiply::Engine;
 use crate::perfmodel::machine::MachineModel;
-use crate::perfmodel::replay::{build_rank_log, modeled_peak_memory, paper_l_values, ReplayConfig};
+use crate::perfmodel::replay::{
+    build_rank_log, build_rank_log_symbolic, modeled_peak_memory, paper_l_values, ReplayConfig,
+};
 use crate::perfmodel::virtual_time::{model_rank_time, ModeledTime};
 use crate::util::json::Json;
 use crate::workloads::spec::BenchSpec;
@@ -233,6 +235,13 @@ pub struct Planner {
     /// Relative window around the fastest feasible candidate inside
     /// which ties are broken toward the cheapest plan (default 1%).
     pub tie_epsilon: f64,
+    /// Price candidates with the symbolic pass's *exact* per-candidate
+    /// traffic ([`build_rank_log_symbolic`]: survival-scaled tick
+    /// volumes + the structure pre-phase) instead of the eager
+    /// whole-panel volumes.  Set this when the executed multiplications
+    /// will run with the pass on, so predicted and executed traffic
+    /// agree.
+    pub symbolic_traffic: bool,
 }
 
 /// Aspect ratio (long/short side) of the squarest grid above which a
@@ -260,12 +269,20 @@ impl Planner {
             mem_cap_bytes: f64::INFINITY,
             thread_candidates: vec![1, 2, 4, 8],
             tie_epsilon: 0.01,
+            symbolic_traffic: false,
         }
     }
 
     /// Builder: set the Eq. 6 per-process memory cap in bytes.
     pub fn with_memory_cap(mut self, bytes: f64) -> Self {
         self.mem_cap_bytes = bytes;
+        self
+    }
+
+    /// Builder: price candidates with symbolic-pass traffic (see
+    /// [`Planner::symbolic_traffic`]).
+    pub fn with_symbolic_traffic(mut self, on: bool) -> Self {
+        self.symbolic_traffic = on;
         self
     }
 
@@ -317,7 +334,11 @@ impl Planner {
                         engine,
                         no_dmapp: false,
                     };
-                    let log = build_rank_log(&cfg);
+                    let log = if self.symbolic_traffic {
+                        build_rank_log_symbolic(&cfg)
+                    } else {
+                        build_rank_log(&cfg)
+                    };
                     let mem = modeled_peak_memory(&cfg);
                     // All enumerated L values are topology-valid, so the
                     // fallback is the identity here; it still pins `l` to
@@ -456,6 +477,25 @@ mod tests {
             );
             assert_eq!(plan.choice.grid.size(), budget);
         }
+    }
+
+    #[test]
+    fn symbolic_traffic_prices_cheaper_sparse_plans() {
+        // Under a comm-dominated machine a sparse workload's best plan
+        // must get cheaper when the planner prices the symbolic pass's
+        // shrunken fetches instead of eager whole panels.
+        let spec = BenchSpec::observed("sym", 36, 4, 0.15);
+        let base = Planner::new(comm_dominated_machine(), 16);
+        let eager_best = base.plan(&spec).unwrap().best_feasible_s();
+        let sym_best = base
+            .with_symbolic_traffic(true)
+            .plan(&spec)
+            .unwrap()
+            .best_feasible_s();
+        assert!(
+            sym_best < eager_best,
+            "symbolic pricing {sym_best} not under eager {eager_best}"
+        );
     }
 
     #[test]

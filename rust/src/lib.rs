@@ -15,10 +15,10 @@
 //!
 //! | layer | module | role (paper anchor) |
 //! |-------|--------|---------------------|
-//! | storage | [`blocks`] | blocked-CSR matrices, block norms, threshold filtering (§1) |
+//! | storage | [`blocks`] | blocked-CSR matrices, block norms, threshold filtering (§1), and the [`blocks::symbolic`] structure-only panels behind the symbolic pass |
 //! | layout | [`dist`] | process grids, randomized 2D distributions (§2), the 2.5D topology rules (§3, Eq. 4/5) |
 //! | transport | [`comm`] | simulated MPI: ranks as threads, `isend`/`irecv`/`wait_all`, passive-target `rget` windows, the asynchronous virtual-time fabric, exact byte accounting |
-//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines; the cost-model [`engines::planner`] that chooses between them; the persistent [`engines::context::MultSession`] (plan cache keyed by sparsity signature + §3 window pools) that amortizes the choice across repeated multiplications |
+//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines, with an optional symbolic structure-exchange pass that fetches only contributing blocks; the cost-model [`engines::planner`] that chooses between them; the persistent [`engines::context::MultSession`] (plan cache keyed by sparsity signature + §3 window pools) that amortizes the choice across repeated multiplications |
 //! | node-local | [`local`] | stack-flow multiplication with the on-the-fly norm filter (the LIBSMM role) |
 //! | kernels | [`runtime`] | optional PJRT client for the AOT-compiled Pallas microkernel |
 //! | modeling | [`perfmodel`] | α-β virtual-time replay of both schedules at paper scale (200–3844 nodes), machine calibrations, overlap cross-checks |
@@ -58,6 +58,42 @@
 //! `engine` (e.g. `Engine::OneSided { l: 4 }`) by hand, as the paper's
 //! own strong-scaling tables do; `dbcsr multiply --help` exposes both
 //! styles on the CLI (`--plan manual|auto`).
+//!
+//! ## Symbolic pass: fetch only what survives
+//!
+//! On sparse workloads most fetched panels contribute nothing: a block
+//! of A only matters if some block of B shares its inner index (and the
+//! product survives the norm filter).  With `symbolic: SymbolicMode::On`
+//! the engines first exchange block *structure* — coordinates, dims and
+//! norms, a few bytes per block — compute the surviving task set, then
+//! fetch only the contributing data blocks.  The result is bitwise
+//! identical to the eager run; only the traffic shrinks:
+//!
+//! ```
+//! use dbcsr::prelude::*;
+//!
+//! let layout = BlockLayout::uniform(8, 4);
+//! let a = BlockCsrMatrix::random(&layout, &layout, 0.25, 1);
+//! let b = BlockCsrMatrix::random(&layout, &layout, 0.25, 2);
+//! let grid = ProcGrid::new(2, 2).unwrap();
+//! let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 3);
+//!
+//! let eager = MultiplyConfig {
+//!     engine: Engine::OneSided { l: 1 },
+//!     ..Default::default()
+//! };
+//! let symbolic = MultiplyConfig { symbolic: SymbolicMode::On, ..eager };
+//! let r0 = multiply_distributed(&a, &b, None, &dist, &eager).unwrap();
+//! let r1 = multiply_distributed(&a, &b, None, &dist, &symbolic).unwrap();
+//!
+//! // Bitwise-identical C; never more data on the wire than eager.
+//! assert_eq!(r0.c.to_dense().max_abs_diff(&r1.c.to_dense()), 0.0);
+//! assert!(r1.symbolic.enabled);
+//! assert!(r1.symbolic.fetched_bytes <= r1.symbolic.eager_bytes);
+//! ```
+//!
+//! The CLI flag is `--symbolic on|off|auto`; `auto` (the default there)
+//! turns the pass on when occupancy drops below one half.
 
 pub mod benchkit;
 pub mod blocks;
@@ -84,7 +120,7 @@ pub mod prelude {
         MultSession, SeqPlan, SessionRun, SessionSummary, WindowPoolStats,
     };
     pub use crate::engines::multiply::{
-        multiply_distributed, Engine, MultiplyConfig, MultiplyReport,
+        multiply_distributed, Engine, MultiplyConfig, MultiplyReport, SymbolicInfo, SymbolicMode,
     };
     pub use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
     pub use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};

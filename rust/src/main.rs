@@ -16,7 +16,7 @@ use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::engines::context::MultSession;
 use dbcsr::engines::multiply::{
-    multiply_distributed, multiply_oracle, Engine, MultiplyConfig, MultiplyError,
+    multiply_distributed, multiply_oracle, Engine, MultiplyConfig, MultiplyError, SymbolicMode,
 };
 use dbcsr::engines::planner::Planner;
 use dbcsr::perfmodel::machine::MachineModel;
@@ -81,6 +81,18 @@ fn parse_engine(s: &str) -> Engine {
     }
 }
 
+fn parse_symbolic(s: &str) -> SymbolicMode {
+    match s {
+        "on" => SymbolicMode::On,
+        "off" => SymbolicMode::Off,
+        "auto" => SymbolicMode::Auto,
+        _ => {
+            eprintln!("unknown symbolic mode '{s}' (use on|off|auto)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn parse_grid(s: &str) -> ProcGrid {
     let (a, b) = s.split_once('x').expect("grid must be PRxPC");
     ProcGrid::new(a.parse().unwrap(), b.parse().unwrap()).unwrap()
@@ -95,6 +107,7 @@ fn cmd_multiply() -> i32 {
         .opt("plan", "manual", "manual|auto (planner picks engine/grid/L/threads)")
         .opt("mem-cap-gb", "inf", "planner Eq. 6 memory cap per rank, GB (auto mode)")
         .opt("eps", "-1", "filter threshold (<0 = off)")
+        .opt("symbolic", "auto", "symbolic structure pass: on|off|auto")
         .opt("seed", "42", "rng seed")
         .opt("threads", "1", "intra-rank worker threads (manual mode)")
         .flag("verify", "compare against the dense oracle")
@@ -115,6 +128,8 @@ fn cmd_multiply() -> i32 {
     let machine = MachineModel::piz_daint(spec.node_flop_rate);
     let filter = FilterConfig::uniform(args.get_as("eps"));
 
+    let symbolic = parse_symbolic(args.get("symbolic"));
+
     let a = random_for_spec(&spec, seed);
     let b = random_for_spec(&spec, seed ^ 0xBEEF);
     let (report, cfg, grid, plan, session) = match args.get("plan") {
@@ -122,7 +137,9 @@ fn cmd_multiply() -> i32 {
             let budget = parse_grid(args.get("grid")).size();
             let cap_gb: f64 = args.get_as("mem-cap-gb");
             let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
-            let mut session = MultSession::new(planner, seed ^ 0xD157).with_filter(filter);
+            let mut session = MultSession::new(planner, seed ^ 0xD157)
+                .with_filter(filter)
+                .with_symbolic(symbolic);
             let run = match session.multiply_spec(&spec, &a, &b, None) {
                 Ok(run) => run,
                 Err(MultiplyError::Plan(e)) => {
@@ -144,6 +161,7 @@ fn cmd_multiply() -> i32 {
                 filter,
                 machine: Some(machine),
                 threads_per_rank: args.get_as("threads"),
+                symbolic,
                 ..Default::default()
             };
             let grid = parse_grid(args.get("grid"));
@@ -185,6 +203,18 @@ fn cmd_multiply() -> i32 {
         crit.waitall_s * 1e3,
         report.wall_s * 1e3
     );
+    if report.symbolic.enabled {
+        let sym = &report.symbolic;
+        let saved = sym.eager_bytes.saturating_sub(sym.fetched_bytes);
+        println!(
+            "symbolic: fetched {:.3} MB vs eager {:.3} MB ({:.1}% saved), \
+             structure {:.3} MB",
+            sym.fetched_bytes as f64 / 1e6,
+            sym.eager_bytes as f64 / 1e6,
+            100.0 * saved as f64 / sym.eager_bytes.max(1) as f64,
+            sym.structure_bytes as f64 / 1e6
+        );
+    }
     let overlap = report.overlap_summary();
     println!(
         "pipeline: tick wait {:.3} ms of {:.3} ms fetch comm \

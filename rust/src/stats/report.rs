@@ -278,6 +278,17 @@ pub fn multiply_report_json_planned(
         ("post_filtered", Json::Num(rep.post_filtered as f64)),
         ("wall_s", Json::Num(rep.wall_s)),
         ("avg_requested_bytes", Json::Num(rep.avg_requested_bytes())),
+        ("comm_volume_bytes", Json::Num(rep.symbolic.fetched_bytes as f64)),
+        (
+            "symbolic",
+            Json::obj([
+                ("enabled", Json::Bool(rep.symbolic.enabled)),
+                ("structure_bytes", Json::Num(rep.symbolic.structure_bytes as f64)),
+                ("structure_wait_s", Json::Num(rep.symbolic.structure_wait_s)),
+                ("fetched_bytes", Json::Num(rep.symbolic.fetched_bytes as f64)),
+                ("eager_bytes", Json::Num(rep.symbolic.eager_bytes as f64)),
+            ]),
+        ),
         ("peak_buffer_bytes", Json::Num(rep.peak_buffer_bytes as f64)),
         ("peak_fetch_bytes", Json::Num(rep.peak_fetch_bytes as f64)),
         ("peak_partial_c_bytes", Json::Num(rep.peak_partial_c_bytes as f64)),
@@ -481,6 +492,16 @@ mod tests {
             .map(|h| h.get("products").unwrap().as_f64().unwrap())
             .sum();
         assert_eq!(hist_products, back.get("products").unwrap().as_f64().unwrap());
+        // comm volume + symbolic block ride along (eager run: pass off,
+        // fetched == eager, no structure traffic)
+        assert!(back.get("comm_volume_bytes").unwrap().as_f64().unwrap() > 0.0);
+        let sym = back.get("symbolic").unwrap();
+        assert!(matches!(sym.get("enabled").unwrap(), Json::Bool(false)));
+        assert_eq!(sym.get("structure_bytes").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            sym.get("fetched_bytes").unwrap().as_f64().unwrap(),
+            sym.get("eager_bytes").unwrap().as_f64().unwrap()
+        );
     }
 
     #[test]

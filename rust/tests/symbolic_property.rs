@@ -1,0 +1,81 @@
+//! Integration: the symbolic structure-exchange pass is invisible in
+//! the numerics and never moves more data than the eager schedule.
+//!
+//! Property: random specs multiplied through both engines, with and
+//! without the norm filter, produce **bitwise-identical** C whether the
+//! symbolic pass is on or off — the pass only drops blocks that cannot
+//! contribute (no structural partner, or product under the filter
+//! ceiling), so the surviving task sequence and therefore every
+//! accumulation order is unchanged.  And the matrix traffic with the
+//! pass on is bounded by the eager traffic on every run.
+
+use dbcsr::blocks::filter::FilterConfig;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig, SymbolicMode};
+use dbcsr::util::prng::Pcg64;
+use dbcsr::util::testkit::property;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+#[test]
+fn symbolic_pass_is_bitwise_invisible_and_fetches_no_more() {
+    let engines = [Engine::PointToPoint, Engine::OneSided { l: 1 }];
+    let grids: [(usize, usize); 2] = [(2, 2), (3, 2)];
+    property("symbolic vs eager", 0x5B11C, 6, |rng: &mut Pcg64, i| {
+        let nb = 8 + rng.usize_below(9);
+        let bs = 2 + rng.usize_below(3);
+        let occ = rng.range_f64(0.15, 0.65);
+        let spec = BenchSpec::observed("symbolic-prop", nb, bs, occ);
+        let a = random_for_spec(&spec, rng.next_u64());
+        let b = random_for_spec(&spec, rng.next_u64());
+        let layout = spec.layout();
+        let (pr, pc) = grids[i % grids.len()];
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, rng.next_u64());
+        let filters = [FilterConfig::none(), FilterConfig::uniform(0.05)];
+        for engine in engines {
+            for filter in filters {
+                let eager_cfg = MultiplyConfig {
+                    engine,
+                    filter,
+                    symbolic: SymbolicMode::Off,
+                    ..Default::default()
+                };
+                let sym_cfg = MultiplyConfig {
+                    symbolic: SymbolicMode::On,
+                    ..eager_cfg
+                };
+                let eager = multiply_distributed(&a, &b, None, &dist, &eager_cfg)
+                    .map_err(|e| e.to_string())?;
+                let sym = multiply_distributed(&a, &b, None, &dist, &sym_cfg)
+                    .map_err(|e| e.to_string())?;
+                let diff = eager.c.to_dense().max_abs_diff(&sym.c.to_dense());
+                if diff != 0.0 {
+                    return Err(format!(
+                        "{} {pr}x{pc} eps={}: symbolic changed the bits (diff {diff:e})",
+                        engine.label(),
+                        filter.on_the_fly_eps
+                    ));
+                }
+                if !sym.symbolic.enabled || sym.symbolic.eager_bytes == 0 {
+                    return Err(format!(
+                        "{} {pr}x{pc}: symbolic run not flagged as symbolic",
+                        engine.label()
+                    ));
+                }
+                if sym.symbolic.fetched_bytes > sym.symbolic.eager_bytes {
+                    return Err(format!(
+                        "{} {pr}x{pc} eps={}: symbolic fetched {} > eager {}",
+                        engine.label(),
+                        filter.on_the_fly_eps,
+                        sym.symbolic.fetched_bytes,
+                        sym.symbolic.eager_bytes
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
