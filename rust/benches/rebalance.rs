@@ -1,0 +1,258 @@
+//! Rebalance bench: flop-balanced redistribution payoff, skewed vs
+//! uniform workloads.
+//!
+//! Pins the stage's acceptance gates:
+//!
+//! 1. **imbalance repair** — on the clustered (power-law) workload in
+//!    its adversarial pre-state (hot head rows clumped on one process
+//!    row), the greedy plan reduces the modeled max/mean flop imbalance
+//!    by at least 1.5x;
+//! 2. **end-to-end payoff** — on a compute-dominated machine, the
+//!    modeled critical-path time of the multiplication improves on the
+//!    rebalanced distribution, on both engines, with bitwise-identical
+//!    C;
+//! 3. **no pointless migrations** — on a uniform workload the session's
+//!    `Auto` mode declines (the payback never covers the migration);
+//! 4. **payback-sound sequences** — every grid switch the joint
+//!    sequence scheduler emits is audited externally: forced (current
+//!    grid infeasible) or amortized-payback-positive over the remaining
+//!    steps.
+//!
+//! Writes `BENCH_rebalance.json` on every run.
+//!
+//! ```bash
+//! cargo bench --bench rebalance            # full sweep (3 seeds)
+//! cargo bench --bench rebalance -- --smoke # CI profile (1 seed)
+//! ```
+
+use dbcsr::benchkit::print_header;
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::blocks::matrix::BlockCsrMatrix;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::rebalance::{plan_rebalance, RebalanceMode, WorkModel};
+use dbcsr::engines::context::{MultSession, SeqStep};
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::engines::planner::Planner;
+use dbcsr::perfmodel::machine::MachineModel;
+use dbcsr::util::json::Json;
+use dbcsr::workloads::generator::clustered;
+use dbcsr::workloads::spec::BenchSpec;
+
+const NB: usize = 32;
+const BLOCK: usize = 2;
+const ALPHA: f64 = 1.0;
+const OCC: f64 = 0.3;
+
+/// Adversarial pre-state: contiguous row chunks, so the physically hot
+/// head rows of the clustered workload all land on process row 0.
+fn chunked_dist(grid: ProcGrid) -> Distribution2d {
+    let v = grid.virtual_dim();
+    Distribution2d::from_maps(
+        grid,
+        (0..NB).map(|r| r * grid.rows() / NB).collect(),
+        (0..NB).map(|k| k % v).collect(),
+        (0..NB).map(|c| c % grid.cols()).collect(),
+    )
+}
+
+/// Audit a jointly scheduled sequence: every grid switch must be forced
+/// (no feasible candidate on the grid it left) or pay for itself over
+/// the remaining steps — the scheduler's "never payback-negative"
+/// contract, recomputed from the public candidate lists.
+fn audit_switches(planner: &Planner, specs: &[BenchSpec], steps: &[SeqStep]) -> usize {
+    let mut switches = 0;
+    let mut cur = steps[0].grid;
+    for (t, s) in steps.iter().enumerate() {
+        if s.grid == cur {
+            continue;
+        }
+        switches += 1;
+        let forced = s.plan.best_feasible_on_grid(cur).is_none();
+        if !forced {
+            let mut saved = 0.0;
+            for fut in &steps[t..] {
+                match (
+                    fut.plan.best_feasible_on_grid(cur),
+                    fut.plan.best_feasible_on_grid(s.grid),
+                ) {
+                    (Some(c), Some(o)) => saved += c.modeled.total_s - o.modeled.total_s,
+                    (None, _) => {
+                        saved = f64::INFINITY;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let p = planner.max_ranks.max(1) as f64;
+            let cost = planner
+                .machine
+                .net
+                .rma_time((2.0 * specs[t].matrix_bytes() / p).ceil() as usize);
+            assert!(
+                saved > cost,
+                "payback-negative switch at step {t}: saved {saved:.3e} s vs cost {cost:.3e} s"
+            );
+        }
+        cur = s.grid;
+    }
+    switches
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seeds: &[u64] = if smoke { &[7] } else { &[7, 8, 9] };
+    let grid = ProcGrid::new(4, 2).unwrap();
+    // compute-dominated calibration: critical-path time tracks the
+    // per-rank flop histogram, so the imbalance repair is visible
+    // end to end
+    let machine = MachineModel::piz_daint(1e6);
+    let engines = [Engine::PointToPoint, Engine::OneSided { l: 1 }];
+
+    print_header("rebalance: flop-balanced redistribution, clustered vs uniform (4x2)");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut min_repair = f64::INFINITY;
+    let mut min_speedup = f64::INFINITY;
+
+    for &seed in seeds {
+        let l = BlockLayout::uniform(NB, BLOCK);
+        let a = clustered(&l, OCC, ALPHA, seed);
+        let b = clustered(&l, OCC, ALPHA, seed ^ 0x5E);
+        let dist = chunked_dist(grid);
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let plan = plan_rebalance(&model, &dist, &a, &b);
+        assert!(plan.beneficial, "seed {seed}: clumped hot rows must be repairable");
+        let repair = plan.pre_imbalance / plan.post_imbalance;
+        min_repair = min_repair.min(repair);
+        assert!(
+            repair >= 1.5,
+            "seed {seed}: modeled imbalance repair {repair:.3}x below the 1.5x gate \
+             (pre {:.3} -> post {:.3})",
+            plan.pre_imbalance,
+            plan.post_imbalance
+        );
+        let new_dist = plan.apply(grid);
+
+        for engine in engines {
+            let cfg = MultiplyConfig {
+                engine,
+                machine: Some(machine),
+                ..Default::default()
+            };
+            let before = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+            let after = multiply_distributed(&a, &b, None, &new_dist, &cfg).unwrap();
+            let diff = after.c.to_dense().max_abs_diff(&before.c.to_dense());
+            assert_eq!(diff, 0.0, "{} seed {seed}: rebalance changed the bits", engine.label());
+            let (_, crit_before) = before.model(&before.fabric_machine);
+            let (_, crit_after) = after.model(&after.fabric_machine);
+            let speedup = crit_before.total_s / crit_after.total_s;
+            min_speedup = min_speedup.min(speedup);
+            assert!(
+                speedup > 1.1,
+                "{} seed {seed}: modeled time did not improve ({speedup:.3}x)",
+                engine.label()
+            );
+            println!(
+                "{:<4} seed {seed}: imbalance {:.3} -> {:.3} ({repair:.2}x), \
+                 modeled {:.3} -> {:.3} ms ({speedup:.2}x), migrated {:.1} kB, \
+                 executed max/mean {:.3} -> {:.3}",
+                engine.label(),
+                plan.pre_imbalance,
+                plan.post_imbalance,
+                crit_before.total_s * 1e3,
+                crit_after.total_s * 1e3,
+                plan.migration_bytes as f64 / 1e3,
+                before.mult_stats.flop_imbalance(),
+                after.mult_stats.flop_imbalance(),
+            );
+            rows.push(Json::obj([
+                ("workload", Json::Str("clustered".to_string())),
+                ("engine", Json::Str(engine.label())),
+                ("seed", Json::Num(seed as f64)),
+                ("pre_imbalance", Json::Num(plan.pre_imbalance)),
+                ("post_imbalance", Json::Num(plan.post_imbalance)),
+                ("repair", Json::Num(repair)),
+                ("modeled_before_s", Json::Num(crit_before.total_s)),
+                ("modeled_after_s", Json::Num(crit_after.total_s)),
+                ("speedup", Json::Num(speedup)),
+                ("migration_bytes", Json::Num(plan.migration_bytes as f64)),
+                (
+                    "executed_pre_imbalance",
+                    Json::Num(before.mult_stats.flop_imbalance()),
+                ),
+                (
+                    "executed_post_imbalance",
+                    Json::Num(after.mult_stats.flop_imbalance()),
+                ),
+            ]));
+        }
+    }
+
+    // 3. uniform workload: Auto must decline the migration.
+    let mut declined = 0usize;
+    for &seed in seeds {
+        let l = BlockLayout::uniform(NB, BLOCK);
+        let a = BlockCsrMatrix::random(&l, &l, OCC, seed);
+        let b = BlockCsrMatrix::random(&l, &l, OCC, seed ^ 0x5E);
+        let mut session = MultSession::new(Planner::new(MachineModel::piz_daint(50e9), 8), seed)
+            .with_rebalance(RebalanceMode::Auto);
+        let run = session.multiply(&a, &b, None).unwrap();
+        let out = run.rebalance.expect("auto mode reports an outcome");
+        assert!(
+            !out.applied,
+            "seed {seed}: auto applied a migration on a uniform workload \
+             (pre {:.3}, planned {} B)",
+            out.pre_imbalance, out.planned_migration_bytes
+        );
+        assert_eq!(out.migrated_bytes, 0);
+        declined += 1;
+        println!(
+            "auto seed {seed}: declined on uniform (pre-imbalance {:.3}, \
+             would-migrate {:.1} kB)",
+            out.pre_imbalance,
+            out.planned_migration_bytes as f64 / 1e3
+        );
+        rows.push(Json::obj([
+            ("workload", Json::Str("uniform".to_string())),
+            ("engine", Json::Str(run.cfg.engine.label())),
+            ("seed", Json::Num(seed as f64)),
+            ("pre_imbalance", Json::Num(out.pre_imbalance)),
+            ("auto_applied", Json::Bool(out.applied)),
+            (
+                "planned_migration_bytes",
+                Json::Num(out.planned_migration_bytes as f64),
+            ),
+        ]));
+    }
+
+    // 4. joint sequence scheduling: audit every emitted grid switch
+    // against the amortized payback rule, on a mixed-size sequence
+    // designed to tempt the scheduler into switching.
+    let planner = Planner::new(MachineModel::piz_daint(50e9), 16);
+    let specs = vec![
+        BenchSpec::observed("seq-big", 40, 2, 0.6),
+        BenchSpec::observed("seq-small", 6, 2, 0.1),
+        BenchSpec::observed("seq-big2", 40, 2, 0.6),
+    ];
+    let mut session = MultSession::new(planner, 1);
+    let seq = session.plan_seq(&specs).expect("sequence plans");
+    let switches = audit_switches(session.planner(), &specs, &seq.steps);
+    println!(
+        "sequence audit: {} step(s), {} grid switch(es), all payback-positive or forced",
+        seq.steps.len(),
+        switches
+    );
+
+    let summary = Json::obj([
+        ("bench", Json::Str("rebalance".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(rows)),
+        ("min_repair", Json::Num(min_repair)),
+        ("min_modeled_speedup", Json::Num(min_speedup)),
+        ("uniform_auto_declined", Json::Num(declined as f64)),
+        ("seq_switches_audited", Json::Num(switches as f64)),
+    ]);
+    std::fs::write("BENCH_rebalance.json", summary.to_string_compact())
+        .expect("write BENCH_rebalance.json");
+    println!("wrote BENCH_rebalance.json");
+}

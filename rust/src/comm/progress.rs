@@ -68,7 +68,7 @@ pub struct Progress {
     /// Virtual now (seconds since the world started).
     now_s: f64,
     /// Per-class rail occupancy (indexed by `TrafficClass`).
-    rail_busy_until_s: [f64; 5],
+    rail_busy_until_s: [f64; 6],
     total_wait_s: f64,
     total_comm_s: f64,
     epoch_wait_s: f64,
@@ -79,7 +79,7 @@ impl Progress {
         Self {
             cfg,
             now_s: 0.0,
-            rail_busy_until_s: [0.0; 5],
+            rail_busy_until_s: [0.0; 6],
             total_wait_s: 0.0,
             total_comm_s: 0.0,
             epoch_wait_s: 0.0,

@@ -55,7 +55,10 @@ impl Payload {
 /// counts A, B and C panel traffic separately).  `Structure` carries the
 /// symbolic pass's metadata exchange (block coordinates + norms, no
 /// numerical payload) so the structure phase is priced on the fabric and
-/// reported separately from the data it saves.
+/// reported separately from the data it saves.  `Redistribution` carries
+/// the rebalance stage's block migration (`dist/rebalance.rs`) so its
+/// exact traffic is priced and reported separately from the
+/// multiplication it speeds up.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TrafficClass {
     MatrixA,
@@ -63,15 +66,17 @@ pub enum TrafficClass {
     MatrixC,
     Other,
     Structure,
+    Redistribution,
 }
 
 impl TrafficClass {
-    pub const ALL: [TrafficClass; 5] = [
+    pub const ALL: [TrafficClass; 6] = [
         TrafficClass::MatrixA,
         TrafficClass::MatrixB,
         TrafficClass::MatrixC,
         TrafficClass::Other,
         TrafficClass::Structure,
+        TrafficClass::Redistribution,
     ];
 
     pub(crate) fn index(self) -> usize {
@@ -81,6 +86,7 @@ impl TrafficClass {
             TrafficClass::MatrixC => 2,
             TrafficClass::Other => 3,
             TrafficClass::Structure => 4,
+            TrafficClass::Redistribution => 5,
         }
     }
 }
@@ -89,14 +95,14 @@ impl TrafficClass {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// Point-to-point messages/bytes sent, per class.
-    pub ptp_sent_msgs: [u64; 5],
-    pub ptp_sent_bytes: [u64; 5],
+    pub ptp_sent_msgs: [u64; 6],
+    pub ptp_sent_bytes: [u64; 6],
     /// Point-to-point messages/bytes received, per class.
-    pub ptp_recv_msgs: [u64; 5],
-    pub ptp_recv_bytes: [u64; 5],
+    pub ptp_recv_msgs: [u64; 6],
+    pub ptp_recv_bytes: [u64; 6],
     /// One-sided gets issued by this rank (origin-side), per class.
-    pub rget_calls: [u64; 5],
-    pub rget_bytes: [u64; 5],
+    pub rget_calls: [u64; 6],
+    pub rget_bytes: [u64; 6],
     /// Bytes exposed in this rank's windows (window pool footprint).
     pub window_bytes: u64,
 }

@@ -81,6 +81,46 @@ impl Distribution2d {
         }
     }
 
+    /// Distribution with explicit maps — the rebalance stage's entry
+    /// point (`dist::rebalance` computes new row/column maps from the
+    /// modeled flop histogram and rebuilds the distribution here).
+    ///
+    /// Panics when a map entry is out of its target range (`row_map`
+    /// into `[0, P_R)`, `inner_map` into `[0, V)`, `col_map` into
+    /// `[0, P_C)`).
+    pub fn from_maps(
+        grid: ProcGrid,
+        row_map: Vec<usize>,
+        inner_map: Vec<usize>,
+        col_map: Vec<usize>,
+    ) -> Self {
+        let (pr, pc, v) = (grid.rows(), grid.cols(), grid.virtual_dim());
+        assert!(row_map.iter().all(|&x| x < pr), "row_map entry out of range");
+        assert!(inner_map.iter().all(|&x| x < v), "inner_map entry out of range");
+        assert!(col_map.iter().all(|&x| x < pc), "col_map entry out of range");
+        Self {
+            grid,
+            row_map,
+            inner_map,
+            col_map,
+        }
+    }
+
+    /// The block-row → process-row map (read-only view).
+    pub fn row_map(&self) -> &[usize] {
+        &self.row_map
+    }
+
+    /// The inner-block → virtual-index map (read-only view).
+    pub fn inner_map(&self) -> &[usize] {
+        &self.inner_map
+    }
+
+    /// The block-column → process-column map (read-only view).
+    pub fn col_map(&self) -> &[usize] {
+        &self.col_map
+    }
+
     /// Unpermuted modulo distribution (the load-balance ablation's
     /// baseline): block `b` maps to `b mod P_R` / `b mod V` / `b mod P_C`.
     pub fn identity(nbrows: usize, nbinner: usize, nbcols: usize, grid: ProcGrid) -> Self {

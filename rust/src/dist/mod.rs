@@ -14,8 +14,13 @@
 //! * [`topology25d`] — the 2.5D replication topology of paper §3
 //!   (Eq. 4/5): `L = L_R · L_C` replicas per C panel on a
 //!   `[side3D, side3D, L]` arrangement, with the "fall back to `L = 1`"
-//!   rule for non-ideal processor counts.
+//!   rule for non-ideal processor counts;
+//! * [`rebalance`] — the flop-balanced redistribution stage: modeled
+//!   per-rank flop histograms from the symbolic structure, greedy
+//!   row/column-map reassignment, and the block-exact one-sided
+//!   migration pass that pays for it.
 
 pub mod distribution;
 pub mod grid;
+pub mod rebalance;
 pub mod topology25d;

@@ -1,0 +1,644 @@
+//! Flop-balanced redistribution stage: the *dynamic* complement of the
+//! randomized permutations in [`crate::dist::distribution`].
+//!
+//! The paper's static load balance (§2, "randomly permuting rows and
+//! columns") scatters correlated block rows, but it is blind to the
+//! *measured* sparsity structure: a clustered workload (a few physically
+//! hot block rows) still lands its hot rows wherever the permutation
+//! happens to put them.  This module closes that gap:
+//!
+//! 1. [`WorkModel`] prices every C block `(r, c)` from the operands'
+//!    symbolic structure — the same merge-join over block coordinates,
+//!    dims and Frobenius norms the engines' symbolic pass runs
+//!    ([`crate::blocks::symbolic`]), with the identical
+//!    `a_norm · b_norm > eps` survival predicate — giving the exact
+//!    modeled flop histogram per rank of any candidate distribution.
+//! 2. [`plan_rebalance`] greedily reassigns the row map (LPT over the
+//!    modeled per-block-row work) and the column map (joint-max greedy)
+//!    into a [`RebalancePlan`] whose migration traffic is priced
+//!    *block-exactly*: every A/B block whose home rank changes costs
+//!    `nr·nc·8 + 24` wire bytes, the same formula the one-sided fabric
+//!    charges per fetched block.  A guarded accept returns the identity
+//!    plan whenever the greedy maps do not strictly reduce the max/mean
+//!    imbalance, so `post ≤ pre` holds by construction.
+//! 3. [`execute_migration`] runs the migration as a real one-sided pass
+//!    over the simulated world — windows exposing the old panels,
+//!    block-granular `rget`s on the dedicated
+//!    [`TrafficClass::Redistribution`] rail — so the measured bytes
+//!    equal the plan's modeled bytes exactly and the migration's
+//!    virtual time is priced by the same fabric as the multiplication
+//!    it pays for.
+//!
+//! The **inner map is pinned**: reassigning inner blocks to different
+//! virtual indices would regroup the per-tick partial sums (changing
+//! C's accumulation structure) while carrying zero modeled flop payback
+//! — the per-rank flop histogram depends only on the row/column maps —
+//! so inner moves would be pure migration cost.  Because both engines
+//! accumulate C canonically (one accumulator per inner virtual index,
+//! folded in ascending-vk order; see `engines::cannon` / `engines::osl`),
+//! a rebalanced distribution reproduces C **bitwise**.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::norms::block_norm;
+use crate::blocks::panel::Panel;
+use crate::comm::progress::FabricConfig;
+use crate::comm::rma::win_key;
+use crate::comm::world::{SimWorld, TrafficClass};
+use crate::dist::distribution::Distribution2d;
+use crate::dist::grid::ProcGrid;
+
+/// Whether the session runs the flop-balanced redistribution stage
+/// before multiplying (mirrors `engines::multiply::SymbolicMode`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Always apply a beneficial plan (guarded accept still protects
+    /// against imbalance regressions).
+    On,
+    /// Never rebalance (the paper's static-permutation baseline).
+    #[default]
+    Off,
+    /// Apply only when the modeled amortized payback over the remaining
+    /// multiplications exceeds the migration cost.
+    Auto,
+}
+
+/// Max/mean ratio of a load histogram (`1.0` for empty or zero-mean
+/// histograms — "perfectly balanced" is the neutral element).
+pub fn imbalance_ratio(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    loads.iter().fold(0.0, |m, &x| m.max(x)) / mean
+}
+
+/// Modeled multiplication work per C block pair, derived from the
+/// operands' symbolic structure (coordinates, dims, cached norms).
+#[derive(Clone, Debug)]
+pub struct WorkModel {
+    nbrows: usize,
+    nbcols: usize,
+    /// `pair_work[r * nbcols + c]`: modeled flops of C block `(r, c)`
+    /// (`2·nr·nk·nc` summed over eps-surviving products).
+    pair_work: Vec<f64>,
+}
+
+impl WorkModel {
+    /// Price every surviving block product of `C = A·B` with the same
+    /// merge-join + `a_norm · b_norm > eps` predicate the engines'
+    /// local multiply applies (`eps < 0` disables the filter).  The
+    /// totals therefore match the executed `LocalMultStats::flops`
+    /// exactly.
+    pub fn from_matrices(a: &BlockCsrMatrix, b: &BlockCsrMatrix, eps: f64) -> Self {
+        let nbrows = a.row_layout().nblocks();
+        let nbinner = a.col_layout().nblocks();
+        let nbcols = b.col_layout().nblocks();
+        let mut a_by_k: Vec<Vec<(usize, f64)>> = (0..nbinner).map(|_| Vec::new()).collect();
+        for (r, k, blk) in a.iter_blocks() {
+            a_by_k[k].push((r, block_norm(blk)));
+        }
+        let mut b_by_k: Vec<Vec<(usize, f64)>> = (0..nbinner).map(|_| Vec::new()).collect();
+        for (k, c, blk) in b.iter_blocks() {
+            b_by_k[k].push((c, block_norm(blk)));
+        }
+        let mut pair_work = vec![0.0; nbrows * nbcols];
+        for k in 0..nbinner {
+            let nk = a.col_layout().size(k) as f64;
+            for &(r, an) in &a_by_k[k] {
+                let nr = a.row_layout().size(r) as f64;
+                for &(c, bn) in &b_by_k[k] {
+                    if eps < 0.0 || an * bn > eps {
+                        let nc = b.col_layout().size(c) as f64;
+                        pair_work[r * nbcols + c] += 2.0 * nr * nk * nc;
+                    }
+                }
+            }
+        }
+        Self {
+            nbrows,
+            nbcols,
+            pair_work,
+        }
+    }
+
+    /// Number of block rows / block columns the model covers.
+    pub fn nbrows(&self) -> usize {
+        self.nbrows
+    }
+
+    pub fn nbcols(&self) -> usize {
+        self.nbcols
+    }
+
+    /// Modeled flops of C block `(r, c)`.
+    pub fn pair(&self, r: usize, c: usize) -> f64 {
+        self.pair_work[r * self.nbcols + c]
+    }
+
+    /// Modeled flops of block row `r` (over all columns).
+    pub fn row_work(&self, r: usize) -> f64 {
+        self.pair_work[r * self.nbcols..(r + 1) * self.nbcols]
+            .iter()
+            .sum()
+    }
+
+    /// Modeled flops of block column `c` (over all rows).
+    pub fn col_work(&self, c: usize) -> f64 {
+        (0..self.nbrows).map(|r| self.pair(r, c)).sum()
+    }
+
+    /// Total modeled flops of the multiplication.
+    pub fn total_flops(&self) -> f64 {
+        self.pair_work.iter().sum()
+    }
+
+    /// Per-rank modeled flop histogram for explicit maps on `grid`
+    /// (indexed by `grid.rank(p, q)`).
+    pub fn rank_loads_for_maps(
+        &self,
+        grid: ProcGrid,
+        row_map: &[usize],
+        col_map: &[usize],
+    ) -> Vec<f64> {
+        debug_assert_eq!(row_map.len(), self.nbrows);
+        debug_assert_eq!(col_map.len(), self.nbcols);
+        let mut loads = vec![0.0; grid.rows() * grid.cols()];
+        for r in 0..self.nbrows {
+            for c in 0..self.nbcols {
+                let w = self.pair(r, c);
+                if w > 0.0 {
+                    loads[grid.rank(row_map[r], col_map[c])] += w;
+                }
+            }
+        }
+        loads
+    }
+
+    /// Per-rank modeled flop histogram under `dist`.
+    pub fn rank_loads(&self, dist: &Distribution2d) -> Vec<f64> {
+        self.rank_loads_for_maps(dist.grid, dist.row_map(), dist.col_map())
+    }
+}
+
+/// A planned redistribution: the new maps, the modeled imbalance before
+/// and after, and the block-exact migration volume.
+#[derive(Clone, Debug)]
+pub struct RebalancePlan {
+    /// New block-row → process-row map.
+    pub row_map: Vec<usize>,
+    /// Inner map, carried over unchanged (pinned; see the module docs).
+    pub inner_map: Vec<usize>,
+    /// New block-column → process-column map.
+    pub col_map: Vec<usize>,
+    /// Whether the plan strictly reduces the modeled max/mean imbalance
+    /// (the guarded accept: `false` means the maps equal the input
+    /// distribution's and nothing migrates).
+    pub beneficial: bool,
+    /// Modeled max/mean flop imbalance of the input distribution.
+    pub pre_imbalance: f64,
+    /// Modeled max/mean flop imbalance after applying the plan (equals
+    /// `pre_imbalance` for identity plans).
+    pub post_imbalance: f64,
+    /// Exact migration volume: `nr·nc·8 + 24` wire bytes per A/B block
+    /// whose home rank changes (zero for identity plans).  This is the
+    /// number [`execute_migration`] reproduces on the
+    /// [`TrafficClass::Redistribution`] rail, byte for byte.
+    pub migration_bytes: u64,
+}
+
+impl RebalancePlan {
+    /// Materialize the plan as a distribution on `grid`.
+    pub fn apply(&self, grid: ProcGrid) -> Distribution2d {
+        Distribution2d::from_maps(
+            grid,
+            self.row_map.clone(),
+            self.inner_map.clone(),
+            self.col_map.clone(),
+        )
+    }
+
+    /// Modeled virtual seconds ONE multiplication saves on the critical
+    /// rank at `flop_rate`: the imbalance reduction times the mean
+    /// per-rank compute time.  The amortized payback test multiplies
+    /// this by the remaining multiplications and compares against the
+    /// migration's priced transfer time.
+    pub fn saved_per_mult_s(&self, model: &WorkModel, ranks: usize, flop_rate: f64) -> f64 {
+        let mean = model.total_flops() / ranks.max(1) as f64;
+        (self.pre_imbalance - self.post_imbalance).max(0.0) * mean / flop_rate.max(1.0)
+    }
+}
+
+/// What a session's rebalance stage did for one multiplication.
+#[derive(Clone, Debug)]
+pub struct RebalanceOutcome {
+    /// Whether the plan was applied (and the distribution replaced).
+    pub applied: bool,
+    /// Modeled max/mean imbalance before the stage.
+    pub pre_imbalance: f64,
+    /// Modeled max/mean imbalance of the executed distribution (equals
+    /// `pre_imbalance` when not applied).
+    pub post_imbalance: f64,
+    /// The plan's modeled migration volume (zero when not applied).
+    pub planned_migration_bytes: u64,
+    /// Bytes actually moved on the Redistribution rail (equals
+    /// `planned_migration_bytes` when applied, zero otherwise).
+    pub migrated_bytes: u64,
+    /// Virtual seconds the migration pass took (max over ranks).
+    pub migration_s: f64,
+}
+
+/// Greedily rebalance `dist`'s row and column maps against `model`.
+///
+/// Rows first: LPT (longest processing time) over the modeled
+/// per-block-row work onto the process rows, tie-broken toward the bin
+/// with fewer rows (keeps memory shares even when works tie or vanish).
+/// Columns second, with the row map fixed: each block column — heaviest
+/// first — goes to the process column minimizing the joint maximum rank
+/// load.  If the result does not *strictly* reduce the max/mean
+/// imbalance, the input maps are returned unchanged (`beneficial:
+/// false`, zero migration), so `post_imbalance ≤ pre_imbalance` always
+/// holds.
+pub fn plan_rebalance(
+    model: &WorkModel,
+    dist: &Distribution2d,
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+) -> RebalancePlan {
+    let grid = dist.grid;
+    let (pr, pc) = (grid.rows(), grid.cols());
+    let pre = imbalance_ratio(&model.rank_loads(dist));
+
+    let identity = |pre: f64| RebalancePlan {
+        row_map: dist.row_map().to_vec(),
+        inner_map: dist.inner_map().to_vec(),
+        col_map: dist.col_map().to_vec(),
+        beneficial: false,
+        pre_imbalance: pre,
+        post_imbalance: pre,
+        migration_bytes: 0,
+    };
+    if pr * pc <= 1 {
+        return identity(pre);
+    }
+
+    // ---- rows: LPT over modeled per-block-row work --------------------
+    let mut order: Vec<usize> = (0..model.nbrows()).collect();
+    order.sort_by(|&x, &y| {
+        model
+            .row_work(y)
+            .partial_cmp(&model.row_work(x))
+            .unwrap()
+            .then(x.cmp(&y))
+    });
+    let mut row_map = vec![0usize; model.nbrows()];
+    let mut row_bins: Vec<(f64, usize)> = vec![(0.0, 0); pr];
+    for r in order {
+        let p = (0..pr)
+            .min_by(|&x, &y| row_bins[x].partial_cmp(&row_bins[y]).unwrap())
+            .expect("grid has at least one process row");
+        row_map[r] = p;
+        row_bins[p].0 += model.row_work(r);
+        row_bins[p].1 += 1;
+    }
+
+    // ---- columns: greedy joint-max with the row map fixed -------------
+    let mut corder: Vec<usize> = (0..model.nbcols()).collect();
+    corder.sort_by(|&x, &y| {
+        model
+            .col_work(y)
+            .partial_cmp(&model.col_work(x))
+            .unwrap()
+            .then(x.cmp(&y))
+    });
+    let mut load = vec![vec![0.0; pc]; pr];
+    let mut col_count = vec![0usize; pc];
+    let mut col_map = vec![0usize; model.nbcols()];
+    for c in corder {
+        // work this column adds to each process row under the new rows
+        let mut add = vec![0.0; pr];
+        for r in 0..model.nbrows() {
+            add[row_map[r]] += model.pair(r, c);
+        }
+        let q = (0..pc)
+            .min_by(|&x, &y| {
+                let mx = (0..pr).fold(0.0f64, |m, p| m.max(load[p][x] + add[p]));
+                let my = (0..pr).fold(0.0f64, |m, p| m.max(load[p][y] + add[p]));
+                (mx, col_count[x]).partial_cmp(&(my, col_count[y])).unwrap()
+            })
+            .expect("grid has at least one process column");
+        col_map[c] = q;
+        for p in 0..pr {
+            load[p][q] += add[p];
+        }
+        col_count[q] += 1;
+    }
+
+    // ---- guarded accept ----------------------------------------------
+    let post = imbalance_ratio(&model.rank_loads_for_maps(grid, &row_map, &col_map));
+    if post + 1e-12 >= pre {
+        return identity(pre);
+    }
+
+    // ---- exact migration pricing --------------------------------------
+    // A block (r, k) is home at rank (row_map[r], inner[k] mod P_C): it
+    // moves iff its row owner changes.  B block (k, c) is home at rank
+    // (inner[k] mod P_R, col_map[c]): it moves iff its column owner
+    // changes.  Wire cost per block matches the fabric's block-granular
+    // rget pricing: data + 16 B directory entry + 8 B norm.
+    let mut migration_bytes = 0u64;
+    for (r, k, _) in a.iter_blocks() {
+        if row_map[r] != dist.row_owner(r) {
+            migration_bytes += (a.row_layout().size(r) * a.col_layout().size(k) * 8 + 24) as u64;
+        }
+    }
+    for (k, c, _) in b.iter_blocks() {
+        if col_map[c] != dist.col_owner(c) {
+            migration_bytes += (b.row_layout().size(k) * b.col_layout().size(c) * 8 + 24) as u64;
+        }
+    }
+
+    RebalancePlan {
+        row_map,
+        inner_map: dist.inner_map().to_vec(),
+        col_map,
+        beneficial: true,
+        pre_imbalance: pre,
+        post_imbalance: post,
+        migration_bytes,
+    }
+}
+
+/// Measured totals of one executed migration pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationStats {
+    /// Bytes requested on the Redistribution rail, summed over ranks —
+    /// equals the plan's `migration_bytes` exactly.
+    pub bytes: u64,
+    /// Virtual seconds of the pass (max over ranks).
+    pub max_virtual_s: f64,
+    /// Measured wait residue, summed over ranks.
+    pub wait_s: f64,
+}
+
+/// Execute the migration `old → new` as a one-sided pass over the
+/// simulated world: every rank exposes its old A/B panels in windows,
+/// then the *new* home of each moving block fetches it block-granularly
+/// on the [`TrafficClass::Redistribution`] rail.  The measured
+/// requested bytes equal the plan's modeled volume exactly (same
+/// per-block wire formula, same set of moving blocks).
+pub fn execute_migration(
+    old: &Distribution2d,
+    new: &Distribution2d,
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+    fabric: FabricConfig,
+) -> MigrationStats {
+    debug_assert_eq!(old.inner_map(), new.inner_map(), "inner map is pinned");
+    debug_assert_eq!(old.grid, new.grid, "migration keeps the grid");
+    let grid = old.grid;
+    let nranks = grid.rows() * grid.cols();
+
+    // Old panel directories per rank + per-rank block-granular fetch
+    // lists (target rank, window key, ascending entry ids).
+    let mut windows_a: Vec<HashMap<u64, Panel>> = (0..nranks).map(|_| HashMap::new()).collect();
+    let mut windows_b: Vec<HashMap<u64, Panel>> = (0..nranks).map(|_| HashMap::new()).collect();
+    let mut fetch_a: Vec<Vec<(usize, u64, Vec<u32>)>> = (0..nranks).map(|_| Vec::new()).collect();
+    let mut fetch_b: Vec<Vec<(usize, u64, Vec<u32>)>> = (0..nranks).map(|_| Vec::new()).collect();
+
+    for (pi, row) in old.split_a(a).into_iter().enumerate() {
+        for (vk, panel) in row.into_iter().enumerate() {
+            let home = old.a_panel_home(pi, vk);
+            let mut by_dest: Vec<(usize, Vec<u32>)> = Vec::new();
+            for (idx, e) in panel.entries.iter().enumerate() {
+                let npi = new.row_owner(e.row as usize);
+                if npi != pi {
+                    let dest = new.a_panel_home(npi, vk);
+                    match by_dest.iter_mut().find(|(d, _)| *d == dest) {
+                        Some((_, ids)) => ids.push(idx as u32),
+                        None => by_dest.push((dest, vec![idx as u32])),
+                    }
+                }
+            }
+            for (dest, ids) in by_dest {
+                fetch_a[dest].push((home, win_key(pi, vk), ids));
+            }
+            windows_a[home].insert(win_key(pi, vk), panel);
+        }
+    }
+    for (vk, row) in old.split_b(b).into_iter().enumerate() {
+        for (pj, panel) in row.into_iter().enumerate() {
+            let home = old.b_panel_home(vk, pj);
+            let mut by_dest: Vec<(usize, Vec<u32>)> = Vec::new();
+            for (idx, e) in panel.entries.iter().enumerate() {
+                let npj = new.col_owner(e.col as usize);
+                if npj != pj {
+                    let dest = new.b_panel_home(vk, npj);
+                    match by_dest.iter_mut().find(|(d, _)| *d == dest) {
+                        Some((_, ids)) => ids.push(idx as u32),
+                        None => by_dest.push((dest, vec![idx as u32])),
+                    }
+                }
+            }
+            for (dest, ids) in by_dest {
+                fetch_b[dest].push((home, win_key(vk, pj), ids));
+            }
+            windows_b[home].insert(win_key(vk, pj), panel);
+        }
+    }
+
+    let slots_a: Vec<Mutex<Option<HashMap<u64, Panel>>>> =
+        windows_a.into_iter().map(|w| Mutex::new(Some(w))).collect();
+    let slots_b: Vec<Mutex<Option<HashMap<u64, Panel>>>> =
+        windows_b.into_iter().map(|w| Mutex::new(Some(w))).collect();
+
+    let world = SimWorld::with_fabric(nranks, fabric);
+    let results = world.run(|comm| {
+        let me = comm.rank();
+        let a_dir = slots_a[me].lock().unwrap().take().unwrap();
+        let b_dir = slots_b[me].lock().unwrap().take().unwrap();
+        comm.win_create("mig/a", a_dir);
+        comm.win_create("mig/b", b_dir);
+        let mut handles = Vec::new();
+        for (target, key, ids) in &fetch_a[me] {
+            handles.push(comm.rget_blocks(
+                "mig/a",
+                *target,
+                *key,
+                TrafficClass::Redistribution,
+                ids.clone(),
+            ));
+        }
+        for (target, key, ids) in &fetch_b[me] {
+            handles.push(comm.rget_blocks(
+                "mig/b",
+                *target,
+                *key,
+                TrafficClass::Redistribution,
+                ids.clone(),
+            ));
+        }
+        for h in handles {
+            let _ = h.wait();
+        }
+        comm.win_free("mig/a");
+        comm.win_free("mig/b");
+        let (wait_s, _) = comm.comm_time_totals();
+        (comm.stats(), comm.virtual_now(), wait_s)
+    });
+
+    let mut out = MigrationStats::default();
+    for (stats, now_s, wait_s) in results {
+        out.bytes += stats.requested_bytes(TrafficClass::Redistribution);
+        out.max_virtual_s = out.max_virtual_s.max(now_s);
+        out.wait_s += wait_s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::blocks::filter::FilterConfig;
+    use crate::blocks::layout::BlockLayout;
+    use crate::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+    use crate::workloads::generator::clustered;
+
+    fn chunked_row_map(nbrows: usize, pr: usize) -> Vec<usize> {
+        // contiguous chunks: the adversarial pre-state where physically
+        // clustered hot rows all land on one process row
+        (0..nbrows).map(|r| r * pr / nbrows).collect()
+    }
+
+    #[test]
+    fn work_model_matches_executed_flops() {
+        let l = BlockLayout::uniform(12, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.4, 5);
+        let b = BlockCsrMatrix::random(&l, &l, 0.4, 6);
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 7);
+        let cfg = MultiplyConfig {
+            engine: Engine::PointToPoint,
+            filter: FilterConfig::none(),
+            ..Default::default()
+        };
+        let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let got = report.mult_stats.flops;
+        let want = model.total_flops();
+        assert!(
+            (got - want).abs() <= 1e-6 * want.max(1.0),
+            "executed {got} vs modeled {want}"
+        );
+        // the rank histogram partitions the total
+        let loads = model.rank_loads(&dist);
+        let sum: f64 = loads.iter().sum();
+        assert!((sum - want).abs() <= 1e-6 * want.max(1.0));
+    }
+
+    #[test]
+    fn lpt_repairs_clustered_hot_rows() {
+        let l = BlockLayout::uniform(32, 2);
+        let a = clustered(&l, 0.3, 1.0, 11);
+        let b = clustered(&l, 0.3, 1.0, 12);
+        let grid = ProcGrid::new(4, 2).unwrap();
+        let v = grid.virtual_dim();
+        // adversarial pre-state: hot head rows clumped on process row 0
+        let dist = Distribution2d::from_maps(
+            grid,
+            chunked_row_map(32, 4),
+            (0..32).map(|k| k % v).collect(),
+            (0..32).map(|c| c % 2).collect(),
+        );
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let plan = plan_rebalance(&model, &dist, &a, &b);
+        assert!(plan.beneficial, "clumped hot rows must be repairable");
+        assert!(plan.pre_imbalance > 1.0);
+        assert!(plan.post_imbalance < plan.pre_imbalance);
+        assert!(plan.migration_bytes > 0);
+        // the applied distribution reproduces the plan's post histogram
+        let new_dist = plan.apply(grid);
+        let post = imbalance_ratio(&model.rank_loads(&new_dist));
+        assert!((post - plan.post_imbalance).abs() < 1e-12);
+        assert_eq!(new_dist.inner_map(), dist.inner_map(), "inner map pinned");
+    }
+
+    #[test]
+    fn guarded_accept_returns_identity_when_balanced() {
+        // dense uniform blocks on the modulo distribution: every rank
+        // already carries exactly the mean load, so LPT cannot improve
+        // and the plan must be the (free) identity.
+        let l = BlockLayout::uniform(8, 2);
+        let a = BlockCsrMatrix::random(&l, &l, 1.0, 21);
+        let b = BlockCsrMatrix::random(&l, &l, 1.0, 22);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::identity(8, 8, 8, grid);
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let pre = imbalance_ratio(&model.rank_loads(&dist));
+        assert!((pre - 1.0).abs() < 1e-12, "precondition: balanced ({pre})");
+        let plan = plan_rebalance(&model, &dist, &a, &b);
+        assert!(!plan.beneficial);
+        assert_eq!(plan.migration_bytes, 0);
+        assert_eq!(plan.row_map, dist.row_map());
+        assert_eq!(plan.col_map, dist.col_map());
+        assert_eq!(plan.pre_imbalance, plan.post_imbalance);
+    }
+
+    #[test]
+    fn migration_measures_exactly_the_planned_bytes() {
+        let l = BlockLayout::uniform(16, 3);
+        let a = clustered(&l, 0.35, 1.0, 31);
+        let b = clustered(&l, 0.35, 1.0, 32);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let v = grid.virtual_dim();
+        let dist = Distribution2d::from_maps(
+            grid,
+            chunked_row_map(16, 2),
+            (0..16).map(|k| k % v).collect(),
+            (0..16).map(|c| c % 2).collect(),
+        );
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let plan = plan_rebalance(&model, &dist, &a, &b);
+        let new_dist = plan.apply(grid);
+        let stats = execute_migration(&dist, &new_dist, &a, &b, FabricConfig::default());
+        assert_eq!(
+            stats.bytes, plan.migration_bytes,
+            "measured Redistribution bytes must equal the plan"
+        );
+        if plan.beneficial {
+            assert!(plan.migration_bytes > 0);
+            assert!(stats.max_virtual_s > 0.0);
+        }
+        // identity migration moves nothing
+        let none = execute_migration(&dist, &dist, &a, &b, FabricConfig::default());
+        assert_eq!(none.bytes, 0);
+    }
+
+    #[test]
+    fn saved_per_mult_follows_the_imbalance_gap() {
+        let l = BlockLayout::uniform(24, 2);
+        let a = clustered(&l, 0.3, 1.0, 41);
+        let b = clustered(&l, 0.3, 1.0, 42);
+        let grid = ProcGrid::new(4, 1).unwrap();
+        let dist = Distribution2d::from_maps(
+            grid,
+            chunked_row_map(24, 4),
+            (0..24).map(|k| k % grid.virtual_dim()).collect(),
+            vec![0; 24],
+        );
+        let model = WorkModel::from_matrices(&a, &b, -1.0);
+        let plan = plan_rebalance(&model, &dist, &a, &b);
+        assert!(plan.beneficial);
+        let saved = plan.saved_per_mult_s(&model, grid.size(), 50e9);
+        assert!(saved > 0.0);
+        // twice the flop rate halves the saving
+        let saved_fast = plan.saved_per_mult_s(&model, grid.size(), 100e9);
+        assert!((saved_fast - saved / 2.0).abs() < 1e-15 + saved * 1e-12);
+    }
+}

@@ -100,7 +100,14 @@ pub fn run_rank(
     let mut timers = Timers::new();
     let mut log = RankLog::new(EngineKind::Ptp);
     let mut mult_stats = LocalMultStats::default();
-    let mut c_acc = BlockAccumulator::new();
+    // Canonical C accumulation: one accumulator per inner virtual index,
+    // folded in ascending-vk order at the end.  A single accumulator
+    // would sum the ticks in schedule order — a rotation of [0, V)
+    // starting at (i + j) mod V — making C's bits depend on *which* rank
+    // owns each block; per-vk accumulation makes the result a pure
+    // function of the operands, so a rebalanced distribution reproduces
+    // C bitwise (see `dist/rebalance.rs`).
+    let mut c_accs: Vec<BlockAccumulator> = (0..v).map(|_| BlockAccumulator::new()).collect();
 
     // The eager path circulates the initial panel sets intact, so this
     // rank's eager receive volume is exactly `V` copies of its own
@@ -275,16 +282,23 @@ pub fn run_rank(
 
         // Local multiplication of the aligned panel pair (its virtual
         // compute time is what hides the in-flight shift).
-        let vk = cannon_vk(topo, i, j, t) as u64;
-        let (pa, pb) = (comp_a.get(&vk), comp_b.get(&vk));
+        let vk = cannon_vk(topo, i, j, t);
+        let (pa, pb) = (comp_a.get(&(vk as u64)), comp_b.get(&(vk as u64)));
         if let (Some(pa), Some(pb)) = (pa, pb) {
             let s = timers.time("cannon/local_multiply", || {
-                multiply_panels_stacked(pa, pb, eps, &mut c_acc, &exec)
+                multiply_panels_stacked(pa, pb, eps, &mut c_accs[vk], &exec)
                     .expect("native stack executor is infallible")
             });
             comm.advance_compute_flops(s.flops);
             mult_stats.merge(&s);
             log.ticks.last_mut().unwrap().flops += s.flops;
+        }
+    }
+    // Ascending-vk fold into the rank's C panel (the canonical order).
+    let mut c_acc = BlockAccumulator::new();
+    for acc in c_accs {
+        if !acc.is_empty() {
+            c_acc.add_panel(&acc.into_panel());
         }
     }
     // t == v-1 posts no shift, so nothing is left in flight after the

@@ -17,10 +17,17 @@
 //!   distribution, which persists across multiplications and is only
 //!   rebuilt when the planned grid actually changes;
 //! * [`MultSession::plan_seq`] schedules a *sequence* of
-//!   multiplications jointly: when two steps' individually-best grids
-//!   disagree, it looks for one common grid whose combined modeled time
-//!   stays within a small tolerance — per-step engine/thread switches
-//!   without redistribution.
+//!   multiplications jointly with amortized payback pricing: a step may
+//!   switch the sequence to a different grid only when the modeled
+//!   saving over all *remaining* steps exceeds the one-time
+//!   redistribution cost (both operands' per-rank shares migrating once
+//!   over the one-sided fabric) — so a redistribution is never
+//!   payback-negative;
+//! * with [`MultSession::with_rebalance`] it runs the flop-balanced
+//!   redistribution stage (`dist::rebalance`) before multiplying:
+//!   modeled per-rank flop histograms drive a greedy row/column-map
+//!   reassignment, executed as a real one-sided migration pass and
+//!   priced — in `Auto` mode — by the same amortized payback rule.
 //!
 //! The sign iteration (`sign::iteration::sign_iteration_session`) and
 //! the CLI's `--plan auto` modes run on top of this; the ablation
@@ -31,8 +38,12 @@ use std::sync::Arc;
 
 use crate::blocks::filter::FilterConfig;
 use crate::blocks::matrix::BlockCsrMatrix;
+use crate::comm::progress::FabricConfig;
 use crate::dist::distribution::Distribution2d;
 use crate::dist::grid::ProcGrid;
+use crate::dist::rebalance::{
+    execute_migration, plan_rebalance, RebalanceMode, RebalanceOutcome, WorkModel,
+};
 use crate::engines::multiply::{
     multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport, SymbolicMode,
 };
@@ -117,6 +128,9 @@ pub struct SessionRun {
     pub plan: Arc<Plan>,
     /// Whether the plan was a cache hit (no pricing ran).
     pub cached: bool,
+    /// What the rebalance stage did (`None` when the session runs with
+    /// [`RebalanceMode::Off`]).
+    pub rebalance: Option<RebalanceOutcome>,
 }
 
 /// Point-in-time snapshot of a session's bookkeeping — the `session`
@@ -140,8 +154,16 @@ pub struct SessionSummary {
     /// Consecutive sequence steps that shared a grid (no
     /// redistribution between them).
     pub grid_agreements: usize,
-    /// Distribution rebuilds after the first (grid or layout changed).
-    pub redistributions: usize,
+    /// Distribution rebuilds after the first because the *grid shape or
+    /// operand layouts* changed (random maps regenerated from scratch).
+    pub grid_redistributions: usize,
+    /// Distribution replacements by the rebalance stage: the grid kept
+    /// its shape, but the row/column maps migrated to the flop-balanced
+    /// assignment.
+    pub dist_redistributions: usize,
+    /// Bytes moved by rebalance migrations, summed over the session
+    /// (the Redistribution traffic rail's total).
+    pub rebalance_migrated_bytes: u64,
     /// Grow-only window-pool ledger.
     pub pool: WindowPoolStats,
 }
@@ -164,7 +186,9 @@ struct SessionCounters {
     multiplications: usize,
     seq_joint_plans: usize,
     grid_agreements: usize,
-    redistributions: usize,
+    grid_redistributions: usize,
+    dist_redistributions: usize,
+    rebalance_migrated_bytes: u64,
 }
 
 /// Pricing spec observed from a live operand pair: the row layout's
@@ -187,13 +211,8 @@ pub struct MultSession {
     cache: PlanCache,
     filter: FilterConfig,
     symbolic: SymbolicMode,
+    rebalance: RebalanceMode,
     seed: u64,
-    /// Per-step relative slack accepted on a common sequence grid: a
-    /// step may run up to this much over its individual optimum to keep
-    /// the sequence on one distribution (default 3% — together with the
-    /// planner's 1% tie window this keeps every executed step within
-    /// the 5% regret acceptance bound).
-    seq_grid_tolerance: f64,
     dist: Option<Distribution2d>,
     pool: WindowPoolStats,
     counters: SessionCounters,
@@ -208,8 +227,8 @@ impl MultSession {
             cache: PlanCache::default(),
             filter: FilterConfig::default(),
             symbolic: SymbolicMode::default(),
+            rebalance: RebalanceMode::default(),
             seed,
-            seq_grid_tolerance: 0.03,
             dist: None,
             pool: WindowPoolStats::default(),
             counters: SessionCounters::default(),
@@ -240,6 +259,23 @@ impl MultSession {
         self
     }
 
+    /// Builder: the flop-balanced redistribution stage's mode.  `On`
+    /// applies every beneficial plan, `Auto` additionally requires the
+    /// modeled amortized payback to beat the migration cost, `Off`
+    /// (default) is the paper's static-permutation baseline.  The stage
+    /// never alters numerics: both engines accumulate C canonically per
+    /// inner virtual index, so a rebalanced distribution reproduces C
+    /// bitwise.
+    pub fn with_rebalance(mut self, mode: RebalanceMode) -> Self {
+        self.rebalance = mode;
+        self
+    }
+
+    /// The session's current persistent distribution, if one was built.
+    pub fn distribution(&self) -> Option<&Distribution2d> {
+        self.dist.as_ref()
+    }
+
     /// The planner this session prices with.
     pub fn planner(&self) -> &Planner {
         &self.planner
@@ -267,7 +303,9 @@ impl MultSession {
             cache_entries: self.cache.len(),
             seq_joint_plans: self.counters.seq_joint_plans,
             grid_agreements: self.counters.grid_agreements,
-            redistributions: self.counters.redistributions,
+            grid_redistributions: self.counters.grid_redistributions,
+            dist_redistributions: self.counters.dist_redistributions,
+            rebalance_migrated_bytes: self.counters.rebalance_migrated_bytes,
             pool: self.pool.clone(),
         }
     }
@@ -301,18 +339,30 @@ impl MultSession {
         Ok((self.planned_cfg(&plan.choice), plan, hit))
     }
 
+    /// Modeled one-time cost of redistributing before a step of `spec`:
+    /// both operands' per-rank shares migrate once over the one-sided
+    /// fabric (the same α-β pricing every candidate's traffic uses).
+    fn redistribution_cost_s(&self, spec: &BenchSpec) -> f64 {
+        let p = self.planner.max_ranks.max(1) as f64;
+        let bytes = 2.0 * spec.matrix_bytes() / p;
+        self.planner.machine.net.rma_time(bytes.ceil() as usize)
+    }
+
     /// Jointly schedule a sequence of multiplications (one spec per
     /// step).  Each step's plan goes through the cache; when the
-    /// per-step choice grids disagree, the scheduler searches for one
-    /// grid feasible for *every* step on which each step's best
-    /// candidate stays within the session's per-step tolerance of that
-    /// step's individual optimum — that keeps the whole sequence on one
-    /// distribution while still allowing per-step engine/L/thread
-    /// switches.  If no such grid exists, the steps keep their own
-    /// grids and the session redistributes between them.  Each step's
-    /// reported plan carries the candidate actually selected for
-    /// execution as its `choice`, so provenance always matches the
-    /// executed configuration.
+    /// per-step choice grids disagree, a forward greedy pass with
+    /// *amortized payback lookahead* decides where the sequence
+    /// switches distribution: at a step whose own best grid differs
+    /// from the current one, the modeled saving of switching — summed
+    /// over ALL remaining steps (a step infeasible on the current grid
+    /// counts as an infinite, i.e. forced, saving) — is compared
+    /// against the one-time redistribution cost
+    /// ([`Self::redistribution_cost_s`]); the switch happens only when
+    /// the payback is positive, so the schedule never contains a
+    /// payback-negative redistribution.  Each step's reported plan
+    /// carries the candidate actually selected for execution as its
+    /// `choice`, so provenance always matches the executed
+    /// configuration.
     pub fn plan_seq(&mut self, specs: &[BenchSpec]) -> Result<SeqPlan, PlanError> {
         assert!(!specs.is_empty(), "plan_seq needs at least one step");
         let mut fetched: Vec<(Arc<Plan>, bool)> = Vec::with_capacity(specs.len());
@@ -323,93 +373,91 @@ impl MultSession {
 
         let first_grid = fetched[0].0.choice.grid;
         let all_agree = fetched.iter().all(|(p, _)| p.choice.grid == first_grid);
-        let own_choices = |session: &Self| -> Vec<SeqStep> {
+        let steps: Vec<SeqStep> = if all_agree {
             fetched
                 .iter()
                 .map(|(p, hit)| SeqStep {
-                    cfg: session.planned_cfg(&p.choice),
+                    cfg: self.planned_cfg(&p.choice),
                     grid: p.choice.grid,
                     plan: p.clone(),
                     cached: *hit,
                 })
                 .collect()
-        };
-        let steps: Vec<SeqStep> = if all_agree {
-            own_choices(&*self)
         } else {
-            // Common-grid search over the already priced candidate
-            // lists (no re-pricing): a grid qualifies when every step
-            // has a feasible candidate on it within the per-step
-            // tolerance of that step's own optimum; among qualifying
-            // grids, minimize the summed modeled time.
-            let mut grids: Vec<ProcGrid> = fetched[0]
-                .0
-                .candidates
-                .iter()
-                .filter(|c| c.feasible)
-                .map(|c| c.grid)
-                .collect();
-            grids.sort_by_key(|g| (g.rows(), g.cols()));
-            grids.dedup();
-            let mut best_total = f64::INFINITY;
-            let mut best_grid: Option<ProcGrid> = None;
-            for g in grids {
-                let mut total = 0.0;
-                let mut ok = true;
-                for (p, _) in &fetched {
-                    match p.best_feasible_on_grid(g) {
-                        Some(c)
-                            if c.modeled.total_s
-                                <= p.choice.modeled.total_s
-                                    * (1.0 + self.seq_grid_tolerance) =>
-                        {
-                            total += c.modeled.total_s;
+            // Forward greedy with payback lookahead over the already
+            // priced candidate lists (no re-pricing).
+            let n = fetched.len();
+            let mut grids: Vec<ProcGrid> = Vec::with_capacity(n);
+            let mut cur = first_grid;
+            for t in 0..n {
+                let own = fetched[t].0.choice.grid;
+                if own != cur {
+                    if fetched[t].0.best_feasible_on_grid(cur).is_none() {
+                        // no feasible candidate on the current grid:
+                        // the switch is forced (infinite payback)
+                        cur = own;
+                    } else {
+                        let mut saved = 0.0;
+                        let mut switch_possible = true;
+                        for (p, _) in &fetched[t..] {
+                            match (p.best_feasible_on_grid(cur), p.best_feasible_on_grid(own)) {
+                                (Some(c_cur), Some(c_own)) => {
+                                    saved += c_cur.modeled.total_s - c_own.modeled.total_s;
+                                }
+                                (None, Some(_)) => {
+                                    // staying would force a later switch
+                                    // anyway: count it as infinite saving
+                                    saved = f64::INFINITY;
+                                    break;
+                                }
+                                (_, None) => {
+                                    switch_possible = false;
+                                    break;
+                                }
+                            }
                         }
-                        _ => {
-                            ok = false;
-                            break;
+                        if switch_possible && saved > self.redistribution_cost_s(&specs[t]) {
+                            cur = own;
                         }
                     }
                 }
-                if ok && total < best_total {
-                    best_total = total;
-                    best_grid = Some(g);
-                }
+                grids.push(cur);
             }
-            match best_grid {
-                Some(g) => fetched
-                    .iter()
-                    .map(|(p, hit)| {
-                        let c = p
-                            .best_feasible_on_grid(g)
-                            .expect("qualifying grid is feasible for every step")
-                            .clone();
-                        // Re-anchor the reported plan on the candidate
-                        // that will actually execute (share the plan
-                        // unchanged when it already is the choice).
-                        let unchanged = c.engine == p.choice.engine
-                            && c.grid == p.choice.grid
-                            && c.threads == p.choice.threads;
-                        let plan = if unchanged {
-                            p.clone()
-                        } else {
-                            Arc::new(Plan {
-                                choice: c.clone(),
-                                candidates: p.candidates.clone(),
-                                spec_name: p.spec_name.clone(),
-                                spec_occupancy: p.spec_occupancy,
-                            })
-                        };
-                        SeqStep {
-                            cfg: self.planned_cfg(&c),
-                            grid: g,
-                            plan,
-                            cached: *hit,
-                        }
-                    })
-                    .collect(),
-                None => own_choices(&*self),
-            }
+            fetched
+                .iter()
+                .zip(&grids)
+                .map(|((p, hit), &g)| {
+                    // The step's executed candidate on its scheduled
+                    // grid (the grid was chosen so this exists; fall
+                    // back to the step's own choice defensively).
+                    let (c, grid) = match p.best_feasible_on_grid(g) {
+                        Some(c) => (c.clone(), g),
+                        None => (p.choice.clone(), p.choice.grid),
+                    };
+                    // Re-anchor the reported plan on the candidate that
+                    // will actually execute (share the plan unchanged
+                    // when it already is the choice).
+                    let unchanged = c.engine == p.choice.engine
+                        && c.grid == p.choice.grid
+                        && c.threads == p.choice.threads;
+                    let plan = if unchanged {
+                        p.clone()
+                    } else {
+                        Arc::new(Plan {
+                            choice: c.clone(),
+                            candidates: p.candidates.clone(),
+                            spec_name: p.spec_name.clone(),
+                            spec_occupancy: p.spec_occupancy,
+                        })
+                    };
+                    SeqStep {
+                        cfg: self.planned_cfg(&c),
+                        grid,
+                        plan,
+                        cached: *hit,
+                    }
+                })
+                .collect()
         };
         let agreements = steps
             .windows(2)
@@ -433,14 +481,79 @@ impl MultSession {
         });
         if !fits {
             if self.dist.is_some() {
-                self.counters.redistributions += 1;
+                self.counters.grid_redistributions += 1;
             }
             self.dist = Some(Distribution2d::new_random(nbr, nbi, nbc, grid, self.seed));
         }
     }
 
+    /// Run the rebalance stage against the current distribution: model
+    /// the flop histogram, plan the greedy reassignment, and — when the
+    /// mode accepts it — execute the migration pass and replace the
+    /// distribution.  `amortize_over` is the number of multiplications
+    /// the migration's cost is amortized across (`Auto`'s payback
+    /// horizon: the spec's `n_mults`, or the remaining steps of a
+    /// jointly planned sequence).
+    fn maybe_rebalance(
+        &mut self,
+        cfg: &MultiplyConfig,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        amortize_over: usize,
+    ) -> Option<RebalanceOutcome> {
+        if self.rebalance == RebalanceMode::Off {
+            return None;
+        }
+        let dist = self.dist.as_ref().expect("ensure_dist ran first");
+        let grid = dist.grid;
+        let model = WorkModel::from_matrices(a, b, cfg.filter.on_the_fly_eps);
+        let plan = plan_rebalance(&model, dist, a, b);
+        let machine = cfg.machine.unwrap_or(self.planner.machine);
+        let apply = plan.beneficial
+            && match self.rebalance {
+                RebalanceMode::On => true,
+                RebalanceMode::Auto => {
+                    let saved = plan.saved_per_mult_s(&model, grid.size(), machine.flop_rate)
+                        * amortize_over.max(1) as f64;
+                    let per_rank = (plan.migration_bytes as f64 / grid.size() as f64).ceil();
+                    saved > machine.net.rma_time(per_rank as usize)
+                }
+                RebalanceMode::Off => unreachable!("handled above"),
+            };
+        if !apply {
+            return Some(RebalanceOutcome {
+                applied: false,
+                pre_imbalance: plan.pre_imbalance,
+                post_imbalance: plan.pre_imbalance,
+                planned_migration_bytes: plan.migration_bytes,
+                migrated_bytes: 0,
+                migration_s: 0.0,
+            });
+        }
+        let new_dist = plan.apply(grid);
+        let fabric = FabricConfig {
+            net: machine.net,
+            flop_rate: machine.flop_rate,
+            ..Default::default()
+        };
+        let stats = execute_migration(dist, &new_dist, a, b, fabric);
+        debug_assert_eq!(stats.bytes, plan.migration_bytes, "block-exact pricing");
+        self.dist = Some(new_dist);
+        self.counters.dist_redistributions += 1;
+        self.counters.rebalance_migrated_bytes += stats.bytes;
+        Some(RebalanceOutcome {
+            applied: true,
+            pre_imbalance: plan.pre_imbalance,
+            post_imbalance: plan.post_imbalance,
+            planned_migration_bytes: plan.migration_bytes,
+            migrated_bytes: stats.bytes,
+            migration_s: stats.max_virtual_s,
+        })
+    }
+
     /// Execute one multiplication on `grid` under `cfg`, maintaining
-    /// the distribution and the window-pool ledger.
+    /// the distribution, the rebalance stage and the window-pool
+    /// ledger.
     fn run_one(
         &mut self,
         cfg: &MultiplyConfig,
@@ -448,8 +561,10 @@ impl MultSession {
         a: &BlockCsrMatrix,
         b: &BlockCsrMatrix,
         c0: Option<&BlockCsrMatrix>,
-    ) -> Result<MultiplyReport, MultiplyError> {
+        amortize_over: usize,
+    ) -> Result<(MultiplyReport, Option<RebalanceOutcome>), MultiplyError> {
         self.ensure_dist(a, b, grid);
+        let rebalance = self.maybe_rebalance(cfg, a, b, amortize_over);
         let dist = self.dist.as_ref().expect("ensure_dist just built it");
         let report = multiply_distributed(a, b, c0, dist, cfg)?;
         let needed: u64 = report
@@ -460,7 +575,7 @@ impl MultSession {
             .unwrap_or(0);
         self.pool.record(needed);
         self.counters.multiplications += 1;
-        Ok(report)
+        Ok((report, rebalance))
     }
 
     /// Planned `C = C + A·B` priced for an explicit `spec` (the CLI's
@@ -474,12 +589,14 @@ impl MultSession {
         c0: Option<&BlockCsrMatrix>,
     ) -> Result<SessionRun, MultiplyError> {
         let (cfg, plan, cached) = self.plan_spec(spec)?;
-        let report = self.run_one(&cfg, plan.choice.grid, a, b, c0)?;
+        let (report, rebalance) =
+            self.run_one(&cfg, plan.choice.grid, a, b, c0, spec.n_mults)?;
         Ok(SessionRun {
             report,
             cfg,
             plan,
             cached,
+            rebalance,
         })
     }
 
@@ -505,12 +622,15 @@ impl MultSession {
         c0: Option<&BlockCsrMatrix>,
     ) -> Result<SessionRun, MultiplyError> {
         let s = &seq.steps[step];
-        let report = self.run_one(&s.cfg, s.grid, a, b, c0)?;
+        // Auto-mode payback amortizes over the steps still ahead.
+        let remaining = seq.steps.len() - step;
+        let (report, rebalance) = self.run_one(&s.cfg, s.grid, a, b, c0, remaining)?;
         Ok(SessionRun {
             report,
             cfg: s.cfg,
             plan: s.plan.clone(),
             cached: s.cached,
+            rebalance,
         })
     }
 
@@ -547,7 +667,7 @@ impl MultSession {
         b: &BlockCsrMatrix,
         c0: Option<&BlockCsrMatrix>,
     ) -> Result<MultiplyReport, MultiplyError> {
-        self.run_one(cfg, grid, a, b, c0)
+        self.run_one(cfg, grid, a, b, c0, 1).map(|(report, _)| report)
     }
 }
 
@@ -629,7 +749,8 @@ mod tests {
         assert_eq!(sum.multiplications, 2);
         assert_eq!(sum.plans_priced, 1);
         assert_eq!(sum.plans_reused, 1);
-        assert_eq!(sum.redistributions, 0, "same grid must keep the dist");
+        assert_eq!(sum.grid_redistributions, 0, "same grid must keep the dist");
+        assert_eq!(sum.dist_redistributions, 0, "rebalance is off by default");
     }
 
     #[test]
@@ -649,7 +770,7 @@ mod tests {
         assert_eq!(sum.seq_joint_plans, 1);
         // equal-occupancy pairs share a signature, a plan and a grid
         assert_eq!(sum.grid_agreements, 1);
-        assert_eq!(sum.redistributions, 0);
+        assert_eq!(sum.grid_redistributions, 0);
         assert_eq!(sum.plans_priced, 1);
         assert_eq!(sum.plans_reused, 1);
     }
@@ -671,6 +792,75 @@ mod tests {
         let sum = s.summary();
         assert_eq!(sum.multiplications, 2);
         assert_eq!(sum.plans_priced, 2, "distinct occupancy buckets price twice");
+    }
+
+    #[test]
+    fn grid_redistribution_counts_layout_changes() {
+        // Distribution rebuilds from a layout change hit the *grid*
+        // counter; the rebalance (dist) counter stays untouched when
+        // the stage is off.
+        let l1 = BlockLayout::uniform(12, 3);
+        let l2 = BlockLayout::uniform(16, 3);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let cfg = fixed_cfg(Engine::PointToPoint);
+        let mut s = MultSession::new(planner(4), 23);
+        let a1 = BlockCsrMatrix::random(&l1, &l1, 0.4, 24);
+        let a2 = BlockCsrMatrix::random(&l2, &l2, 0.4, 25);
+        s.multiply_with(&cfg, grid, &a1, &a1, None).unwrap();
+        s.multiply_with(&cfg, grid, &a2, &a2, None).unwrap();
+        let sum = s.summary();
+        assert_eq!(sum.grid_redistributions, 1, "layout change rebuilds");
+        assert_eq!(sum.dist_redistributions, 0);
+        assert_eq!(sum.rebalance_migrated_bytes, 0);
+    }
+
+    #[test]
+    fn rebalance_on_is_bitwise_identical_and_counts() {
+        use crate::dist::rebalance::{plan_rebalance, WorkModel};
+        use crate::workloads::generator::clustered;
+
+        let l = BlockLayout::uniform(16, 2);
+        let a = clustered(&l, 0.3, 1.0, 51);
+        let b = clustered(&l, 0.3, 1.0, 52);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let cfg = fixed_cfg(engine);
+            let mut off = MultSession::new(planner(4), 33);
+            let r_off = off.multiply_with(&cfg, grid, &a, &b, None).unwrap();
+            let mut on = MultSession::new(planner(4), 33).with_rebalance(RebalanceMode::On);
+            let r_on = on.multiply_with(&cfg, grid, &a, &b, None).unwrap();
+            let diff = r_on.c.to_dense().max_abs_diff(&r_off.c.to_dense());
+            assert_eq!(diff, 0.0, "rebalanced C must be bitwise identical");
+            // reconstruct the session's pre-rebalance distribution and
+            // check the counters against the stage's own plan
+            let dist0 = Distribution2d::new_random(16, 16, 16, grid, 33);
+            let model = WorkModel::from_matrices(&a, &b, cfg.filter.on_the_fly_eps);
+            let plan = plan_rebalance(&model, &dist0, &a, &b);
+            let sum = on.summary();
+            assert_eq!(sum.grid_redistributions, 0);
+            assert_eq!(sum.dist_redistributions, plan.beneficial as usize);
+            let expect_bytes = if plan.beneficial { plan.migration_bytes } else { 0 };
+            assert_eq!(sum.rebalance_migrated_bytes, expect_bytes);
+        }
+    }
+
+    #[test]
+    fn auto_rebalance_declines_on_uniform_workload() {
+        // A uniform workload has (almost) nothing to pay back, while
+        // rewriting the maps would migrate most blocks: the payback
+        // rule must decline, and the decline must cost nothing.
+        let l = BlockLayout::uniform(12, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.4, 61);
+        let b = BlockCsrMatrix::random(&l, &l, 0.4, 62);
+        let mut s = MultSession::new(planner(4), 63).with_rebalance(RebalanceMode::Auto);
+        let run = s.multiply(&a, &b, None).unwrap();
+        let out = run.rebalance.expect("auto mode reports an outcome");
+        assert!(!out.applied, "uniform workload must not pay a migration");
+        assert_eq!(out.migrated_bytes, 0);
+        assert_eq!(out.post_imbalance, out.pre_imbalance);
+        let sum = s.summary();
+        assert_eq!(sum.dist_redistributions, 0);
+        assert_eq!(sum.rebalance_migrated_bytes, 0);
     }
 
     #[test]

@@ -434,6 +434,9 @@ pub fn multiply_distributed(
     for (acc, ms, timers, log, stats, peaks, sym) in results {
         let panel = acc.into_panel();
         global.add_panel(&panel);
+        // results are in rank order (world joins handles in spawn
+        // order), so the per-rank flop histogram indexes by rank
+        mult_stats.rank_flops.push(ms.flops);
         mult_stats.merge(&ms);
         per_rank_stats.push(stats);
         per_rank_logs.push(log);

@@ -126,12 +126,19 @@ pub fn run_rank(
     });
     let _max_pool = comm.iallreduce_wait(size_check);
 
-    // L partial C accumulators: index (a, b) -> C panel (m(a), n(b)).
-    let mut partials: Vec<BlockAccumulator> =
-        (0..topo.l).map(|_| BlockAccumulator::new()).collect();
     let rows = topo.c_panel_rows(i);
     let cols = topo.c_panel_cols(j);
     let nticks = topo.nticks();
+    // L partial C accumulators: index (a, b) -> C panel (m(a), n(b)),
+    // kept **per tick** (all of a tick's products share one inner
+    // virtual index `vk`, see `engines::schedule`).  The home rank folds
+    // every (vk, partial) pair — its own and the shipped ones — in
+    // ascending-vk order, so C's accumulation order is independent of
+    // which ranks computed which arc: the canonical order that makes a
+    // rebalanced distribution reproduce C bitwise (`dist/rebalance.rs`).
+    let mut partials: Vec<Vec<BlockAccumulator>> = (0..topo.l)
+        .map(|_| (0..nticks).map(|_| BlockAccumulator::new()).collect())
+        .collect();
 
     // The tick's L products, A-index fastest (Algorithm 2 sub-steps);
     // identical for every tick.
@@ -278,7 +285,7 @@ pub fn run_rank(
             let idx = b * topo.l_r + a;
             let pb = &cur_b.as_ref().unwrap().1;
             let s = timers.time("osl/local_multiply", || {
-                multiply_panels_stacked(&a_bufs[a], pb, eps, &mut partials[idx], &exec)
+                multiply_panels_stacked(&a_bufs[a], pb, eps, &mut partials[idx][big_t], &exec)
                     .expect("native stack executor is infallible")
             });
             comm.advance_compute_flops(s.flops);
@@ -290,30 +297,37 @@ pub fn run_rank(
                 // The Eq. 6 maximum occurs inside the last tick: every
                 // partial is at (or near) full size and they leave one
                 // by one as they ship — sample before each departure.
-                let partial_bytes: u64 = partials.iter().map(acc_bytes).sum();
+                let partial_bytes: u64 =
+                    partials.iter().flatten().map(acc_bytes).sum();
                 let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
                 peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
                 peak_buffer_bytes = peak_buffer_bytes.max(live);
             }
             if last_tick && topo.l > 1 && idx != my_partial_idx {
                 // This product was the partial's last contribution: ship
-                // it to its 2D owner overlapped with the rest of the
-                // tick (the paper's overlapped C reduction).
-                let acc = std::mem::take(&mut partials[idx]);
-                let panel = acc.into_panel();
-                log.c_bytes += panel.wire_bytes() as u64;
+                // its per-tick arc — keyed by each tick's `vk` so the
+                // home rank can fold canonically — to its 2D owner,
+                // overlapped with the rest of the tick (the paper's
+                // overlapped C reduction).
+                let set: Vec<(u64, Panel)> = std::mem::take(&mut partials[idx])
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(_, acc)| !acc.is_empty())
+                    .map(|(t, acc)| (osl_vk(topo, i, j, t) as u64, acc.into_panel()))
+                    .collect();
+                log.c_bytes += set.iter().map(|(_, p)| 8 + p.wire_bytes() as u64).sum::<u64>();
                 log.c_msgs += 1;
                 send_reqs.push(comm.isend(
                     grid.rank(m, n),
                     TAG_C | ((i * grid.cols() + j) as u64),
                     TrafficClass::MatrixC,
-                    Payload::Panel(panel),
+                    Payload::PanelSet(set),
                 ));
             }
         }
 
         // Eq. 6 series: live fetch buffers (held + in flight) + partials.
-        let partial_bytes: u64 = partials.iter().map(acc_bytes).sum();
+        let partial_bytes: u64 = partials.iter().flatten().map(acc_bytes).sum();
         let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
         peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
         peak_buffer_bytes = peak_buffer_bytes.max(live);
@@ -330,20 +344,34 @@ pub fn run_rank(
 
     // --- C reduction tail ---------------------------------------------
     // The sends left from inside the last tick; only the receives that
-    // did not fully overlap it remain to be paid for here.
-    let mut c_acc = std::mem::take(&mut partials[my_partial_idx]);
+    // did not fully overlap it remain to be paid for here.  All (vk,
+    // partial) pairs of this rank's C panel — its own ticks plus the
+    // received arcs, which together tile [0, V) — fold in ascending-vk
+    // order: the canonical accumulation order.
     debug_assert_eq!(
         (rows[my_partial_idx % topo.l_r], cols[my_partial_idx / topo.l_r]),
         (i, j)
     );
+    let mut pairs: Vec<(u64, Panel)> = std::mem::take(&mut partials[my_partial_idx])
+        .into_iter()
+        .enumerate()
+        .filter(|(_, acc)| !acc.is_empty())
+        .map(|(t, acc)| (osl_vk(topo, i, j, t) as u64, acc.into_panel()))
+        .collect();
     timers.time("osl/c_reduce", || {
         for req in recv_reqs.drain(..) {
-            let panel = comm.wait(req).unwrap().into_panel();
-            log.c_accum_elems += panel.data.len() as u64;
-            c_acc.add_panel(&panel);
+            for (vk, panel) in comm.wait(req).unwrap().into_panel_set() {
+                log.c_accum_elems += panel.data.len() as u64;
+                pairs.push((vk, panel));
+            }
         }
         let _ = comm.wait_all(send_reqs);
     });
+    pairs.sort_by_key(|&(vk, _)| vk);
+    let mut c_acc = BlockAccumulator::new();
+    for (_, panel) in &pairs {
+        c_acc.add_panel(panel);
+    }
     log.c_wait_s = comm.take_wait_epoch();
 
     timers.time("osl/win_free", || {

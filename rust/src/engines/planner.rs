@@ -46,7 +46,8 @@ use crate::dist::topology25d::Topology25d;
 use crate::engines::multiply::Engine;
 use crate::perfmodel::machine::MachineModel;
 use crate::perfmodel::replay::{
-    build_rank_log, build_rank_log_symbolic, modeled_peak_memory, paper_l_values, ReplayConfig,
+    build_rank_log, build_rank_log_symbolic, modeled_peak_memory, paper_l_values, scale_log_flops,
+    ReplayConfig,
 };
 use crate::perfmodel::virtual_time::{model_rank_time, ModeledTime};
 use crate::util::json::Json;
@@ -242,6 +243,16 @@ pub struct Planner {
     /// will run with the pass on, so predicted and executed traffic
     /// agree.
     pub symbolic_traffic: bool,
+    /// Max/mean flop-imbalance ratio the executed distribution carries
+    /// (`1.0` = balanced).  The replay logs model the *mean* rank;
+    /// scaling their compute by this ratio prices the critical rank,
+    /// so candidates are ranked under the distribution that will
+    /// actually run — rebalanced or not (see `Planner::with_rebalance`).
+    pub flop_imbalance: f64,
+    /// One-time migration volume (bytes, whole world) of the rebalance
+    /// stage that produced `flop_imbalance`, charged up front and
+    /// amortized over the spec's `n_mults` when pricing candidates.
+    pub rebalance_migration_bytes: u64,
 }
 
 /// Aspect ratio (long/short side) of the squarest grid above which a
@@ -270,6 +281,8 @@ impl Planner {
             thread_candidates: vec![1, 2, 4, 8],
             tie_epsilon: 0.01,
             symbolic_traffic: false,
+            flop_imbalance: 1.0,
+            rebalance_migration_bytes: 0,
         }
     }
 
@@ -290,6 +303,25 @@ impl Planner {
     pub fn with_thread_candidates(mut self, threads: Vec<usize>) -> Self {
         assert!(!threads.is_empty(), "thread sweep must be non-empty");
         self.thread_candidates = threads;
+        self
+    }
+
+    /// Builder: price candidates under the rebalance stage's outcome —
+    /// the executed distribution's max/mean flop imbalance (critical
+    /// rank compute = `flop_imbalance ×` the mean rank the replay logs
+    /// model) plus the stage's one-time `migration_bytes`, charged as
+    /// amortized per-multiplication communication.  Pass the *post*
+    /// imbalance with the migration volume to price a rebalanced run,
+    /// or the *pre* imbalance with zero bytes to price the baseline;
+    /// the difference between the two plans is the stage's modeled
+    /// payback.
+    pub fn with_rebalance(mut self, flop_imbalance: f64, migration_bytes: u64) -> Self {
+        assert!(
+            flop_imbalance >= 1.0,
+            "flop imbalance is max/mean, got {flop_imbalance}"
+        );
+        self.flop_imbalance = flop_imbalance;
+        self.rebalance_migration_bytes = migration_bytes;
         self
     }
 
@@ -334,10 +366,24 @@ impl Planner {
                         engine,
                         no_dmapp: false,
                     };
-                    let log = if self.symbolic_traffic {
+                    let mut log = if self.symbolic_traffic {
                         build_rank_log_symbolic(&cfg)
                     } else {
                         build_rank_log(&cfg)
+                    };
+                    if self.flop_imbalance > 1.0 {
+                        scale_log_flops(&mut log, self.flop_imbalance);
+                    }
+                    // The migration is one transfer per multiplication
+                    // sequence; amortize its per-rank share over the
+                    // spec's n_mults as unhideable communication.
+                    let migration_s = if self.rebalance_migration_bytes > 0 {
+                        let per_rank =
+                            self.rebalance_migration_bytes as f64 / grid.size() as f64;
+                        self.machine.net.rma_time(per_rank.ceil() as usize)
+                            / spec.n_mults.max(1) as f64
+                    } else {
+                        0.0
                     };
                     let mem = modeled_peak_memory(&cfg);
                     // All enumerated L values are topology-valid, so the
@@ -346,13 +392,16 @@ impl Planner {
                     let l = Topology25d::new_or_fallback(grid, engine.l()).l;
                     for &threads in &self.thread_candidates {
                         let machine = self.machine.with_threads(threads);
+                        let mut modeled = model_rank_time(&log, &machine);
+                        modeled.comm_s += migration_s;
+                        modeled.total_s += migration_s;
                         out.push(CandidatePlan {
                             engine,
                             grid,
                             l,
                             threads,
                             idle_ranks,
-                            modeled: model_rank_time(&log, &machine),
+                            modeled,
                             peak_mem_bytes: mem,
                             feasible: mem <= self.mem_cap_bytes,
                         });
@@ -649,6 +698,38 @@ mod tests {
             .any(|c| c.grid.rows() == 6 && c.grid.cols() == 6 && c.l > 1));
         // threads sweep is priced for each engine/grid pair
         assert_eq!(cands.len() % planner.thread_candidates.len(), 0);
+    }
+
+    #[test]
+    fn rebalance_pricing_scales_candidates() {
+        let spec = BenchSpec::observed("reb", 24, 4, 0.4);
+        let base = Planner::new(compute_dominated_machine(), 16);
+        let balanced = base.clone().plan(&spec).unwrap().best_feasible_s();
+        // a 2x imbalance on a compute-dominated machine roughly doubles
+        // every candidate, and strictly worsens all of them
+        let skewed = base
+            .clone()
+            .with_rebalance(2.0, 0)
+            .plan(&spec)
+            .unwrap()
+            .best_feasible_s();
+        assert!(
+            skewed > balanced * 1.5,
+            "imbalance 2.0 must slow the best plan: {skewed} vs {balanced}"
+        );
+        // migration bytes are charged as amortized communication
+        let migrated = base
+            .with_rebalance(1.0, 1 << 30)
+            .plan(&spec)
+            .unwrap()
+            .best_feasible_s();
+        assert!(
+            migrated > balanced,
+            "migration cost must surface: {migrated} vs {balanced}"
+        );
+        // a rebalanced plan (post-imbalance 1.0 + migration) must beat
+        // the skewed baseline whenever the payback is real
+        assert!(migrated < skewed, "amortized migration beats 2x skew here");
     }
 
     #[test]

@@ -115,6 +115,9 @@ pub mod prelude {
     pub use crate::blocks::matrix::BlockCsrMatrix;
     pub use crate::dist::distribution::Distribution2d;
     pub use crate::dist::grid::ProcGrid;
+    pub use crate::dist::rebalance::{
+        plan_rebalance, RebalanceMode, RebalanceOutcome, RebalancePlan, WorkModel,
+    };
     pub use crate::dist::topology25d::Topology25d;
     pub use crate::engines::context::{
         MultSession, SeqPlan, SessionRun, SessionSummary, WindowPoolStats,

@@ -54,6 +54,11 @@ pub struct LocalMultStats {
     /// Executed-flop histogram per block-product dims, sorted by
     /// `(bm, bk, bn)`.
     pub by_dims: Vec<DimsFlops>,
+    /// Per-rank executed flops, in rank order — populated by the
+    /// distributed driver (one entry per rank); empty on single-rank
+    /// local runs.  The basis of the load-imbalance observability in
+    /// reports and of the rebalance stage's before/after accounting.
+    pub rank_flops: Vec<f64>,
 }
 
 impl LocalMultStats {
@@ -66,6 +71,20 @@ impl LocalMultStats {
         for d in &other.by_dims {
             self.record_dims(d.bm, d.bk, d.bn, d.products, d.flops);
         }
+        self.rank_flops.extend_from_slice(&other.rank_flops);
+    }
+
+    /// Max/mean ratio of the per-rank executed flops (1.0 = perfectly
+    /// balanced; also 1.0 when the histogram is absent or all-zero).
+    pub fn flop_imbalance(&self) -> f64 {
+        if self.rank_flops.is_empty() {
+            return 1.0;
+        }
+        let mean = self.rank_flops.iter().sum::<f64>() / self.rank_flops.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        self.rank_flops.iter().cloned().fold(0.0, f64::max) / mean
     }
 
     /// Fold `products` executed products of shape `bm×bk×bn` into the
@@ -398,6 +417,21 @@ mod tests {
         let tasks = assemble_tasks(&Panel::new(), &Panel::new(), -1.0, &mut s);
         assert!(tasks.is_empty());
         assert_eq!(s, LocalMultStats::default());
+    }
+
+    #[test]
+    fn flop_imbalance_is_max_over_mean() {
+        let mut s = LocalMultStats::default();
+        assert_eq!(s.flop_imbalance(), 1.0, "no histogram → balanced");
+        s.rank_flops = vec![0.0, 0.0];
+        assert_eq!(s.flop_imbalance(), 1.0, "all-zero → balanced");
+        s.rank_flops = vec![1.0, 1.0, 4.0, 2.0];
+        assert!((s.flop_imbalance() - 2.0).abs() < 1e-12);
+        // merging concatenates histograms in order
+        let mut other = LocalMultStats::default();
+        other.rank_flops = vec![8.0];
+        s.merge(&other);
+        assert_eq!(s.rank_flops, vec![1.0, 1.0, 4.0, 2.0, 8.0]);
     }
 
     #[test]

@@ -14,6 +14,9 @@
 use dbcsr::blocks::filter::FilterConfig;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::rebalance::{
+    execute_migration, plan_rebalance, RebalanceMode, RebalanceOutcome, WorkModel,
+};
 use dbcsr::engines::context::MultSession;
 use dbcsr::engines::multiply::{
     multiply_distributed, multiply_oracle, Engine, MultiplyConfig, MultiplyError, SymbolicMode,
@@ -93,6 +96,18 @@ fn parse_symbolic(s: &str) -> SymbolicMode {
     }
 }
 
+fn parse_rebalance(s: &str) -> RebalanceMode {
+    match s {
+        "on" => RebalanceMode::On,
+        "off" => RebalanceMode::Off,
+        "auto" => RebalanceMode::Auto,
+        _ => {
+            eprintln!("unknown rebalance mode '{s}' (use on|off|auto)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn parse_grid(s: &str) -> ProcGrid {
     let (a, b) = s.split_once('x').expect("grid must be PRxPC");
     ProcGrid::new(a.parse().unwrap(), b.parse().unwrap()).unwrap()
@@ -108,6 +123,7 @@ fn cmd_multiply() -> i32 {
         .opt("mem-cap-gb", "inf", "planner Eq. 6 memory cap per rank, GB (auto mode)")
         .opt("eps", "-1", "filter threshold (<0 = off)")
         .opt("symbolic", "auto", "symbolic structure pass: on|off|auto")
+        .opt("rebalance", "off", "flop-balanced redistribution stage: on|off|auto")
         .opt("seed", "42", "rng seed")
         .opt("threads", "1", "intra-rank worker threads (manual mode)")
         .flag("verify", "compare against the dense oracle")
@@ -129,17 +145,19 @@ fn cmd_multiply() -> i32 {
     let filter = FilterConfig::uniform(args.get_as("eps"));
 
     let symbolic = parse_symbolic(args.get("symbolic"));
+    let rebalance = parse_rebalance(args.get("rebalance"));
 
     let a = random_for_spec(&spec, seed);
     let b = random_for_spec(&spec, seed ^ 0xBEEF);
-    let (report, cfg, grid, plan, session) = match args.get("plan") {
+    let (report, cfg, grid, plan, session, reb_out) = match args.get("plan") {
         "auto" => {
             let budget = parse_grid(args.get("grid")).size();
             let cap_gb: f64 = args.get_as("mem-cap-gb");
             let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
             let mut session = MultSession::new(planner, seed ^ 0xD157)
                 .with_filter(filter)
-                .with_symbolic(symbolic);
+                .with_symbolic(symbolic)
+                .with_rebalance(rebalance);
             let run = match session.multiply_spec(&spec, &a, &b, None) {
                 Ok(run) => run,
                 Err(MultiplyError::Plan(e)) => {
@@ -153,7 +171,14 @@ fn cmd_multiply() -> i32 {
             };
             print!("{}", run.plan.render(8));
             let grid = run.plan.choice.grid;
-            (run.report, run.cfg, grid, Some(run.plan), Some(session.summary()))
+            (
+                run.report,
+                run.cfg,
+                grid,
+                Some(run.plan),
+                Some(session.summary()),
+                run.rebalance,
+            )
         }
         "manual" => {
             let cfg = MultiplyConfig {
@@ -166,9 +191,57 @@ fn cmd_multiply() -> i32 {
             };
             let grid = parse_grid(args.get("grid"));
             let layout = spec.layout();
-            let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
+            let mut dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
+            // standalone rebalance stage (the session runs the same
+            // logic per multiplication; see MultSession::with_rebalance)
+            let reb_out = if rebalance != RebalanceMode::Off {
+                let model = WorkModel::from_matrices(&a, &b, cfg.filter.on_the_fly_eps);
+                let plan = plan_rebalance(&model, &dist, &a, &b);
+                let apply = plan.beneficial
+                    && match rebalance {
+                        RebalanceMode::On => true,
+                        RebalanceMode::Auto => {
+                            let saved =
+                                plan.saved_per_mult_s(&model, grid.size(), machine.flop_rate)
+                                    * spec.n_mults.max(1) as f64;
+                            let per_rank =
+                                (plan.migration_bytes as f64 / grid.size() as f64).ceil();
+                            saved > machine.net.rma_time(per_rank as usize)
+                        }
+                        RebalanceMode::Off => unreachable!(),
+                    };
+                if apply {
+                    let new_dist = plan.apply(grid);
+                    let fabric = dbcsr::comm::progress::FabricConfig {
+                        net: machine.net,
+                        flop_rate: machine.flop_rate,
+                        ..Default::default()
+                    };
+                    let stats = execute_migration(&dist, &new_dist, &a, &b, fabric);
+                    dist = new_dist;
+                    Some(RebalanceOutcome {
+                        applied: true,
+                        pre_imbalance: plan.pre_imbalance,
+                        post_imbalance: plan.post_imbalance,
+                        planned_migration_bytes: plan.migration_bytes,
+                        migrated_bytes: stats.bytes,
+                        migration_s: stats.max_virtual_s,
+                    })
+                } else {
+                    Some(RebalanceOutcome {
+                        applied: false,
+                        pre_imbalance: plan.pre_imbalance,
+                        post_imbalance: plan.pre_imbalance,
+                        planned_migration_bytes: plan.migration_bytes,
+                        migrated_bytes: 0,
+                        migration_s: 0.0,
+                    })
+                }
+            } else {
+                None
+            };
             let report = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
-            (report, cfg, grid, None, None)
+            (report, cfg, grid, None, None, reb_out)
         }
         other => {
             eprintln!("unknown plan mode '{other}' (use manual|auto)");
@@ -215,6 +288,18 @@ fn cmd_multiply() -> i32 {
             sym.structure_bytes as f64 / 1e6
         );
     }
+    if let Some(out) = &reb_out {
+        println!(
+            "rebalance: {} — imbalance {:.3} -> {:.3}, migrated {:.3} MB \
+             ({:.3} ms); executed max/mean {:.3}",
+            if out.applied { "applied" } else { "declined" },
+            out.pre_imbalance,
+            out.post_imbalance,
+            out.migrated_bytes as f64 / 1e6,
+            out.migration_s * 1e3,
+            report.mult_stats.flop_imbalance()
+        );
+    }
     let overlap = report.overlap_summary();
     println!(
         "pipeline: tick wait {:.3} ms of {:.3} ms fetch comm \
@@ -239,16 +324,32 @@ fn cmd_multiply() -> i32 {
         );
     }
     if args.is_set("json") {
-        println!(
-            "{}",
-            dbcsr::stats::report::multiply_report_json_session(
-                &report,
-                &cfg,
-                plan.as_deref(),
-                session.as_ref()
-            )
-            .to_string_compact()
+        use dbcsr::util::json::Json;
+        let mut j = dbcsr::stats::report::multiply_report_json_session(
+            &report,
+            &cfg,
+            plan.as_deref(),
+            session.as_ref(),
         );
+        if let Some(out) = &reb_out {
+            if let Json::Obj(m) = &mut j {
+                m.insert(
+                    "rebalance".to_string(),
+                    Json::obj([
+                        ("applied", Json::Bool(out.applied)),
+                        ("pre_imbalance", Json::Num(out.pre_imbalance)),
+                        ("post_imbalance", Json::Num(out.post_imbalance)),
+                        (
+                            "planned_migration_bytes",
+                            Json::Num(out.planned_migration_bytes as f64),
+                        ),
+                        ("migrated_bytes", Json::Num(out.migrated_bytes as f64)),
+                        ("migration_s", Json::Num(out.migration_s)),
+                    ]),
+                );
+            }
+        }
+        println!("{}", j.to_string_compact());
     }
     if args.is_set("verify") {
         let want = multiply_oracle(&a, &b, None, &cfg.filter);

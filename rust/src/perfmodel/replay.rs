@@ -238,6 +238,20 @@ pub fn build_rank_log_symbolic(cfg: &ReplayConfig) -> RankLog {
     log
 }
 
+/// Scale every tick's modeled flops by `factor` — prices a candidate
+/// under a max/mean flop-imbalance ratio.  [`build_rank_log`] models the
+/// *mean* rank (all ranks are statistically identical after the random
+/// permutation); on a skewed workload the critical rank executes
+/// `max/mean ×` that compute, so the planner's rebalance pricing hook
+/// (`Planner::with_rebalance`) scales candidate compute by the measured
+/// ratio before replaying it.
+pub fn scale_log_flops(log: &mut RankLog, factor: f64) {
+    debug_assert!(factor >= 1.0, "imbalance ratio is max/mean >= 1");
+    for t in &mut log.ticks {
+        t.flops *= factor;
+    }
+}
+
 /// Modeled peak memory per process (matrix shares + temporary buffers,
 /// following the §3 buffer inventory / Eq. 6).
 pub fn modeled_peak_memory(cfg: &ReplayConfig) -> f64 {

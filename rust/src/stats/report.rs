@@ -262,6 +262,12 @@ pub fn multiply_report_json_planned(
         })
         .collect();
     let overlap = rep.overlap_summary();
+    let rank_flops: Vec<Json> = rep
+        .mult_stats
+        .rank_flops
+        .iter()
+        .map(|&f| Json::Num(f))
+        .collect();
     let mut out = Json::obj([
         ("engine", Json::Str(cfg.engine.label())),
         ("l", Json::Num(rep.topo.l as f64)),
@@ -275,6 +281,13 @@ pub fn multiply_report_json_planned(
         ("stacks", Json::Num(rep.mult_stats.stacks as f64)),
         ("stack_fill", Json::Num(rep.mult_stats.stack_fill())),
         ("flop_hist", Json::Arr(flop_hist)),
+        (
+            "imbalance",
+            Json::obj([
+                ("rank_flops", Json::Arr(rank_flops)),
+                ("max_mean", Json::Num(rep.mult_stats.flop_imbalance())),
+            ]),
+        ),
         ("post_filtered", Json::Num(rep.post_filtered as f64)),
         ("wall_s", Json::Num(rep.wall_s)),
         ("avg_requested_bytes", Json::Num(rep.avg_requested_bytes())),
@@ -348,7 +361,18 @@ pub fn session_json(
         ),
         ("seq_joint_plans", Json::Num(s.seq_joint_plans as f64)),
         ("grid_agreements", Json::Num(s.grid_agreements as f64)),
-        ("redistributions", Json::Num(s.redistributions as f64)),
+        (
+            "grid_redistributions",
+            Json::Num(s.grid_redistributions as f64),
+        ),
+        (
+            "dist_redistributions",
+            Json::Num(s.dist_redistributions as f64),
+        ),
+        (
+            "rebalance_migrated_bytes",
+            Json::Num(s.rebalance_migrated_bytes as f64),
+        ),
         (
             "pool_initial_allocations",
             Json::Num(s.pool.initial_allocations as f64),
@@ -492,6 +516,14 @@ mod tests {
             .map(|h| h.get("products").unwrap().as_f64().unwrap())
             .sum();
         assert_eq!(hist_products, back.get("products").unwrap().as_f64().unwrap());
+        // per-rank flop histogram + max/mean imbalance ride along
+        let imb = back.get("imbalance").unwrap();
+        let ranks = imb.get("rank_flops").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), 4, "one entry per rank");
+        let rank_sum: f64 = ranks.iter().map(|r| r.as_f64().unwrap()).sum();
+        let total = back.get("flops").unwrap().as_f64().unwrap();
+        assert!((rank_sum - total).abs() < 1e-6 * total.max(1.0));
+        assert!(imb.get("max_mean").unwrap().as_f64().unwrap() >= 1.0);
         // comm volume + symbolic block ride along (eager run: pass off,
         // fetched == eager, no structure traffic)
         assert!(back.get("comm_volume_bytes").unwrap().as_f64().unwrap() > 0.0);
@@ -562,6 +594,14 @@ mod tests {
         let pooled = s.get("pooled_collectives").unwrap().as_f64().unwrap();
         let naive = s.get("naive_collectives").unwrap().as_f64().unwrap();
         assert!(pooled < naive, "pooled {pooled} not below naive {naive}");
+        // the split redistribution counters replace the old single key
+        assert!(s.get("redistributions").is_none());
+        assert_eq!(s.get("grid_redistributions").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(s.get("dist_redistributions").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            s.get("rebalance_migrated_bytes").unwrap().as_f64().unwrap(),
+            0.0
+        );
         // the plan provenance block still rides along
         assert!(back.get("plan").is_some());
         // without a session the block is absent (schema unchanged)

@@ -7,7 +7,10 @@
 //!   after DBCSR's randomized permutation);
 //! * [`banded_for_spec`] — a banded/decay structure (before permutation)
 //!   as produced by localized atomic bases, used by the sign-iteration
-//!   driver where fill-in evolution matters.
+//!   driver where fill-in evolution matters;
+//! * [`clustered`] — a power-law occupancy skew across block rows (a few
+//!   physically hot rows), the workload the flop-balanced redistribution
+//!   stage (`dist::rebalance`) is measured on.
 
 use crate::blocks::layout::BlockLayout;
 use crate::blocks::matrix::BlockCsrMatrix;
@@ -70,6 +73,47 @@ pub fn banded_for_spec(spec: &BenchSpec, decay: f64, seed: u64) -> BlockCsrMatri
     banded(&layout, hb, decay, seed)
 }
 
+/// Clustered (power-law) block-sparse matrix: block row `r` carries
+/// occupancy proportional to `(r + 1)^{-alpha}`, normalized so the whole
+/// matrix averages `occupancy` (head rows clamp at fully dense).  Unlike
+/// [`banded`], the skew is *physical* — a randomized permutation
+/// scatters the hot rows across process rows but cannot split one hot
+/// row, which is exactly the imbalance regime the rebalance stage's LPT
+/// pass targets.
+pub fn clustered(layout: &BlockLayout, occupancy: f64, alpha: f64, seed: u64) -> BlockCsrMatrix {
+    assert!((0.0..=1.0).contains(&occupancy));
+    assert!(alpha >= 0.0);
+    let mut rng = Pcg64::new_stream(seed, 0xC1A5);
+    let nb = layout.nblocks();
+    let weights: Vec<f64> = (0..nb).map(|r| ((r + 1) as f64).powf(-alpha)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let scale = occupancy * nb as f64 / wsum.max(f64::MIN_POSITIVE);
+    let mut rows: Vec<Vec<(usize, Vec<f64>)>> = Vec::with_capacity(nb);
+    for r in 0..nb {
+        let occ_r = (weights[r] * scale).min(1.0);
+        let amp = 1.0 / (layout.size(r) as f64).sqrt();
+        let mut row = Vec::new();
+        for c in 0..nb {
+            if rng.chance(occ_r) {
+                let n = layout.size(r) * layout.size(c);
+                row.push((c, (0..n).map(|_| rng.normal() * amp).collect()));
+            }
+        }
+        rows.push(row);
+    }
+    BlockCsrMatrix::from_sorted_rows(
+        std::sync::Arc::new(layout.clone()),
+        std::sync::Arc::new(layout.clone()),
+        rows,
+    )
+}
+
+/// Clustered matrix at the spec's block size / count / occupancy.
+pub fn clustered_for_spec(spec: &BenchSpec, alpha: f64, seed: u64) -> BlockCsrMatrix {
+    let layout = spec.layout();
+    clustered(&layout, spec.occupancy, alpha, seed)
+}
+
 /// Make a matrix symmetric: `(M + Mᵀ)/2` (densified internally — only
 /// for driver-scale matrices).
 pub fn symmetrize(m: &BlockCsrMatrix) -> BlockCsrMatrix {
@@ -123,6 +167,53 @@ mod tests {
             m.occupancy(),
             spec.occupancy
         );
+    }
+
+    #[test]
+    fn clustered_hits_target_occupancy() {
+        let l = BlockLayout::uniform(32, 2);
+        let m = clustered(&l, 0.2, 1.0, 7);
+        // head-row clamping costs a little mass; stay within 0.05
+        assert!(
+            (m.occupancy() - 0.2).abs() < 0.05,
+            "occ {} vs 0.2",
+            m.occupancy()
+        );
+    }
+
+    #[test]
+    fn clustered_pins_the_row_skew() {
+        let l = BlockLayout::uniform(32, 2);
+        let m = clustered(&l, 0.2, 1.0, 7);
+        // normalization pushes the head row past 1.0 → clamps to dense
+        assert_eq!(m.row(0).count(), 32, "head row must be dense");
+        assert!(m.row(0).count() > m.row(31).count());
+        // max/mean block-count imbalance across rows stays in a pinned
+        // band: strongly skewed, but not a single-row degenerate
+        let counts: Vec<f64> = (0..32).map(|r| m.row(r).count() as f64).collect();
+        let ratio = crate::dist::rebalance::imbalance_ratio(&counts);
+        assert!(
+            (3.0..=8.0).contains(&ratio),
+            "row-occupancy max/mean {ratio} outside the pinned [3, 8] band"
+        );
+    }
+
+    #[test]
+    fn clustered_for_spec_uses_spec_shape() {
+        let spec = BenchSpec::dense().scaled(24);
+        let m = clustered_for_spec(&spec, 0.8, 9);
+        assert_eq!(m.row_layout().nblocks(), 24);
+        assert!(m.row(0).count() >= m.row(23).count());
+    }
+
+    #[test]
+    fn clustered_alpha_zero_is_uniformlike() {
+        let l = BlockLayout::uniform(24, 2);
+        let m = clustered(&l, 0.3, 0.0, 11);
+        assert!((m.occupancy() - 0.3).abs() < 0.07);
+        let counts: Vec<f64> = (0..24).map(|r| m.row(r).count() as f64).collect();
+        let ratio = crate::dist::rebalance::imbalance_ratio(&counts);
+        assert!(ratio < 2.5, "alpha=0 must stay near-uniform, got {ratio}");
     }
 
     #[test]

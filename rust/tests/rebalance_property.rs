@@ -1,0 +1,95 @@
+//! Integration: the flop-balanced redistribution stage's three
+//! structural guarantees, across random skewed workloads, grids and
+//! both engines.
+//!
+//! 1. **never worse** — the guarded accept keeps the modeled max/mean
+//!    imbalance monotone: `post ≤ pre` for every plan;
+//! 2. **block-exact pricing** — the executed migration pass requests
+//!    exactly the plan's modeled bytes on the Redistribution rail;
+//! 3. **bitwise identity** — both engines produce the exact same C on
+//!    the rebalanced distribution as on the original one (canonical
+//!    per-inner-index accumulation makes C a pure function of the
+//!    operands, not of the block placement).
+//!
+//! Plus the observability path: the executed per-rank flop histogram
+//! the report carries equals the work model's per-rank loads.
+
+use dbcsr::blocks::layout::BlockLayout;
+use dbcsr::comm::progress::FabricConfig;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::dist::rebalance::{
+    execute_migration, imbalance_ratio, plan_rebalance, WorkModel,
+};
+use dbcsr::engines::multiply::{multiply_distributed, Engine, MultiplyConfig};
+use dbcsr::workloads::generator::clustered;
+
+#[test]
+fn rebalance_preserves_bits_and_prices_migration_exactly() {
+    for (pr, pc) in [(2, 2), (3, 2), (2, 3)] {
+        for seed in [1u64, 2, 3] {
+            let nb = 20;
+            let l = BlockLayout::uniform(nb, 2);
+            let a = clustered(&l, 0.3, 1.0, seed);
+            let b = clustered(&l, 0.3, 1.0, seed ^ 0xAB);
+            let grid = ProcGrid::new(pr, pc).unwrap();
+            let dist = Distribution2d::rand_permuted(&l, &l, &grid, seed ^ 0xCD);
+            let model = WorkModel::from_matrices(&a, &b, -1.0);
+            let plan = plan_rebalance(&model, &dist, &a, &b);
+            let ctx = format!("{pr}x{pc} seed={seed}");
+
+            // 1. guarded accept: monotone imbalance, identity when not
+            // beneficial
+            assert!(
+                plan.post_imbalance <= plan.pre_imbalance + 1e-9,
+                "{ctx}: post {} > pre {}",
+                plan.post_imbalance,
+                plan.pre_imbalance
+            );
+            if !plan.beneficial {
+                assert_eq!(plan.migration_bytes, 0, "{ctx}");
+                assert_eq!(plan.row_map, dist.row_map(), "{ctx}");
+                assert_eq!(plan.col_map, dist.col_map(), "{ctx}");
+            }
+            let new_dist = plan.apply(grid);
+            assert_eq!(new_dist.inner_map(), dist.inner_map(), "{ctx}: inner pinned");
+            let post = imbalance_ratio(&model.rank_loads(&new_dist));
+            assert!(
+                (post - plan.post_imbalance).abs() < 1e-9,
+                "{ctx}: applied dist imbalance {post} vs plan {}",
+                plan.post_imbalance
+            );
+
+            // 2. block-exact migration pricing
+            let stats = execute_migration(&dist, &new_dist, &a, &b, FabricConfig::default());
+            assert_eq!(
+                stats.bytes, plan.migration_bytes,
+                "{ctx}: measured migration bytes diverge from the plan"
+            );
+
+            // 3. bitwise-identical C on both engines, and the executed
+            // per-rank flop histogram equals the model's rank loads
+            for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+                let cfg = MultiplyConfig {
+                    engine,
+                    ..Default::default()
+                };
+                let before = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+                let after = multiply_distributed(&a, &b, None, &new_dist, &cfg).unwrap();
+                let diff = after.c.to_dense().max_abs_diff(&before.c.to_dense());
+                assert_eq!(diff, 0.0, "{ctx} {}: rebalance changed the bits", engine.label());
+
+                let loads = model.rank_loads(&new_dist);
+                let got = &after.mult_stats.rank_flops;
+                assert_eq!(got.len(), loads.len(), "{ctx} {}", engine.label());
+                for (r, (g, w)) in got.iter().zip(&loads).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-6 * w.max(1.0),
+                        "{ctx} {} rank {r}: executed {g} vs modeled {w}",
+                        engine.label()
+                    );
+                }
+            }
+        }
+    }
+}

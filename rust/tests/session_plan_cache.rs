@@ -135,8 +135,11 @@ fn joint_sequence_matches_oracle_across_occupancies() {
     // when the scheduler reached grid agreement, no redistribution may
     // have happened mid-sequence
     if s.grid_agreements == 2 {
-        assert_eq!(s.redistributions, 0);
+        assert_eq!(s.grid_redistributions, 0);
     }
+    // rebalance is off by default: the dist counter never moves
+    assert_eq!(s.dist_redistributions, 0);
+    assert_eq!(s.rebalance_migrated_bytes, 0);
 }
 
 #[test]
