@@ -37,6 +37,7 @@ use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::pipeline::{BufferPool, TickWindow};
 use crate::engines::schedule::cannon_vk;
+use crate::engines::RankOpts;
 use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
 use crate::local::stackflow::NativeStackExecutor;
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
@@ -79,24 +80,29 @@ fn panelset_bytes(set: &HashMap<u64, Panel>) -> u64 {
     set.values().map(|p| 8 + p.wire_bytes() as u64).sum()
 }
 
-/// Run Algorithm 1 on one rank.  `eps` is the on-the-fly filter
-/// threshold; `threads` sizes the intra-rank stack-executor worker pool.
-/// With `symbolic` set, a norm-ceiling reduction runs before the
-/// pre-shift and globally dead blocks are dropped from the circulating
-/// sets — same surviving task stream, bitwise-identical C.
+/// Run Algorithm 1 on one rank.  `opts.eps` is the on-the-fly filter
+/// threshold; `opts.threads` sizes the intra-rank stack-executor worker
+/// pool; `opts.registry` routes every stack to its autotuned kernel
+/// variant.  With `opts.symbolic` set, a norm-ceiling reduction runs
+/// before the pre-shift and globally dead blocks are dropped from the
+/// circulating sets — same surviving task stream, bitwise-identical C.
+/// `opts.async_submission` is a no-op here: the shifts already post
+/// ahead of the multiplication through the [`TickWindow`].
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
     topo: &Topology25d,
     mut input: RankInput,
-    eps: f64,
-    threads: usize,
-    symbolic: bool,
+    opts: &RankOpts,
 ) -> RankOutput {
+    let (eps, symbolic) = (opts.eps, opts.symbolic);
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
     let v = topo.v;
-    let exec = NativeStackExecutor::new(threads);
+    let mut exec = NativeStackExecutor::new(opts.threads);
+    if let Some(reg) = &opts.registry {
+        exec = exec.with_registry(reg.clone());
+    }
     let mut timers = Timers::new();
     let mut log = RankLog::new(EngineKind::Ptp);
     let mut mult_stats = LocalMultStats::default();

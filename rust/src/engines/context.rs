@@ -49,6 +49,7 @@ use crate::engines::multiply::{
 };
 use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
 use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
+use crate::local::dispatch::KernelRegistry;
 use crate::workloads::spec::BenchSpec;
 
 /// Grow-only pool bookkeeping for one simulated rank set.
@@ -216,12 +217,18 @@ pub struct MultSession {
     dist: Option<Distribution2d>,
     pool: WindowPoolStats,
     counters: SessionCounters,
+    /// Per-shape kernel dispatch table shared by every multiplication
+    /// of the session: each block shape is tuned once (against the
+    /// planner's machine — deterministic) and the chosen variant is
+    /// reused across multiplications, like the window pools.
+    registry: Arc<KernelRegistry>,
 }
 
 impl MultSession {
     /// A session over `planner` with the default plan-cache capacity,
     /// no filtering, and `seed` driving the randomized distributions.
     pub fn new(planner: Planner, seed: u64) -> Self {
+        let registry = Arc::new(KernelRegistry::modeled(planner.machine));
         Self {
             planner,
             cache: PlanCache::default(),
@@ -232,7 +239,20 @@ impl MultSession {
             dist: None,
             pool: WindowPoolStats::default(),
             counters: SessionCounters::default(),
+            registry,
         }
+    }
+
+    /// Builder: replace the session's kernel registry (e.g. a measured
+    /// calibration instead of the default modeled one).
+    pub fn with_kernel_registry(mut self, registry: Arc<KernelRegistry>) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// The session's kernel dispatch table.
+    pub fn kernel_registry(&self) -> &Arc<KernelRegistry> {
+        &self.registry
     }
 
     /// Builder: the filter applied by every planned multiplication
@@ -326,6 +346,7 @@ impl MultSession {
         let mut cfg = MultiplyConfig::from_candidate(choice, self.planner.machine);
         cfg.filter = self.filter;
         cfg.symbolic = self.symbolic;
+        cfg.registry = Some(self.registry.clone());
         cfg
     }
 
@@ -627,7 +648,7 @@ impl MultSession {
         let (report, rebalance) = self.run_one(&s.cfg, s.grid, a, b, c0, remaining)?;
         Ok(SessionRun {
             report,
-            cfg: s.cfg,
+            cfg: s.cfg.clone(),
             plan: s.plan.clone(),
             cached: s.cached,
             rebalance,

@@ -5,6 +5,10 @@
 //! multiplication session (plan cache + window pools) that amortizes
 //! that choice across a sequence of multiplications.
 
+use std::sync::Arc;
+
+use crate::local::dispatch::KernelRegistry;
+
 pub mod cannon;
 pub mod context;
 pub mod multiply;
@@ -13,3 +17,37 @@ pub mod pipeline;
 pub mod plancache;
 pub mod planner;
 pub mod schedule;
+
+/// Per-rank execution options shared by both engines' `run_rank`.
+#[derive(Clone, Debug)]
+pub struct RankOpts {
+    /// On-the-fly filter threshold (Eq. 1).
+    pub eps: f64,
+    /// Intra-rank stack-executor worker threads.
+    pub threads: usize,
+    /// Structure-first communication avoidance before panel data moves.
+    pub symbolic: bool,
+    /// Async stack submission (one-sided engine only): release the A
+    /// batch budget and stage the tick's product stacks before they
+    /// execute, so tick `t+1`'s fetches fly while tick `t` computes.
+    /// Cannon already posts its shifts ahead of the multiplication
+    /// ([`pipeline::TickWindow`]), so the flag is a no-op there.
+    pub async_submission: bool,
+    /// Per-shape kernel dispatch table; `None` runs the generic
+    /// microkernel for every block shape.
+    pub registry: Option<Arc<KernelRegistry>>,
+}
+
+impl RankOpts {
+    /// Options with the engine defaults: eager fetches, async
+    /// submission on, generic kernels.
+    pub fn new(eps: f64, threads: usize) -> Self {
+        Self {
+            eps,
+            threads,
+            symbolic: false,
+            async_submission: true,
+            registry: None,
+        }
+    }
+}

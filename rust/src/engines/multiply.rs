@@ -7,7 +7,7 @@
 //! counters and virtual-time logs the benchmarks consume.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::filter::{filter_blocks, FilterConfig};
@@ -19,8 +19,9 @@ use crate::dist::distribution::Distribution2d;
 use crate::dist::topology25d::{Topology25d, TopologyError};
 use crate::engines::plancache::PlanCache;
 use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
-use crate::engines::{cannon, osl};
+use crate::engines::{cannon, osl, RankOpts};
 use crate::local::batch::LocalMultStats;
+use crate::local::dispatch::{KernelRegistry, KernelShapeReport};
 use crate::perfmodel::machine::MachineModel;
 use crate::perfmodel::virtual_time::{
     critical_path, crosscheck_overlap, model_rank_time, ModeledTime, OverlapCheck, RankLog,
@@ -100,7 +101,7 @@ pub struct SymbolicInfo {
 }
 
 /// Multiplication configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct MultiplyConfig {
     pub engine: Engine,
     pub filter: FilterConfig,
@@ -117,6 +118,16 @@ pub struct MultiplyConfig {
     /// `flop_rate × thread_efficiency(threads)`; see
     /// [`MachineModel::thread_efficiency`].
     pub threads_per_rank: usize,
+    /// Async stack submission (one-sided engine): stage each tick's
+    /// product stacks and drain them after the next fetches were
+    /// posted, so tick `t+1`'s transfers overlap tick `t`'s compute.
+    /// Same product order — bitwise-identical C; costs up to one extra
+    /// A batch + B panel of live buffer.  On by default.
+    pub async_submission: bool,
+    /// Per-shape kernel dispatch table shared across multiplications
+    /// (autotuned on first use per shape); `None` runs the generic
+    /// microkernel everywhere.
+    pub registry: Option<Arc<KernelRegistry>>,
 }
 
 impl Default for MultiplyConfig {
@@ -128,6 +139,8 @@ impl Default for MultiplyConfig {
             strict_topology: false,
             machine: None,
             threads_per_rank: 1,
+            async_submission: true,
+            registry: None,
         }
     }
 }
@@ -178,11 +191,10 @@ impl MultiplyConfig {
     pub fn from_candidate(choice: &CandidatePlan, machine: MachineModel) -> Self {
         Self {
             engine: choice.engine,
-            filter: FilterConfig::default(),
-            symbolic: SymbolicMode::default(),
             strict_topology: true,
             machine: Some(machine),
             threads_per_rank: choice.threads,
+            ..Self::default()
         }
     }
 }
@@ -223,6 +235,9 @@ pub struct MultiplyReport {
     pub fabric_machine: MachineModel,
     /// Topology actually used (after any fallback).
     pub topo: Topology25d,
+    /// Per-shape kernel dispatch snapshot (variant chosen, calibrated
+    /// rate, autotune cost, executed use) — empty without a registry.
+    pub kernels: Vec<KernelShapeReport>,
 }
 
 impl MultiplyReport {
@@ -265,6 +280,7 @@ impl MultiplyReport {
             out.modeled_comm_s += c.modeled_comm_s;
             out.tick_wait_s += c.tick_wait_s;
             out.tick_comm_s += c.tick_comm_s;
+            out.tick_comp_s += c.tick_comp_s;
             out.total_wait_s += c.total_wait_s;
         }
         out
@@ -363,6 +379,13 @@ pub fn multiply_distributed(
     let symbolic = cfg.symbolic.resolve(a.occupancy(), b.occupancy());
     let t0 = std::time::Instant::now();
     let engine = cfg.engine;
+    let opts = RankOpts {
+        eps,
+        threads,
+        symbolic,
+        async_submission: cfg.async_submission,
+        registry: cfg.registry.clone(),
+    };
     let results = world.run(|comm| {
         let (a_in, b_in) = input_slots[comm.rank()].lock().unwrap().take().unwrap();
         match engine {
@@ -375,9 +398,7 @@ pub fn multiply_distributed(
                         a_panels: a_in,
                         b_panels: b_in,
                     },
-                    eps,
-                    threads,
-                    symbolic,
+                    &opts,
                 );
                 (
                     out.c_acc,
@@ -398,9 +419,7 @@ pub fn multiply_distributed(
                         a_window: a_in,
                         b_window: b_in,
                     },
-                    eps,
-                    threads,
-                    symbolic,
+                    &opts,
                 );
                 (
                     out.c_acc,
@@ -484,6 +503,11 @@ pub fn multiply_distributed(
         symbolic: symbolic_info,
         fabric_machine: machine,
         topo,
+        kernels: cfg
+            .registry
+            .as_ref()
+            .map(|r| r.report())
+            .unwrap_or_default(),
     })
 }
 

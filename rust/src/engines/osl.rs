@@ -34,12 +34,15 @@ use std::collections::HashMap;
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
 use crate::blocks::symbolic::{live_ids, mark_live, SymbolicPanel};
+use crate::comm::ptp::Request;
 use crate::comm::rma::win_key;
 use crate::comm::world::{Comm, Payload, TrafficClass};
 use crate::dist::distribution::Distribution2d;
+use crate::dist::grid::ProcGrid;
 use crate::dist::topology25d::Topology25d;
-use crate::engines::pipeline::{BatchPrefetch, FetchDesc, PrefetchQueue};
+use crate::engines::pipeline::{BatchPrefetch, FetchDesc, PrefetchQueue, SubmissionQueue};
 use crate::engines::schedule::{osl_tick_products, osl_vk};
+use crate::engines::RankOpts;
 use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
 use crate::local::stackflow::NativeStackExecutor;
 use crate::perfmodel::virtual_time::{EngineKind, RankLog, TickRecord};
@@ -89,23 +92,113 @@ fn acc_bytes(acc: &BlockAccumulator) -> u64 {
     (acc.nelements() * 8 + acc.nblocks() * 24) as u64
 }
 
-/// Run Algorithm 2 on one rank.  `threads` sizes the intra-rank
-/// stack-executor worker pool.  With `symbolic` set, a structure-only
-/// exchange runs before any panel data moves and every fetch shrinks to
-/// the blocks that contribute at least one surviving product — same
-/// task stream, bitwise-identical C.
+/// Tick-invariant context of [`run_group`]: the per-product execution
+/// body shared by the sync drain site (right after its B panel is
+/// claimed) and the async drain sites (after the next fetches were
+/// posted).
+struct TickCtx<'a> {
+    comm: &'a Comm,
+    exec: &'a NativeStackExecutor,
+    topo: &'a Topology25d,
+    grid: &'a ProcGrid,
+    eps: f64,
+    i: usize,
+    j: usize,
+    my_partial_idx: usize,
+}
+
+/// Execute one staged product group in schedule order: multiply each
+/// member, advance the compute clock, and — inside the last tick — run
+/// the Eq. 6 sampling and the overlapped partial-C shipping.  Groups
+/// drain FIFO from the [`SubmissionQueue`], so the product stream keeps
+/// its schedule order and C stays bitwise identical across sync/async.
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    ctx: &TickCtx,
+    timers: &mut Timers,
+    a_bufs: &[Panel],
+    b: usize,
+    pb: &Panel,
+    members: &[(usize, usize, usize)],
+    big_t: usize,
+    last_tick: bool,
+    live_fetch_bytes: u64,
+    partials: &mut [Vec<BlockAccumulator>],
+    mult_stats: &mut LocalMultStats,
+    rec: &mut TickRecord,
+    log: &mut RankLog,
+    send_reqs: &mut Vec<Request>,
+    peak_buffer_bytes: &mut u64,
+    peak_partial_c_bytes: &mut u64,
+) {
+    let topo = ctx.topo;
+    for &(a, m, n) in members {
+        let idx = b * topo.l_r + a;
+        let s = timers.time("osl/local_multiply", || {
+            multiply_panels_stacked(&a_bufs[a], pb, ctx.eps, &mut partials[idx][big_t], ctx.exec)
+                .expect("native stack executor is infallible")
+        });
+        ctx.comm.advance_compute_flops(s.flops);
+        mult_stats.merge(&s);
+        rec.flops += s.flops;
+        rec.mults += 1;
+
+        if last_tick {
+            // The Eq. 6 maximum occurs inside the last tick: every
+            // partial is at (or near) full size and they leave one by
+            // one as they ship — sample before each departure.
+            let partial_bytes: u64 = partials.iter().flatten().map(acc_bytes).sum();
+            *peak_partial_c_bytes = (*peak_partial_c_bytes).max(partial_bytes);
+            *peak_buffer_bytes = (*peak_buffer_bytes).max(live_fetch_bytes + partial_bytes);
+        }
+        if last_tick && topo.l > 1 && idx != ctx.my_partial_idx {
+            // This product was the partial's last contribution: ship
+            // its per-tick arc — keyed by each tick's `vk` so the home
+            // rank can fold canonically — to its 2D owner, overlapped
+            // with the rest of the tick (the paper's overlapped C
+            // reduction).
+            let set: Vec<(u64, Panel)> = std::mem::take(&mut partials[idx])
+                .into_iter()
+                .enumerate()
+                .filter(|(_, acc)| !acc.is_empty())
+                .map(|(t, acc)| (osl_vk(topo, ctx.i, ctx.j, t) as u64, acc.into_panel()))
+                .collect();
+            log.c_bytes += set.iter().map(|(_, p)| 8 + p.wire_bytes() as u64).sum::<u64>();
+            log.c_msgs += 1;
+            send_reqs.push(ctx.comm.isend(
+                ctx.grid.rank(m, n),
+                TAG_C | ((ctx.i * ctx.grid.cols() + ctx.j) as u64),
+                TrafficClass::MatrixC,
+                Payload::PanelSet(set),
+            ));
+        }
+    }
+}
+
+/// Run Algorithm 2 on one rank.  `opts.threads` sizes the intra-rank
+/// stack-executor worker pool; `opts.registry` routes every stack to
+/// its autotuned kernel variant.  With `opts.symbolic` set, a
+/// structure-only exchange runs before any panel data moves and every
+/// fetch shrinks to the blocks that contribute at least one surviving
+/// product — same task stream, bitwise-identical C.  With
+/// `opts.async_submission`, the tick's product stacks are staged on a
+/// [`SubmissionQueue`] and drain only after the next fetches were
+/// posted — tick `t+1`'s transfers fly while tick `t` computes, same
+/// product order, bitwise-identical C.
 pub fn run_rank(
     comm: &Comm,
     dist: &Distribution2d,
     topo: &Topology25d,
     input: RankInput,
-    eps: f64,
-    threads: usize,
-    symbolic: bool,
+    opts: &RankOpts,
 ) -> RankOutput {
+    let (eps, symbolic) = (opts.eps, opts.symbolic);
     let grid = &dist.grid;
     let (i, j) = grid.coords(comm.rank());
-    let exec = NativeStackExecutor::new(threads);
+    let mut exec = NativeStackExecutor::new(opts.threads);
+    if let Some(reg) = &opts.registry {
+        exec = exec.with_registry(reg.clone());
+    }
     let mut timers = Timers::new();
     let mut log = RankLog::new(EngineKind::OneSided);
     let mut mult_stats = LocalMultStats::default();
@@ -143,6 +236,16 @@ pub fn run_rank(
     // The tick's L products, A-index fastest (Algorithm 2 sub-steps);
     // identical for every tick.
     let products = osl_tick_products(topo, i, j);
+    // The products grouped by B panel (consecutive runs: the schedule
+    // iterates the A index fastest), so each group can be staged
+    // against its fetched panel and drained as one submission unit.
+    let mut groups: Vec<(usize, Vec<(usize, usize, usize)>)> = Vec::new();
+    for &(a, b, m, n) in &products {
+        match groups.last_mut() {
+            Some((gb, list)) if *gb == b => list.push((a, m, n)),
+            _ => groups.push((b, vec![(a, m, n)])),
+        }
+    }
     let my_partial_idx = {
         let (i3d, j3d, _) = topo.coords3d(i, j);
         j3d * topo.l_r + i3d
@@ -235,11 +338,23 @@ pub fn run_rank(
     let mut a_fetch = BatchPrefetch::new(comm, "osl/a_buffers", topo.nbuffers_a(), a_batches);
     let mut b_fetch = PrefetchQueue::new(comm, "osl/b_buffers", 2, b_stream);
 
-    let mut send_reqs = Vec::new();
+    let mut send_reqs: Vec<Request> = Vec::new();
     let mut recv_reqs = Vec::new();
     let mut peak_buffer_bytes = 0u64;
     let mut peak_partial_c_bytes = 0u64;
     let _ = comm.take_wait_epoch(); // window setup is not tick wait
+
+    let ctx = TickCtx {
+        comm,
+        exec: &exec,
+        topo,
+        grid,
+        eps,
+        i,
+        j,
+        my_partial_idx,
+    };
+    let mut submit_q: SubmissionQueue<(usize, Panel)> = SubmissionQueue::new();
 
     // --- V/L ticks ----------------------------------------------------
     for big_t in 0..nticks {
@@ -270,69 +385,114 @@ pub fn run_rank(
             .iter()
             .map(|p| comm.price_rma(p.wire_bytes()))
             .sum::<f64>();
+        if opts.async_submission {
+            // Async submission: the batch is already owned (`a_bufs`),
+            // so its budget can turn over before any of this tick's
+            // stacks execute — tick `t+1`'s A transfers fly while tick
+            // `t`'s staged groups drain below.
+            a_fetch.release_front();
+        }
+        // `a_bufs` leaves the fetch pool on release but stays live for
+        // the whole tick; add it back into the Eq. 6 series.
+        let held_a = if opts.async_submission { rec.a_bytes } else { 0 };
 
-        let mut cur_b: Option<(usize, Panel)> = None;
-        for &(a, b, m, n) in &products {
-            if cur_b.as_ref().map(|&(bb, _)| bb) != Some(b) {
-                let pb = timers
-                    .time("osl/rget_waitall", || b_fetch.fetch_next())
-                    .expect("B fetch stream exhausted early");
-                rec.b_msgs += 1;
-                rec.b_bytes += pb.wire_bytes() as u64;
-                rec.comm_s += comm.price_rma(pb.wire_bytes());
-                cur_b = Some((b, pb));
+        // Group index whose panel the B pool still accounts for (the
+        // most recently claimed); a drained panel with a different
+        // index has left the pool and must be added back into the live
+        // series while its group executes.
+        let mut pool_current = usize::MAX;
+        for gi in 0..groups.len() {
+            let pb = timers
+                .time("osl/rget_waitall", || b_fetch.fetch_next())
+                .expect("B fetch stream exhausted early");
+            rec.b_msgs += 1;
+            rec.b_bytes += pb.wire_bytes() as u64;
+            rec.comm_s += comm.price_rma(pb.wire_bytes());
+            let pb_bytes = pb.wire_bytes() as u64;
+            pool_current = gi;
+            submit_q.submit((gi, pb), pb_bytes);
+            // Sync mode drains each group the moment its panel is
+            // claimed (the original schedule); async keeps one group
+            // staged, so its stacks execute only after the next fetch
+            // was posted.
+            let keep = usize::from(opts.async_submission);
+            while submit_q.len() > keep {
+                let (gi_d, pb_d) = submit_q.drain_next().unwrap();
+                let (b_d, members_d) = &groups[gi_d];
+                let extra_b = if gi_d == pool_current {
+                    0
+                } else {
+                    pb_d.wire_bytes() as u64
+                };
+                let live_fetch = a_fetch.bytes_live()
+                    + b_fetch.bytes_live()
+                    + submit_q.bytes_live()
+                    + held_a
+                    + extra_b;
+                run_group(
+                    &ctx,
+                    &mut timers,
+                    &a_bufs,
+                    *b_d,
+                    &pb_d,
+                    members_d,
+                    big_t,
+                    last_tick,
+                    live_fetch,
+                    &mut partials,
+                    &mut mult_stats,
+                    &mut rec,
+                    &mut log,
+                    &mut send_reqs,
+                    &mut peak_buffer_bytes,
+                    &mut peak_partial_c_bytes,
+                );
             }
-            let idx = b * topo.l_r + a;
-            let pb = &cur_b.as_ref().unwrap().1;
-            let s = timers.time("osl/local_multiply", || {
-                multiply_panels_stacked(&a_bufs[a], pb, eps, &mut partials[idx][big_t], &exec)
-                    .expect("native stack executor is infallible")
-            });
-            comm.advance_compute_flops(s.flops);
-            mult_stats.merge(&s);
-            rec.flops += s.flops;
-            rec.mults += 1;
-
-            if last_tick {
-                // The Eq. 6 maximum occurs inside the last tick: every
-                // partial is at (or near) full size and they leave one
-                // by one as they ship — sample before each departure.
-                let partial_bytes: u64 =
-                    partials.iter().flatten().map(acc_bytes).sum();
-                let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
-                peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
-                peak_buffer_bytes = peak_buffer_bytes.max(live);
-            }
-            if last_tick && topo.l > 1 && idx != my_partial_idx {
-                // This product was the partial's last contribution: ship
-                // its per-tick arc — keyed by each tick's `vk` so the
-                // home rank can fold canonically — to its 2D owner,
-                // overlapped with the rest of the tick (the paper's
-                // overlapped C reduction).
-                let set: Vec<(u64, Panel)> = std::mem::take(&mut partials[idx])
-                    .into_iter()
-                    .enumerate()
-                    .filter(|(_, acc)| !acc.is_empty())
-                    .map(|(t, acc)| (osl_vk(topo, i, j, t) as u64, acc.into_panel()))
-                    .collect();
-                log.c_bytes += set.iter().map(|(_, p)| 8 + p.wire_bytes() as u64).sum::<u64>();
-                log.c_msgs += 1;
-                send_reqs.push(comm.isend(
-                    grid.rank(m, n),
-                    TAG_C | ((i * grid.cols() + j) as u64),
-                    TrafficClass::MatrixC,
-                    Payload::PanelSet(set),
-                ));
-            }
+        }
+        // Tick end: drain what is still staged — tick `t+1`'s A batch
+        // is already in flight (released above), which is exactly the
+        // submission/fetch overlap the async mode buys.
+        while let Some((gi_d, pb_d)) = submit_q.drain_next() {
+            let (b_d, members_d) = &groups[gi_d];
+            let extra_b = if gi_d == pool_current {
+                0
+            } else {
+                pb_d.wire_bytes() as u64
+            };
+            let live_fetch = a_fetch.bytes_live()
+                + b_fetch.bytes_live()
+                + submit_q.bytes_live()
+                + held_a
+                + extra_b;
+            run_group(
+                &ctx,
+                &mut timers,
+                &a_bufs,
+                *b_d,
+                &pb_d,
+                members_d,
+                big_t,
+                last_tick,
+                live_fetch,
+                &mut partials,
+                &mut mult_stats,
+                &mut rec,
+                &mut log,
+                &mut send_reqs,
+                &mut peak_buffer_bytes,
+                &mut peak_partial_c_bytes,
+            );
         }
 
         // Eq. 6 series: live fetch buffers (held + in flight) + partials.
         let partial_bytes: u64 = partials.iter().flatten().map(acc_bytes).sum();
-        let live = a_fetch.bytes_live() + b_fetch.bytes_live() + partial_bytes;
+        let live = a_fetch.bytes_live() + b_fetch.bytes_live() + held_a + partial_bytes;
         peak_partial_c_bytes = peak_partial_c_bytes.max(partial_bytes);
         peak_buffer_bytes = peak_buffer_bytes.max(live);
 
-        a_fetch.release_front(); // frees the budget -> prefetch next tick
+        if !opts.async_submission {
+            a_fetch.release_front(); // frees the budget -> prefetch next tick
+        }
         rec.wait_s = comm.take_wait_epoch();
         log.ticks.push(rec);
     }

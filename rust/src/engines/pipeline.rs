@@ -295,6 +295,89 @@ impl<'c> PrefetchQueue<'c> {
     }
 }
 
+/// Deferred-execution queue for the async stack-submission mode of the
+/// one-sided engine: work staged against an already-fetched panel is
+/// drained only after the *next* fetches have been posted, so tick `t`'s
+/// stacks execute while tick `t+1`'s transfers fly.  Items drain in FIFO
+/// order — the product stream keeps its schedule order, which is what
+/// keeps C bitwise identical to the synchronous path.
+///
+/// The queue also carries the byte accounting the Eq. 6 sampling needs:
+/// a staged panel has already left its prefetcher's [`BufferPool`] (the
+/// pool slot turned over to the next fetch) but is still live in the
+/// queue, so the engine adds [`SubmissionQueue::bytes_live`] back into
+/// the live-byte series.
+#[derive(Debug)]
+pub struct SubmissionQueue<T> {
+    pending: VecDeque<(T, u64)>,
+    bytes_live: u64,
+    peak_bytes: u64,
+    submitted: u64,
+    drained: u64,
+}
+
+impl<T> Default for SubmissionQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> SubmissionQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            pending: VecDeque::new(),
+            bytes_live: 0,
+            peak_bytes: 0,
+            submitted: 0,
+            drained: 0,
+        }
+    }
+
+    /// Stage one unit of deferred work holding `bytes` of live buffers.
+    pub fn submit(&mut self, item: T, bytes: u64) {
+        self.pending.push_back((item, bytes));
+        self.bytes_live += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.bytes_live);
+        self.submitted += 1;
+    }
+
+    /// Pop the oldest staged item (FIFO).  Its bytes leave the live
+    /// series here; the caller still holds the buffers while executing.
+    pub fn drain_next(&mut self) -> Option<T> {
+        let (item, bytes) = self.pending.pop_front()?;
+        debug_assert!(self.bytes_live >= bytes);
+        self.bytes_live -= bytes;
+        self.drained += 1;
+        Some(item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Bytes held by staged (not yet drained) work.
+    pub fn bytes_live(&self) -> u64 {
+        self.bytes_live
+    }
+
+    /// Max of `bytes_live` over the queue's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    pub fn drained(&self) -> u64 {
+        self.drained
+    }
+}
+
 /// Two-slot comp/comm rotation: stash tick `t+1`'s in-flight state while
 /// tick `t` computes, claim it back at the top of tick `t+1` (Cannon's
 /// `mpi_waitall` double buffering, §2).
@@ -303,6 +386,8 @@ pub struct TickWindow<H> {
 }
 
 impl<H> TickWindow<H> {
+    // An empty window is a meaningful start state, not a "default"; a
+    // Default impl would suggest blanket derive semantics it lacks.
     #[allow(clippy::new_without_default)]
     pub fn new() -> Self {
         Self {
@@ -463,6 +548,28 @@ mod tests {
             drop(a);
             c.win_free("w");
         });
+    }
+
+    #[test]
+    fn submission_queue_is_fifo_and_tracks_bytes() {
+        let mut q: SubmissionQueue<u32> = SubmissionQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.drain_next(), None);
+        q.submit(10, 100);
+        q.submit(20, 50);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.bytes_live(), 150);
+        assert_eq!(q.peak_bytes(), 150);
+        assert_eq!(q.drain_next(), Some(10));
+        assert_eq!(q.bytes_live(), 50);
+        q.submit(30, 25);
+        assert_eq!(q.drain_next(), Some(20));
+        assert_eq!(q.drain_next(), Some(30));
+        assert_eq!(q.drain_next(), None);
+        assert_eq!(q.bytes_live(), 0);
+        assert_eq!(q.peak_bytes(), 150);
+        assert_eq!(q.submitted(), 3);
+        assert_eq!(q.drained(), 3);
     }
 
     #[test]

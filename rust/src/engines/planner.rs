@@ -44,6 +44,7 @@
 use crate::dist::grid::ProcGrid;
 use crate::dist::topology25d::Topology25d;
 use crate::engines::multiply::Engine;
+use crate::local::dispatch::KernelModel;
 use crate::perfmodel::machine::MachineModel;
 use crate::perfmodel::replay::{
     build_rank_log, build_rank_log_symbolic, modeled_peak_memory, paper_l_values, scale_log_flops,
@@ -253,6 +254,13 @@ pub struct Planner {
     /// stage that produced `flop_imbalance`, charged up front and
     /// amortized over the spec's `n_mults` when pricing candidates.
     pub rebalance_migration_bytes: u64,
+    /// Per-shape calibrated kernel throughput
+    /// ([`KernelModel`], fed from the dispatch registry or its
+    /// deterministic model).  When set, candidate compute is priced at
+    /// the calibrated rate of the spec's block shape instead of the
+    /// scalar `machine.flop_rate`, so a small-block workload (heavy
+    /// per-stack overhead) ranks differently from a large-block one.
+    pub kernel_model: Option<KernelModel>,
 }
 
 /// Aspect ratio (long/short side) of the squarest grid above which a
@@ -283,7 +291,15 @@ impl Planner {
             symbolic_traffic: false,
             flop_imbalance: 1.0,
             rebalance_migration_bytes: 0,
+            kernel_model: None,
         }
+    }
+
+    /// Builder: price candidate compute with per-shape calibrated
+    /// kernel throughput (see [`Planner::kernel_model`]).
+    pub fn with_kernel_model(mut self, model: KernelModel) -> Self {
+        self.kernel_model = Some(model);
+        self
     }
 
     /// Builder: set the Eq. 6 per-process memory cap in bytes.
@@ -391,7 +407,18 @@ impl Planner {
                     // the validated factor.
                     let l = Topology25d::new_or_fallback(grid, engine.l()).l;
                     for &threads in &self.thread_candidates {
-                        let machine = self.machine.with_threads(threads);
+                        // Per-shape pricing: substitute the calibrated
+                        // throughput of the spec's block shape for the
+                        // scalar base rate, then apply the thread
+                        // scaling on top — the same composition the
+                        // executor realizes (dispatch choice × Amdahl).
+                        let mut base = self.machine;
+                        if let Some(km) = &self.kernel_model {
+                            let bs = spec.block_size;
+                            base.flop_rate =
+                                km.effective_rate(bs, bs, bs, base.flop_rate);
+                        }
+                        let machine = base.with_threads(threads);
                         let mut modeled = model_rank_time(&log, &machine);
                         modeled.comm_s += migration_s;
                         modeled.total_s += migration_s;
@@ -730,6 +757,43 @@ mod tests {
         // a rebalanced plan (post-imbalance 1.0 + migration) must beat
         // the skewed baseline whenever the payback is real
         assert!(migrated < skewed, "amortized migration beats 2x skew here");
+    }
+
+    #[test]
+    fn kernel_model_prices_per_shape_compute() {
+        use crate::local::dispatch::{modeled_efficiency, KernelModel};
+
+        // A 23-block spec priced with the modeled kernel table must
+        // slow its compute by exactly the 23^3 fixed-kernel efficiency
+        // relative to the ideal scalar rate (single-thread candidates,
+        // so Amdahl does not obscure the ratio).
+        let spec = BenchSpec::observed("km", 16, 23, 0.5);
+        let machine = compute_dominated_machine();
+        let base = Planner::new(machine, 16).with_thread_candidates(vec![1]);
+        let tuned = base
+            .clone()
+            .with_kernel_model(KernelModel::modeled(&machine));
+        let ideal = base.plan(&spec).unwrap();
+        let priced = tuned.plan(&spec).unwrap();
+        let eff = modeled_efficiency(23, 23, 23, true);
+        let expect = ideal.choice.modeled.comp_s / eff;
+        let got = priced
+            .best_feasible_on_grid(ideal.choice.grid)
+            .expect("same grid priced in both plans")
+            .modeled
+            .comp_s;
+        let rel = (got - expect).abs() / expect;
+        assert!(
+            rel < 0.05,
+            "per-shape pricing off: got {got}, expected {expect} (eff {eff})"
+        );
+
+        // Shapes without a calibrated rate fall back to the scalar
+        // machine rate: an off-table block size prices identically.
+        let odd = BenchSpec::observed("km-odd", 16, 7, 0.5);
+        let a = base.plan(&odd).unwrap().best_feasible_s();
+        let b = tuned.plan(&odd).unwrap().best_feasible_s();
+        assert!((a - b).abs() <= a * 1e-12, "fallback rate drifted: {a} vs {b}");
     }
 
     #[test]

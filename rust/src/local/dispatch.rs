@@ -1,0 +1,652 @@
+//! Per-shape kernel dispatch and autotuning — the LIBSMM/LIBCUSMM
+//! specialization layer (paper §2; DBCSR on Xeon Phi, arXiv:1708.03604).
+//!
+//! The stack-flow executors bin products into homogeneous `(bm,bk,bn)`
+//! stacks; this module decides *which kernel body* runs each stack:
+//!
+//! * [`gemm_fixed`] — monomorphized fixed-shape microkernels
+//!   (macro-instantiated for the paper's 6/23/32 block sizes and their
+//!   cross products).  Constant trip counts let LLVM fully unroll and
+//!   vectorize the inner loops; the accumulation order per C element is
+//!   *identical* to [`gemm_acc`] (ascending `p`, one fused
+//!   multiply-then-add rounding step per product term), so specialized
+//!   and generic kernels are bitwise interchangeable.
+//! * [`KernelRegistry`] — autotunes each observed shape on first use and
+//!   caches the winning variant in a dispatch table shared through the
+//!   multiplication session.  Calibration is deterministic in simulated
+//!   runs ([`Calibration::Modeled`] prices variants as a pure function
+//!   of shape on the modeled machine, so every rank and worker thread
+//!   resolves the same table) and measured natively
+//!   ([`Calibration::Measured`] times real cycles per candidate).
+//! * [`KernelModel`] — the planner-facing snapshot: per-shape calibrated
+//!   throughput that replaces the scalar machine flop-rate when pricing
+//!   candidates (`Planner::with_kernel_model`), fed from the `by_dims`
+//!   flop histogram via [`KernelModel::effective_rate_for_mix`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::local::batch::DimsFlops;
+use crate::local::microkernel::{gemm_acc, gemm_flops};
+use crate::perfmodel::machine::MachineModel;
+use crate::util::prng::Pcg64;
+
+/// Uniform signature shared by the generic kernel and every fixed-shape
+/// variant: `c += a · b` for row-major `m×k · k×n` blocks.
+pub type KernelFn = fn(usize, usize, usize, &[f64], &[f64], &mut [f64]);
+
+/// Variant label of the generic fallback kernel.
+pub const GENERIC_VARIANT: &str = "generic";
+
+/// Fixed-shape microkernel: `M/K/N` are compile-time constants, so every
+/// loop below has a constant trip count — LLVM fully unrolls and
+/// vectorizes them with no remainder branches and no bounds checks (the
+/// slice-length pins make every index statically in range), and the
+/// constant `N` lets the four C rows stay register-resident across the
+/// `p` loop.  The loop structure is *the same* 4/2/1-row register
+/// blocking as [`gemm_acc`]: per C element the accumulation is
+/// ascending-`p` with one rounding per multiply and one per add, the
+/// identical floating-point sequence — so specialized and generic
+/// kernels are bitwise interchangeable.
+pub fn gemm_fixed<const M: usize, const K: usize, const N: usize>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    debug_assert_eq!((m, k, n), (M, K, N), "dispatched fixed kernel to wrong shape");
+    let _ = (m, k, n);
+    // Slice-length pins: after these, every index below is statically in
+    // bounds, so the unrolled body carries no bounds checks.
+    let a = &a[..M * K];
+    let b = &b[..K * N];
+    let c = &mut c[..M * N];
+    let mut i = 0;
+    while i + 4 <= M {
+        let (c01, c23) = c[i * N..(i + 4) * N].split_at_mut(2 * N);
+        let (c0, c1) = c01.split_at_mut(N);
+        let (c2, c3) = c23.split_at_mut(N);
+        for p in 0..K {
+            let a0 = a[i * K + p];
+            let a1 = a[(i + 1) * K + p];
+            let a2 = a[(i + 2) * K + p];
+            let a3 = a[(i + 3) * K + p];
+            let brow = &b[p * N..(p + 1) * N];
+            for j in 0..N {
+                let bv = brow[j];
+                c0[j] += a0 * bv;
+                c1[j] += a1 * bv;
+                c2[j] += a2 * bv;
+                c3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    if i + 2 <= M {
+        let (c0, c1) = c[i * N..(i + 2) * N].split_at_mut(N);
+        for p in 0..K {
+            let a0 = a[i * K + p];
+            let a1 = a[(i + 1) * K + p];
+            let brow = &b[p * N..(p + 1) * N];
+            for j in 0..N {
+                let bv = brow[j];
+                c0[j] += a0 * bv;
+                c1[j] += a1 * bv;
+            }
+        }
+        i += 2;
+    }
+    while i < M {
+        let crow = &mut c[i * N..(i + 1) * N];
+        for p in 0..K {
+            let aip = a[i * K + p];
+            let brow = &b[p * N..(p + 1) * N];
+            for j in 0..N {
+                crow[j] += aip * brow[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+macro_rules! fixed_kernel_table {
+    ($( ($m:literal, $k:literal, $n:literal) ),+ $(,)?) => {
+        /// Dispatch table of monomorphized fixed-shape kernels: the
+        /// paper's 6/23/32 block sizes and all their cross products.
+        pub const FIXED_KERNELS: &[((u16, u16, u16), KernelFn)] = &[
+            $( (($m, $k, $n), gemm_fixed::<$m, $k, $n>) ),+
+        ];
+    };
+}
+
+fixed_kernel_table![
+    (6, 6, 6),
+    (6, 6, 23),
+    (6, 6, 32),
+    (6, 23, 6),
+    (6, 23, 23),
+    (6, 23, 32),
+    (6, 32, 6),
+    (6, 32, 23),
+    (6, 32, 32),
+    (23, 6, 6),
+    (23, 6, 23),
+    (23, 6, 32),
+    (23, 23, 6),
+    (23, 23, 23),
+    (23, 23, 32),
+    (23, 32, 6),
+    (23, 32, 23),
+    (23, 32, 32),
+    (32, 6, 6),
+    (32, 6, 23),
+    (32, 6, 32),
+    (32, 23, 6),
+    (32, 23, 23),
+    (32, 23, 32),
+    (32, 32, 6),
+    (32, 32, 23),
+    (32, 32, 32),
+];
+
+/// Look up the fixed-shape kernel for `(bm,bk,bn)`, if one was
+/// instantiated.  Returns the variant label (`"fixed_MxKxN"` style) and
+/// the function pointer.
+pub fn fixed_kernel_for(bm: usize, bk: usize, bn: usize) -> Option<(&'static str, KernelFn)> {
+    let key = (bm as u16, bk as u16, bn as u16);
+    if bm > u16::MAX as usize || bk > u16::MAX as usize || bn > u16::MAX as usize {
+        return None;
+    }
+    FIXED_KERNELS
+        .iter()
+        .find(|(shape, _)| *shape == key)
+        .map(|&(shape, f)| (fixed_variant_name(shape), f))
+}
+
+/// Static variant label for a fixed kernel shape (lives for 'static so
+/// [`KernelChoice`] stays `Copy`).
+fn fixed_variant_name(shape: (u16, u16, u16)) -> &'static str {
+    macro_rules! names {
+        ($( ($m:literal, $k:literal, $n:literal) ),+ $(,)?) => {
+            match shape {
+                $( ($m, $k, $n) => concat!("fixed_", $m, "x", $k, "x", $n), )+
+                _ => "fixed",
+            }
+        };
+    }
+    names![
+        (6, 6, 6),
+        (6, 6, 23),
+        (6, 6, 32),
+        (6, 23, 6),
+        (6, 23, 23),
+        (6, 23, 32),
+        (6, 32, 6),
+        (6, 32, 23),
+        (6, 32, 32),
+        (23, 6, 6),
+        (23, 6, 23),
+        (23, 6, 32),
+        (23, 23, 6),
+        (23, 23, 23),
+        (23, 23, 32),
+        (23, 32, 6),
+        (23, 32, 23),
+        (23, 32, 32),
+        (32, 6, 6),
+        (32, 6, 23),
+        (32, 6, 32),
+        (32, 23, 6),
+        (32, 23, 23),
+        (32, 23, 32),
+        (32, 32, 6),
+        (32, 32, 23),
+        (32, 32, 32),
+    ]
+}
+
+/// How the registry prices candidate kernels for a shape.
+#[derive(Clone, Debug)]
+pub enum Calibration {
+    /// Deterministic closed-form model on the given machine: every rank
+    /// and worker thread computes the same table, so simulated runs stay
+    /// reproducible.  Efficiency grows with the geometric-mean block
+    /// edge `s = (m·k·n)^(1/3)`: the generic kernel pays per-iteration
+    /// loop/remainder overhead worth ~8 inner-loop slots
+    /// (`eff = s/(s+8)`), the unrolled fixed kernels ~2 (`s/(s+2)`).
+    Modeled(MachineModel),
+    /// Time each candidate on the host for `reps` repetitions and keep
+    /// the faster one.  Used by native benches; not deterministic.
+    Measured {
+        /// Timed kernel invocations per candidate.
+        reps: usize,
+    },
+}
+
+/// Closed-form efficiency of a kernel variant on shape `(m,k,n)` under
+/// [`Calibration::Modeled`]; exposed so the planner-side
+/// [`KernelModel`] and engine-side registry agree exactly.
+pub fn modeled_efficiency(m: usize, k: usize, n: usize, fixed: bool) -> f64 {
+    let s = ((m * k * n) as f64).cbrt();
+    let overhead = if fixed { 2.0 } else { 8.0 };
+    s / (s + overhead)
+}
+
+/// The tuned winner for one shape.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelChoice {
+    /// Variant label (`"generic"` or `"fixed_MxKxN"`).
+    pub variant: &'static str,
+    /// The kernel body stacks of this shape dispatch through.
+    pub kernel: KernelFn,
+    /// Calibrated throughput in FLOP/s (modeled or measured).
+    pub rate: f64,
+    /// One-time autotune cost for this shape in seconds (0 when modeled).
+    pub autotune_s: f64,
+}
+
+/// Per-shape usage counters accumulated by the executors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelUse {
+    /// Kernel launches (one per dispatched stack chunk).
+    pub dispatches: u64,
+    /// Individual block products executed.
+    pub products: u64,
+    /// FLOPs executed through this shape.
+    pub flops: f64,
+    /// Wall-clock kernel-seconds spent in this shape's stacks (summed
+    /// across worker threads; exact for single-threaded sections).
+    pub exec_s: f64,
+}
+
+/// One row of the `kernels` report: tuned choice plus usage.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelShapeReport {
+    /// Block shape `(bm, bk, bn)`.
+    pub dims: (u16, u16, u16),
+    /// Winning variant label.
+    pub variant: &'static str,
+    /// Calibrated throughput in FLOP/s.
+    pub rate: f64,
+    /// One-time autotune cost in seconds.
+    pub autotune_s: f64,
+    /// Usage counters for this shape.
+    pub used: KernelUse,
+}
+
+impl KernelShapeReport {
+    /// Executed GFLOP/s for this shape (0 when no kernel time was
+    /// recorded, e.g. simulated runs).
+    pub fn executed_gflops(&self) -> f64 {
+        if self.used.exec_s > 0.0 {
+            self.used.flops / self.used.exec_s / 1.0e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-shape autotuned dispatch table, shared (`Arc`) through
+/// `MultSession` → `MultiplyConfig` → both engines → the stack-flow
+/// executors.  First use of a shape runs the calibration and caches the
+/// winner; subsequent dispatches are a map lookup.
+#[derive(Debug)]
+pub struct KernelRegistry {
+    calibration: Calibration,
+    table: Mutex<BTreeMap<(u16, u16, u16), KernelChoice>>,
+    used: Mutex<BTreeMap<(u16, u16, u16), KernelUse>>,
+}
+
+impl KernelRegistry {
+    /// Registry with the given calibration policy.
+    pub fn new(calibration: Calibration) -> Self {
+        KernelRegistry {
+            calibration,
+            table: Mutex::new(BTreeMap::new()),
+            used: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Deterministic registry for simulated runs.
+    pub fn modeled(machine: MachineModel) -> Self {
+        KernelRegistry::new(Calibration::Modeled(machine))
+    }
+
+    /// Cycle-measuring registry for native benches.
+    pub fn measured(reps: usize) -> Self {
+        KernelRegistry::new(Calibration::Measured { reps: reps.max(1) })
+    }
+
+    /// Resolve the kernel for a shape, autotuning on first use.
+    pub fn select(&self, bm: usize, bk: usize, bn: usize) -> KernelChoice {
+        let key = (bm as u16, bk as u16, bn as u16);
+        let mut table = self.table.lock().unwrap();
+        if let Some(choice) = table.get(&key) {
+            return *choice;
+        }
+        let choice = self.tune(bm, bk, bn);
+        table.insert(key, choice);
+        choice
+    }
+
+    fn tune(&self, bm: usize, bk: usize, bn: usize) -> KernelChoice {
+        let fixed = fixed_kernel_for(bm, bk, bn);
+        match &self.calibration {
+            Calibration::Modeled(machine) => {
+                let generic_rate = machine.flop_rate * modeled_efficiency(bm, bk, bn, false);
+                match fixed {
+                    Some((variant, kernel)) => {
+                        let rate = machine.flop_rate * modeled_efficiency(bm, bk, bn, true);
+                        if rate > generic_rate {
+                            KernelChoice { variant, kernel, rate, autotune_s: 0.0 }
+                        } else {
+                            KernelChoice {
+                                variant: GENERIC_VARIANT,
+                                kernel: gemm_acc,
+                                rate: generic_rate,
+                                autotune_s: 0.0,
+                            }
+                        }
+                    }
+                    None => KernelChoice {
+                        variant: GENERIC_VARIANT,
+                        kernel: gemm_acc,
+                        rate: generic_rate,
+                        autotune_s: 0.0,
+                    },
+                }
+            }
+            Calibration::Measured { reps } => {
+                let (generic_rate, generic_s) = time_kernel(gemm_acc, bm, bk, bn, *reps);
+                let mut choice = KernelChoice {
+                    variant: GENERIC_VARIANT,
+                    kernel: gemm_acc,
+                    rate: generic_rate,
+                    autotune_s: generic_s,
+                };
+                if let Some((variant, kernel)) = fixed {
+                    let (rate, fixed_s) = time_kernel(kernel, bm, bk, bn, *reps);
+                    choice.autotune_s += fixed_s;
+                    if rate > choice.rate {
+                        choice.variant = variant;
+                        choice.kernel = kernel;
+                        choice.rate = rate;
+                    }
+                }
+                choice
+            }
+        }
+    }
+
+    /// Accumulate usage counters for a shape (called by the executors
+    /// after draining a stack).
+    pub fn record_use(
+        &self,
+        bm: usize,
+        bk: usize,
+        bn: usize,
+        dispatches: u64,
+        products: u64,
+        exec_s: f64,
+    ) {
+        let key = (bm as u16, bk as u16, bn as u16);
+        let mut used = self.used.lock().unwrap();
+        let u = used.entry(key).or_default();
+        u.dispatches += dispatches;
+        u.products += products;
+        u.flops += products as f64 * gemm_flops(bm, bk, bn);
+        u.exec_s += exec_s;
+    }
+
+    /// Snapshot of every tuned shape with its usage, sorted by shape.
+    pub fn report(&self) -> Vec<KernelShapeReport> {
+        let table = self.table.lock().unwrap();
+        let used = self.used.lock().unwrap();
+        table
+            .iter()
+            .map(|(&dims, choice)| KernelShapeReport {
+                dims,
+                variant: choice.variant,
+                rate: choice.rate,
+                autotune_s: choice.autotune_s,
+                used: used.get(&dims).copied().unwrap_or_default(),
+            })
+            .collect()
+    }
+
+    /// Total one-time autotune cost across tuned shapes, in seconds.
+    pub fn total_autotune_s(&self) -> f64 {
+        self.table.lock().unwrap().values().map(|c| c.autotune_s).sum()
+    }
+}
+
+/// Time `reps` invocations of a kernel on deterministic pseudo-random
+/// operands; returns `(flop_rate, elapsed_s)`.
+fn time_kernel(kernel: KernelFn, m: usize, k: usize, n: usize, reps: usize) -> (f64, f64) {
+    let mut rng = Pcg64::new(0x5EED_0000 ^ (((m as u64) << 20) | ((k as u64) << 10) | (n as u64)));
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0; m * n];
+    // Warm the caches and the branch predictor off the clock.
+    kernel(m, k, n, &a, &b, &mut c);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        kernel(m, k, n, std::hint::black_box(&a), std::hint::black_box(&b), &mut c);
+    }
+    std::hint::black_box(&mut c);
+    let elapsed = t0.elapsed().as_secs_f64().max(1.0e-9);
+    (gemm_flops(m, k, n) * reps as f64 / elapsed, elapsed)
+}
+
+/// Planner-facing per-shape throughput table: a snapshot of calibrated
+/// rates that replaces the scalar machine flop-rate when pricing
+/// candidates (`Planner::with_kernel_model`).
+#[derive(Clone, Debug, Default)]
+pub struct KernelModel {
+    rates: BTreeMap<(u16, u16, u16), f64>,
+}
+
+impl KernelModel {
+    /// Deterministic model on the given machine: every fixed-kernel
+    /// shape priced exactly as a [`Calibration::Modeled`] registry would
+    /// tune it.
+    pub fn modeled(machine: &MachineModel) -> Self {
+        let mut rates = BTreeMap::new();
+        for &((m, k, n), _) in FIXED_KERNELS {
+            let eff = modeled_efficiency(m as usize, k as usize, n as usize, true);
+            rates.insert((m, k, n), machine.flop_rate * eff);
+        }
+        KernelModel { rates }
+    }
+
+    /// Snapshot of a tuned registry's per-shape rates (native path:
+    /// measured cycles feed the planner).
+    pub fn from_registry(registry: &KernelRegistry) -> Self {
+        let rates = registry
+            .report()
+            .into_iter()
+            .map(|r| (r.dims, r.rate))
+            .collect();
+        KernelModel { rates }
+    }
+
+    /// Insert or override the rate for one shape.
+    pub fn set_rate(&mut self, bm: usize, bk: usize, bn: usize, rate: f64) {
+        self.rates
+            .insert((bm as u16, bk as u16, bn as u16), rate);
+    }
+
+    /// Calibrated throughput for a shape, falling back to `base` (the
+    /// scalar machine flop-rate) for shapes the model has not seen.
+    pub fn effective_rate(&self, bm: usize, bk: usize, bn: usize, base: f64) -> f64 {
+        self.rates
+            .get(&(bm as u16, bk as u16, bn as u16))
+            .copied()
+            .unwrap_or(base)
+    }
+
+    /// Flop-weighted harmonic-mean throughput of a shape mix (the
+    /// `by_dims` histogram): `total_flops / Σ flops_i / rate_i`.  This
+    /// is the rate at which the whole mix computes, so a 23³-dominated
+    /// workload prices faster per flop than a 6³ one.
+    pub fn effective_rate_for_mix(&self, mix: &[DimsFlops], base: f64) -> f64 {
+        let mut total = 0.0;
+        let mut weighted = 0.0;
+        for d in mix {
+            let rate = self.effective_rate(d.bm as usize, d.bk as usize, d.bn as usize, base);
+            total += d.flops;
+            weighted += d.flops / rate.max(1.0);
+        }
+        if weighted > 0.0 {
+            total / weighted
+        } else {
+            base
+        }
+    }
+
+    /// Number of shapes with calibrated rates.
+    pub fn len(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// True when no shape has a calibrated rate.
+    pub fn is_empty(&self) -> bool {
+        self.rates.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn fixed_kernels_cover_paper_cross_products() {
+        assert_eq!(FIXED_KERNELS.len(), 27);
+        for &s in &[6usize, 23, 32] {
+            for &t in &[6usize, 23, 32] {
+                for &u in &[6usize, 23, 32] {
+                    let (variant, _) = fixed_kernel_for(s, t, u).expect("missing fixed kernel");
+                    assert!(variant.starts_with("fixed_"), "variant {variant}");
+                }
+            }
+        }
+        assert!(fixed_kernel_for(7, 7, 7).is_none());
+    }
+
+    #[test]
+    fn fixed_kernels_bitwise_match_generic() {
+        let mut rng = Pcg64::new(42);
+        for &((m, k, n), kernel) in FIXED_KERNELS {
+            let (m, k, n) = (m as usize, k as usize, n as usize);
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut c_fixed: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut c_generic = c_fixed.clone();
+            kernel(m, k, n, &a, &b, &mut c_fixed);
+            gemm_acc(m, k, n, &a, &b, &mut c_generic);
+            assert!(
+                c_fixed.iter().zip(&c_generic).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fixed {m}x{k}x{n} not bitwise identical to generic"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_kernels_bitwise_match_generic_repeated_accumulation() {
+        // Accumulating several products into the same C block (the arena
+        // pattern) must also stay bitwise identical.
+        property("fixed vs generic accumulation", 7, 20, |rng, _| {
+            let shapes = [6usize, 23, 32];
+            let m = shapes[rng.usize_below(3)];
+            let k = shapes[rng.usize_below(3)];
+            let n = shapes[rng.usize_below(3)];
+            let (_, kernel) = fixed_kernel_for(m, k, n).unwrap();
+            let mut c_fixed = vec![0.0; m * n];
+            let mut c_generic = vec![0.0; m * n];
+            for _ in 0..3 {
+                let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+                kernel(m, k, n, &a, &b, &mut c_fixed);
+                gemm_acc(m, k, n, &a, &b, &mut c_generic);
+            }
+            for (x, y) in c_fixed.iter().zip(&c_generic) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("accumulation diverged for {m}x{k}x{n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn modeled_registry_is_deterministic_and_prefers_fixed() {
+        let machine = MachineModel::piz_daint(10.0e9);
+        let reg = KernelRegistry::modeled(machine);
+        let c1 = reg.select(6, 6, 6);
+        let c2 = reg.select(6, 6, 6);
+        assert_eq!(c1.variant, "fixed_6x6x6");
+        assert_eq!(c1.rate.to_bits(), c2.rate.to_bits());
+        assert_eq!(c1.autotune_s, 0.0);
+        // Unknown shape falls back to the generic kernel at modeled
+        // generic efficiency.
+        let g = reg.select(5, 5, 5);
+        assert_eq!(g.variant, GENERIC_VARIANT);
+        assert!(g.rate < machine.flop_rate);
+        // Larger blocks run closer to peak than tiny ones.
+        let big = reg.select(32, 32, 32);
+        assert!(big.rate > c1.rate);
+    }
+
+    #[test]
+    fn measured_registry_tunes_and_reports() {
+        let reg = KernelRegistry::measured(3);
+        let c = reg.select(6, 6, 6);
+        assert!(c.rate > 0.0);
+        assert!(c.autotune_s > 0.0, "measured calibration must record its cost");
+        reg.record_use(6, 6, 6, 2, 11, 1.0e-3);
+        let report = reg.report();
+        assert_eq!(report.len(), 1);
+        assert_eq!(report[0].dims, (6, 6, 6));
+        assert_eq!(report[0].used.dispatches, 2);
+        assert_eq!(report[0].used.products, 11);
+        assert!((report[0].used.flops - 11.0 * gemm_flops(6, 6, 6)).abs() < 1.0e-9);
+        assert!(report[0].executed_gflops() > 0.0);
+        assert!(reg.total_autotune_s() >= c.autotune_s);
+    }
+
+    #[test]
+    fn kernel_model_mix_rate_is_flop_weighted_harmonic_mean() {
+        let mut model = KernelModel::default();
+        model.set_rate(6, 6, 6, 1.0e9);
+        model.set_rate(32, 32, 32, 4.0e9);
+        let mix = [
+            DimsFlops { bm: 6, bk: 6, bn: 6, products: 1, flops: 2.0e9 },
+            DimsFlops { bm: 32, bk: 32, bn: 32, products: 1, flops: 2.0e9 },
+        ];
+        // Equal flops: harmonic mean of 1 and 4 GFLOP/s = 1.6 GFLOP/s.
+        let rate = model.effective_rate_for_mix(&mix, 9.9e9);
+        assert!((rate - 1.6e9).abs() / 1.6e9 < 1.0e-12, "rate {rate}");
+        // Unknown shapes price at the base rate.
+        let unknown = [DimsFlops { bm: 5, bk: 5, bn: 5, products: 1, flops: 1.0 }];
+        assert_eq!(model.effective_rate_for_mix(&unknown, 7.0e9), 7.0e9);
+        assert_eq!(model.effective_rate_for_mix(&[], 7.0e9), 7.0e9);
+    }
+
+    #[test]
+    fn kernel_model_matches_modeled_registry() {
+        let machine = MachineModel::piz_daint(10.0e9);
+        let model = KernelModel::modeled(&machine);
+        let reg = KernelRegistry::modeled(machine);
+        for &s in &[6usize, 23, 32] {
+            let choice = reg.select(s, s, s);
+            let rate = model.effective_rate(s, s, s, machine.flop_rate);
+            assert_eq!(choice.rate.to_bits(), rate.to_bits(), "planner/engine disagree at {s}");
+        }
+        assert_eq!(model.len(), FIXED_KERNELS.len());
+        assert!(!model.is_empty());
+    }
+}

@@ -3,9 +3,13 @@
 //! The paper's node-local hot spot processes *batches* of small
 //! matrix-matrix multiplications with specialized kernels (LIBSMM /
 //! LIBCUSMM [13, 20]) instead of vendor BLAS.  This module provides the
-//! portable CPU microkernel used inside the rank threads; the AOT Pallas
-//! kernel (`runtime/gemm.rs`) is the accelerator-shaped equivalent and is
-//! validated to produce identical results.
+//! portable *generic* CPU microkernel used inside the rank threads; the
+//! AOT Pallas kernel (`runtime/gemm.rs`) is the accelerator-shaped
+//! equivalent and is validated to produce identical results.  The hot
+//! shapes don't run this loop directly anymore: `local/dispatch.rs`
+//! monomorphizes it per `(m, k, n)` (`gemm_fixed`, same accumulation
+//! order — bitwise interchangeable) and a [`crate::local::dispatch::KernelRegistry`]
+//! autotunes which variant each homogeneous stack dispatches to.
 
 /// Which engine executes the batched block products.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -32,6 +36,12 @@ pub enum GemmBackend {
 /// §Perf for the current single-kernel and whole-path numbers and the
 /// `threads_per_rank` scaling table (regenerate both with `cargo bench
 /// --bench local_multiply`, which writes `BENCH_local_multiply.json`).
+/// On the paper's block sizes the autotuned fixed-shape variants in
+/// [`crate::local::dispatch`] beat this generic loop by ≥1.3× on the
+/// mix (gated by `cargo bench --bench kernel_dispatch`, which writes
+/// `BENCH_kernel_dispatch.json`); this kernel remains the fallback for
+/// off-table shapes and the bitwise reference the fixed kernels must
+/// reproduce exactly.
 #[inline]
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);

@@ -5,6 +5,7 @@
 //! stacks of [`stacks`]).
 
 pub mod batch;
+pub mod dispatch;
 pub mod microkernel;
 pub mod stackflow;
 pub mod stacks;

@@ -21,9 +21,14 @@
 //!   and the per-block accumulation order is independent of the thread
 //!   count (results are bitwise reproducible across `threads`).
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::blocks::arena::{ArenaGeometry, CArena};
 use crate::blocks::panel::Panel;
 use crate::local::batch::{LocalMultStats, ProductTask};
+use crate::local::dispatch::{KernelFn, KernelRegistry};
 use crate::local::microkernel::{gemm_acc, gemm_flops};
 
 /// Nominal dispatch batch size of the native path (DBCSR's stack size):
@@ -83,7 +88,6 @@ pub fn build_stacks(
     tasks: &[ProductTask],
     arena: &mut CArena,
 ) -> Vec<Stack> {
-    use std::collections::BTreeMap;
     let mut bins: BTreeMap<(u16, u16, u16), Vec<StackEntry>> = BTreeMap::new();
     for t in tasks {
         let aen = &a.entries[t.a_entry];
@@ -110,6 +114,20 @@ pub fn build_stacks(
             entries,
         })
         .collect()
+}
+
+/// Number of kernel dispatches and padded dispatch slots for a stack of
+/// `len` products batched at `capacity`: `ceil(len / capacity)`
+/// dispatches, *every* dispatch padded to the full capacity — including
+/// the last partial one.  This is the exact per-dispatch accounting the
+/// `stack_fill` statistic divides by, shared by the native path
+/// ([`STACK_CAPACITY`]) and the packed PJRT path (artifact capacity).
+pub fn dispatch_slots(len: usize, capacity: usize) -> (u64, u64) {
+    if len == 0 || capacity == 0 {
+        return (0, 0);
+    }
+    let dispatches = ((len + capacity - 1) / capacity) as u64;
+    (dispatches, dispatches * capacity as u64)
 }
 
 /// Split each stack's entries by C-block owner (`ri % workers`),
@@ -166,22 +184,42 @@ pub trait StackExecutor {
 /// per-tick GEMM work it parallelizes, and scoped borrows keep the
 /// panels/arena lock-free.  A persistent per-rank pool is the obvious
 /// next step if profiles ever show the spawn cost at small tick sizes.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct NativeStackExecutor {
     /// Worker threads per rank (clamped to ≥ 1).
     pub threads: usize,
+    /// Per-shape autotuned dispatch table; `None` runs every stack
+    /// through the generic microkernel.
+    pub registry: Option<Arc<KernelRegistry>>,
 }
 
 impl NativeStackExecutor {
     pub fn new(threads: usize) -> Self {
         Self {
             threads: threads.max(1),
+            registry: None,
         }
     }
 
     /// The single-threaded configuration (oracle / default engine path).
     pub fn single() -> Self {
-        Self { threads: 1 }
+        Self::new(1)
+    }
+
+    /// Dispatch stacks through the given per-shape kernel registry
+    /// (autotuned on first use) instead of the generic microkernel.
+    pub fn with_registry(mut self, registry: Arc<KernelRegistry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+}
+
+/// Resolve the kernel body for one stack: the registry's tuned choice,
+/// or the generic microkernel when dispatch is off.
+fn resolve_kernel(registry: Option<&KernelRegistry>, s: &Stack) -> KernelFn {
+    match registry {
+        Some(reg) => reg.select(s.bm as usize, s.bk as usize, s.bn as usize).kernel,
+        None => gemm_acc,
     }
 }
 
@@ -198,17 +236,26 @@ struct Worker<'p, 'v> {
 }
 
 impl Worker<'_, '_> {
-    fn run(&mut self, stack: &Stack, stats: &mut LocalMultStats) {
+    /// Execute one stack through `kernel`; returns the wall-clock
+    /// seconds spent in the entry loop when `timed` (0.0 otherwise).
+    fn run(
+        &mut self,
+        stack: &Stack,
+        kernel: KernelFn,
+        timed: bool,
+        stats: &mut LocalMultStats,
+    ) -> f64 {
         if stack.is_empty() {
-            return;
+            return 0.0;
         }
+        let t0 = if timed { Some(Instant::now()) } else { None };
         let (bm, bk, bn) = (stack.bm as usize, stack.bk as usize, stack.bn as usize);
         let per = stack.flops_per_product();
         for e in &stack.entries {
             let ri = e.ri as usize;
             debug_assert_eq!(ri % self.stride, self.worker, "entry on wrong worker");
             let off = self.geom.offset_in_row(ri, e.ci as usize);
-            gemm_acc(
+            kernel(
                 bm,
                 bk,
                 bn,
@@ -221,6 +268,7 @@ impl Worker<'_, '_> {
         stats.products += n;
         stats.flops += n as f64 * per;
         stats.record_dims(stack.bm, stack.bk, stack.bn, n, n as f64 * per);
+        t0.map_or(0.0, |t| t.elapsed().as_secs_f64())
     }
 }
 
@@ -238,15 +286,26 @@ impl StackExecutor for NativeStackExecutor {
         stats: &mut LocalMultStats,
     ) -> anyhow::Result<()> {
         // Dispatch accounting on the *pre-partition* stacks, so the
-        // stack-fill statistics are independent of the worker count.
+        // stack-fill statistics are independent of the worker count;
+        // every dispatch is padded to STACK_CAPACITY slots, including
+        // the last partial one.
+        let registry = self.registry.as_deref();
+        let timed = registry.is_some();
+        let mut per_shape: BTreeMap<(u16, u16, u16), (u64, u64)> = BTreeMap::new();
         for s in stacks {
             if s.is_empty() {
                 continue;
             }
-            let nchunks = (s.len() + STACK_CAPACITY - 1) / STACK_CAPACITY;
-            stats.stacks += nchunks as u64;
-            stats.stack_slots += (nchunks * STACK_CAPACITY) as u64;
+            let (dispatches, slots) = dispatch_slots(s.len(), STACK_CAPACITY);
+            stats.stacks += dispatches;
+            stats.stack_slots += slots;
+            if timed {
+                let e = per_shape.entry((s.bm, s.bk, s.bn)).or_insert((0, 0));
+                e.0 += dispatches;
+                e.1 += s.len() as u64;
+            }
         }
+        let mut exec_s: BTreeMap<(u16, u16, u16), f64> = BTreeMap::new();
         let (geom, views) = arena.split_rows();
         let t = self.threads.min(geom.nrows()).max(1);
         if t == 1 {
@@ -260,42 +319,65 @@ impl StackExecutor for NativeStackExecutor {
             };
             let mut local = LocalMultStats::default();
             for s in stacks {
-                w.run(s, &mut local);
+                let dt = w.run(s, resolve_kernel(registry, s), timed, &mut local);
+                if timed {
+                    *exec_s.entry((s.bm, s.bk, s.bn)).or_insert(0.0) += dt;
+                }
             }
             stats.merge(&local);
-            return Ok(());
-        }
-        let parts = partition_stacks(stacks, t);
-        let mut per_rows: Vec<Vec<&mut [f64]>> = (0..t).map(|_| Vec::new()).collect();
-        for (ri, view) in views.into_iter().enumerate() {
-            per_rows[ri % t].push(view);
-        }
-        let results: Vec<LocalMultStats> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(t);
-            for (worker, (part, views)) in parts.iter().zip(per_rows).enumerate() {
-                handles.push(scope.spawn(move || {
-                    let mut w = Worker {
-                        a,
-                        b,
-                        geom,
-                        views,
-                        stride: t,
-                        worker,
-                    };
-                    let mut local = LocalMultStats::default();
-                    for s in part {
-                        w.run(s, &mut local);
-                    }
-                    local
-                }));
+        } else {
+            let parts = partition_stacks(stacks, t);
+            let mut per_rows: Vec<Vec<&mut [f64]>> = (0..t).map(|_| Vec::new()).collect();
+            for (ri, view) in views.into_iter().enumerate() {
+                per_rows[ri % t].push(view);
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("stack worker panicked"))
-                .collect()
-        });
-        for r in &results {
-            stats.merge(r);
+            type WorkerResult = (LocalMultStats, BTreeMap<(u16, u16, u16), f64>);
+            let results: Vec<WorkerResult> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(t);
+                for (worker, (part, views)) in parts.iter().zip(per_rows).enumerate() {
+                    handles.push(scope.spawn(move || {
+                        let mut w = Worker {
+                            a,
+                            b,
+                            geom,
+                            views,
+                            stride: t,
+                            worker,
+                        };
+                        let mut local = LocalMultStats::default();
+                        let mut secs: BTreeMap<(u16, u16, u16), f64> = BTreeMap::new();
+                        for s in part {
+                            let dt = w.run(s, resolve_kernel(registry, s), timed, &mut local);
+                            if timed {
+                                *secs.entry((s.bm, s.bk, s.bn)).or_insert(0.0) += dt;
+                            }
+                        }
+                        (local, secs)
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("stack worker panicked"))
+                    .collect()
+            });
+            for (r, secs) in &results {
+                stats.merge(r);
+                for (dims, dt) in secs {
+                    *exec_s.entry(*dims).or_insert(0.0) += dt;
+                }
+            }
+        }
+        if let Some(reg) = registry {
+            for (dims, (dispatches, products)) in &per_shape {
+                reg.record_use(
+                    dims.0 as usize,
+                    dims.1 as usize,
+                    dims.2 as usize,
+                    *dispatches,
+                    *products,
+                    exec_s.get(dims).copied().unwrap_or(0.0),
+                );
+            }
         }
         Ok(())
     }
@@ -415,6 +497,64 @@ mod tests {
                 0.0,
                 "worker partition must preserve per-block accumulation order"
             );
+        }
+    }
+
+    #[test]
+    fn dispatch_slots_pad_every_dispatch() {
+        assert_eq!(dispatch_slots(0, STACK_CAPACITY), (0, 0));
+        assert_eq!(dispatch_slots(5, 0), (0, 0), "zero capacity dispatches nothing");
+        let cap = STACK_CAPACITY as u64;
+        assert_eq!(dispatch_slots(1, STACK_CAPACITY), (1, cap));
+        assert_eq!(dispatch_slots(STACK_CAPACITY, STACK_CAPACITY), (1, cap));
+        assert_eq!(dispatch_slots(STACK_CAPACITY + 1, STACK_CAPACITY), (2, 2 * cap));
+        assert_eq!(dispatch_slots(2 * STACK_CAPACITY + 5, STACK_CAPACITY), (3, 3 * cap));
+        // stack_fill divides by the padded slots of *every* dispatch,
+        // the last partial one included.
+        let mut s = LocalMultStats::default();
+        let (dispatches, slots) = dispatch_slots(2 * STACK_CAPACITY + 5, STACK_CAPACITY);
+        s.products = 2 * cap + 5;
+        s.stacks = dispatches;
+        s.stack_slots = slots;
+        let want = (2.0 * cap as f64 + 5.0) / (3.0 * cap as f64);
+        assert!((s.stack_fill() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_dispatch_is_bitwise_identical_to_generic() {
+        use crate::local::dispatch::KernelRegistry;
+        use crate::perfmodel::machine::MachineModel;
+        let l = BlockLayout::from_sizes(vec![6, 23, 32, 6, 23, 32]);
+        let a = BlockCsrMatrix::random(&l, &l, 0.8, 9);
+        let b = BlockCsrMatrix::random(&l, &l, 0.8, 10);
+        let (pa, pb) = (matrix_to_panel(&a), matrix_to_panel(&b));
+        let machine = MachineModel::piz_daint(10.0e9);
+        for threads in [1usize, 4] {
+            let reg = Arc::new(KernelRegistry::modeled(machine));
+            let exec = NativeStackExecutor::new(threads).with_registry(reg.clone());
+            let mut acc = BlockAccumulator::new();
+            multiply_panels_stacked(&pa, &pb, -1.0, &mut acc, &exec).unwrap();
+            let c = acc
+                .into_matrix(a.row_layout_arc(), b.col_layout_arc())
+                .to_dense();
+            let mut acc_g = BlockAccumulator::new();
+            let generic = NativeStackExecutor::new(threads);
+            multiply_panels_stacked(&pa, &pb, -1.0, &mut acc_g, &generic).unwrap();
+            let c_g = acc_g
+                .into_matrix(a.row_layout_arc(), b.col_layout_arc())
+                .to_dense();
+            assert_eq!(
+                c.max_abs_diff(&c_g),
+                0.0,
+                "specialized kernels must be bitwise identical (threads={threads})"
+            );
+            let report = reg.report();
+            assert!(
+                report.iter().any(|r| r.variant.starts_with("fixed_")),
+                "paper shapes must dispatch through fixed kernels"
+            );
+            let products: u64 = report.iter().map(|r| r.used.products).sum();
+            assert!(products > 0, "executor must record per-shape usage");
         }
     }
 

@@ -12,10 +12,10 @@ use crate::blocks::arena::CArena;
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
 use crate::local::batch::ProductTask;
-use crate::local::stackflow::Stack;
+use crate::local::stackflow::{Stack, StackEntry};
 
 /// A packed batch ready for one kernel invocation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct PackedStack {
     /// `[n, bm, bk]` flattened, f32.
     pub a: Vec<f32>,
@@ -93,37 +93,80 @@ pub fn pack_stacks(
     (stacks, leftovers)
 }
 
-/// Pack one homogeneous [`Stack`] into fixed-capacity f32 stacks for the
-/// AOT kernel (chunking at `capacity`, zero-padding the tail) — the
-/// bridge from the stack-flow binning to the PJRT artifact's static
-/// shape.
-pub fn pack_stack(a: &Panel, b: &Panel, stack: &Stack, capacity: usize) -> Vec<PackedStack> {
-    let (bm, bk, bn) = (stack.bm as usize, stack.bk as usize, stack.bn as usize);
-    let mut out = Vec::new();
-    for chunk in stack.entries.chunks(capacity.max(1)) {
-        let mut ps = PackedStack {
-            a: vec![0.0; capacity * bm * bk],
-            b: vec![0.0; capacity * bk * bn],
-            targets: Vec::with_capacity(chunk.len()),
-            capacity,
-            bm,
-            bk,
-            bn,
-        };
-        for (slot, e) in chunk.iter().enumerate() {
+/// Grow-only scratch for the packed dispatch path: one session-held
+/// [`PackedStack`] staging buffer reused across dispatches, so steady
+/// state packs without allocating.  The buffers only ever grow (to the
+/// largest `capacity × shape` seen); `grows`/`reuses` make the
+/// allocation behavior assertable in the benches.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    buf: PackedStack,
+    /// Dispatches that had to grow a staging buffer.
+    pub grows: u64,
+    /// Dispatches served entirely from existing capacity.
+    pub reuses: u64,
+}
+
+impl PackScratch {
+    /// Stage one chunk (≤ `capacity` entries of one shape) into the
+    /// scratch buffer: zero-pads the tail exactly like [`pack_stack`],
+    /// reusing the allocations whenever they are already large enough.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_chunk(
+        &mut self,
+        a: &Panel,
+        b: &Panel,
+        entries: &[StackEntry],
+        bm: usize,
+        bk: usize,
+        bn: usize,
+        capacity: usize,
+    ) -> &PackedStack {
+        debug_assert!(entries.len() <= capacity, "chunk larger than capacity");
+        let na = capacity * bm * bk;
+        let nb = capacity * bk * bn;
+        if na > self.buf.a.capacity() || nb > self.buf.b.capacity() {
+            self.grows += 1;
+        } else {
+            self.reuses += 1;
+        }
+        self.buf.a.clear();
+        self.buf.a.resize(na, 0.0);
+        self.buf.b.clear();
+        self.buf.b.resize(nb, 0.0);
+        self.buf.targets.clear();
+        self.buf.capacity = capacity;
+        self.buf.bm = bm;
+        self.buf.bk = bk;
+        self.buf.bn = bn;
+        for (slot, e) in entries.iter().enumerate() {
             for (i, &v) in a.block(e.a_entry as usize).iter().enumerate() {
-                ps.a[slot * bm * bk + i] = v as f32;
+                self.buf.a[slot * bm * bk + i] = v as f32;
             }
             for (i, &v) in b.block(e.b_entry as usize).iter().enumerate() {
-                ps.b[slot * bk * bn + i] = v as f32;
+                self.buf.b[slot * bk * bn + i] = v as f32;
             }
             let aen = &a.entries[e.a_entry as usize];
             let ben = &b.entries[e.b_entry as usize];
-            ps.targets.push((aen.row, ben.col));
+            self.buf.targets.push((aen.row, ben.col));
         }
-        out.push(ps);
+        &self.buf
     }
-    out
+}
+
+/// Pack one homogeneous [`Stack`] into fixed-capacity f32 stacks for the
+/// AOT kernel (chunking at `capacity`, zero-padding the tail) — the
+/// bridge from the stack-flow binning to the PJRT artifact's static
+/// shape.  Allocates one [`PackedStack`] per chunk; the per-dispatch
+/// executor path stages through a reusable [`PackScratch`] instead.
+pub fn pack_stack(a: &Panel, b: &Panel, stack: &Stack, capacity: usize) -> Vec<PackedStack> {
+    let (bm, bk, bn) = (stack.bm as usize, stack.bk as usize, stack.bn as usize);
+    let mut scratch = PackScratch::default();
+    stack
+        .entries
+        .chunks(capacity.max(1))
+        .map(|chunk| scratch.pack_chunk(a, b, chunk, bm, bk, bn, capacity).clone())
+        .collect()
 }
 
 /// Scatter a kernel output stack (`[n, bm, bn]` f32) into the dense C
@@ -248,6 +291,38 @@ mod tests {
         let c32 = acc.into_matrix(Arc::clone(&l), Arc::clone(&l));
         let c64 = acc64.into_matrix(Arc::clone(&l), l);
         assert!(c32.to_dense().max_abs_diff(&c64.to_dense()) < 1e-5);
+    }
+
+    #[test]
+    fn pack_scratch_reuses_buffers_and_matches_pack_stack() {
+        use crate::local::stackflow::build_stacks;
+        let (pa, pb) = uniform_panels(6, 3, (11, 12));
+        let mut s = LocalMultStats::default();
+        let tasks = assemble_tasks(&pa, &pb, -1.0, &mut s);
+        let mut arena = CArena::build(&pa, &pb);
+        let stacks = build_stacks(&pa, &pb, &tasks, &mut arena);
+        assert_eq!(stacks.len(), 1, "uniform layout: one shape");
+        let stack = &stacks[0];
+        let cap = 4usize;
+        let reference = pack_stack(&pa, &pb, stack, cap);
+        let mut scratch = PackScratch::default();
+        for (i, chunk) in stack.entries.chunks(cap).enumerate() {
+            let ps = scratch.pack_chunk(&pa, &pb, chunk, 3, 3, 3, cap);
+            assert_eq!(ps.a, reference[i].a, "chunk {i} staged identically");
+            assert_eq!(ps.b, reference[i].b);
+            assert_eq!(ps.targets, reference[i].targets);
+            assert_eq!((ps.capacity, ps.bm, ps.bk, ps.bn), (cap, 3, 3, 3));
+        }
+        // First dispatch grows the (empty) buffers; every later same-size
+        // dispatch reuses them without allocating.
+        assert_eq!(scratch.grows, 1, "only the first dispatch allocates");
+        assert_eq!(scratch.reuses as usize, reference.len() - 1);
+        // A strictly larger request grows once more, then steady state.
+        let before = scratch.grows;
+        scratch.pack_chunk(&pa, &pb, &stack.entries[..1], 3, 3, 3, 2 * cap);
+        assert_eq!(scratch.grows, before + 1);
+        scratch.pack_chunk(&pa, &pb, &stack.entries[..1], 3, 3, 3, cap);
+        assert_eq!(scratch.grows, before + 1, "smaller request reuses grown buffers");
     }
 
     #[test]

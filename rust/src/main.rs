@@ -187,6 +187,9 @@ fn cmd_multiply() -> i32 {
                 machine: Some(machine),
                 threads_per_rank: args.get_as("threads"),
                 symbolic,
+                registry: Some(std::sync::Arc::new(
+                    dbcsr::local::dispatch::KernelRegistry::modeled(machine),
+                )),
                 ..Default::default()
             };
             let grid = parse_grid(args.get("grid"));
@@ -310,6 +313,39 @@ fn cmd_multiply() -> i32 {
         overlap.total_wait_s * 1e3,
         overlap.modeled_wait_s * 1e3
     );
+    if !report.kernels.is_empty() {
+        let fixed = report
+            .kernels
+            .iter()
+            .filter(|k| k.variant != "generic")
+            .count();
+        let dispatches: u64 = report.kernels.iter().map(|k| k.used.dispatches).sum();
+        let autotune_s: f64 = report.kernels.iter().map(|k| k.autotune_s).sum();
+        println!(
+            "kernels: {} shape(s) tuned ({} fixed), {} dispatch(es), autotune {:.3} ms",
+            report.kernels.len(),
+            fixed,
+            dispatches,
+            autotune_s * 1e3
+        );
+        for k in &report.kernels {
+            let exec = if k.used.exec_s > 0.0 {
+                format!(", {:.1} GFLOP/s executed", k.executed_gflops())
+            } else {
+                String::new()
+            };
+            println!(
+                "  {}x{}x{} -> {}: {} dispatch(es), {:.1} GFLOP/s calibrated{}",
+                k.dims.0,
+                k.dims.1,
+                k.dims.2,
+                k.variant,
+                k.used.dispatches,
+                k.rate / 1.0e9,
+                exec
+            );
+        }
+    }
     println!("{}", report.timers.render());
     if let Some(s) = &session {
         println!(

@@ -158,6 +158,20 @@ fn msg_time(machine: &MachineModel, engine: EngineKind, bytes: u64, msgs: u32) -
     one * msgs as f64
 }
 
+/// Priced compute time of one tick: flops at the machine rate plus the
+/// split tick overhead (a fixed half for fetch posting / waitall
+/// bookkeeping / buffer rotation, a per-local-multiplication half for
+/// batch assembly and kernel launch).  Shared by [`model_rank_time`]
+/// and the crosscheck's compute side so both price ticks identically.
+pub fn tick_comp_time(rec: &TickRecord, machine: &MachineModel) -> f64 {
+    if rec.flops > 0.0 {
+        rec.flops / machine.flop_rate
+            + machine.tick_overhead_s * (0.5 + 0.5 * rec.mults.max(1) as f64)
+    } else {
+        0.0
+    }
+}
+
 /// Apply the double-buffered overlap model to a rank log.
 pub fn model_rank_time(log: &RankLog, machine: &MachineModel) -> ModeledTime {
     let mut waitall = 0.0;
@@ -178,20 +192,14 @@ pub fn model_rank_time(log: &RankLog, machine: &MachineModel) -> ModeledTime {
         total += c0;
     }
 
-    // Steady state: tick t computes while tick t+1's data flies.
+    // Steady state: tick t computes while tick t+1's data flies.  The
+    // overhead split inside `tick_comp_time` (fixed half + per-local-
+    // multiplication half — the paper's OSL "overhead for handling
+    // partial C panels" is the second kind) keeps Cannon (mults == 1)
+    // calibrations unchanged while letting V/L ticks amortize the
+    // fixed half.
     for (t, rec) in log.ticks.iter().enumerate() {
-        let t_comp = if rec.flops > 0.0 {
-            // Overhead splits into a per-tick fixed part (fetch posting,
-            // waitall bookkeeping, buffer rotation) and a per-local-
-            // multiplication part (batch assembly, kernel launch); the
-            // paper's OSL "overhead for handling partial C panels" is the
-            // second kind.  50/50 keeps Cannon (mults == 1) calibrations
-            // unchanged while letting V/L ticks amortize the fixed half.
-            rec.flops / machine.flop_rate
-                + machine.tick_overhead_s * (0.5 + 0.5 * rec.mults.max(1) as f64)
-        } else {
-            0.0
-        };
+        let t_comp = tick_comp_time(rec, machine);
         comp += t_comp;
         let t_next_comm = match log.ticks.get(t + 1) {
             Some(nx) => {
@@ -249,6 +257,13 @@ pub struct OverlapCheck {
     pub tick_wait_s: f64,
     /// Raw priced transfer time of the tick fetches.
     pub tick_comm_s: f64,
+    /// Priced compute time of the ticks on the crosscheck machine
+    /// ([`tick_comp_time`] summed) — the window the pipeline hides
+    /// transfers behind.  The compute side of the check: an executed
+    /// schedule that overlaps well keeps `tick_wait_s` close to
+    /// `max(0, tick_comm_s − tick_comp_s)`, the residue left after the
+    /// whole compute window is spent for hiding.
+    pub tick_comp_s: f64,
     /// Whole-run measured wait: pre-shift + ticks + C tail.  May exceed
     /// `tick_comm_s` for Cannon, whose blocking pre-shift produces no
     /// tick record — compare it against `modeled_comm_s`, not the tick
@@ -266,6 +281,19 @@ impl OverlapCheck {
             0.0
         }
     }
+
+    /// Transfer seconds the executed pipeline hid behind compute.
+    pub fn hidden_comm_s(&self) -> f64 {
+        (self.tick_comm_s - self.tick_wait_s).max(0.0)
+    }
+
+    /// The wait residue an ideally-overlapped schedule would still
+    /// expose: transfers in excess of the whole compute window.  The
+    /// executed `tick_wait_s` cannot meaningfully go below this; how
+    /// close it gets is the pipeline's overlap quality.
+    pub fn ideal_residue_s(&self) -> f64 {
+        (self.tick_comm_s - self.tick_comp_s).max(0.0)
+    }
 }
 
 /// Compare a rank's executed pipeline against the analytic overlap model
@@ -278,6 +306,7 @@ pub fn crosscheck_overlap(log: &RankLog, machine: &MachineModel) -> OverlapCheck
         modeled_comm_s: modeled.comm_s,
         tick_wait_s: log.measured_tick_wait_s(),
         tick_comm_s: log.measured_tick_comm_s(),
+        tick_comp_s: log.ticks.iter().map(|r| tick_comp_time(r, machine)).sum(),
         total_wait_s: log.measured_wait_s(),
     }
 }
@@ -409,6 +438,33 @@ mod tests {
         // small fraction of the raw communication time
         assert!(chk.modeled_wait_s < 0.5 * chk.modeled_comm_s);
         assert!(chk.tick_wait_s < 0.5 * chk.tick_comm_s);
+        // the compute side prices every tick with the shared formula
+        let comp: f64 = log.ticks.iter().map(|r| tick_comp_time(r, &m)).sum();
+        assert!((chk.tick_comp_s - comp).abs() < 1e-12);
+        assert!(chk.tick_comp_s > 0.0);
+        assert!((chk.hidden_comm_s() - 3e-3).abs() < 1e-12);
+        // compute-bound: the ideal schedule exposes nothing, and the
+        // executed residue (tick 0's cold fetch) sits above that floor
+        assert!((chk.ideal_residue_s() - 0.0).abs() < 1e-12);
+        assert!(chk.tick_wait_s >= chk.ideal_residue_s());
+    }
+
+    #[test]
+    fn crosscheck_compute_side_bounds_comm_bound_run() {
+        let m = machine();
+        // No flops at all: the compute window is zero, so the ideal
+        // residue equals the whole transfer time and a perfectly honest
+        // executed log can hide nothing.
+        let mut log = log_with(EngineKind::OneSided, 3, 1 << 20, 0.0);
+        for rec in log.ticks.iter_mut() {
+            rec.comm_s = 2e-3;
+            rec.wait_s = 2e-3;
+        }
+        let chk = crosscheck_overlap(&log, &m);
+        assert_eq!(chk.tick_comp_s, 0.0);
+        assert!((chk.ideal_residue_s() - chk.tick_comm_s).abs() < 1e-12);
+        assert!((chk.hidden_comm_s() - 0.0).abs() < 1e-12);
+        assert!(chk.tick_wait_s >= chk.ideal_residue_s() - 1e-12);
     }
 
     #[test]

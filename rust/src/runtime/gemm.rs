@@ -15,12 +15,14 @@
 //! unconditionally — consistent with the stub [`PjrtContext`], which can
 //! never be constructed in that configuration.
 
+use std::cell::RefCell;
+
 use crate::blocks::arena::CArena;
 use crate::blocks::build::BlockAccumulator;
 use crate::blocks::panel::Panel;
 use crate::local::batch::{multiply_panels_stacked, LocalMultStats};
-use crate::local::stackflow::{NativeStackExecutor, Stack, StackExecutor};
-use crate::local::stacks::{pack_stack, scatter_results_arena, PackedStack};
+use crate::local::stackflow::{dispatch_slots, NativeStackExecutor, Stack, StackExecutor};
+use crate::local::stacks::{scatter_results_arena, PackScratch, PackedStack};
 use crate::runtime::client::PjrtContext;
 
 /// Execute one packed stack on its AOT variant.  `eps` is the on-the-fly
@@ -76,6 +78,26 @@ pub fn execute_stack(
 /// arena.
 pub struct PjrtStackExecutor<'a> {
     pub ctx: &'a PjrtContext,
+    /// Session-held packing scratch: the pack staging buffers of every
+    /// dispatch are reused instead of freshly allocated per stack
+    /// (`RefCell`: `execute` takes `&self` through the trait).
+    scratch: RefCell<PackScratch>,
+}
+
+impl<'a> PjrtStackExecutor<'a> {
+    pub fn new(ctx: &'a PjrtContext) -> Self {
+        Self {
+            ctx,
+            scratch: RefCell::new(PackScratch::default()),
+        }
+    }
+
+    /// `(grows, reuses)` of the packing scratch — the benches assert the
+    /// steady state packs without allocating.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        let s = self.scratch.borrow();
+        (s.grows, s.reuses)
+    }
 }
 
 impl StackExecutor for PjrtStackExecutor<'_> {
@@ -96,18 +118,21 @@ impl StackExecutor for PjrtStackExecutor<'_> {
             match self.ctx.gemm_variant(bm, bk, bn) {
                 Some(variant) => {
                     let cap = variant.spec.capacity;
-                    for ps in &pack_stack(a, b, stack, cap) {
+                    let (dispatches, slots) = dispatch_slots(stack.len(), cap);
+                    stats.stacks += dispatches;
+                    stats.stack_slots += slots;
+                    let mut scratch = self.scratch.borrow_mut();
+                    for chunk in stack.entries.chunks(cap.max(1)) {
                         // The filter already ran in assemble_tasks;
                         // eps < 0 keeps every real slot, and zero
                         // padding contributes zero.
+                        let ps = scratch.pack_chunk(a, b, chunk, bm, bk, bn, cap);
                         let out = execute_stack(self.ctx, ps, -1.0)?;
                         scatter_results_arena(ps, &out, arena);
                         let n = ps.len() as u64;
                         let fl = n as f64 * 2.0 * (bm * bk * bn) as f64;
                         stats.products += n;
                         stats.flops += fl;
-                        stats.stacks += 1;
-                        stats.stack_slots += cap as u64;
                         stats.record_dims(stack.bm, stack.bk, stack.bn, n, fl);
                     }
                 }
@@ -135,7 +160,7 @@ pub fn multiply_panels_pjrt(
     eps: f64,
     acc: &mut BlockAccumulator,
 ) -> anyhow::Result<LocalMultStats> {
-    multiply_panels_stacked(a, b, eps, acc, &PjrtStackExecutor { ctx })
+    multiply_panels_stacked(a, b, eps, acc, &PjrtStackExecutor::new(ctx))
 }
 
 /// One dense sign-iteration step `X ← ½ X (3I − X²)` on the AOT artifact.

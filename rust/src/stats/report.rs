@@ -268,6 +268,26 @@ pub fn multiply_report_json_planned(
         .iter()
         .map(|&f| Json::Num(f))
         .collect();
+    let kernels: Vec<Json> = rep
+        .kernels
+        .iter()
+        .map(|k| {
+            Json::obj([
+                ("bm", Json::Num(k.dims.0 as f64)),
+                ("bk", Json::Num(k.dims.1 as f64)),
+                ("bn", Json::Num(k.dims.2 as f64)),
+                ("variant", Json::Str(k.variant.to_string())),
+                ("calibrated_gflops", Json::Num(k.rate / 1.0e9)),
+                ("autotune_s", Json::Num(k.autotune_s)),
+                ("dispatches", Json::Num(k.used.dispatches as f64)),
+                ("products", Json::Num(k.used.products as f64)),
+                ("flops", Json::Num(k.used.flops)),
+                ("exec_s", Json::Num(k.used.exec_s)),
+                ("executed_gflops", Json::Num(k.executed_gflops())),
+            ])
+        })
+        .collect();
+    let kernel_autotune_s: f64 = rep.kernels.iter().map(|k| k.autotune_s).sum();
     let mut out = Json::obj([
         ("engine", Json::Str(cfg.engine.label())),
         ("l", Json::Num(rep.topo.l as f64)),
@@ -307,10 +327,13 @@ pub fn multiply_report_json_planned(
         ("peak_partial_c_bytes", Json::Num(rep.peak_partial_c_bytes as f64)),
         ("tick_wait_s", Json::Num(overlap.tick_wait_s)),
         ("tick_comm_s", Json::Num(overlap.tick_comm_s)),
+        ("tick_comp_s", Json::Num(overlap.tick_comp_s)),
         ("total_wait_s", Json::Num(overlap.total_wait_s)),
         ("modeled_wait_s", Json::Num(overlap.modeled_wait_s)),
         ("modeled_comm_s", Json::Num(overlap.modeled_comm_s)),
         ("measured_overlap_frac", Json::Num(overlap.measured_overlap_frac())),
+        ("kernels", Json::Arr(kernels)),
+        ("kernel_autotune_s", Json::Num(kernel_autotune_s)),
         ("per_rank", Json::Arr(stats_arr)),
     ]);
     if let Some(plan) = plan {

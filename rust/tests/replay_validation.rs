@@ -182,8 +182,11 @@ fn osl_buffer_claims_hold_in_engine() {
         },
         &grid,
     );
+    // Synchronous submission reproduces the paper's budget exactly:
+    // total peak = fetch buffers + partial C.
     let cfg = MultiplyConfig {
         engine: Engine::OneSided { l: 4 },
+        async_submission: false,
         ..Default::default()
     };
     let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
@@ -198,4 +201,35 @@ fn osl_buffer_claims_hold_in_engine() {
     assert!(rep.peak_partial_c_bytes > 0, "L=4 must hold partial C");
     assert!(rep.peak_buffer_bytes <= rep.peak_fetch_bytes + rep.peak_partial_c_bytes);
     assert!(rep.peak_buffer_bytes > rep.peak_partial_c_bytes);
+
+    // Async submission keeps the pool budget (slot-scoped fetch peak is
+    // mode-independent) but honestly charges the early-released A batch
+    // and staged B panels: the composed peak may exceed the sync
+    // composition by at most that extra held batch.
+    let cfg_async = MultiplyConfig {
+        engine: Engine::OneSided { l: 4 },
+        async_submission: true,
+        ..Default::default()
+    };
+    let rep_async = multiply_distributed(&a, &b, None, &dist, &cfg_async).unwrap();
+    assert!(
+        (rep_async.peak_fetch_bytes as f64) < fetch_bound,
+        "async fetch buffers {} exceed 1.5x the Algorithm 2 budget {fetch_bound}",
+        rep_async.peak_fetch_bytes
+    );
+    let slack = ((topo.l_r + 2) as f64 * sizes.s_a.max(sizes.s_b)) * 1.5;
+    assert!(
+        (rep_async.peak_buffer_bytes as f64)
+            <= rep_async.peak_fetch_bytes as f64
+                + rep_async.peak_partial_c_bytes as f64
+                + slack,
+        "async peak {} exceeds sync composition + held-batch slack",
+        rep_async.peak_buffer_bytes
+    );
+    // Both modes produce the same product (bitwise):
+    assert_eq!(
+        rep.c.to_dense().max_abs_diff(&rep_async.c.to_dense()),
+        0.0,
+        "async submission must not change C"
+    );
 }

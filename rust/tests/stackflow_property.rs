@@ -6,12 +6,16 @@
 //! the stack-flow refactor: homogeneous-stack binning, the dense C
 //! arena and the worker partition must be invisible in the numerics.
 
+use std::sync::Arc;
+
 use dbcsr::blocks::filter::FilterConfig;
 use dbcsr::blocks::layout::BlockLayout;
 use dbcsr::blocks::matrix::BlockCsrMatrix;
 use dbcsr::dist::distribution::Distribution2d;
 use dbcsr::dist::grid::ProcGrid;
 use dbcsr::engines::multiply::{multiply_distributed, multiply_oracle, Engine, MultiplyConfig};
+use dbcsr::local::dispatch::KernelRegistry;
+use dbcsr::perfmodel::machine::MachineModel;
 use dbcsr::util::prng::Pcg64;
 use dbcsr::util::testkit::property;
 
@@ -78,6 +82,102 @@ fn hetero_layouts_match_dense_reference() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn specialized_kernels_bitwise_match_generic() {
+    // Random layouts mixing the paper's tuned block sizes (6/23/32 hit
+    // the fixed kernels) with off-table sizes (generic fallback): the
+    // autotuned dispatch must be invisible in the numerics.  Every
+    // (registry, thread-count) combination must reproduce the bits of
+    // the registry-free single-thread run exactly — the fixed kernels
+    // accumulate each C element in the same ascending-stack order as
+    // the generic microkernel.
+    let fixed_products = std::cell::Cell::new(0u64);
+    let generic_products = std::cell::Cell::new(0u64);
+    property("dispatch bitwise vs generic", 0xD15B, 5, |rng, _| {
+        let sizes = [6usize, 23, 32, 3, 7];
+        let nb = 5 + rng.usize_below(3);
+        let layout = BlockLayout::from_sizes(
+            (0..nb).map(|_| sizes[rng.usize_below(sizes.len())]).collect(),
+        );
+        let a = BlockCsrMatrix::random(&layout, &layout, 0.6, rng.next_u64());
+        let b = BlockCsrMatrix::random(&layout, &layout, 0.6, rng.next_u64());
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, rng.next_u64());
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let run = |registry: Option<Arc<KernelRegistry>>, threads: usize| {
+                let cfg = MultiplyConfig {
+                    engine,
+                    threads_per_rank: threads,
+                    registry,
+                    ..Default::default()
+                };
+                multiply_distributed(&a, &b, None, &dist, &cfg)
+                    .unwrap()
+                    .c
+                    .to_dense()
+            };
+            let baseline = run(None, 1);
+            for threads in [1usize, 4] {
+                let reg = Arc::new(KernelRegistry::modeled(MachineModel::piz_daint(50e9)));
+                let tuned = run(Some(reg.clone()), threads);
+                if baseline.max_abs_diff(&tuned) != 0.0 {
+                    return Err(format!(
+                        "{} t={threads}: specialized kernels changed the bits",
+                        engine.label()
+                    ));
+                }
+                for k in reg.report() {
+                    if k.variant == "generic" {
+                        generic_products.set(generic_products.get() + k.used.products);
+                    } else {
+                        fixed_products.set(fixed_products.get() + k.used.products);
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    // the mixed layouts really exercised both kinds of variant
+    assert!(fixed_products.get() > 0, "no fixed kernel was dispatched");
+    assert!(generic_products.get() > 0, "no generic fallback was dispatched");
+}
+
+#[test]
+fn dispatch_choice_thread_count_invariant() {
+    // Under Modeled calibration the tuned winner is a pure function of
+    // the block shape, so the dispatch table a multiplication builds —
+    // variants, calibrated rates and executed product counts — cannot
+    // depend on the worker-thread count.
+    let layout = BlockLayout::from_sizes(vec![6, 23, 32, 4, 6]);
+    let a = BlockCsrMatrix::random(&layout, &layout, 0.7, 771);
+    let b = BlockCsrMatrix::random(&layout, &layout, 0.7, 772);
+    let grid = ProcGrid::new(2, 2).unwrap();
+    let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, 773);
+    let table_at = |threads: usize| {
+        let reg = Arc::new(KernelRegistry::modeled(MachineModel::piz_daint(50e9)));
+        let cfg = MultiplyConfig {
+            engine: Engine::OneSided { l: 1 },
+            threads_per_rank: threads,
+            registry: Some(reg.clone()),
+            ..Default::default()
+        };
+        multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        reg.report()
+            .into_iter()
+            .map(|k| (k.dims, k.variant, k.rate.to_bits(), k.used.products))
+            .collect::<Vec<_>>()
+    };
+    let t1 = table_at(1);
+    assert!(!t1.is_empty(), "multiplication must populate the table");
+    for threads in [2usize, 4, 8] {
+        assert_eq!(
+            t1,
+            table_at(threads),
+            "dispatch table changed at t={threads}"
+        );
+    }
 }
 
 #[test]

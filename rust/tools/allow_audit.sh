@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Clippy allow-list audit: CI runs `cargo clippy -- -D warnings`, so any
+# `#[allow(...)]` is a hole punched in that wall.  This script keeps the
+# holes honest — every allow attribute in the Rust tree must carry a
+# justification comment on the line directly above it (a `//`, `///` or
+# preceding doc comment), and lint suppression must stay scoped: blanket
+# crate-level `#![allow(clippy::...)]` attributes are rejected outright.
+# The macro-generated fixed kernels in local/dispatch.rs are expected to
+# pass clippy clean with NO allows at all; if one ever appears there it
+# needs a written reason like everywhere else.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+
+# Crate-wide clippy suppressions are never acceptable.
+if grep -rn --include='*.rs' '^#!\[allow(clippy' src benches tests examples 2>/dev/null; then
+    echo "error: crate-level clippy allow found (suppress at the item, with a reason)" >&2
+    fail=1
+fi
+
+# Item-level allows must be justified by the immediately preceding
+# comment line.
+while IFS=: read -r file line _; do
+    prev=$((line - 1))
+    if [ "$prev" -lt 1 ] || ! sed -n "${prev}p" "$file" | grep -q '//'; then
+        echo "error: ${file}:${line}: #[allow(...)] without a justification comment above" >&2
+        fail=1
+    fi
+done < <(grep -rn --include='*.rs' '#\[allow(' src benches tests examples 2>/dev/null || true)
+
+if [ "$fail" -ne 0 ]; then
+    exit 1
+fi
+echo "allow-list audit: every #[allow] is justified, no crate-level clippy suppression"
