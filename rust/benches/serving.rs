@@ -1,0 +1,171 @@
+//! Serving bench: multi-tenant throughput, tail latency and
+//! cross-tenant plan reuse over one shared fabric, at queue depth
+//! ≥ 200 jobs.
+//!
+//! Six tenants in three structurally congruent pairs (same block
+//! structures, different values, same rank share — so pair partners
+//! reuse each other's cached plans) submit a mixed multiply/sign-step
+//! stream onto an 8-rank fabric whose aggregate share demand (12)
+//! oversubscribes it, building a real admission queue.
+//!
+//! Acceptance gates (enforced in every mode, CI runs `--smoke`):
+//!
+//! 1. **fairness** — symmetric tenants complete within a 2x band of
+//!    each other inside the common horizon (`fairness_ratio <= 2`);
+//! 2. **sharing** — the shared structural-hash cache serves at least
+//!    one cross-tenant hit (in practice the follower of each pair
+//!    rides the leader's entries nearly wall-to-wall);
+//! 3. **completion** — every queued job completes (no deadlines, no
+//!    faults, so a stall or a drop is a scheduler bug).
+//!
+//! The full (non-smoke) run additionally replays every tenant's queue
+//! through the serial per-tenant oracle and checks each completed C
+//! bitwise — the determinism contract at bench scale.
+//!
+//! Writes `BENCH_serving.json` on every run.
+//!
+//! ```bash
+//! cargo bench --bench serving            # full sweep + serial oracle
+//! cargo bench --bench serving -- --smoke # CI profile, gates only
+//! ```
+
+use dbcsr::benchkit::print_header;
+use dbcsr::prelude::*;
+use dbcsr::stats::report::serving_json;
+use dbcsr::util::json::Json;
+
+const TENANTS: usize = 6; // three congruent pairs
+const RANKS: usize = 8;
+const SHARE: usize = 2; // aggregate demand 12 > 8: queue builds
+
+/// Job `j` of pair `pair`: structure is a pure function of (pair, j%8)
+/// — eight distinct structures per pair, so tenants also self-hit on
+/// repeats — values are revalued per tenant by `scale`.  Every fifth
+/// job is a sign-iteration step (two chained multiplies); the mix is
+/// identical across tenants so the fairness gate measures the
+/// scheduler, not the workload.
+fn job_kind(pair: usize, j: usize, scale: f64) -> JobKind {
+    let sseed = 0xBE9C ^ ((pair as u64) << 10) ^ (((j % 8) as u64) << 4);
+    let layout = BlockLayout::uniform(8, 2);
+    let mk = |vs: u64, sc: f64| {
+        let mut m = BlockCsrMatrix::random(&layout, &layout, 0.35, vs);
+        m.scale(sc);
+        m
+    };
+    if j % 5 == 4 {
+        JobKind::SignStep {
+            x: mk(sseed ^ 0x51, 0.08 * scale),
+        }
+    } else {
+        JobKind::Multiply {
+            a: mk(sseed ^ 0xA, scale),
+            b: mk(sseed ^ 0xB, scale),
+            c0: None,
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let jobs_per_tenant = if smoke { 34 } else { 40 };
+    let total_jobs = TENANTS * jobs_per_tenant;
+    assert!(total_jobs >= 200, "bench contract: >= 200 queued jobs");
+    print_header("multi-tenant serving");
+    println!(
+        "{TENANTS} tenants x {jobs_per_tenant} jobs on {RANKS} ranks \
+         (share {SHARE} each, demand {})",
+        TENANTS * SHARE
+    );
+
+    let mut cfg = ServeConfig::new(MachineModel::piz_daint(50e9), RANKS);
+    cfg.cache_capacity = 64;
+    let mut fabric = ServeFabric::new(cfg);
+    for t in 0..TENANTS {
+        let id = fabric.register_tenant(
+            &format!("tenant-{t}"),
+            TenantOpts::new(SHARE, 100 + t as u64),
+        );
+        // pair follower revalues the leader's structures
+        let scale = if t % 2 == 0 { 1.0 } else { 1.5 };
+        for j in 0..jobs_per_tenant {
+            let kind = job_kind(t / 2, j, scale);
+            fabric.submit(id, JobSpec::new(kind, 1e-6 * j as f64));
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let report = fabric.run();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let cross_rate = report.cache.cross_tenant_hits as f64 / report.cache.lookups.max(1) as f64;
+    println!(
+        "virtual makespan {:.3e} s | throughput {:.1} jobs/vs | \
+         latency p50 {:.3e} s p99 {:.3e} s",
+        report.makespan_s, report.throughput_jobs_per_s, report.latency_p50_s, report.latency_p99_s
+    );
+    println!(
+        "cache: {} lookups, hit rate {:.1}%, cross-tenant {:.1}% | \
+         fairness {:.2} | utilization {:.1}% | wall {wall_s:.2} s",
+        report.cache.lookups,
+        100.0 * report.cache.hit_rate(),
+        100.0 * cross_rate,
+        report.fairness_ratio,
+        100.0 * report.utilization
+    );
+
+    // gates
+    for t in &report.tenants {
+        assert_eq!(
+            t.completed,
+            t.jobs.len(),
+            "tenant {} dropped jobs (no deadlines were set)",
+            t.name
+        );
+    }
+    assert!(
+        report.fairness_ratio <= 2.0,
+        "fairness gate: symmetric tenants diverged {:.2}x inside the common horizon",
+        report.fairness_ratio
+    );
+    assert!(
+        report.cache.cross_tenant_hits > 0,
+        "sharing gate: congruent pairs produced no cross-tenant hits: {:?}",
+        report.cache
+    );
+
+    let mut verified = 0usize;
+    if !smoke {
+        // determinism contract at bench scale: every completed C is
+        // bitwise-identical to the serial per-tenant oracle.
+        let serial = fabric.serial_baseline();
+        for (conc, ser) in report.tenants.iter().zip(serial.iter()) {
+            for (co, so) in conc.jobs.iter().zip(ser.jobs.iter()) {
+                let d = co
+                    .c
+                    .as_ref()
+                    .unwrap()
+                    .to_dense()
+                    .max_abs_diff(&so.c.as_ref().unwrap().to_dense());
+                assert_eq!(
+                    d, 0.0,
+                    "tenant {} job {}: concurrent C differs from serial",
+                    conc.name, co.job
+                );
+                verified += 1;
+            }
+        }
+        println!("serial oracle: {verified} jobs bitwise-identical");
+    }
+
+    let summary = Json::obj([
+        ("bench", Json::Str("serving".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("total_jobs", Json::Num(total_jobs as f64)),
+        ("jobs_verified_vs_serial", Json::Num(verified as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("serving", serving_json(&report)),
+    ]);
+    std::fs::write("BENCH_serving.json", summary.to_string_compact())
+        .expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+}

@@ -14,4 +14,5 @@ pub mod layout;
 pub mod matrix;
 pub mod norms;
 pub mod panel;
+pub mod structhash;
 pub mod symbolic;

@@ -1,0 +1,182 @@
+//! Structural hashing of block-sparse matrices — the serving layer's
+//! shared-plan-cache key.
+//!
+//! Two distributed operands drive the *same* communication schedule and
+//! the same planning problem whenever their block **structure** agrees:
+//! the block layouts and the set of occupied block coordinates.  The
+//! values are irrelevant — they ride inside panels whose shape the
+//! structure already fixes.  [`structural_hash`] digests exactly that
+//! structure (layouts, `row_ptr`, `col_idx`; never `data`), so
+//! structurally congruent matrices held by *different tenants* map to
+//! one cache key and reuse each other's plans, while matrices that
+//! differ anywhere in the pattern split with overwhelming probability.
+//!
+//! The scheme mirrors LinearAlgebraMPI.jl's collective Blake3 design
+//! (structure-only fields, per-rank digests gathered and re-hashed into
+//! one 32-byte identity) without pulling in a hash dependency: each
+//! block row is digested independently (the "per-rank" stage — a
+//! distributed owner could compute its rows locally), and the final
+//! 256-bit identity is a hash *of the gathered row digests* plus the
+//! layout profile.  The mixer is four parallel lanes of
+//! multiply-xor-finalize (splitmix64 finalizer per lane with distinct
+//! odd keys); the collision smoke test in `tests/serving_property.rs`
+//! exercises it over randomized layouts and patterns.
+
+use crate::blocks::matrix::BlockCsrMatrix;
+
+/// A 256-bit structure-only digest.  Equality means "same block layout
+/// profile and same occupied block coordinates" (up to hash collision,
+/// which the four independent 64-bit lanes make negligible).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StructuralHash(pub [u64; 4]);
+
+impl StructuralHash {
+    /// Lowercase hex rendering (64 chars), for logs and JSON.
+    pub fn hex(&self) -> String {
+        self.0.iter().map(|w| format!("{w:016x}")).collect()
+    }
+}
+
+/// splitmix64 finalizer: full-avalanche mixing of one word.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Distinct odd multipliers decorrelating the four lanes.
+const LANE_KEYS: [u64; 4] = [
+    0x9E37_79B9_7F4A_7C15,
+    0xC2B2_AE3D_27D4_EB4F,
+    0x1656_67B1_9E37_79F9,
+    0xD6E8_FEB8_6659_FD93,
+];
+
+/// Four-lane absorbing state.
+#[derive(Clone, Copy)]
+struct Lanes([u64; 4]);
+
+impl Lanes {
+    fn new(domain: u64) -> Self {
+        let mut l = [0u64; 4];
+        for (i, lane) in l.iter_mut().enumerate() {
+            *lane = mix64(domain ^ LANE_KEYS[i]);
+        }
+        Lanes(l)
+    }
+
+    fn absorb(&mut self, word: u64) {
+        for (i, lane) in self.0.iter_mut().enumerate() {
+            *lane = mix64(lane.wrapping_add(word.wrapping_mul(LANE_KEYS[i])));
+        }
+    }
+
+    /// Single-lane digest (the per-row stage needs only 64 bits; the
+    /// final gather re-expands to 256).
+    fn fold(&self) -> u64 {
+        mix64(self.0[0] ^ self.0[1].rotate_left(17) ^ self.0[2].rotate_left(31) ^ self.0[3])
+    }
+}
+
+/// Digest of one block row's occupied columns (the per-owner stage of
+/// the collective scheme).
+fn row_digest(r: usize, cols: impl Iterator<Item = usize>) -> u64 {
+    let mut lanes = Lanes::new(0x524F_57 ^ r as u64); // "ROW"
+    let mut n = 0u64;
+    for c in cols {
+        lanes.absorb(c as u64);
+        n += 1;
+    }
+    lanes.absorb(n);
+    lanes.fold()
+}
+
+/// Structure-only digest of `m`: the row/col layout size profiles and
+/// the occupied block coordinates.  `data` never enters the hash, so
+/// same-pattern matrices with different values collide *by design*;
+/// any difference in layout or pattern separates them.
+pub fn structural_hash(m: &BlockCsrMatrix) -> StructuralHash {
+    let mut lanes = Lanes::new(0x5354_5255_4354); // "STRUCT"
+    let (rl, cl) = (m.row_layout(), m.col_layout());
+    lanes.absorb(rl.nblocks() as u64);
+    lanes.absorb(cl.nblocks() as u64);
+    for &s in rl.sizes() {
+        lanes.absorb(s as u64);
+    }
+    // domain separation between the two size profiles, so e.g. swapping
+    // row and column layouts cannot cancel out
+    lanes.absorb(0x434F_4C53); // "COLS"
+    for &s in cl.sizes() {
+        lanes.absorb(s as u64);
+    }
+    // gather stage: absorb every block row's local digest in row order
+    for r in 0..rl.nblocks() {
+        lanes.absorb(row_digest(r, m.row(r).map(|(c, _)| c)));
+    }
+    StructuralHash(lanes.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::blocks::dense::DenseMatrix;
+    use crate::blocks::layout::BlockLayout;
+
+    /// Same pattern as `m`, fresh values (every entry of every occupied
+    /// block forced nonzero so `from_dense` keeps the pattern exact).
+    fn revalue(m: &BlockCsrMatrix, shift: f64) -> BlockCsrMatrix {
+        let rl = m.row_layout();
+        let cl = m.col_layout();
+        let mut d = DenseMatrix::zeros(rl.dim(), cl.dim());
+        for (r, c, _) in m.iter_blocks() {
+            for i in 0..rl.size(r) {
+                for j in 0..cl.size(c) {
+                    d.add_at(
+                        rl.offset(r) + i,
+                        cl.offset(c) + j,
+                        shift + (i + 2) as f64 * (j + 3) as f64,
+                    );
+                }
+            }
+        }
+        BlockCsrMatrix::from_dense(&d, rl, cl)
+    }
+
+    #[test]
+    fn values_do_not_enter_the_hash() {
+        let l = BlockLayout::uniform(10, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.4, 7);
+        let b = revalue(&a, 1.5);
+        let c = revalue(&a, -4.0);
+        assert_eq!(a.nnz_blocks(), b.nnz_blocks(), "revalue changed the pattern");
+        assert_eq!(structural_hash(&a), structural_hash(&b));
+        assert_eq!(structural_hash(&b), structural_hash(&c));
+    }
+
+    #[test]
+    fn pattern_and_layout_changes_split() {
+        let l = BlockLayout::uniform(10, 3);
+        let a = BlockCsrMatrix::random(&l, &l, 0.4, 7);
+        let other_seed = BlockCsrMatrix::random(&l, &l, 0.4, 8);
+        assert_ne!(structural_hash(&a), structural_hash(&other_seed));
+        // same dim, different block profile
+        let l2 = BlockLayout::from_sizes(vec![3; 10].into_iter().rev().collect());
+        assert_eq!(l.dim(), l2.dim());
+        let c = BlockCsrMatrix::random(&l2, &l2, 0.4, 7);
+        assert_ne!(structural_hash(&a), structural_hash(&c));
+        // empty vs occupied
+        let e = BlockCsrMatrix::empty(&l, &l);
+        assert_ne!(structural_hash(&a), structural_hash(&e));
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_hex_renders() {
+        let l = BlockLayout::uniform(6, 2);
+        let a = BlockCsrMatrix::random(&l, &l, 0.5, 3);
+        let h1 = structural_hash(&a);
+        let h2 = structural_hash(&a.clone());
+        assert_eq!(h1, h2);
+        assert_eq!(h1.hex().len(), 64);
+    }
+}

@@ -174,6 +174,75 @@ impl Progress {
     }
 }
 
+/// Rank-occupancy ledger on the fabric's virtual clock — the serving
+/// layer's conservation meter.
+///
+/// The multi-tenant scheduler ([`crate::engines::serve::ServeFabric`])
+/// packs tenants onto non-overlapping rank sets in *virtual* time; this
+/// ledger integrates `in-flight ranks × dt` over that same clock (the
+/// seconds [`Progress`] prices transfers in), so "rank-seconds consumed
+/// by jobs" and "rank-seconds the fabric was occupied" are measured in
+/// one currency and must agree exactly — the property the serving test
+/// harness pins.  It also tracks the peak concurrent occupancy, which
+/// can never exceed the fabric's rank budget.
+#[derive(Clone, Debug, Default)]
+pub struct RankLedger {
+    last_event_s: f64,
+    in_flight: usize,
+    peak_in_flight: usize,
+    busy_rank_seconds: f64,
+}
+
+impl RankLedger {
+    /// An empty ledger at virtual time zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn advance(&mut self, now_s: f64) {
+        assert!(
+            now_s >= self.last_event_s,
+            "virtual time went backwards: {now_s} < {}",
+            self.last_event_s
+        );
+        self.busy_rank_seconds += self.in_flight as f64 * (now_s - self.last_event_s);
+        self.last_event_s = now_s;
+    }
+
+    /// Occupy `ranks` from `now_s` on.
+    pub fn acquire(&mut self, now_s: f64, ranks: usize) {
+        self.advance(now_s);
+        self.in_flight += ranks;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+    }
+
+    /// Release `ranks` at `now_s`.
+    pub fn release(&mut self, now_s: f64, ranks: usize) {
+        self.advance(now_s);
+        assert!(
+            ranks <= self.in_flight,
+            "releasing {ranks} ranks with only {} in flight",
+            self.in_flight
+        );
+        self.in_flight -= ranks;
+    }
+
+    /// Ranks currently occupied.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Highest concurrent occupancy seen.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight
+    }
+
+    /// The integral of occupied ranks over virtual time so far.
+    pub fn busy_rank_seconds(&self) -> f64 {
+        self.busy_rank_seconds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +338,36 @@ mod tests {
         });
         p.advance_flops(2e9);
         assert!((p.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_ledger_integrates_overlapping_occupancy() {
+        let mut led = RankLedger::new();
+        led.acquire(0.0, 4); // job A: 4 ranks on [0, 3)
+        led.acquire(1.0, 2); // job B: 2 ranks on [1, 2)
+        assert_eq!(led.in_flight(), 6);
+        assert_eq!(led.peak_in_flight(), 6);
+        led.release(2.0, 2);
+        led.release(3.0, 4);
+        assert_eq!(led.in_flight(), 0);
+        // 4*3 + 2*1 = 14 rank-seconds, exactly the per-job sum
+        assert!((led.busy_rank_seconds() - 14.0).abs() < 1e-12);
+        assert_eq!(led.peak_in_flight(), 6, "peak survives the drain");
+    }
+
+    #[test]
+    #[should_panic(expected = "virtual time went backwards")]
+    fn rank_ledger_rejects_time_reversal() {
+        let mut led = RankLedger::new();
+        led.acquire(2.0, 1);
+        led.release(1.0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing")]
+    fn rank_ledger_rejects_overdraw() {
+        let mut led = RankLedger::new();
+        led.acquire(0.0, 1);
+        led.release(1.0, 2);
     }
 }

@@ -79,6 +79,24 @@ impl WindowPoolStats {
         self.multiplications + 2 * self.initial_allocations + 4 * self.reallocations
     }
 
+    /// Fold another rank set's ledger into a fabric-level aggregate:
+    /// counters add, high-water marks take the max.  This is the only
+    /// correct way to total tenant ledgers under a shared fabric —
+    /// every counter here is attributed to the rank set (session) that
+    /// owns the pool, and [`Self::pooled_collectives`] is linear, so
+    /// the aggregate's pooled cost equals the sum of the tenants'.
+    /// Replaying all tenants' multiplications through ONE ledger would
+    /// instead interleave their sizes and invent reallocations no
+    /// tenant's pool ever performed (pinned by
+    /// `pool_attribution_is_per_tenant_not_per_fabric`).
+    pub fn absorb(&mut self, other: &WindowPoolStats) {
+        self.multiplications += other.multiplications;
+        self.initial_allocations += other.initial_allocations;
+        self.reallocations += other.reallocations;
+        self.naive_collectives += other.naive_collectives;
+        self.high_water_bytes = self.high_water_bytes.max(other.high_water_bytes);
+    }
+
     /// Account one multiplication needing `needed` pool bytes per rank.
     fn record(&mut self, needed: u64) {
         self.multiplications += 1;
@@ -676,6 +694,36 @@ impl MultSession {
         Ok(out)
     }
 
+    /// Execute one multiplication under an externally supplied plan —
+    /// the serving layer's shared-cache path
+    /// ([`crate::engines::serve::ServeFabric`] looks plans up in a
+    /// cross-tenant structural-hash cache instead of this session's
+    /// signature cache).  The runnable configuration derives from the
+    /// plan's choice exactly as [`MultSession::plan_spec`] would
+    /// (session filter/symbolic/registry ride in), and the run goes
+    /// through the session's persistent distribution, rebalance stage
+    /// and window pools, so every counter stays attributed to THIS
+    /// session.  `cached` records the caller's cache outcome for the
+    /// run's provenance.
+    pub fn multiply_planned(
+        &mut self,
+        plan: Arc<Plan>,
+        cached: bool,
+        a: &BlockCsrMatrix,
+        b: &BlockCsrMatrix,
+        c0: Option<&BlockCsrMatrix>,
+    ) -> Result<SessionRun, MultiplyError> {
+        let cfg = self.planned_cfg(&plan.choice);
+        let (report, rebalance) = self.run_one(&cfg, plan.choice.grid, a, b, c0, 1)?;
+        Ok(SessionRun {
+            report,
+            cfg,
+            plan,
+            cached,
+            rebalance,
+        })
+    }
+
     /// Escape hatch for hand-fixed configurations (the CLI's manual
     /// mode, ablation baselines): run `cfg` on `grid` through the
     /// session's pooled windows and persistent distribution, bypassing
@@ -750,6 +798,64 @@ mod tests {
         s.multiply_with(&cfg, grid, &a_small, &a_small, None).unwrap();
         assert_eq!(s.pool_stats().initial_allocations, 1);
         assert_eq!(s.pool_stats().reallocations, 1);
+    }
+
+    #[test]
+    fn pool_attribution_is_per_tenant_not_per_fabric() {
+        // Two tenants sharing one fabric, with very different window
+        // sizes, alternating. Correct accounting: each tenant's pool
+        // grows once (1 initial allocation, 0 reallocations). The buggy
+        // fabric-level ledger — one shared pool fed the interleaved
+        // sizes — invents a reallocation every time the big tenant
+        // follows the small one's high-water mark... and, grow-only,
+        // charges the small tenant nothing while overstating the
+        // fabric total. Pin both sides.
+        let small = BlockLayout::uniform(6, 2);
+        let big = BlockLayout::uniform(16, 4);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let cfg = fixed_cfg(Engine::OneSided { l: 1 });
+        let a_s = BlockCsrMatrix::random(&small, &small, 0.5, 31);
+        let a_b = BlockCsrMatrix::random(&big, &big, 0.5, 32);
+        let mut t0 = MultSession::new(planner(4), 41);
+        let mut t1 = MultSession::new(planner(4), 42);
+        // interleave: small, big, small, big
+        let mut shared = WindowPoolStats::default();
+        for _ in 0..2 {
+            let r = t0.multiply_with(&cfg, grid, &a_s, &a_s, None).unwrap();
+            shared.record(r.per_rank_stats.iter().map(|s| s.window_bytes).max().unwrap());
+            let r = t1.multiply_with(&cfg, grid, &a_b, &a_b, None).unwrap();
+            shared.record(r.per_rank_stats.iter().map(|s| s.window_bytes).max().unwrap());
+        }
+        // per-tenant attribution: one initial allocation each, no
+        // growth (each tenant's sizes are constant)
+        for t in [&t0, &t1] {
+            let p = t.pool_stats();
+            assert_eq!(p.multiplications, 2);
+            assert_eq!(p.initial_allocations, 1);
+            assert_eq!(p.reallocations, 0);
+        }
+        // the shared ledger misattributes: it sees small->big as growth
+        assert!(
+            shared.reallocations >= 1,
+            "the buggy shared ledger should have invented a reallocation"
+        );
+        // the correct fabric total is the absorb-sum of tenant ledgers
+        let mut fabric = WindowPoolStats::default();
+        fabric.absorb(t0.pool_stats());
+        fabric.absorb(t1.pool_stats());
+        assert_eq!(fabric.multiplications, 4);
+        assert_eq!(fabric.initial_allocations, 2);
+        assert_eq!(fabric.reallocations, 0);
+        assert_eq!(
+            fabric.pooled_collectives(),
+            t0.pool_stats().pooled_collectives() + t1.pool_stats().pooled_collectives(),
+            "pooled cost is linear, so the aggregate must equal the tenant sum"
+        );
+        assert_eq!(
+            fabric.high_water_bytes,
+            t0.pool_stats().high_water_bytes.max(t1.pool_stats().high_water_bytes)
+        );
+        assert!(fabric.pooled_collectives() < shared.pooled_collectives());
     }
 
     #[test]

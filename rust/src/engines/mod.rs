@@ -17,6 +17,7 @@ pub mod pipeline;
 pub mod plancache;
 pub mod planner;
 pub mod schedule;
+pub mod serve;
 
 /// Per-rank execution options shared by both engines' `run_rank`.
 #[derive(Clone, Debug)]

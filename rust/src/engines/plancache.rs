@@ -41,6 +41,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::blocks::structhash::StructuralHash;
 use crate::engines::planner::{Plan, PlanError, Planner};
 use crate::workloads::spec::BenchSpec;
 
@@ -234,11 +235,7 @@ impl PlanCache {
             return Ok((entry.plan.clone(), true));
         }
         self.stats.misses += 1;
-        let plan = if sig.is_canonical() {
-            Arc::new(planner.plan(&sig.canonical_spec(spec.name))?)
-        } else {
-            Arc::new(planner.plan(spec)?)
-        };
+        let plan = price_canonical(planner, spec)?;
         if self.capacity > 0 {
             if self.entries.len() >= self.capacity {
                 if let Some(lru) = self
@@ -276,6 +273,233 @@ impl PlanCache {
             self.stats.invalidations += 1;
         }
         removed
+    }
+}
+
+/// Price `spec` under `planner` exactly as a cache miss would: on the
+/// signature's canonical bucket-center spec for observed-shaped specs,
+/// on the raw spec for measured ones.  This is THE deterministic
+/// pricing path — every cache (per-session [`PlanCache`], cross-tenant
+/// [`SharedPlanCache`]) routes misses through it, which is what makes
+/// "hit or miss, same plan" hold fabric-wide: a tenant served another
+/// tenant's cached plan gets bit-identical planning to pricing alone.
+pub fn price_canonical(planner: &Planner, spec: &BenchSpec) -> Result<Arc<Plan>, PlanError> {
+    let sig = SparsitySignature::quantize(spec, planner);
+    if sig.is_canonical() {
+        Ok(Arc::new(planner.plan(&sig.canonical_spec(spec.name))?))
+    } else {
+        Ok(Arc::new(planner.plan(spec)?))
+    }
+}
+
+/// The shared plan cache's key: the operands' structure-only digests
+/// ([`structural_hash`](crate::blocks::structhash::structural_hash))
+/// plus the pricing budgets.  Two tenants share an entry exactly when
+/// their operands are structurally congruent (same layouts, same
+/// occupied coordinates — hence the same observed spec and the same
+/// communication pattern) *and* they plan under the same rank budget
+/// and memory cap; congruent matrices under different carves must not
+/// alias, so the budgets are part of the key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StructuralKey {
+    /// Structure digest of the A operand.
+    pub a: StructuralHash,
+    /// Structure digest of the B operand.
+    pub b: StructuralHash,
+    /// The tenant's carved rank budget `P'`.
+    pub rank_budget: usize,
+    /// The tenant planner's Eq. 6 memory cap, bit-exact.
+    mem_cap_bits: u64,
+}
+
+impl StructuralKey {
+    /// Key for an `A·B` job planned under `planner`'s budgets.
+    pub fn pair(a: StructuralHash, b: StructuralHash, planner: &Planner) -> Self {
+        Self {
+            a,
+            b,
+            rank_budget: planner.max_ranks,
+            mem_cap_bits: planner.mem_cap_bytes.to_bits(),
+        }
+    }
+}
+
+/// Per-tenant slice of the shared cache's counters — the serving
+/// layer's attribution contract applies to cache traffic exactly as it
+/// does to window pools: lookups are charged to the tenant that issued
+/// them, never to the fabric.
+#[derive(Clone, Debug, Default)]
+pub struct TenantCacheStats {
+    /// Lookups this tenant issued.
+    pub lookups: usize,
+    /// Lookups served from the shared cache.
+    pub hits: usize,
+    /// Hits on entries *another* tenant inserted — the congruent-tenant
+    /// reuse the structural key exists for.
+    pub cross_tenant_hits: usize,
+    /// Lookups that priced the full candidate set.
+    pub misses: usize,
+}
+
+/// Fabric-wide counters of a [`SharedPlanCache`].
+#[derive(Clone, Debug, Default)]
+pub struct SharedCacheStats {
+    /// Total lookups (`hits + misses` by construction).
+    pub lookups: usize,
+    /// Lookups served without pricing.
+    pub hits: usize,
+    /// Of those, hits on another tenant's entry.
+    pub cross_tenant_hits: usize,
+    /// Lookups that priced the full candidate set (and inserted).
+    pub misses: usize,
+    /// Entries dropped to make room (LRU).
+    pub evictions: usize,
+}
+
+impl SharedCacheStats {
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Fraction of lookups served from *another tenant's* entry.
+    pub fn cross_tenant_hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.cross_tenant_hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+struct SharedEntry {
+    plan: Arc<Plan>,
+    /// Tenant that priced (inserted) the entry.
+    owner: usize,
+    last_used: u64,
+}
+
+/// A bounded cross-tenant memo of `StructuralKey -> Plan`, owned by the
+/// serving fabric ([`crate::engines::serve::ServeFabric`]).  Unlike the
+/// per-session [`PlanCache`] (keyed by the quantized spec signature,
+/// private to one workload), this cache is keyed by the operands'
+/// structural hashes so *different tenants* with congruent matrices
+/// reuse one plan; misses price through [`price_canonical`], keeping
+/// served plans bit-identical to what any tenant would price alone.
+pub struct SharedPlanCache {
+    capacity: usize,
+    entries: HashMap<StructuralKey, SharedEntry>,
+    tick: u64,
+    stats: SharedCacheStats,
+    per_tenant: Vec<TenantCacheStats>,
+}
+
+impl SharedPlanCache {
+    /// A cache holding at most `capacity` plans (0 disables caching:
+    /// every lookup prices fresh and counts as a miss).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            entries: HashMap::new(),
+            tick: 0,
+            stats: SharedCacheStats::default(),
+            per_tenant: Vec::new(),
+        }
+    }
+
+    /// Cached plans currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fabric-wide counters.
+    pub fn stats(&self) -> &SharedCacheStats {
+        &self.stats
+    }
+
+    /// Counters attributed to `tenant` (zeros if it never looked up).
+    pub fn tenant_stats(&self, tenant: usize) -> TenantCacheStats {
+        self.per_tenant.get(tenant).cloned().unwrap_or_default()
+    }
+
+    /// Whether `key` is currently cached (no counter side effects).
+    pub fn contains(&self, key: &StructuralKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    fn tenant_mut(&mut self, tenant: usize) -> &mut TenantCacheStats {
+        if tenant >= self.per_tenant.len() {
+            self.per_tenant.resize(tenant + 1, TenantCacheStats::default());
+        }
+        &mut self.per_tenant[tenant]
+    }
+
+    /// The plan for `key` on behalf of `tenant`: served from the cache
+    /// when the structural key is known (counting a cross-tenant hit
+    /// when the entry's owner differs), priced via [`price_canonical`]
+    /// on `spec` under `planner` otherwise and cached under `tenant`'s
+    /// ownership.  Returns the plan, whether it was a hit, and whether
+    /// the hit crossed tenants.
+    pub fn plan_for(
+        &mut self,
+        tenant: usize,
+        key: StructuralKey,
+        planner: &Planner,
+        spec: &BenchSpec,
+    ) -> Result<(Arc<Plan>, bool, bool), PlanError> {
+        debug_assert_eq!(
+            key.rank_budget, planner.max_ranks,
+            "key and pricing planner must carry one budget"
+        );
+        self.tick += 1;
+        let tick = self.tick;
+        self.stats.lookups += 1;
+        self.tenant_mut(tenant).lookups += 1;
+        if let Some(entry) = self.entries.get_mut(&key) {
+            entry.last_used = tick;
+            let cross = entry.owner != tenant;
+            let plan = entry.plan.clone();
+            self.stats.hits += 1;
+            self.stats.cross_tenant_hits += cross as usize;
+            let t = self.tenant_mut(tenant);
+            t.hits += 1;
+            t.cross_tenant_hits += cross as usize;
+            return Ok((plan, true, cross));
+        }
+        self.stats.misses += 1;
+        self.tenant_mut(tenant).misses += 1;
+        let plan = price_canonical(planner, spec)?;
+        if self.capacity > 0 {
+            if self.entries.len() >= self.capacity {
+                if let Some(lru) = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(key, _)| *key)
+                {
+                    self.entries.remove(&lru);
+                    self.stats.evictions += 1;
+                }
+            }
+            self.entries.insert(
+                key,
+                SharedEntry {
+                    plan: plan.clone(),
+                    owner: tenant,
+                    last_used: tick,
+                },
+            );
+        }
+        Ok((plan, false, false))
     }
 }
 
@@ -458,5 +682,88 @@ mod tests {
             .unwrap_err();
         assert_eq!(err, PlanError::ZeroRanks);
         assert!(cache.is_empty());
+    }
+
+    mod shared {
+        use super::*;
+
+        use crate::blocks::layout::BlockLayout;
+        use crate::blocks::matrix::BlockCsrMatrix;
+        use crate::blocks::structhash::structural_hash;
+        use crate::engines::context::observed_pair_spec;
+
+        fn key_and_spec(seed: u64, p: &Planner) -> (StructuralKey, BenchSpec) {
+            let l = BlockLayout::uniform(10, 3);
+            let a = BlockCsrMatrix::random(&l, &l, 0.4, seed);
+            let b = BlockCsrMatrix::random(&l, &l, 0.4, seed ^ 0xF0);
+            (
+                StructuralKey::pair(structural_hash(&a), structural_hash(&b), p),
+                observed_pair_spec("shared", &a, &b),
+            )
+        }
+
+        #[test]
+        fn cross_tenant_hit_serves_the_identical_plan() {
+            let p = planner(4);
+            let mut cache = SharedPlanCache::new(8);
+            let (key, spec) = key_and_spec(5, &p);
+            let (p0, hit0, cross0) = cache.plan_for(0, key, &p, &spec).unwrap();
+            let (p1, hit1, cross1) = cache.plan_for(1, key, &p, &spec).unwrap();
+            assert!(!hit0 && !cross0);
+            assert!(hit1 && cross1, "tenant 1 must cross-hit tenant 0's entry");
+            assert!(Arc::ptr_eq(&p0, &p1));
+            // the served plan is bit-identical to pricing alone
+            let fresh = price_canonical(&p, &spec).unwrap();
+            assert_eq!(p1.choice.label(), fresh.choice.label());
+            assert_eq!(p1.choice.grid, fresh.choice.grid);
+            // attribution: each tenant carries its own counters
+            let (t0, t1) = (cache.tenant_stats(0), cache.tenant_stats(1));
+            assert_eq!((t0.lookups, t0.hits, t0.misses), (1, 0, 1));
+            assert_eq!((t1.lookups, t1.hits, t1.cross_tenant_hits), (1, 1, 1));
+            let s = cache.stats();
+            assert_eq!(s.lookups, s.hits + s.misses);
+            assert_eq!(s.cross_tenant_hits, 1);
+        }
+
+        #[test]
+        fn same_tenant_rehit_is_not_cross() {
+            let p = planner(4);
+            let mut cache = SharedPlanCache::new(8);
+            let (key, spec) = key_and_spec(6, &p);
+            cache.plan_for(2, key, &p, &spec).unwrap();
+            let (_, hit, cross) = cache.plan_for(2, key, &p, &spec).unwrap();
+            assert!(hit && !cross);
+            assert_eq!(cache.stats().cross_tenant_hits, 0);
+        }
+
+        #[test]
+        fn budget_is_part_of_the_key() {
+            let p4 = planner(4);
+            let p8 = planner(8);
+            let mut cache = SharedPlanCache::new(8);
+            let (key4, spec) = key_and_spec(7, &p4);
+            let (key8, _) = key_and_spec(7, &p8);
+            assert_ne!(key4, key8, "same structure, different budget must split");
+            cache.plan_for(0, key4, &p4, &spec).unwrap();
+            let (_, hit, _) = cache.plan_for(1, key8, &p8, &spec).unwrap();
+            assert!(!hit, "a different carve must never alias a cached plan");
+        }
+
+        #[test]
+        fn shared_lru_evicts_and_zero_capacity_disables() {
+            let p = planner(4);
+            let mut cache = SharedPlanCache::new(1);
+            let (k1, s1) = key_and_spec(8, &p);
+            let (k2, s2) = key_and_spec(9, &p);
+            cache.plan_for(0, k1, &p, &s1).unwrap();
+            cache.plan_for(0, k2, &p, &s2).unwrap();
+            assert_eq!(cache.len(), 1);
+            assert_eq!(cache.stats().evictions, 1);
+            assert!(!cache.contains(&k1) && cache.contains(&k2));
+            let mut off = SharedPlanCache::new(0);
+            off.plan_for(0, k1, &p, &s1).unwrap();
+            let (_, hit, _) = off.plan_for(0, k1, &p, &s1).unwrap();
+            assert!(!hit && off.is_empty());
+        }
     }
 }

@@ -348,6 +348,23 @@ impl Planner {
     /// ranks buys a squarer grid with less communicated volume; the
     /// per-candidate pricing (which sees the smaller grid's larger
     /// per-rank panels) decides whether the trade pays.
+    /// The same machine calibration and policy knobs under a smaller
+    /// rank budget — the serving layer's per-tenant carve.  The
+    /// sub-planner's own [`Planner::rank_budgets`] then prices
+    /// sub-budget grids *within* the carve, so an awkward share (a
+    /// prime, a skewed remainder) still plans onto a square-ish grid
+    /// that idles a few of its ranks rather than failing or degrading.
+    pub fn subplanner(&self, max_ranks: usize) -> Planner {
+        assert!(
+            max_ranks <= self.max_ranks,
+            "a carve cannot exceed the fabric budget ({max_ranks} > {})",
+            self.max_ranks
+        );
+        let mut p = self.clone();
+        p.max_ranks = max_ranks;
+        p
+    }
+
     pub fn rank_budgets(&self) -> Vec<usize> {
         let p = self.max_ranks;
         let mut out = vec![p];

@@ -1,0 +1,1055 @@
+//! Multi-tenant serving layer: concurrent [`MultSession`]s over ONE
+//! simulated fabric.
+//!
+//! A [`ServeFabric`] owns the global rank budget, a cross-tenant
+//! [`SharedPlanCache`] keyed by the operands' structural hashes, and a
+//! virtual-time admission queue.  Tenants register independent sessions
+//! (their own filter/symbolic policy, seed, and carved rank share) and
+//! submit jobs — raw multiplications or Newton–Schulz sign steps — that
+//! the scheduler packs onto non-overlapping rank sets concurrently in
+//! virtual time.
+//!
+//! # The determinism contract
+//!
+//! Every job's result is **bitwise identical** to the same job run
+//! serially in its own session ([`ServeFabric::serial_baseline`]),
+//! regardless of tenant mix, arrival order, or interleaving.  This
+//! holds because nothing numeric depends on the schedule:
+//!
+//! * **Plans are schedule-independent.**  The shared cache is keyed by
+//!   [`StructuralKey`] (structure digests + pricing budgets), and every
+//!   miss prices through
+//!   [`price_canonical`](crate::engines::plancache::price_canonical).
+//!   Congruent structure implies the same observed spec, so a lookup
+//!   returns the same plan whether it hits its own entry, another
+//!   tenant's, or misses and prices fresh.
+//! * **Distributions are history-free.**  A session's persistent
+//!   distribution is a deterministic function of (layout shape, grid,
+//!   session seed) — rebuilt identically no matter which jobs ran, or
+//!   were skipped, before.
+//! * **Kernels are deterministic.**  The modeled kernel registry tunes
+//!   against the planner's machine, never against the schedule.
+//!
+//! Hence each job's `C` depends only on its operands, its tenant's
+//! session configuration, and the (schedule-independent) plan — the
+//! scheduler can reorder, delay, cancel, or quarantine without
+//! perturbing any other tenant's numerics by a single bit.
+//!
+//! # Scheduling
+//!
+//! Admission is deficit-round-robin on the comm-rail virtual clock:
+//! a waiting tenant accrues credit at `rank_share` per virtual second,
+//! ready heads are admitted in (credit desc, tenant id asc) order, and
+//! a job runs as soon as its share fits in the free ranks.  Backfill
+//! behind a blocked head is allowed until the head has waited past the
+//! aging threshold, after which its ranks are reserved (no lower-
+//! priority admissions) — starvation-free without priority inversion.
+//! A job's service time is its *executed* virtual critical path (plus
+//! any rebalance migration), so rank-seconds accounting is exact:
+//! the [`RankLedger`]'s integral equals the sum of `share × service`
+//! over completed jobs.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::blocks::filter::FilterConfig;
+use crate::blocks::matrix::BlockCsrMatrix;
+use crate::blocks::structhash::structural_hash;
+use crate::comm::progress::RankLedger;
+use crate::engines::context::{
+    observed_pair_spec, MultSession, SessionSummary, WindowPoolStats,
+};
+use crate::engines::multiply::{MultiplyError, SymbolicMode};
+use crate::engines::plancache::{
+    SharedCacheStats, SharedPlanCache, StructuralKey, TenantCacheStats,
+};
+use crate::engines::planner::{Plan, Planner};
+use crate::perfmodel::machine::MachineModel;
+
+/// Fabric-wide serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Machine the global planner prices with (tenant sub-planners
+    /// inherit it).
+    pub machine: MachineModel,
+    /// Total simulated ranks the scheduler packs into.
+    pub total_ranks: usize,
+    /// Shared plan-cache capacity (0 disables cross-tenant reuse).
+    pub cache_capacity: usize,
+    /// Virtual seconds a blocked head may wait before its ranks are
+    /// reserved (backfill behind it stops).
+    pub aging_threshold_s: f64,
+}
+
+impl ServeConfig {
+    /// Defaults: a 64-entry shared cache and a 0.1 s aging threshold.
+    pub fn new(machine: MachineModel, total_ranks: usize) -> Self {
+        Self {
+            machine,
+            total_ranks,
+            cache_capacity: 64,
+            aging_threshold_s: 0.1,
+        }
+    }
+}
+
+/// Per-tenant session policy.
+#[derive(Clone, Debug)]
+pub struct TenantOpts {
+    /// Ranks carved for this tenant's jobs (the admission unit; the
+    /// tenant's sub-planner may still choose a smaller grid within it).
+    pub rank_share: usize,
+    /// The session's filtering policy.
+    pub filter: FilterConfig,
+    /// The session's symbolic (structure-first) mode.
+    pub symbolic: SymbolicMode,
+    /// Seed driving the session's randomized distributions.
+    pub seed: u64,
+}
+
+impl TenantOpts {
+    /// A tenant holding `rank_share` ranks with default numerics policy.
+    pub fn new(rank_share: usize, seed: u64) -> Self {
+        Self {
+            rank_share,
+            filter: FilterConfig::default(),
+            symbolic: SymbolicMode::default(),
+            seed,
+        }
+    }
+}
+
+/// What a job computes.
+#[derive(Clone)]
+pub enum JobKind {
+    /// `C = C0 + A·B` through the shared-cache planned path.
+    Multiply {
+        a: BlockCsrMatrix,
+        b: BlockCsrMatrix,
+        c0: Option<BlockCsrMatrix>,
+    },
+    /// One Newton–Schulz step `X' = ½ X (3I − X²)`: two planned
+    /// multiplications, both through the shared cache.
+    SignStep { x: BlockCsrMatrix },
+}
+
+/// Injected failure, for the fault-tolerance tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum JobFault {
+    /// No fault.
+    #[default]
+    None,
+    /// Panic after the structural key is computed but before the plan
+    /// lookup — a library panic mid-planning.  The fabric catches it,
+    /// fails the job, and quarantines the tenant.
+    PanicMidPlan,
+}
+
+/// One submitted job.
+#[derive(Clone)]
+pub struct JobSpec {
+    /// What to compute.
+    pub kind: JobKind,
+    /// Virtual arrival time.  A tenant's jobs execute in submission
+    /// order (its session is sequential); a job is *ready* once its
+    /// arrival time passed AND every earlier job of the tenant is done.
+    pub submit_s: f64,
+    /// Latest virtual *start* time: a ready job not admitted by this
+    /// instant is cancelled without executing.
+    pub deadline_s: Option<f64>,
+    /// Injected failure.
+    pub fault: JobFault,
+}
+
+impl JobSpec {
+    /// A fault-free job with no deadline arriving at `submit_s`.
+    pub fn new(kind: JobKind, submit_s: f64) -> Self {
+        Self {
+            kind,
+            submit_s,
+            deadline_s: None,
+            fault: JobFault::None,
+        }
+    }
+
+    /// Builder: latest virtual start time.
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Builder: injected failure.
+    pub fn with_fault(mut self, fault: JobFault) -> Self {
+        self.fault = fault;
+        self
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Executed to completion.
+    Completed,
+    /// Never executed: deadline expired, or the tenant was quarantined.
+    Cancelled,
+    /// Execution panicked or errored; the tenant is quarantined.
+    Failed,
+}
+
+/// Outcome of one job, in submission order within its tenant.
+pub struct JobOutcome {
+    /// Owning tenant's index.
+    pub tenant: usize,
+    /// Job index within the tenant's submission order.
+    pub job: usize,
+    /// Terminal state.
+    pub status: JobStatus,
+    /// The computed matrix (`None` unless [`JobStatus::Completed`]).
+    pub c: Option<BlockCsrMatrix>,
+    /// Virtual arrival time.
+    pub submit_s: f64,
+    /// Virtual start (admission) time; for cancelled jobs, the expiry
+    /// or quarantine instant.
+    pub start_s: f64,
+    /// Virtual completion time (`start_s` for jobs that never ran).
+    pub finish_s: f64,
+    /// Ranks held while running (0 for jobs that never ran).
+    pub ranks: usize,
+    /// Executed virtual critical path, including any rebalance
+    /// migration (0 for jobs that never ran).
+    pub service_s: f64,
+    /// Every plan lookup of the job hit the shared cache.
+    pub cache_hit: bool,
+    /// At least one lookup was served from another tenant's entry.
+    pub cross_tenant_hit: bool,
+    /// The plan(s) executed, one per multiplication (two for a sign
+    /// step) — provenance for plan-equality assertions.
+    pub plans: Vec<Arc<Plan>>,
+}
+
+impl JobOutcome {
+    /// Virtual queueing + service latency (completed jobs only).
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.submit_s
+    }
+}
+
+/// Everything attributed to one tenant after a run.
+pub struct TenantReport {
+    /// Registration name.
+    pub name: String,
+    /// The tenant's carved rank share.
+    pub rank_share: usize,
+    /// Per-job outcomes, in submission order.
+    pub jobs: Vec<JobOutcome>,
+    /// The tenant session's own counters (pool, distribution,
+    /// multiplication counts) — per-tenant by construction, since each
+    /// tenant owns its session.
+    pub summary: SessionSummary,
+    /// This tenant's slice of the shared cache's counters.
+    pub cache: TenantCacheStats,
+    /// Jobs by terminal state.
+    pub completed: usize,
+    /// Jobs cancelled (deadline or quarantine drain).
+    pub cancelled: usize,
+    /// Jobs failed (panic or error).
+    pub failed: usize,
+    /// A failure quarantined this tenant mid-run.
+    pub quarantined: bool,
+}
+
+/// Fabric-wide result of [`ServeFabric::run`].
+pub struct ServeReport {
+    /// Per-tenant reports, in registration order.
+    pub tenants: Vec<TenantReport>,
+    /// The fabric's global rank budget.
+    pub total_ranks: usize,
+    /// Final virtual time (last event processed).
+    pub makespan_s: f64,
+    /// Completed jobs per virtual second.
+    pub throughput_jobs_per_s: f64,
+    /// Mean virtual latency over completed jobs.
+    pub latency_mean_s: f64,
+    /// Median virtual latency.
+    pub latency_p50_s: f64,
+    /// 99th-percentile virtual latency.
+    pub latency_p99_s: f64,
+    /// Integral of in-flight ranks over virtual time.
+    pub busy_rank_seconds: f64,
+    /// `Σ share × service` over completed jobs (conservation partner of
+    /// `busy_rank_seconds`).
+    pub job_rank_seconds: f64,
+    /// Peak concurrently held ranks (≤ `total_ranks` by construction).
+    pub peak_in_flight_ranks: usize,
+    /// `busy_rank_seconds / (total_ranks × makespan)`.
+    pub utilization: f64,
+    /// Max/min completed-job count over tenants within the common
+    /// horizon (the earliest per-tenant last completion) — 1.0 is
+    /// perfectly fair, ∞ means someone starved.
+    pub fairness_ratio: f64,
+    /// Shared-cache counters (`lookups = hits + misses` exactly; the
+    /// per-tenant slices in [`TenantReport::cache`] sum to these).
+    pub cache: SharedCacheStats,
+    /// Absorb-sum of every tenant's window-pool ledger.
+    pub pool: WindowPoolStats,
+}
+
+struct Tenant {
+    name: String,
+    opts: TenantOpts,
+    session: MultSession,
+    jobs: Vec<JobSpec>,
+}
+
+/// The serving fabric: global budget + shared cache + tenant sessions.
+pub struct ServeFabric {
+    cfg: ServeConfig,
+    planner: Planner,
+    cache: SharedPlanCache,
+    tenants: Vec<Tenant>,
+}
+
+/// What executing a job produced (before scheduling bookkeeping).
+struct Exec {
+    c: BlockCsrMatrix,
+    service_s: f64,
+    all_hits: bool,
+    any_cross: bool,
+    plans: Vec<Arc<Plan>>,
+}
+
+/// One multiplication through the shared-cache planned path: hash the
+/// operands, look the plan up on behalf of `tenant`, execute through
+/// the tenant's session.  Returns the run plus (hit, cross) provenance.
+fn planned_mult(
+    cache: &mut SharedPlanCache,
+    tenant: usize,
+    session: &mut MultSession,
+    name: &'static str,
+    a: &BlockCsrMatrix,
+    b: &BlockCsrMatrix,
+    c0: Option<&BlockCsrMatrix>,
+) -> Result<(crate::engines::context::SessionRun, bool, bool), MultiplyError> {
+    let spec = observed_pair_spec(name, a, b);
+    let key = StructuralKey::pair(
+        structural_hash(a),
+        structural_hash(b),
+        session.planner(),
+    );
+    let (plan, hit, cross) = cache.plan_for(tenant, key, session.planner(), &spec)?;
+    let run = session.multiply_planned(plan, hit, a, b, c0)?;
+    Ok((run, hit, cross))
+}
+
+/// Executed virtual seconds of one run: the modeled critical path on
+/// the machine the fabric executed with, plus any rebalance migration.
+fn service_of(run: &crate::engines::context::SessionRun) -> f64 {
+    let crit = run.report.model(&run.report.fabric_machine).1.total_s;
+    crit + run.rebalance.as_ref().map_or(0.0, |r| r.migration_s)
+}
+
+/// Execute one job's numerics.  Shared verbatim by the concurrent
+/// scheduler and the serial oracle — the bitwise contract compares two
+/// paths through THIS function, differing only in scheduling.
+fn execute_job(
+    cache: &mut SharedPlanCache,
+    tenant: usize,
+    session: &mut MultSession,
+    kind: &JobKind,
+    fault: JobFault,
+) -> Result<Exec, MultiplyError> {
+    if fault == JobFault::PanicMidPlan {
+        panic!("injected fault: panic mid-plan (tenant {tenant})");
+    }
+    match kind {
+        JobKind::Multiply { a, b, c0 } => {
+            let (run, hit, cross) =
+                planned_mult(cache, tenant, session, "serve", a, b, c0.as_ref())?;
+            let service_s = service_of(&run);
+            Ok(Exec {
+                service_s,
+                c: run.report.c,
+                all_hits: hit,
+                any_cross: cross,
+                plans: vec![run.plan],
+            })
+        }
+        JobKind::SignStep { x } => {
+            // X2 = X·X
+            let (r1, h1, x1) = planned_mult(cache, tenant, session, "serve-xx", x, x, None)?;
+            // Y = 3I − X²
+            let mut y = BlockCsrMatrix::identity(x.row_layout());
+            y.scale(3.0);
+            let y = y.add_scaled(-1.0, &r1.report.c);
+            // X' = ½ X·Y
+            let (r2, h2, x2) = planned_mult(cache, tenant, session, "serve-xy", x, &y, None)?;
+            let service_s = service_of(&r1) + service_of(&r2);
+            let mut xn = r2.report.c;
+            xn.scale(0.5);
+            Ok(Exec {
+                service_s,
+                c: xn,
+                all_hits: h1 && h2,
+                any_cross: x1 || x2,
+                plans: vec![r1.plan, r2.plan],
+            })
+        }
+    }
+}
+
+/// Per-tenant scheduler state (lives only inside [`ServeFabric::run`]).
+struct TenantState {
+    /// Next job index to start.
+    next: usize,
+    /// DRR credit: accrues at `rank_share`/s while a ready head waits.
+    credit: f64,
+    /// When the current head became ready (None = not waiting).
+    wait_since: Option<f64>,
+    /// Finish event of the running job, if any.
+    running: Option<(f64, JobOutcome)>,
+    outcomes: Vec<JobOutcome>,
+    quarantined: bool,
+}
+
+impl TenantState {
+    fn done(&self, njobs: usize) -> bool {
+        self.running.is_none() && (self.next >= njobs || self.quarantined)
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl ServeFabric {
+    /// An empty fabric over `cfg`'s machine and rank budget.
+    pub fn new(cfg: ServeConfig) -> Self {
+        assert!(cfg.total_ranks >= 1, "a fabric needs at least one rank");
+        let planner = Planner::new(cfg.machine, cfg.total_ranks);
+        let cache = SharedPlanCache::new(cfg.cache_capacity);
+        Self {
+            cfg,
+            planner,
+            cache,
+            tenants: Vec::new(),
+        }
+    }
+
+    /// The fabric's configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The full-budget planner tenant carves descend from.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// The shared cross-tenant plan cache.
+    pub fn cache(&self) -> &SharedPlanCache {
+        &self.cache
+    }
+
+    /// Register a tenant: a fresh session over a sub-planner carved to
+    /// `opts.rank_share` ranks, with the tenant's own numerics policy
+    /// and distribution seed.  Returns the tenant's index.
+    pub fn register_tenant(&mut self, name: &str, opts: TenantOpts) -> usize {
+        assert!(
+            opts.rank_share >= 1 && opts.rank_share <= self.cfg.total_ranks,
+            "tenant '{name}' wants {} of {} ranks",
+            opts.rank_share,
+            self.cfg.total_ranks
+        );
+        let session = MultSession::new(self.planner.subplanner(opts.rank_share), opts.seed)
+            .with_filter(opts.filter)
+            .with_symbolic(opts.symbolic);
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            opts,
+            session,
+            jobs: Vec::new(),
+        });
+        self.tenants.len() - 1
+    }
+
+    /// Enqueue a job for `tenant`.  Returns its index in the tenant's
+    /// submission order.
+    pub fn submit(&mut self, tenant: usize, job: JobSpec) -> usize {
+        assert!(
+            job.submit_s >= 0.0 && job.submit_s.is_finite(),
+            "submit time must be finite and non-negative"
+        );
+        let t = &mut self.tenants[tenant];
+        t.jobs.push(job);
+        t.jobs.len() - 1
+    }
+
+    /// Run every submitted job to a terminal state in virtual time and
+    /// tear the schedule's accounting into per-tenant reports.
+    pub fn run(&mut self) -> ServeReport {
+        let total = self.cfg.total_ranks;
+        let aging = self.cfg.aging_threshold_s;
+        let mut now = 0.0_f64;
+        let mut free = total;
+        let mut ledger = RankLedger::new();
+        let mut states: Vec<TenantState> = self
+            .tenants
+            .iter()
+            .map(|_| TenantState {
+                next: 0,
+                credit: 0.0,
+                wait_since: None,
+                running: None,
+                outcomes: Vec::new(),
+                quarantined: false,
+            })
+            .collect();
+
+        loop {
+            // -- cancel expired heads (deadline = latest virtual start)
+            for (i, st) in states.iter_mut().enumerate() {
+                let t = &self.tenants[i];
+                while st.running.is_none() && !st.quarantined && st.next < t.jobs.len() {
+                    let job = &t.jobs[st.next];
+                    let expired = job.submit_s <= now
+                        && job.deadline_s.is_some_and(|d| now > d);
+                    if !expired {
+                        break;
+                    }
+                    let at = job.deadline_s.expect("expired implies a deadline");
+                    st.outcomes.push(JobOutcome {
+                        tenant: i,
+                        job: st.next,
+                        status: JobStatus::Cancelled,
+                        c: None,
+                        submit_s: job.submit_s,
+                        start_s: at,
+                        finish_s: at,
+                        ranks: 0,
+                        service_s: 0.0,
+                        cache_hit: false,
+                        cross_tenant_hit: false,
+                        plans: Vec::new(),
+                    });
+                    st.next += 1;
+                    st.wait_since = None;
+                }
+                // note when the (new) head became ready
+                if st.running.is_none()
+                    && !st.quarantined
+                    && st.next < t.jobs.len()
+                    && t.jobs[st.next].submit_s <= now
+                    && st.wait_since.is_none()
+                {
+                    st.wait_since = Some(now);
+                }
+            }
+
+            // -- admission: ready heads in (credit desc, id asc) order
+            let mut order: Vec<usize> = (0..states.len())
+                .filter(|&i| {
+                    let st = &states[i];
+                    st.running.is_none()
+                        && !st.quarantined
+                        && st.next < self.tenants[i].jobs.len()
+                        && self.tenants[i].jobs[st.next].submit_s <= now
+                })
+                .collect();
+            order.sort_by(|&a, &b| {
+                states[b]
+                    .credit
+                    .partial_cmp(&states[a].credit)
+                    .expect("credits are finite")
+                    .then(a.cmp(&b))
+            });
+            let mut reserved = false;
+            for i in order {
+                let share = self.tenants[i].opts.rank_share;
+                if share > free {
+                    // blocked head: past the aging threshold it reserves
+                    // the fabric (no lower-priority admissions behind it)
+                    let waited = now - states[i].wait_since.unwrap_or(now);
+                    if waited >= aging {
+                        reserved = true;
+                    }
+                    continue;
+                }
+                if reserved {
+                    continue;
+                }
+                // admit: execute now, schedule the finish event
+                let st = &mut states[i];
+                let job_idx = st.next;
+                st.next += 1;
+                st.wait_since = None;
+                st.credit = 0.0;
+                let Self { cache, tenants, .. } = self;
+                let t = &mut tenants[i];
+                let job = &t.jobs[job_idx];
+                let fault = job.fault;
+                let exec = catch_unwind(AssertUnwindSafe(|| {
+                    execute_job(cache, i, &mut t.session, &job.kind, fault)
+                }));
+                match exec {
+                    Ok(Ok(exec)) => {
+                        free -= share;
+                        ledger.acquire(now, share);
+                        let finish = now + exec.service_s;
+                        st.running = Some((
+                            finish,
+                            JobOutcome {
+                                tenant: i,
+                                job: job_idx,
+                                status: JobStatus::Completed,
+                                c: Some(exec.c),
+                                submit_s: job.submit_s,
+                                start_s: now,
+                                finish_s: finish,
+                                ranks: share,
+                                service_s: exec.service_s,
+                                cache_hit: exec.all_hits,
+                                cross_tenant_hit: exec.any_cross,
+                                plans: exec.plans,
+                            },
+                        ));
+                    }
+                    Ok(Err(_)) | Err(_) => {
+                        // failed mid-plan: no ranks were held, no
+                        // numerics ran.  Quarantine the tenant and
+                        // drain its remaining jobs.
+                        st.quarantined = true;
+                        st.outcomes.push(JobOutcome {
+                            tenant: i,
+                            job: job_idx,
+                            status: JobStatus::Failed,
+                            c: None,
+                            submit_s: job.submit_s,
+                            start_s: now,
+                            finish_s: now,
+                            ranks: 0,
+                            service_s: 0.0,
+                            cache_hit: false,
+                            cross_tenant_hit: false,
+                            plans: Vec::new(),
+                        });
+                        for j in st.next..t.jobs.len() {
+                            st.outcomes.push(JobOutcome {
+                                tenant: i,
+                                job: j,
+                                status: JobStatus::Cancelled,
+                                c: None,
+                                submit_s: t.jobs[j].submit_s,
+                                start_s: now,
+                                finish_s: now,
+                                ranks: 0,
+                                service_s: 0.0,
+                                cache_hit: false,
+                                cross_tenant_hit: false,
+                                plans: Vec::new(),
+                            });
+                        }
+                        st.next = t.jobs.len();
+                    }
+                }
+            }
+
+            // -- process finishes landing at `now` (jobs that ended
+            // exactly when we advanced here, or zero-service jobs just
+            // admitted), then re-run admission at the same instant with
+            // the freed ranks
+            let mut finished_any = false;
+            for st in states.iter_mut() {
+                let finished = st.running.as_ref().is_some_and(|(at, _)| *at <= now);
+                if finished {
+                    let (_, outcome) = st.running.take().expect("checked above");
+                    ledger.release(now, outcome.ranks);
+                    free += outcome.ranks;
+                    st.outcomes.push(outcome);
+                    finished_any = true;
+                }
+            }
+            if finished_any {
+                continue;
+            }
+
+            if states
+                .iter()
+                .enumerate()
+                .all(|(i, st)| st.done(self.tenants[i].jobs.len()))
+            {
+                break;
+            }
+
+            // -- advance virtual time to the next event
+            let mut next_t = f64::INFINITY;
+            for (i, st) in states.iter().enumerate() {
+                if let Some((at, _)) = &st.running {
+                    next_t = next_t.min(*at);
+                }
+                if st.running.is_none() && !st.quarantined {
+                    if let Some(job) = self.tenants[i].jobs.get(st.next) {
+                        if job.submit_s > now {
+                            next_t = next_t.min(job.submit_s);
+                        } else if let Some(d) = job.deadline_s {
+                            if d > now {
+                                // stop AT the deadline so admission gets
+                                // its final chance at the latest start
+                                next_t = next_t.min(d);
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(
+                next_t.is_finite() && next_t > now,
+                "scheduler stalled at t={now}"
+            );
+            let dt = next_t - now;
+            for (i, st) in states.iter_mut().enumerate() {
+                if st.wait_since.is_some() {
+                    st.credit += dt * self.tenants[i].opts.rank_share as f64;
+                }
+            }
+            now = next_t;
+        }
+
+        self.assemble_report(states, &ledger, now)
+    }
+
+    /// Fold final scheduler state into the fabric-wide report.
+    fn assemble_report(
+        &self,
+        states: Vec<TenantState>,
+        ledger: &RankLedger,
+        makespan_s: f64,
+    ) -> ServeReport {
+        let mut tenants = Vec::with_capacity(states.len());
+        let mut pool = WindowPoolStats::default();
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut job_rank_seconds = 0.0;
+        for (i, mut st) in states.into_iter().enumerate() {
+            let t = &self.tenants[i];
+            st.outcomes.sort_by_key(|o| o.job);
+            let completed = st
+                .outcomes
+                .iter()
+                .filter(|o| o.status == JobStatus::Completed)
+                .count();
+            let cancelled = st
+                .outcomes
+                .iter()
+                .filter(|o| o.status == JobStatus::Cancelled)
+                .count();
+            let failed = st
+                .outcomes
+                .iter()
+                .filter(|o| o.status == JobStatus::Failed)
+                .count();
+            for o in &st.outcomes {
+                if o.status == JobStatus::Completed {
+                    latencies.push(o.latency_s());
+                    job_rank_seconds += o.ranks as f64 * o.service_s;
+                }
+            }
+            pool.absorb(t.session.pool_stats());
+            tenants.push(TenantReport {
+                name: t.name.clone(),
+                rank_share: t.opts.rank_share,
+                jobs: st.outcomes,
+                summary: t.session.summary(),
+                cache: self.cache.tenant_stats(i),
+                completed,
+                cancelled,
+                failed,
+                quarantined: st.quarantined,
+            });
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let ncompleted: usize = tenants.iter().map(|t| t.completed).sum();
+
+        // fairness within the common horizon: the earliest per-tenant
+        // last completion bounds the window every tenant was live in
+        let horizons: Vec<f64> = tenants
+            .iter()
+            .filter(|t| t.completed > 0)
+            .map(|t| {
+                t.jobs
+                    .iter()
+                    .filter(|o| o.status == JobStatus::Completed)
+                    .map(|o| o.finish_s)
+                    .fold(f64::NEG_INFINITY, f64::max)
+            })
+            .collect();
+        let fairness_ratio = if horizons.len() < 2 {
+            1.0
+        } else {
+            let horizon = horizons.iter().copied().fold(f64::INFINITY, f64::min);
+            let counts: Vec<usize> = tenants
+                .iter()
+                .filter(|t| t.completed > 0)
+                .map(|t| {
+                    t.jobs
+                        .iter()
+                        .filter(|o| {
+                            o.status == JobStatus::Completed && o.finish_s <= horizon
+                        })
+                        .count()
+                })
+                .collect();
+            let max = *counts.iter().max().expect("len >= 2") as f64;
+            let min = *counts.iter().min().expect("len >= 2") as f64;
+            if min == 0.0 {
+                f64::INFINITY
+            } else {
+                max / min
+            }
+        };
+
+        let busy = ledger.busy_rank_seconds();
+        ServeReport {
+            total_ranks: self.cfg.total_ranks,
+            makespan_s,
+            throughput_jobs_per_s: if makespan_s > 0.0 {
+                ncompleted as f64 / makespan_s
+            } else {
+                0.0
+            },
+            latency_mean_s: if latencies.is_empty() {
+                0.0
+            } else {
+                latencies.iter().sum::<f64>() / latencies.len() as f64
+            },
+            latency_p50_s: percentile(&latencies, 0.50),
+            latency_p99_s: percentile(&latencies, 0.99),
+            busy_rank_seconds: busy,
+            job_rank_seconds,
+            peak_in_flight_ranks: ledger.peak_in_flight(),
+            utilization: if makespan_s > 0.0 {
+                busy / (self.cfg.total_ranks as f64 * makespan_s)
+            } else {
+                0.0
+            },
+            fairness_ratio,
+            cache: self.cache.stats().clone(),
+            pool,
+            tenants,
+        }
+    }
+
+    /// The serial oracle: every tenant's jobs replayed in submission
+    /// order through a FRESH identical session and a PRIVATE shared
+    /// cache (same capacity), one tenant at a time, ignoring arrival
+    /// times, deadlines, and faults.  This is exactly the numerics path
+    /// [`ServeFabric::run`] executes — only the scheduling differs — so
+    /// every completed job of a served run must match its oracle
+    /// counterpart bitwise, and a fault-free run's per-tenant
+    /// [`SessionSummary`] must match exactly.
+    pub fn serial_baseline(&self) -> Vec<TenantReport> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut session =
+                    MultSession::new(self.planner.subplanner(t.opts.rank_share), t.opts.seed)
+                        .with_filter(t.opts.filter)
+                        .with_symbolic(t.opts.symbolic);
+                let mut cache = SharedPlanCache::new(self.cfg.cache_capacity);
+                let mut now = 0.0;
+                let mut jobs = Vec::with_capacity(t.jobs.len());
+                for (j, job) in t.jobs.iter().enumerate() {
+                    let exec =
+                        execute_job(&mut cache, i, &mut session, &job.kind, JobFault::None)
+                            .expect("oracle execution failed");
+                    let start = now;
+                    now += exec.service_s;
+                    jobs.push(JobOutcome {
+                        tenant: i,
+                        job: j,
+                        status: JobStatus::Completed,
+                        c: Some(exec.c),
+                        submit_s: job.submit_s,
+                        start_s: start,
+                        finish_s: now,
+                        ranks: t.opts.rank_share,
+                        service_s: exec.service_s,
+                        cache_hit: exec.all_hits,
+                        cross_tenant_hit: exec.any_cross,
+                        plans: exec.plans,
+                    });
+                }
+                let completed = jobs.len();
+                TenantReport {
+                    name: t.name.clone(),
+                    rank_share: t.opts.rank_share,
+                    jobs,
+                    summary: session.summary(),
+                    cache: cache.tenant_stats(i),
+                    completed,
+                    cancelled: 0,
+                    failed: 0,
+                    quarantined: false,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::blocks::layout::BlockLayout;
+
+    fn machine() -> MachineModel {
+        MachineModel::piz_daint(50e9)
+    }
+
+    fn mat(nblocks: usize, bs: usize, occ: f64, seed: u64) -> BlockCsrMatrix {
+        let l = BlockLayout::uniform(nblocks, bs);
+        BlockCsrMatrix::random(&l, &l, occ, seed)
+    }
+
+    fn mult_job(seed: u64, submit_s: f64) -> JobSpec {
+        JobSpec::new(
+            JobKind::Multiply {
+                a: mat(10, 3, 0.4, seed),
+                b: mat(10, 3, 0.4, seed + 1),
+                c0: None,
+            },
+            submit_s,
+        )
+    }
+
+    #[test]
+    fn two_tenants_pack_concurrently_and_match_serial() {
+        let mut fabric = ServeFabric::new(ServeConfig::new(machine(), 8));
+        let t0 = fabric.register_tenant("alpha", TenantOpts::new(4, 11));
+        let t1 = fabric.register_tenant("beta", TenantOpts::new(4, 22));
+        for j in 0..3 {
+            fabric.submit(t0, mult_job(100 + j, 0.0));
+            fabric.submit(t1, mult_job(200 + j, 0.0));
+        }
+        let report = fabric.run();
+        // both shares fit: the schedule overlapped them
+        assert_eq!(report.peak_in_flight_ranks, 8);
+        assert_eq!(report.tenants[t0].completed, 3);
+        assert_eq!(report.tenants[t1].completed, 3);
+        let serial = fabric.serial_baseline();
+        for ti in [t0, t1] {
+            for (got, want) in report.tenants[ti].jobs.iter().zip(&serial[ti].jobs) {
+                let d = got
+                    .c
+                    .as_ref()
+                    .unwrap()
+                    .to_dense()
+                    .max_abs_diff(&want.c.as_ref().unwrap().to_dense());
+                assert_eq!(d, 0.0, "served result differs from serial oracle");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_step_job_is_one_newton_schulz_step() {
+        let mut fabric = ServeFabric::new(ServeConfig::new(machine(), 4));
+        let t = fabric.register_tenant("sign", TenantOpts::new(4, 5));
+        let x = mat(8, 3, 0.5, 77);
+        fabric.submit(t, JobSpec::new(JobKind::SignStep { x: x.clone() }, 0.0));
+        let report = fabric.run();
+        let out = &report.tenants[t].jobs[0];
+        assert_eq!(out.status, JobStatus::Completed);
+        assert_eq!(out.plans.len(), 2, "a sign step is two multiplications");
+        // oracle: ½ X (3I − X²) in dense arithmetic
+        let xd = x.to_dense();
+        let x2 = xd.matmul(&xd);
+        let mut want = crate::blocks::dense::DenseMatrix::eye(xd.rows);
+        for r in 0..want.rows {
+            for c in 0..want.cols {
+                let v = 3.0 * want.get(r, c) - x2.get(r, c);
+                want.set(r, c, v);
+            }
+        }
+        let want = xd.matmul(&want);
+        let got = out.c.as_ref().unwrap().to_dense();
+        let mut diff = 0.0_f64;
+        for r in 0..want.rows {
+            for c in 0..want.cols {
+                diff = diff.max((got.get(r, c) - 0.5 * want.get(r, c)).abs());
+            }
+        }
+        assert!(diff < 1e-10, "sign step numerics diverged: {diff}");
+    }
+
+    #[test]
+    fn deadline_expires_unstarted_jobs_only() {
+        // one full-share tenant occupies the fabric; the second's job
+        // has a deadline earlier than the first could release ranks
+        let mut fabric = ServeFabric::new(ServeConfig::new(machine(), 4));
+        let t0 = fabric.register_tenant("hog", TenantOpts::new(4, 1));
+        let t1 = fabric.register_tenant("late", TenantOpts::new(4, 2));
+        fabric.submit(t0, mult_job(1, 0.0));
+        fabric.submit(t1, mult_job(2, 0.0).with_deadline(1e-9));
+        let report = fabric.run();
+        assert_eq!(report.tenants[t0].completed, 1);
+        assert_eq!(report.tenants[t1].cancelled, 1);
+        assert_eq!(report.tenants[t1].jobs[0].status, JobStatus::Cancelled);
+        // the cancelled job never touched the session
+        assert_eq!(report.tenants[t1].summary.multiplications, 0);
+        assert_eq!(report.tenants[t1].summary.pool.multiplications, 0);
+    }
+
+    #[test]
+    fn rank_seconds_are_conserved() {
+        let mut fabric = ServeFabric::new(ServeConfig::new(machine(), 6));
+        let t0 = fabric.register_tenant("a", TenantOpts::new(4, 1));
+        let t1 = fabric.register_tenant("b", TenantOpts::new(2, 2));
+        for j in 0..3 {
+            fabric.submit(t0, mult_job(10 + j, 0.0));
+            fabric.submit(t1, mult_job(20 + j, 0.0));
+        }
+        let report = fabric.run();
+        let rel = (report.busy_rank_seconds - report.job_rank_seconds).abs()
+            / report.job_rank_seconds.max(1e-30);
+        assert!(rel < 1e-9, "ledger and per-job rank-seconds disagree: {rel}");
+        assert!(report.peak_in_flight_ranks <= report.total_ranks);
+        assert!(report.utilization <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn aging_reservation_prevents_starvation() {
+        // three narrow tenants could backfill the fabric indefinitely;
+        // with a zero aging threshold, the wide head (needs every rank)
+        // reserves the fabric the moment it blocks, so narrows drain,
+        // the wide job runs, and only then do the remaining narrow jobs
+        // continue — the wide tenant finishes before the last narrow.
+        let mut cfg = ServeConfig::new(machine(), 4);
+        cfg.aging_threshold_s = 0.0;
+        let mut fabric = ServeFabric::new(cfg);
+        let narrows: Vec<usize> = (0..3)
+            .map(|k| fabric.register_tenant(&format!("n{k}"), TenantOpts::new(1, 2 + k as u64)))
+            .collect();
+        let wide = fabric.register_tenant("wide", TenantOpts::new(4, 1));
+        for (k, &n) in narrows.iter().enumerate() {
+            for j in 0..2 {
+                fabric.submit(n, mult_job(30 + 10 * k as u64 + j, 0.0));
+            }
+        }
+        fabric.submit(wide, mult_job(99, 0.0));
+        let report = fabric.run();
+        assert_eq!(report.tenants[wide].completed, 1);
+        let wide_finish = report.tenants[wide].jobs[0].finish_s;
+        let last_narrow = narrows
+            .iter()
+            .flat_map(|&n| report.tenants[n].jobs.iter().map(|o| o.finish_s))
+            .fold(0.0, f64::max);
+        assert!(
+            wide_finish < last_narrow,
+            "the wide tenant was starved behind backfill \
+             (wide {wide_finish}, last narrow {last_narrow})"
+        );
+    }
+}

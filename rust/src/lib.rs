@@ -18,7 +18,7 @@
 //! | storage | [`blocks`] | blocked-CSR matrices, block norms, threshold filtering (§1), and the [`blocks::symbolic`] structure-only panels behind the symbolic pass |
 //! | layout | [`dist`] | process grids, randomized 2D distributions (§2), the 2.5D topology rules (§3, Eq. 4/5) |
 //! | transport | [`comm`] | simulated MPI: ranks as threads, `isend`/`irecv`/`wait_all`, passive-target `rget` windows, the asynchronous virtual-time fabric, exact byte accounting |
-//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines, with an optional symbolic structure-exchange pass that fetches only contributing blocks; the cost-model [`engines::planner`] that chooses between them; the persistent [`engines::context::MultSession`] (plan cache keyed by sparsity signature + §3 window pools) that amortizes the choice across repeated multiplications |
+//! | engines | [`engines`] | Cannon/PTP (Algorithm 1) and 2.5D one-sided (Algorithm 2) on shared prefetch pipelines, with an optional symbolic structure-exchange pass that fetches only contributing blocks; the cost-model [`engines::planner`] that chooses between them; the persistent [`engines::context::MultSession`] (plan cache keyed by sparsity signature + §3 window pools) that amortizes the choice across repeated multiplications; the multi-tenant [`engines::serve`] layer that packs many sessions onto one fabric under fair virtual-time scheduling with a shared structural-hash plan cache |
 //! | node-local | [`local`] | stack-flow multiplication with the on-the-fly norm filter (the LIBSMM role) |
 //! | kernels | [`runtime`] | optional PJRT client for the AOT-compiled Pallas microkernel |
 //! | modeling | [`perfmodel`] | α-β virtual-time replay of both schedules at paper scale (200–3844 nodes), machine calibrations, overlap cross-checks |
@@ -113,6 +113,7 @@ pub mod prelude {
     pub use crate::blocks::filter::FilterConfig;
     pub use crate::blocks::layout::BlockLayout;
     pub use crate::blocks::matrix::BlockCsrMatrix;
+    pub use crate::blocks::structhash::{structural_hash, StructuralHash};
     pub use crate::dist::distribution::Distribution2d;
     pub use crate::dist::grid::ProcGrid;
     pub use crate::dist::rebalance::{
@@ -125,8 +126,15 @@ pub mod prelude {
     pub use crate::engines::multiply::{
         multiply_distributed, Engine, MultiplyConfig, MultiplyReport, SymbolicInfo, SymbolicMode,
     };
-    pub use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
+    pub use crate::engines::plancache::{
+        price_canonical, PlanCache, PlanCacheStats, SharedCacheStats, SharedPlanCache,
+        SparsitySignature, StructuralKey, TenantCacheStats,
+    };
     pub use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
+    pub use crate::engines::serve::{
+        JobFault, JobKind, JobOutcome, JobSpec, JobStatus, ServeConfig, ServeFabric,
+        ServeReport, TenantOpts, TenantReport,
+    };
     pub use crate::local::microkernel::GemmBackend;
     pub use crate::perfmodel::machine::MachineModel;
     pub use crate::perfmodel::replay::{replay_multiplication, ReplayConfig};

@@ -6,6 +6,8 @@
 //!   world (real data, exact byte counters), PTP vs OSL.
 //! * `sign`      — linear-scaling-DFT driver: sign iteration to the
 //!   density matrix on a synthetic system.
+//! * `serve`     — multi-tenant serving layer: concurrent sessions over
+//!   one fabric with a shared structural-hash plan cache.
 //! * `table1` / `table2` / `fig1` / `fig2` / `fig3` / `fig4` — regenerate
 //!   the paper's tables/figures from the calibrated analytic replay.
 //! * `selftest`  — quick end-to-end sanity run (engines vs oracle +
@@ -34,6 +36,7 @@ fn main() {
     let code = match sub.as_str() {
         "multiply" => cmd_multiply(),
         "sign" => cmd_sign(),
+        "serve" => cmd_serve(),
         "table1" => {
             print!("{}", report::table1());
             0
@@ -62,7 +65,7 @@ fn main() {
         other => {
             eprintln!(
                 "dbcsr — DBCSR 2.5D + one-sided MPI reproduction (PASC'17)\n\n\
-                 USAGE: dbcsr <multiply|sign|table1|table2|fig1|fig2|fig3|fig4|selftest> [options]\n\
+                 USAGE: dbcsr <multiply|sign|serve|table1|table2|fig1|fig2|fig3|fig4|selftest> [options]\n\
                  (unknown subcommand '{other}'; try `dbcsr multiply --help`)"
             );
             2
@@ -395,6 +398,125 @@ fn cmd_multiply() -> i32 {
             eprintln!("VERIFICATION FAILED");
             return 1;
         }
+    }
+    0
+}
+
+fn cmd_serve() -> i32 {
+    use dbcsr::blocks::layout::BlockLayout;
+    use dbcsr::blocks::matrix::BlockCsrMatrix;
+    use dbcsr::engines::serve::{JobKind, JobSpec, ServeConfig, ServeFabric, TenantOpts};
+    let args = match Args::new("dbcsr serve", "multi-tenant serving over one fabric")
+        .opt("tenants", "4", "tenant count (consecutive pairs share matrix structure)")
+        .opt("jobs", "6", "jobs per tenant")
+        .opt("ranks", "16", "fabric rank budget")
+        .opt("share", "4", "ranks carved per tenant")
+        .opt("nblocks", "12", "matrix size in blocks")
+        .opt("block-size", "3", "block edge")
+        .opt("occ", "0.4", "block occupancy")
+        .opt("sign-frac", "0.25", "fraction of each tenant's jobs that are sign steps")
+        .opt("cache", "64", "shared plan-cache capacity (0 = no cross-tenant reuse)")
+        .opt("eps", "-1", "filter threshold (<0 = off)")
+        .opt("seed", "42", "rng seed")
+        .flag("verify", "bitwise-compare every job against the serial oracle")
+        .flag("json", "emit a machine-readable JSON report line")
+        .parse_env(1)
+    {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let ntenants: usize = args.get_as("tenants");
+    let jobs: usize = args.get_as("jobs");
+    let nblocks: usize = args.get_as("nblocks");
+    let block_size: usize = args.get_as("block-size");
+    let occ: f64 = args.get_as("occ");
+    let sign_frac: f64 = args.get_as("sign-frac");
+    let seed: u64 = args.get_as("seed");
+    let machine = MachineModel::piz_daint(50e9);
+
+    let mut cfg = ServeConfig::new(machine, args.get_as("ranks"));
+    cfg.cache_capacity = args.get_as("cache");
+    let mut fabric = ServeFabric::new(cfg);
+    let layout = BlockLayout::uniform(nblocks, block_size);
+    let nsign = ((jobs as f64) * sign_frac).round() as usize;
+    for t in 0..ntenants {
+        let mut opts = TenantOpts::new(args.get_as("share"), seed ^ (0xD157 + t as u64));
+        opts.filter = FilterConfig::uniform(args.get_as("eps"));
+        let id = fabric.register_tenant(&format!("tenant-{t}"), opts);
+        // consecutive tenant pairs share structure seeds (congruent
+        // matrices, tenant-scaled values) to exercise cross-tenant
+        // plan-cache reuse; the job mix is sign steps then multiplies
+        let pair = (t / 2) as u64;
+        let scale = 1.0 + 0.25 * (t % 2) as f64;
+        for j in 0..jobs {
+            let sj = seed ^ (1000 + pair * 100 + j as u64);
+            let kind = if j < nsign {
+                let mut x = BlockCsrMatrix::random(&layout, &layout, occ, sj);
+                x.scale(0.1 * scale);
+                JobKind::SignStep { x }
+            } else {
+                let mut a = BlockCsrMatrix::random(&layout, &layout, occ, sj);
+                let mut b = BlockCsrMatrix::random(&layout, &layout, occ, sj ^ 0xBEEF);
+                a.scale(scale);
+                b.scale(scale);
+                JobKind::Multiply { a, b, c0: None }
+            };
+            fabric.submit(id, JobSpec::new(kind, 0.0));
+        }
+    }
+    let report = fabric.run();
+    println!(
+        "serve: {} tenant(s) x {} job(s) on {} ranks; makespan {:.3} ms, \
+         {:.1} jobs/s, p99 latency {:.3} ms, utilization {:.0}%",
+        ntenants,
+        jobs,
+        report.total_ranks,
+        report.makespan_s * 1e3,
+        report.throughput_jobs_per_s,
+        report.latency_p99_s * 1e3,
+        report.utilization * 100.0
+    );
+    println!(
+        "cache: {} lookup(s), {:.0}% hit rate, {:.0}% cross-tenant; \
+         fairness max/min {:.2}",
+        report.cache.lookups,
+        report.cache.hit_rate() * 100.0,
+        report.cache.cross_tenant_hit_rate() * 100.0,
+        report.fairness_ratio
+    );
+    for t in &report.tenants {
+        println!(
+            "  {}: {} completed / {} cancelled / {} failed; \
+             {} cache hit(s) ({} cross-tenant)",
+            t.name, t.completed, t.cancelled, t.failed, t.cache.hits, t.cache.cross_tenant_hits
+        );
+    }
+    if args.is_set("json") {
+        use dbcsr::util::json::Json;
+        let j = Json::obj([("serving", dbcsr::stats::report::serving_json(&report))]);
+        println!("{}", j.to_string_compact());
+    }
+    if args.is_set("verify") {
+        let serial = fabric.serial_baseline();
+        for (t, s) in report.tenants.iter().zip(&serial) {
+            for o in &t.jobs {
+                let Some(c) = &o.c else { continue };
+                let want = s.jobs[o.job].c.as_ref().expect("oracle completes all jobs");
+                let diff = c.to_dense().max_abs_diff(&want.to_dense());
+                if diff != 0.0 {
+                    eprintln!(
+                        "VERIFICATION FAILED: {} job {} differs from serial oracle \
+                         (max |diff| {diff:.3e})",
+                        t.name, o.job
+                    );
+                    return 1;
+                }
+            }
+        }
+        println!("verify: every completed job bitwise-identical to the serial oracle");
     }
     0
 }

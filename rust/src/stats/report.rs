@@ -413,6 +413,121 @@ pub fn session_json(
     ])
 }
 
+/// Machine-readable serving-layer report (`dbcsr serve --json`):
+/// fabric-wide scheduling/cache/ledger metrics plus one block per
+/// tenant (its jobs, its [`session_json`] counters, and its slice of
+/// the shared cache's accounting).
+pub fn serving_json(rep: &crate::engines::serve::ServeReport) -> crate::util::json::Json {
+    use crate::engines::serve::JobStatus;
+    use crate::util::json::Json;
+    let status_str = |s: JobStatus| match s {
+        JobStatus::Completed => "completed",
+        JobStatus::Cancelled => "cancelled",
+        JobStatus::Failed => "failed",
+    };
+    let tenants: Vec<Json> = rep
+        .tenants
+        .iter()
+        .map(|t| {
+            let jobs: Vec<Json> = t
+                .jobs
+                .iter()
+                .map(|o| {
+                    Json::obj([
+                        ("job", Json::Num(o.job as f64)),
+                        ("status", Json::Str(status_str(o.status).to_string())),
+                        ("submit_s", Json::Num(o.submit_s)),
+                        ("start_s", Json::Num(o.start_s)),
+                        ("finish_s", Json::Num(o.finish_s)),
+                        ("ranks", Json::Num(o.ranks as f64)),
+                        ("service_s", Json::Num(o.service_s)),
+                        ("cache_hit", Json::Bool(o.cache_hit)),
+                        ("cross_tenant_hit", Json::Bool(o.cross_tenant_hit)),
+                    ])
+                })
+                .collect();
+            Json::obj([
+                ("name", Json::Str(t.name.clone())),
+                ("rank_share", Json::Num(t.rank_share as f64)),
+                ("completed", Json::Num(t.completed as f64)),
+                ("cancelled", Json::Num(t.cancelled as f64)),
+                ("failed", Json::Num(t.failed as f64)),
+                ("quarantined", Json::Bool(t.quarantined)),
+                ("cache_lookups", Json::Num(t.cache.lookups as f64)),
+                ("cache_hits", Json::Num(t.cache.hits as f64)),
+                (
+                    "cache_cross_tenant_hits",
+                    Json::Num(t.cache.cross_tenant_hits as f64),
+                ),
+                ("cache_misses", Json::Num(t.cache.misses as f64)),
+                ("session", session_json(&t.summary)),
+                ("jobs", Json::Arr(jobs)),
+            ])
+        })
+        .collect();
+    Json::obj([
+        ("total_ranks", Json::Num(rep.total_ranks as f64)),
+        ("makespan_s", Json::Num(rep.makespan_s)),
+        (
+            "throughput_jobs_per_s",
+            Json::Num(rep.throughput_jobs_per_s),
+        ),
+        ("latency_mean_s", Json::Num(rep.latency_mean_s)),
+        ("latency_p50_s", Json::Num(rep.latency_p50_s)),
+        ("latency_p99_s", Json::Num(rep.latency_p99_s)),
+        ("busy_rank_seconds", Json::Num(rep.busy_rank_seconds)),
+        ("job_rank_seconds", Json::Num(rep.job_rank_seconds)),
+        (
+            "peak_in_flight_ranks",
+            Json::Num(rep.peak_in_flight_ranks as f64),
+        ),
+        ("utilization", Json::Num(rep.utilization)),
+        ("fairness_ratio", Json::Num(rep.fairness_ratio)),
+        (
+            "cache",
+            Json::obj([
+                ("lookups", Json::Num(rep.cache.lookups as f64)),
+                ("hits", Json::Num(rep.cache.hits as f64)),
+                (
+                    "cross_tenant_hits",
+                    Json::Num(rep.cache.cross_tenant_hits as f64),
+                ),
+                ("misses", Json::Num(rep.cache.misses as f64)),
+                ("evictions", Json::Num(rep.cache.evictions as f64)),
+                ("hit_rate", Json::Num(rep.cache.hit_rate())),
+                (
+                    "cross_tenant_hit_rate",
+                    Json::Num(rep.cache.cross_tenant_hit_rate()),
+                ),
+            ]),
+        ),
+        (
+            "pool",
+            Json::obj([
+                ("multiplications", Json::Num(rep.pool.multiplications as f64)),
+                (
+                    "initial_allocations",
+                    Json::Num(rep.pool.initial_allocations as f64),
+                ),
+                ("reallocations", Json::Num(rep.pool.reallocations as f64)),
+                (
+                    "pooled_collectives",
+                    Json::Num(rep.pool.pooled_collectives() as f64),
+                ),
+                (
+                    "naive_collectives",
+                    Json::Num(rep.pool.naive_collectives as f64),
+                ),
+                (
+                    "high_water_bytes",
+                    Json::Num(rep.pool.high_water_bytes as f64),
+                ),
+            ]),
+        ),
+        ("tenants", Json::Arr(tenants)),
+    ])
+}
+
 /// Machine-readable summary of a sign-iteration run
 /// (`dbcsr sign --json`): convergence plus the per-iteration trace.
 pub fn sign_result_json(res: &crate::sign::iteration::SignResult) -> crate::util::json::Json {

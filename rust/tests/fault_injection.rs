@@ -135,3 +135,134 @@ fn layout_mismatch_rejected() {
         Ok(_) => panic!("mismatched layouts must be rejected"),
     }
 }
+
+#[test]
+fn serving_deadline_cancels_tenant_without_perturbing_others() {
+    use dbcsr::prelude::*;
+    // A owns the whole 4-rank fabric; B (also full-share) queues behind
+    // it with a deadline that expires while A runs.  B must be
+    // cancelled cleanly: no windows allocated, no trace in the pool
+    // ledger, and A's results bitwise-identical to A running alone.
+    let mk = |seed: u64| {
+        let layout = BlockLayout::uniform(10, 3);
+        BlockCsrMatrix::random(&layout, &layout, 0.4, seed)
+    };
+    let mut fabric = ServeFabric::new(ServeConfig::new(MachineModel::piz_daint(50e9), 4));
+    let a = fabric.register_tenant("hog", TenantOpts::new(4, 1));
+    let b = fabric.register_tenant("late", TenantOpts::new(4, 2));
+    for j in 0..2u64 {
+        fabric.submit(
+            a,
+            JobSpec::new(
+                JobKind::Multiply { a: mk(10 + j), b: mk(20 + j), c0: None },
+                0.0,
+            ),
+        );
+    }
+    let deadline = 1e-9; // passes while A's first job is still running
+    fabric.submit(
+        b,
+        JobSpec::new(JobKind::Multiply { a: mk(30), b: mk(40), c0: None }, 0.0)
+            .with_deadline(deadline),
+    );
+    let serial = fabric.serial_baseline();
+    let report = fabric.run();
+    let (ra, rb) = (&report.tenants[a], &report.tenants[b]);
+    assert_eq!(rb.cancelled, 1, "deadline must cancel B's only job");
+    assert_eq!(rb.jobs[0].status, JobStatus::Cancelled);
+    assert_eq!(rb.jobs[0].start_s, deadline, "cancelled at its deadline");
+    assert_eq!(rb.jobs[0].finish_s, deadline);
+    assert_eq!(rb.jobs[0].ranks, 0, "cancelled job held no ranks");
+    // No window leak: the cancelled tenant never touched its pool.
+    assert_eq!(rb.summary.multiplications, 0);
+    assert_eq!(
+        format!("{:?}", rb.summary.pool),
+        format!("{:?}", WindowPoolStats::default()),
+        "cancelled tenant leaked pooled windows"
+    );
+    // The aggregate pool ledger is exactly A's: B contributed nothing.
+    assert_eq!(
+        format!("{:?}", report.pool),
+        format!("{:?}", ra.summary.pool),
+    );
+    // A is bitwise-unperturbed by B's cancellation.
+    assert_eq!(ra.completed, 2);
+    for (j, (co, so)) in ra.jobs.iter().zip(serial[a].jobs.iter()).enumerate() {
+        let d = co
+            .c
+            .as_ref()
+            .unwrap()
+            .to_dense()
+            .max_abs_diff(&so.c.as_ref().unwrap().to_dense());
+        assert_eq!(d, 0.0, "B's cancellation perturbed A's job {j} by {d:e}");
+    }
+}
+
+#[test]
+fn serving_panic_mid_plan_quarantines_tenant_without_collateral() {
+    use dbcsr::prelude::*;
+    // B's first job panics mid-plan (before any cache or session
+    // mutation).  The fabric must quarantine B — fail the job, drain
+    // the rest of its queue — while A completes bitwise-identically
+    // and the rank-seconds ledger still balances.
+    let mk = |seed: u64| {
+        let layout = BlockLayout::uniform(8, 3);
+        BlockCsrMatrix::random(&layout, &layout, 0.4, seed)
+    };
+    let mut fabric = ServeFabric::new(ServeConfig::new(MachineModel::piz_daint(50e9), 8));
+    let a = fabric.register_tenant("steady", TenantOpts::new(4, 1));
+    let b = fabric.register_tenant("faulty", TenantOpts::new(4, 2));
+    for j in 0..2u64 {
+        fabric.submit(
+            a,
+            JobSpec::new(
+                JobKind::Multiply { a: mk(10 + j), b: mk(20 + j), c0: None },
+                0.0,
+            ),
+        );
+    }
+    fabric.submit(
+        b,
+        JobSpec::new(JobKind::Multiply { a: mk(30), b: mk(40), c0: None }, 0.0)
+            .with_fault(JobFault::PanicMidPlan),
+    );
+    fabric.submit(
+        b,
+        JobSpec::new(JobKind::Multiply { a: mk(31), b: mk(41), c0: None }, 0.0),
+    );
+    let serial = fabric.serial_baseline();
+    let report = fabric.run(); // must not propagate the panic
+    let (ra, rb) = (&report.tenants[a], &report.tenants[b]);
+    assert!(rb.quarantined, "panicking tenant must be quarantined");
+    assert_eq!(rb.failed, 1);
+    assert_eq!(rb.jobs[0].status, JobStatus::Failed);
+    assert_eq!(rb.cancelled, 1, "queued work behind the fault is drained");
+    assert_eq!(rb.jobs[1].status, JobStatus::Cancelled);
+    // The panic fired before any execution: B's session is untouched.
+    assert_eq!(rb.summary.multiplications, 0);
+    assert_eq!(
+        format!("{:?}", rb.summary.pool),
+        format!("{:?}", WindowPoolStats::default()),
+        "quarantined tenant leaked pooled windows"
+    );
+    // A is bitwise-unperturbed and the ledger still balances.
+    assert_eq!(ra.completed, 2);
+    for (j, (co, so)) in ra.jobs.iter().zip(serial[a].jobs.iter()).enumerate() {
+        let d = co
+            .c
+            .as_ref()
+            .unwrap()
+            .to_dense()
+            .max_abs_diff(&so.c.as_ref().unwrap().to_dense());
+        assert_eq!(d, 0.0, "B's fault perturbed A's job {j} by {d:e}");
+    }
+    let direct: f64 = report
+        .tenants
+        .iter()
+        .flat_map(|t| t.jobs.iter())
+        .filter(|o| o.status == JobStatus::Completed)
+        .map(|o| o.ranks as f64 * o.service_s)
+        .sum();
+    let rel = (report.busy_rank_seconds - direct).abs() / direct.max(1e-300);
+    assert!(rel < 1e-9, "rank-seconds ledger off by {rel:e} after a fault");
+}

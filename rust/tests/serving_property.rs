@@ -1,0 +1,389 @@
+//! Integration: the multi-tenant serving layer's determinism contract
+//! and cache accounting, across randomized tenant mixes.
+//!
+//! 1. **bitwise identity** — every completed job of a concurrent
+//!    `ServeFabric::run` produces the exact same C, the same plan
+//!    choice, and the same per-tenant `SessionSummary` as the same
+//!    jobs run serially per tenant (`serial_baseline`);
+//! 2. **schedule independence** — C never depends on arrival times or
+//!    on the fabric's total rank budget, only on the operands and the
+//!    tenant's own configuration (share, seed, filter, symbolic);
+//! 3. **conservation** — rank-seconds integrate exactly: the ledger's
+//!    busy integral equals Σ ranks×service over completed jobs, and
+//!    the in-flight peak never exceeds the fabric budget;
+//! 4. **cache accounting exactness** — shared-cache counters are
+//!    self-consistent and the per-tenant splits sum to the globals;
+//! 5. **cross-tenant sharing** — structurally congruent tenants reuse
+//!    each other's plans (>50% hit rate on the follower) while a
+//!    structurally distinct tenant never false-hits;
+//! 6. **structural-hash integrity** — distinct block structures get
+//!    distinct digests (collision smoke), identical structures with
+//!    different values collide on purpose.
+
+use dbcsr::prelude::*;
+use dbcsr::util::testkit::property;
+
+fn machine() -> MachineModel {
+    MachineModel::piz_daint(50e9)
+}
+
+/// Matrix whose dims come from `base` (so operand pairs built from one
+/// base always conform) and whose block pattern is a pure function of
+/// `pattern`; `scale` revalues the entries.  Scaling never adds or
+/// removes blocks, so two tenants using the same seeds with different
+/// scales are structurally congruent (same `StructuralKey`) but
+/// numerically distinct.
+fn congruent_mat(base: u64, pattern: u64, scale: f64) -> BlockCsrMatrix {
+    let mut g = Pcg64::new_stream(base, 5);
+    let nblocks = 6 + g.usize_below(4);
+    let bs = 2 + g.usize_below(2);
+    let occ = 0.3 + 0.3 * g.f64();
+    let layout = BlockLayout::uniform(nblocks, bs);
+    let mut m = BlockCsrMatrix::random(&layout, &layout, occ, pattern);
+    if scale != 1.0 {
+        m.scale(scale);
+    }
+    m
+}
+
+/// A multiply or sign-step job over the structure `struct_seed`,
+/// revalued per tenant by `scale`.
+fn job_kind(struct_seed: u64, scale: f64, sign: bool) -> JobKind {
+    if sign {
+        // Keep ‖X‖ small so one Newton–Schulz step stays well-scaled.
+        JobKind::SignStep {
+            x: congruent_mat(struct_seed, struct_seed ^ 0x51, 0.08 * scale),
+        }
+    } else {
+        JobKind::Multiply {
+            a: congruent_mat(struct_seed, struct_seed ^ 0xA, scale),
+            b: congruent_mat(struct_seed, struct_seed ^ 0xB, scale),
+            c0: None,
+        }
+    }
+}
+
+/// Randomized fabric: 2–4 tenants with random shares, 1–3 jobs each
+/// drawn from a small shared pool of structure seeds (so the shared
+/// cache sees both within- and cross-tenant reuse), random staggered
+/// submit times.  No deadlines, no faults: every job must complete.
+fn random_fabric(rng: &mut Pcg64, case: usize) -> ServeFabric {
+    let total = 4 + 2 * rng.usize_below(3); // 4, 6 or 8 ranks
+    let mut cfg = ServeConfig::new(machine(), total);
+    cfg.cache_capacity = [2, 8, 64][rng.usize_below(3)];
+    let mut fabric = ServeFabric::new(cfg);
+    let pool: Vec<u64> = (0..3)
+        .map(|k| 0x5EED ^ ((case as u64) << 8) ^ (k as u64))
+        .collect();
+    let ntenants = 2 + rng.usize_below(3);
+    for t in 0..ntenants {
+        let share = 1 + rng.usize_below(total.min(4));
+        let opts = TenantOpts::new(share, 90 + t as u64);
+        let id = fabric.register_tenant(&format!("tenant-{t}"), opts);
+        let scale = 1.0 + 0.25 * t as f64;
+        let njobs = 1 + rng.usize_below(3);
+        for _ in 0..njobs {
+            let sseed = pool[rng.usize_below(pool.len())];
+            let sign = rng.chance(0.3);
+            let submit = if rng.chance(0.5) {
+                0.0
+            } else {
+                rng.range_f64(0.0, 5e-3)
+            };
+            fabric.submit(id, JobSpec::new(job_kind(sseed, scale, sign), submit));
+        }
+    }
+    fabric
+}
+
+fn bitwise_diff(a: &BlockCsrMatrix, b: &BlockCsrMatrix) -> f64 {
+    a.to_dense().max_abs_diff(&b.to_dense())
+}
+
+/// Plan provenance fingerprint: chosen candidate + priced occupancy.
+fn plan_fp(p: &Plan) -> (String, u64) {
+    (p.choice.label(), p.spec_occupancy.to_bits())
+}
+
+#[test]
+fn serving_matches_serial_oracle_bitwise() {
+    property("serving_matches_serial_oracle_bitwise", 0xFAB1, 4, |rng, case| {
+        let mut fabric = random_fabric(rng, case);
+        let serial = fabric.serial_baseline();
+        let report = fabric.run();
+        for (t, (conc, ser)) in report.tenants.iter().zip(serial.iter()).enumerate() {
+            if conc.completed != conc.jobs.len() {
+                return Err(format!(
+                    "tenant {t}: {}/{} jobs completed (no deadlines were set)",
+                    conc.completed,
+                    conc.jobs.len()
+                ));
+            }
+            // Fault-free + deadline-free: the per-tenant session history
+            // is identical job-for-job, so the whole summary matches.
+            let (cs, ss) = (format!("{:?}", conc.summary), format!("{:?}", ser.summary));
+            if cs != ss {
+                return Err(format!(
+                    "tenant {t}: concurrent summary diverged from serial\n \
+                     concurrent: {cs}\n serial:     {ss}"
+                ));
+            }
+            for (j, (co, so)) in conc.jobs.iter().zip(ser.jobs.iter()).enumerate() {
+                if co.status != JobStatus::Completed {
+                    return Err(format!("tenant {t} job {j}: {:?}", co.status));
+                }
+                let (c1, c0) = match (&co.c, &so.c) {
+                    (Some(c1), Some(c0)) => (c1, c0),
+                    _ => return Err(format!("tenant {t} job {j}: missing result")),
+                };
+                let d = bitwise_diff(c1, c0);
+                if d != 0.0 {
+                    return Err(format!(
+                        "tenant {t} job {j}: concurrent C differs from serial by {d:e}"
+                    ));
+                }
+                let fp1: Vec<_> = co.plans.iter().map(|p| plan_fp(p)).collect();
+                let fp0: Vec<_> = so.plans.iter().map(|p| plan_fp(p)).collect();
+                if fp1 != fp0 {
+                    return Err(format!(
+                        "tenant {t} job {j}: plan provenance diverged: {fp1:?} vs {fp0:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn results_are_independent_of_arrival_pattern_and_fabric_width() {
+    // Same tenants (shares, seeds, job operands) on two fabrics that
+    // differ in everything scheduling-relevant: total rank budget,
+    // submit times, cache capacity.  Every job's C must be bitwise
+    // identical across the two runs.
+    let build = |total: usize, capacity: usize, stagger: f64| -> ServeReport {
+        let mut cfg = ServeConfig::new(machine(), total);
+        cfg.cache_capacity = capacity;
+        let mut fabric = ServeFabric::new(cfg);
+        for t in 0..3usize {
+            let id = fabric.register_tenant(
+                &format!("t{t}"),
+                TenantOpts::new(1 + t % 2, 7 + t as u64),
+            );
+            let scale = 1.0 + 0.5 * t as f64;
+            for j in 0..2u64 {
+                let kind = job_kind(0xC0FFEE ^ (j << 4), scale, j == 1);
+                fabric.submit(id, JobSpec::new(kind, stagger * (t as f64 + j as f64)));
+            }
+        }
+        fabric.run()
+    };
+    let wide = build(8, 64, 0.0);
+    let narrow = build(4, 2, 2e-3);
+    for (t, (rw, rn)) in wide.tenants.iter().zip(narrow.tenants.iter()).enumerate() {
+        assert_eq!(rw.completed, rw.jobs.len(), "tenant {t} wide");
+        assert_eq!(rn.completed, rn.jobs.len(), "tenant {t} narrow");
+        for (j, (ow, on)) in rw.jobs.iter().zip(rn.jobs.iter()).enumerate() {
+            let (cw, cn) = (ow.c.as_ref().unwrap(), on.c.as_ref().unwrap());
+            assert_eq!(
+                bitwise_diff(cw, cn),
+                0.0,
+                "tenant {t} job {j}: C depends on the schedule"
+            );
+            let fpw: Vec<_> = ow.plans.iter().map(|p| plan_fp(p)).collect();
+            let fpn: Vec<_> = on.plans.iter().map(|p| plan_fp(p)).collect();
+            assert_eq!(fpw, fpn, "tenant {t} job {j}: plan depends on the schedule");
+        }
+    }
+}
+
+#[test]
+fn rank_seconds_are_conserved_across_random_mixes() {
+    property("rank_seconds_are_conserved", 0xFAB2, 4, |rng, case| {
+        let mut fabric = random_fabric(rng, case);
+        let total = fabric.config().total_ranks;
+        let report = fabric.run();
+        // Σ ranks×service over completed jobs, straight from outcomes.
+        let direct: f64 = report
+            .tenants
+            .iter()
+            .flat_map(|t| t.jobs.iter())
+            .filter(|o| o.status == JobStatus::Completed)
+            .map(|o| o.ranks as f64 * o.service_s)
+            .sum();
+        let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-300);
+        if rel(report.job_rank_seconds, direct) > 1e-12 {
+            return Err(format!(
+                "job_rank_seconds {} != Σ ranks×service {}",
+                report.job_rank_seconds, direct
+            ));
+        }
+        if rel(report.busy_rank_seconds, direct) > 1e-9 {
+            return Err(format!(
+                "ledger busy integral {} != Σ ranks×service {}",
+                report.busy_rank_seconds, direct
+            ));
+        }
+        if report.peak_in_flight_ranks > total {
+            return Err(format!(
+                "peak in-flight {} exceeds fabric budget {total}",
+                report.peak_in_flight_ranks
+            ));
+        }
+        if report.utilization > 1.0 + 1e-9 {
+            return Err(format!("utilization {} > 1", report.utilization));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_accounting_is_exact() {
+    property("cache_accounting_is_exact", 0xFAB3, 4, |rng, case| {
+        let mut fabric = random_fabric(rng, case);
+        let capacity = fabric.config().cache_capacity;
+        let ntenants = {
+            let report = fabric.run();
+            // Global counters are self-consistent…
+            let g = &report.cache;
+            if g.lookups != g.hits + g.misses {
+                return Err(format!(
+                    "lookups {} != hits {} + misses {}",
+                    g.lookups, g.hits, g.misses
+                ));
+            }
+            if g.cross_tenant_hits > g.hits {
+                return Err(format!(
+                    "cross-tenant hits {} > hits {}",
+                    g.cross_tenant_hits, g.hits
+                ));
+            }
+            // …and the per-tenant splits sum to them exactly.
+            let sum = |f: fn(&TenantCacheStats) -> usize| -> usize {
+                report.tenants.iter().map(|t| f(&t.cache)).sum()
+            };
+            let sums = [
+                (sum(|c| c.lookups), g.lookups, "lookups"),
+                (sum(|c| c.hits), g.hits, "hits"),
+                (sum(|c| c.cross_tenant_hits), g.cross_tenant_hits, "cross"),
+                (sum(|c| c.misses), g.misses, "misses"),
+            ];
+            for (got, want, what) in sums {
+                if got != want {
+                    return Err(format!("Σ tenant {what} = {got} != global {want}"));
+                }
+            }
+            report.tenants.len()
+        };
+        let cache = fabric.cache();
+        if cache.len() > capacity {
+            return Err(format!(
+                "cache holds {} entries over capacity {capacity}",
+                cache.len()
+            ));
+        }
+        // tenant_stats on an unknown tenant id is all zeros, so the
+        // per-tenant view covers exactly the registered tenants.
+        let ghost = cache.tenant_stats(ntenants + 17);
+        if ghost.lookups + ghost.hits + ghost.misses != 0 {
+            return Err("phantom tenant has nonzero cache stats".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn congruent_tenants_share_plans_and_distinct_tenants_never_false_hit() {
+    let mut cfg = ServeConfig::new(machine(), 8);
+    cfg.cache_capacity = 64;
+    let mut fabric = ServeFabric::new(cfg);
+    // A and B: structurally congruent job streams (same structure
+    // seeds, same rank share — the structural key includes the budget
+    // — different values).  C: structurally distinct jobs.
+    let a = fabric.register_tenant("a", TenantOpts::new(2, 11));
+    let b = fabric.register_tenant("b", TenantOpts::new(2, 22));
+    let c = fabric.register_tenant("c", TenantOpts::new(2, 33));
+    let seeds = [0xAA1u64, 0xAA2, 0xAA1, 0xAA2]; // two repeats each
+    for (j, s) in seeds.iter().enumerate() {
+        fabric.submit(a, JobSpec::new(job_kind(*s, 1.0, j == 3), 0.0));
+        fabric.submit(b, JobSpec::new(job_kind(*s, 1.75, j == 3), 0.0));
+    }
+    for (j, s) in [0xBB1u64, 0xBB2, 0xBB3].iter().enumerate() {
+        fabric.submit(c, JobSpec::new(job_kind(*s, 1.0, j == 2), 0.0));
+    }
+    let report = fabric.run();
+    for t in &report.tenants {
+        assert_eq!(t.completed, t.jobs.len(), "tenant {}", t.name);
+    }
+    let [ra, rb, rc] = [&report.tenants[a], &report.tenants[b], &report.tenants[c]];
+    // A primes the cache (registered first, admitted first at t=0) and
+    // self-hits its repeats; B should ride A's entries nearly wall-to-
+    // wall — the >50% cross-tenant reuse the shared cache exists for.
+    assert!(ra.cache.misses > 0, "tenant a must prime the cache");
+    let hit_rate = rb.cache.hits as f64 / rb.cache.lookups as f64;
+    assert!(
+        hit_rate > 0.5,
+        "congruent follower hit rate {hit_rate} <= 0.5 ({:?})",
+        rb.cache
+    );
+    assert!(
+        rb.cache.cross_tenant_hits > 0,
+        "congruent follower never hit a foreign entry: {:?}",
+        rb.cache
+    );
+    // The structurally distinct tenant must never be served a foreign
+    // plan: every distinct structure prices fresh.
+    assert_eq!(
+        rc.cache.cross_tenant_hits, 0,
+        "distinct tenant false-hit the shared cache: {:?}",
+        rc.cache
+    );
+    assert_eq!(rc.cache.hits, 0, "distinct structures self-hit: {:?}", rc.cache);
+    assert_eq!(rc.cache.misses, rc.cache.lookups);
+    // Reuse is numerically safe: B's results match B's private oracle.
+    let serial = fabric.serial_baseline();
+    for (j, (co, so)) in rb.jobs.iter().zip(serial[b].jobs.iter()).enumerate() {
+        let d = bitwise_diff(co.c.as_ref().unwrap(), so.c.as_ref().unwrap());
+        assert_eq!(d, 0.0, "shared plan perturbed tenant b job {j} by {d:e}");
+    }
+}
+
+#[test]
+fn structural_hash_collision_smoke() {
+    use std::collections::HashMap;
+    // ~200 random structures: distinct structures ⇒ distinct digests.
+    let mut seen: HashMap<StructuralHash, (usize, usize, Vec<(usize, usize)>)> =
+        HashMap::new();
+    let mut rng = Pcg64::new_stream(0xFAB4, 77);
+    for i in 0..200u64 {
+        let nblocks = 3 + rng.usize_below(10);
+        let bs = 1 + rng.usize_below(4);
+        let occ = rng.range_f64(0.05, 0.9);
+        let layout = BlockLayout::uniform(nblocks, bs);
+        let m = BlockCsrMatrix::random(&layout, &layout, occ, 0xD1CE ^ i);
+        let mut coords: Vec<(usize, usize)> =
+            m.iter_blocks().map(|(r, c, _)| (r, c)).collect();
+        coords.sort_unstable();
+        let desc = (nblocks, bs, coords);
+        let h = structural_hash(&m);
+        if let Some(prev) = seen.get(&h) {
+            assert_eq!(
+                *prev, desc,
+                "digest collision between distinct structures: {h:?}"
+            );
+        }
+        seen.insert(h, desc);
+    }
+    // Same structure, different values: the digest must collide — that
+    // equivalence class is exactly what the shared cache keys on.
+    let layout = BlockLayout::uniform(8, 3);
+    let m1 = BlockCsrMatrix::random(&layout, &layout, 0.4, 9);
+    let mut m2 = m1.clone();
+    m2.scale(-3.25);
+    assert_eq!(structural_hash(&m1), structural_hash(&m2));
+    assert_ne!(
+        bitwise_diff(&m1, &m2),
+        0.0,
+        "revalued copy should differ numerically"
+    );
+}
