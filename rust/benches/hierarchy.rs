@@ -1,0 +1,248 @@
+//! Hierarchical-fabric bench: two-level pricing, node remapping, and
+//! coalesced block-granular gets.
+//!
+//! Runs the one-sided engine on a simulated multi-node topology (4x4
+//! ranks packed 4 per node) and pins the four claims the hierarchy
+//! makes:
+//!
+//! 1. **end-to-end win** — with intra-node window reads, grid-to-node
+//!    remapping, and get coalescing all on, the executed virtual
+//!    makespan beats the flat single-level fabric by >= 1.3x on a
+//!    comm-dominated configuration;
+//! 2. **message collapse** — on the symbolic one-sided path the
+//!    gap-limited coalescer cuts inter-node message count by >= 2x vs
+//!    per-block gets (and absorbs >= 2 block requests per message);
+//! 3. **planner split accuracy** — the planner's modeled inter-node
+//!    traffic fraction (`hierarchy.inter_fraction`) agrees with the
+//!    executed inter/(inter+intra) byte split within 10 points;
+//! 4. **bitwise identity** — every hierarchy mode (flat, remap on/off,
+//!    coalesce on/off) reproduces the flat C exactly, on both engines,
+//!    eager and symbolic.
+//!
+//! Writes `BENCH_hierarchy.json` (per-seed speedups plus the summary
+//! gates) on every run.
+//!
+//! ```bash
+//! cargo bench --bench hierarchy            # full sweep (3 seeds)
+//! cargo bench --bench hierarchy -- --smoke # CI profile (1 seed)
+//! ```
+
+use dbcsr::benchkit::print_header;
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::ProcGrid;
+use dbcsr::engines::multiply::{
+    multiply_distributed, Engine, HierarchyConfig, MultiplyConfig, MultiplyReport, SymbolicMode,
+};
+use dbcsr::engines::planner::Planner;
+use dbcsr::perfmodel::machine::MachineModel;
+use dbcsr::util::json::Json;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+const NBLOCKS: usize = 24;
+const BLOCK_SIZE: usize = 4;
+const OCC: f64 = 0.4;
+const RPN: usize = 4;
+
+/// Comm-dominated machine: Piz-Daint network, compute fast enough that
+/// the fabric clock is set by traffic.
+fn machine() -> MachineModel {
+    MachineModel::piz_daint(1e15)
+}
+
+fn run(
+    a: &dbcsr::blocks::matrix::BlockCsrMatrix,
+    b: &dbcsr::blocks::matrix::BlockCsrMatrix,
+    dist: &Distribution2d,
+    engine: Engine,
+    symbolic: SymbolicMode,
+    hierarchy: Option<HierarchyConfig>,
+) -> MultiplyReport {
+    let cfg = MultiplyConfig {
+        engine,
+        symbolic,
+        hierarchy,
+        machine: Some(machine()),
+        ..Default::default()
+    };
+    multiply_distributed(a, b, None, dist, &cfg).unwrap()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seeds: &[u64] = if smoke { &[21] } else { &[21, 22, 23] };
+    let grid = ProcGrid::new(4, 4).unwrap();
+    let os1 = Engine::OneSided { l: 1 };
+    let full = HierarchyConfig::new(RPN);
+    let no_coalesce = HierarchyConfig {
+        coalesce: false,
+        ..full
+    };
+    let no_remap = HierarchyConfig {
+        remap: false,
+        coalesce: false,
+        ..full
+    };
+
+    print_header("hierarchical fabric: 4x4 ranks on 4 nodes, 24x24 blocks of 4");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    let mut msg_ratios: Vec<f64> = Vec::new();
+    let mut blocks_per_msg: Vec<f64> = Vec::new();
+    let mut split_errs: Vec<f64> = Vec::new();
+
+    for &seed in seeds {
+        let spec = BenchSpec::observed("hierarchy-bench", NBLOCKS, BLOCK_SIZE, OCC);
+        let a = random_for_spec(&spec, seed);
+        let b = random_for_spec(&spec, seed ^ 0xBEEF);
+        let layout = spec.layout();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD1);
+
+        // 1. end-to-end: flat vs fully hierarchical, symbolic one-sided
+        let flat = run(&a, &b, &dist, os1, SymbolicMode::On, None);
+        let hier = run(&a, &b, &dist, os1, SymbolicMode::On, Some(full));
+        assert_eq!(
+            flat.c.to_dense().max_abs_diff(&hier.c.to_dense()),
+            0.0,
+            "seed={seed}: hierarchy changed the bits"
+        );
+        let speedup = flat.virtual_makespan_s / hier.virtual_makespan_s;
+        let h = hier.hierarchy.expect("hierarchical run reports levels");
+        println!(
+            "seed {seed}: flat {:.3} ms vs hier {:.3} ms ({speedup:.2}x); \
+             {} node(s), mapping {}, inter {:.3} MB / intra {:.3} MB",
+            flat.virtual_makespan_s * 1e3,
+            hier.virtual_makespan_s * 1e3,
+            h.nodes,
+            h.mapping,
+            h.inter_bytes as f64 / 1e6,
+            h.intra_bytes as f64 / 1e6
+        );
+        speedups.push(speedup);
+
+        // 2. coalescing: per-block vs gap-limited-run gets, symbolic path
+        let percall = run(&a, &b, &dist, os1, SymbolicMode::On, Some(no_coalesce));
+        let hp = percall.hierarchy.expect("hierarchical run reports levels");
+        assert_eq!(
+            percall.c.to_dense().max_abs_diff(&hier.c.to_dense()),
+            0.0,
+            "seed={seed}: disabling coalescing changed the bits"
+        );
+        let ratio = hp.inter_msgs as f64 / h.inter_msgs.max(1) as f64;
+        let absorbed = h.coalesce_blocks as f64 / h.coalesce_msgs.max(1) as f64;
+        println!(
+            "  coalescing: {} -> {} inter msg(s) ({ratio:.2}x), \
+             {} block get(s) in {} message(s) ({absorbed:.2} blocks/msg)",
+            hp.inter_msgs, h.inter_msgs, h.coalesce_blocks, h.coalesce_msgs
+        );
+        msg_ratios.push(ratio);
+        blocks_per_msg.push(absorbed);
+
+        // 3. planner split vs executed split, eager one-sided
+        let eager = run(&a, &b, &dist, os1, SymbolicMode::Off, Some(full));
+        let he = eager.hierarchy.expect("hierarchical run reports levels");
+        let total = (he.inter_bytes + he.intra_bytes).max(1);
+        let executed_frac = he.inter_bytes as f64 / total as f64;
+        let planner = Planner::new(machine(), grid.size()).with_hierarchy(full);
+        let cand = planner
+            .candidates(&spec)
+            .into_iter()
+            .find(|c| matches!(c.engine, Engine::OneSided { l: 1 }) && c.grid == grid)
+            .expect("planner prices the executed candidate");
+        let planned_frac = cand
+            .hierarchy
+            .expect("hierarchical planner prices levels")
+            .inter_fraction;
+        let err = (planned_frac - executed_frac).abs();
+        println!(
+            "  split: planner inter fraction {planned_frac:.3} vs executed \
+             {executed_frac:.3} ({:.1} point gap)",
+            err * 100.0
+        );
+        split_errs.push(err);
+
+        // 4. bitwise identity across engines x modes x symbolic
+        let engines: &[Engine] = if smoke {
+            &[Engine::PointToPoint, Engine::OneSided { l: 1 }]
+        } else {
+            &[
+                Engine::PointToPoint,
+                Engine::OneSided { l: 1 },
+                Engine::OneSided { l: 4 },
+            ]
+        };
+        for &engine in engines {
+            for symbolic in [SymbolicMode::Off, SymbolicMode::On] {
+                let base = run(&a, &b, &dist, engine, symbolic, None);
+                for hcfg in [no_remap, no_coalesce, full] {
+                    let got = run(&a, &b, &dist, engine, symbolic, Some(hcfg));
+                    let diff = base.c.to_dense().max_abs_diff(&got.c.to_dense());
+                    assert_eq!(
+                        diff,
+                        0.0,
+                        "{} seed={seed} remap={} coalesce={}: hierarchy changed the bits",
+                        engine.label(),
+                        hcfg.remap,
+                        hcfg.coalesce
+                    );
+                }
+            }
+        }
+
+        rows.push(Json::obj([
+            ("seed", Json::Num(seed as f64)),
+            ("flat_makespan_s", Json::Num(flat.virtual_makespan_s)),
+            ("hier_makespan_s", Json::Num(hier.virtual_makespan_s)),
+            ("speedup", Json::Num(speedup)),
+            ("inter_bytes", Json::Num(h.inter_bytes as f64)),
+            ("intra_bytes", Json::Num(h.intra_bytes as f64)),
+            ("remap_saved_bytes", Json::Num(h.remap_saved_bytes as f64)),
+            ("msg_reduction", Json::Num(ratio)),
+            ("blocks_per_msg", Json::Num(absorbed)),
+            ("planned_inter_fraction", Json::Num(planned_frac)),
+            ("executed_inter_fraction", Json::Num(executed_frac)),
+        ]));
+    }
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let speedup = mean(&speedups);
+    let msg_ratio = mean(&msg_ratios);
+    let absorbed = mean(&blocks_per_msg);
+    let split_err = split_errs.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "summary: {speedup:.2}x end-to-end, {msg_ratio:.2}x fewer inter msgs \
+         ({absorbed:.2} blocks/msg), worst split gap {:.1} points",
+        split_err * 100.0
+    );
+    assert!(
+        speedup >= 1.3,
+        "hierarchical fabric speedup {speedup:.2}x below the 1.3x gate"
+    );
+    assert!(
+        msg_ratio >= 2.0,
+        "coalescing message reduction {msg_ratio:.2}x below the 2x gate"
+    );
+    assert!(
+        absorbed >= 2.0,
+        "coalescer absorbed only {absorbed:.2} blocks/msg (< 2)"
+    );
+    assert!(
+        split_err <= 0.10,
+        "planner/executed inter-node split disagrees by {:.1} points (> 10)",
+        split_err * 100.0
+    );
+
+    let summary = Json::obj([
+        ("bench", Json::Str("hierarchy".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(rows)),
+        ("speedup", Json::Num(speedup)),
+        ("msg_reduction", Json::Num(msg_ratio)),
+        ("blocks_per_msg", Json::Num(absorbed)),
+        ("split_err", Json::Num(split_err)),
+        ("bitwise_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_hierarchy.json", summary.to_string_compact())
+        .expect("write BENCH_hierarchy.json");
+    println!("wrote BENCH_hierarchy.json");
+}

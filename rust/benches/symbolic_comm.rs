@@ -66,7 +66,7 @@ fn main() {
                 };
                 let sym_cfg = MultiplyConfig {
                     symbolic: SymbolicMode::On,
-                    ..eager_cfg
+                    ..eager_cfg.clone()
                 };
                 let eager = multiply_distributed(&a, &b, None, &dist, &eager_cfg).unwrap();
                 let sym = multiply_distributed(&a, &b, None, &dist, &sym_cfg).unwrap();

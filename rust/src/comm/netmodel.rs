@@ -82,6 +82,83 @@ impl NetModel {
     }
 }
 
+/// Two-level (node-aware) network model.
+///
+/// Ranks are grouped into nodes of `ranks_per_node` consecutive ranks;
+/// transfers between ranks on the *same* node move over shared memory
+/// (`intra_alpha`/`intra_beta` — a window read is a memcpy, nothing
+/// touches the NIC), while transfers between nodes pay the flat
+/// [`NetModel`] *plus* an explicit per-message issue cost `msg_alpha`,
+/// so message **count** finally costs something and coalescing many
+/// small `rget_blocks` requests into contiguous runs is worth real
+/// virtual time — the fat-node regime DBCSR optimizes for (Bethune et
+/// al., arXiv:1708.03604; Sivkov et al., arXiv:1910.13555).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierarchicalNetModel {
+    /// Ranks per node: rank `r` lives on node `r / ranks_per_node`.
+    pub ranks_per_node: usize,
+    /// Inter-node pricing (the flat fabric model).
+    pub inter: NetModel,
+    /// Intra-node (shared-memory) latency per transfer (s).
+    pub intra_alpha: f64,
+    /// Intra-node copy bandwidth (B/s) — memory, not NIC, bound.
+    pub intra_beta: f64,
+    /// Extra per-message issue cost on the inter-node path (s): NIC
+    /// doorbell + descriptor per message, on top of `inter`'s α.
+    pub msg_alpha: f64,
+    /// Merge a tick's block-granular gets to one window into
+    /// contiguous runs before pricing.
+    pub coalesce: bool,
+    /// Largest dead-block gap (in block ids) a coalesced run may span.
+    pub coalesce_gap: u32,
+}
+
+impl HierarchicalNetModel {
+    /// Node-aware model over the flat `inter` fabric, with shared-memory
+    /// constants typical of a fat NUMA node: ~0.2 µs latency, ~16 GB/s
+    /// per-process copy bandwidth (several times the Aries injection
+    /// rate), ~0.5 µs per inter-node message issue.
+    pub fn from_net(inter: NetModel, ranks_per_node: usize) -> Self {
+        Self {
+            ranks_per_node: ranks_per_node.max(1),
+            inter,
+            intra_alpha: 0.2e-6,
+            intra_beta: 16e9,
+            msg_alpha: 0.5e-6,
+            coalesce: true,
+            coalesce_gap: 2,
+        }
+    }
+
+    /// Node housing rank `r`.
+    pub fn node_of(&self, r: usize) -> usize {
+        r / self.ranks_per_node
+    }
+
+    /// True when both ranks share a node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Shared-memory transfer time (seconds) for `s` bytes.
+    pub fn intra_time(&self, s: usize) -> f64 {
+        self.intra_alpha + s as f64 / self.intra_beta
+    }
+
+    /// Inter-node one-sided time for `s` bytes split over `msgs`
+    /// messages: each message pays the DMAPP issue latency plus the
+    /// explicit per-message cost; the payload shares the link once.
+    pub fn inter_rma_time(&self, s: usize, msgs: usize) -> f64 {
+        msgs as f64 * (self.inter.rma_alpha + self.msg_alpha) + s as f64 / self.inter.beta
+    }
+
+    /// Inter-node point-to-point time for `s` bytes over `msgs`
+    /// messages (the Cannon shifts move one panel per message).
+    pub fn inter_ptp_time(&self, s: usize, msgs: usize) -> f64 {
+        self.inter.ptp_time(s) + msgs as f64 * self.msg_alpha
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +198,44 @@ mod tests {
         let t = m.ptp_time(s);
         let expect = s as f64 / (m.beta * m.ptp_bw_factor);
         assert!((t - expect).abs() / t < 0.01);
+    }
+
+    #[test]
+    fn hierarchy_groups_ranks_into_nodes() {
+        let h = HierarchicalNetModel::from_net(NetModel::aries(), 4);
+        assert_eq!(h.node_of(0), 0);
+        assert_eq!(h.node_of(3), 0);
+        assert_eq!(h.node_of(4), 1);
+        assert!(h.same_node(5, 7));
+        assert!(!h.same_node(3, 4));
+    }
+
+    #[test]
+    fn intra_node_beats_inter_node() {
+        let h = HierarchicalNetModel::from_net(NetModel::aries(), 4);
+        for s in [0usize, 1 << 10, 1 << 20] {
+            assert!(h.intra_time(s) < h.inter_rma_time(s, 1));
+            assert!(h.intra_time(s) < h.inter_ptp_time(s, 1));
+        }
+    }
+
+    #[test]
+    fn message_count_costs_latency() {
+        let h = HierarchicalNetModel::from_net(NetModel::aries(), 4);
+        let s = 1 << 16;
+        let one = h.inter_rma_time(s, 1);
+        let ten = h.inter_rma_time(s, 10);
+        let per_msg = h.inter.rma_alpha + h.msg_alpha;
+        assert!((ten - one - 9.0 * per_msg).abs() < 1e-15);
+        let p1 = h.inter_ptp_time(s, 1);
+        let p4 = h.inter_ptp_time(s, 4);
+        assert!((p4 - p1 - 3.0 * h.msg_alpha).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_sized_node_clamps_to_one() {
+        let h = HierarchicalNetModel::from_net(NetModel::aries(), 0);
+        assert_eq!(h.ranks_per_node, 1);
+        assert!(!h.same_node(0, 1), "one rank per node: nothing is intra");
     }
 }

@@ -17,7 +17,7 @@
 
 use std::time::Duration;
 
-use crate::comm::netmodel::NetModel;
+use crate::comm::netmodel::{HierarchicalNetModel, NetModel};
 use crate::comm::world::{TrafficClass, DEADLOCK_TIMEOUT};
 
 /// Which transport prices a transfer.
@@ -40,6 +40,9 @@ pub struct FabricConfig {
     /// Real (wall-clock) bound on blocking waits before the fabric
     /// declares a deadlock and panics with context.
     pub deadlock_timeout: Duration,
+    /// Two-level node-aware pricing; `None` keeps the flat model
+    /// (bit-for-bit the pre-hierarchy fabric).
+    pub hier: Option<HierarchicalNetModel>,
 }
 
 impl Default for FabricConfig {
@@ -48,6 +51,7 @@ impl Default for FabricConfig {
             net: NetModel::aries(),
             flop_rate: 50e9,
             deadlock_timeout: DEADLOCK_TIMEOUT,
+            hier: None,
         }
     }
 }
@@ -126,6 +130,51 @@ impl Progress {
         *rail
     }
 
+    /// Post an intra-node (shared-memory) transfer: priced at the
+    /// node-local copy rate and **never** queued on an injection rail —
+    /// a window read across shared memory does not touch the NIC, so it
+    /// cannot delay (or be delayed by) inter-node traffic.  Falls back
+    /// to the flat RMA price on the `Other` rail when the fabric has no
+    /// hierarchy (callers normally guard on that).
+    pub fn post_intra(&mut self, bytes: usize, requested: bool) -> f64 {
+        let Some(h) = self.cfg.hier else {
+            return self.post(Transport::Rma, TrafficClass::Other, bytes, requested);
+        };
+        let dur = h.intra_time(bytes);
+        if requested {
+            self.total_comm_s += dur;
+        }
+        self.now_s + dur
+    }
+
+    /// Post an inter-node transfer of `bytes` split over `msgs`
+    /// messages under hierarchical pricing; delegates to the flat
+    /// single-message [`Progress::post`] when the fabric has no
+    /// hierarchy, so flat runs stay bit-for-bit unchanged.
+    pub fn post_routed(
+        &mut self,
+        transport: Transport,
+        class: TrafficClass,
+        bytes: usize,
+        msgs: usize,
+        requested: bool,
+    ) -> f64 {
+        let Some(h) = self.cfg.hier else {
+            return self.post(transport, class, bytes, requested);
+        };
+        let dur = match transport {
+            Transport::Ptp => h.inter_ptp_time(bytes, msgs),
+            Transport::Rma => h.inter_rma_time(bytes, msgs),
+        };
+        let rail = &mut self.rail_busy_until_s[class.index()];
+        let start = self.now_s.max(*rail);
+        *rail = start + dur;
+        if requested {
+            self.total_comm_s += dur;
+        }
+        *rail
+    }
+
     /// Complete a request: block the virtual clock up to `ready_at_s` and
     /// return the non-overlapped residue that was actually waited.
     pub fn complete(&mut self, ready_at_s: f64) -> f64 {
@@ -140,6 +189,12 @@ impl Progress {
     /// side of a point-to-point message — "requested data", Eq. 7).
     pub fn note_recv(&mut self, transport: Transport, bytes: usize) {
         self.total_comm_s += self.price(transport, bytes);
+    }
+
+    /// Account an already-priced duration as raw requested-transfer
+    /// time (receives whose level-aware price the caller computed).
+    pub fn note_comm(&mut self, dur_s: f64) {
+        self.total_comm_s += dur_s;
     }
 
     /// Advance the clock by a local computation of `flops`.
@@ -338,6 +393,49 @@ mod tests {
         });
         p.advance_flops(2e9);
         assert!((p.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_posts_delegate_to_flat_without_hierarchy() {
+        let mut flat = prog();
+        let mut routed = prog();
+        let a = flat.post(Transport::Rma, TrafficClass::MatrixA, 1 << 16, true);
+        let b = routed.post_routed(Transport::Rma, TrafficClass::MatrixA, 1 << 16, 7, true);
+        assert_eq!(a, b, "no hierarchy: msgs must not change the price");
+        assert_eq!(flat.totals(), routed.totals());
+    }
+
+    #[test]
+    fn intra_posts_bypass_the_rails() {
+        let hier = crate::comm::netmodel::HierarchicalNetModel::from_net(NetModel::aries(), 2);
+        let mut p = Progress::new(FabricConfig {
+            hier: Some(hier),
+            ..Default::default()
+        });
+        // Saturate the A rail with a big inter-node transfer...
+        let big = p.post_routed(Transport::Rma, TrafficClass::MatrixA, 64 << 20, 1, true);
+        // ...then an intra-node read on the same class completes on the
+        // shared-memory clock, unaffected by the rail backlog.
+        let small = p.post_intra(1 << 10, true);
+        assert!(small < big, "intra read must not queue behind the NIC");
+        assert!((small - p.now() - hier.intra_time(1 << 10)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn routed_inter_charges_per_message_latency() {
+        let hier = crate::comm::netmodel::HierarchicalNetModel::from_net(NetModel::aries(), 2);
+        let mut p = Progress::new(FabricConfig {
+            hier: Some(hier),
+            ..Default::default()
+        });
+        let one = p.post_routed(Transport::Rma, TrafficClass::MatrixB, 1 << 16, 1, false);
+        let mut q = Progress::new(FabricConfig {
+            hier: Some(hier),
+            ..Default::default()
+        });
+        let five = q.post_routed(Transport::Rma, TrafficClass::MatrixB, 1 << 16, 5, false);
+        let per_msg = hier.inter.rma_alpha + hier.msg_alpha;
+        assert!((five - one - 4.0 * per_msg).abs() < 1e-15);
     }
 
     #[test]

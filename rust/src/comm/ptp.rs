@@ -38,11 +38,21 @@ impl Comm {
         let bytes = payload.wire_bytes();
         self.stats.borrow_mut().add_ptp_sent(class, bytes);
         // Price the transfer on this rank's injection rail; the message
-        // arrives (virtually) when the transfer completes.
-        let ready_at = self
-            .progress
-            .borrow_mut()
-            .post(Transport::Ptp, class, bytes, false);
+        // arrives (virtually) when the transfer completes.  On a
+        // hierarchical fabric the send is routed by level: an on-node
+        // message is a shared-memory handoff that never queues on the
+        // inter-node injection rails.
+        let ready_at = if self.hier().is_none() {
+            self.progress
+                .borrow_mut()
+                .post(Transport::Ptp, class, bytes, false)
+        } else if self.is_intra(dest) {
+            self.progress.borrow_mut().post_intra(bytes, false)
+        } else {
+            self.progress
+                .borrow_mut()
+                .post_routed(Transport::Ptp, class, bytes, 1, false)
+        };
         let mb = &self.shared.mailboxes[dest];
         {
             let mut queues = mb.queues.lock().unwrap();
@@ -74,9 +84,21 @@ impl Comm {
                             drop(queues);
                             let bytes = p.wire_bytes();
                             self.stats.borrow_mut().add_ptp_recv(class, bytes);
+                            // Receive-side accounting is level-aware: the
+                            // requested-traffic split and the raw comm
+                            // price both follow the sender's node.
+                            let dur = self.price_ptp_from(src, bytes);
+                            if self.hier().is_some() {
+                                let mut st = self.stats.borrow_mut();
+                                if self.is_intra(src) {
+                                    st.note_intra(bytes, 1);
+                                } else {
+                                    st.note_inter(bytes, 1);
+                                }
+                            }
                             let mut prog = self.progress.borrow_mut();
                             prog.complete(ready_at);
-                            prog.note_recv(Transport::Ptp, bytes);
+                            prog.note_comm(dur);
                             return Some(p);
                         }
                     }

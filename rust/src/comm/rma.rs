@@ -50,6 +50,7 @@ pub struct RgetHandle<'c> {
     key: u64,
     bytes: usize,
     ready_at_s: f64,
+    cost_s: f64,
     /// `Some(ids)`: a block-granular get covering only these entries of
     /// the target panel (ascending); `None`: the whole panel.
     subset: Option<Vec<u32>>,
@@ -64,6 +65,14 @@ impl RgetHandle<'_> {
     /// Virtual timestamp at which the transfer completes.
     pub fn ready_at_s(&self) -> f64 {
         self.ready_at_s
+    }
+
+    /// The priced duration of this transfer on its fabric level — what
+    /// the engines charge to per-tick raw comm time.  On a flat fabric
+    /// this equals `price_rma(bytes())`; under hierarchy it reflects
+    /// the level (intra vs inter) and the coalesced message count.
+    pub fn cost_s(&self) -> f64 {
+        self.cost_s
     }
 
     /// Complete the get: block the virtual clock to the transfer's
@@ -109,27 +118,67 @@ impl Comm {
         let data = self.window_slot(name, target);
         let bytes = data.get(&key).map(|p| p.wire_bytes()).unwrap_or(0);
         self.stats.borrow_mut().add_rget(class, bytes);
-        let ready_at_s = self
-            .progress
-            .borrow_mut()
-            .post(Transport::Rma, class, bytes, true);
+        let (ready_at_s, cost_s) = self.post_get(target, class, bytes, 1);
         RgetHandle {
             comm: self,
             data,
             key,
             bytes,
             ready_at_s,
+            cost_s,
             subset: None,
         }
     }
 
-    /// Post a **block-granular** passive-target get: one coalesced
-    /// transfer covering only entries `ids` (ascending) of the panel
-    /// under `key` — what the symbolic pass issues once it knows which
-    /// blocks contribute.  Priced by the subset's wire bytes; `wait`
-    /// materializes the filtered sub-panel.  An empty `ids` still posts
-    /// (and pays the fabric's latency for) an empty get, keeping the
-    /// prefetch pipeline's slot choreography identical to eager mode.
+    /// Route a requested one-sided transfer of `bytes` over `msgs`
+    /// messages to `target` on the correct fabric level; returns the
+    /// virtual completion stamp and the priced duration.  Intra-node
+    /// gets are shared-memory window reads: priced at the node-local
+    /// copy rate and never queued on the inter-node injection rails.
+    fn post_get(&self, target: usize, class: TrafficClass, bytes: usize, msgs: usize) -> (f64, f64) {
+        match self.hier() {
+            Some(h) if self.is_intra(target) => {
+                self.stats.borrow_mut().note_intra(bytes, 1);
+                let dur = h.intra_time(bytes);
+                (self.progress.borrow_mut().post_intra(bytes, true), dur)
+            }
+            Some(h) => {
+                self.stats.borrow_mut().note_inter(bytes, msgs);
+                let dur = h.inter_rma_time(bytes, msgs);
+                let ready = self.progress.borrow_mut().post_routed(
+                    Transport::Rma,
+                    class,
+                    bytes,
+                    msgs,
+                    true,
+                );
+                (ready, dur)
+            }
+            None => {
+                let dur = self.progress.borrow().price(Transport::Rma, bytes);
+                let ready = self
+                    .progress
+                    .borrow_mut()
+                    .post(Transport::Rma, class, bytes, true);
+                (ready, dur)
+            }
+        }
+    }
+
+    /// Post a **block-granular** passive-target get covering only
+    /// entries `ids` of the panel under `key` — what the symbolic pass
+    /// issues once it knows which blocks contribute.  Ids are sorted
+    /// and deduplicated first (a repeated id must not double-charge its
+    /// 24 B directory entry).  Priced by the subset's wire bytes; on a
+    /// hierarchical fabric the transfer is routed by level and, on the
+    /// inter-node path, optionally **coalesced**: ascending ids merge
+    /// into gap-limited contiguous runs, one message per run (the run's
+    /// whole span of block data is paid, gaps included, plus one 24 B
+    /// directory entry per run) — trading a few dead bytes for the
+    /// per-message latency of many small gets.  `wait` materializes the
+    /// filtered sub-panel.  An empty `ids` still posts (and pays the
+    /// fabric's latency for) an empty get, keeping the prefetch
+    /// pipeline's slot choreography identical to eager mode.
     pub fn rget_blocks(
         &self,
         name: &str,
@@ -139,28 +188,67 @@ impl Comm {
         ids: Vec<u32>,
     ) -> RgetHandle<'_> {
         let data = self.window_slot(name, target);
-        let bytes = data
-            .get(&key)
-            .map(|p| {
-                ids.iter()
-                    .map(|&i| {
-                        let e = &p.entries[i as usize];
-                        e.nr as usize * e.nc as usize * 8 + 24
-                    })
-                    .sum()
-            })
-            .unwrap_or(0);
+        let mut ids = ids;
+        ids.sort_unstable();
+        ids.dedup();
+        let hier = self.hier();
+        let inter = hier.is_some() && !self.is_intra(target);
+        let (bytes, msgs) = match data.get(&key) {
+            Some(p) => {
+                let block_data = |i: u32| {
+                    let e = &p.entries[i as usize];
+                    e.nr as usize * e.nc as usize * 8
+                };
+                match hier {
+                    Some(h) if inter && h.coalesce && !ids.is_empty() => {
+                        // Merge ascending ids into runs spanning at most
+                        // `coalesce_gap` dead blocks between requests.
+                        let mut bytes = 0usize;
+                        let mut runs = 0usize;
+                        let mut prev = ids[0];
+                        runs += 1;
+                        bytes += block_data(ids[0]) + 24;
+                        for &i in &ids[1..] {
+                            if i - prev <= h.coalesce_gap + 1 {
+                                // extend the run: pay the gap's dead data
+                                for g in prev + 1..=i {
+                                    bytes += block_data(g);
+                                }
+                            } else {
+                                runs += 1;
+                                bytes += block_data(i) + 24;
+                            }
+                            prev = i;
+                        }
+                        (bytes, runs)
+                    }
+                    Some(_) if inter => {
+                        // Uncoalesced inter-node: one message per block.
+                        let bytes = ids.iter().map(|&i| block_data(i) + 24).sum();
+                        (bytes, ids.len().max(1))
+                    }
+                    _ => {
+                        // Flat fabric or intra-node: one transfer, the
+                        // subset's exact wire bytes.
+                        let bytes = ids.iter().map(|&i| block_data(i) + 24).sum();
+                        (bytes, 1)
+                    }
+                }
+            }
+            None => (0, 1),
+        };
+        if inter && !ids.is_empty() {
+            self.stats.borrow_mut().note_coalesce(ids.len(), msgs);
+        }
         self.stats.borrow_mut().add_rget(class, bytes);
-        let ready_at_s = self
-            .progress
-            .borrow_mut()
-            .post(Transport::Rma, class, bytes, true);
+        let (ready_at_s, cost_s) = self.post_get(target, class, bytes, msgs);
         RgetHandle {
             comm: self,
             data,
             key,
             bytes,
             ready_at_s,
+            cost_s,
             subset: Some(ids),
         }
     }
@@ -180,10 +268,7 @@ impl Comm {
         self.stats
             .borrow_mut()
             .add_rget(TrafficClass::Structure, bytes);
-        let ready_at_s =
-            self.progress
-                .borrow_mut()
-                .post(Transport::Rma, TrafficClass::Structure, bytes, true);
+        let (ready_at_s, _cost) = self.post_get(target, TrafficClass::Structure, bytes, 1);
         self.progress.borrow_mut().complete(ready_at_s);
         structure
     }
@@ -387,6 +472,142 @@ mod tests {
             c.barrier();
             c.win_free("w");
         });
+    }
+
+    #[test]
+    fn rget_blocks_dedups_and_sorts_before_pricing() {
+        let w = SimWorld::new(2);
+        w.run(|c| {
+            let mut p = Panel::new();
+            p.push_block(0, 0, 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+            p.push_block(1, 0, 1, 2, &[5.0, 6.0]);
+            p.push_block(2, 1, 2, 1, &[7.0, 8.0]);
+            let mut dir = HashMap::new();
+            dir.insert(0, p.clone());
+            c.win_create("w", dir);
+            // Repeated + unsorted ids price and fetch exactly like the
+            // canonical sorted set: [2,0,2,0] == [0,2], no directory
+            // double-charge (exact pin: 4·8+24 for block 0, 2·8+24 for 2).
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![2, 0, 2, 0]);
+            assert_eq!(h.bytes(), (4 * 8 + 24) + (2 * 8 + 24));
+            let sub = h.wait();
+            let canon = c
+                .rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 2])
+                .wait();
+            assert_eq!(sub, canon);
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    fn hier_world(n: usize, rpn: usize, coalesce: bool, gap: u32) -> SimWorld {
+        use crate::comm::netmodel::{HierarchicalNetModel, NetModel};
+        let mut h = HierarchicalNetModel::from_net(NetModel::aries(), rpn);
+        h.coalesce = coalesce;
+        h.coalesce_gap = gap;
+        SimWorld::with_fabric(
+            n,
+            crate::comm::progress::FabricConfig {
+                hier: Some(h),
+                ..Default::default()
+            },
+        )
+    }
+
+    fn three_block_dir() -> HashMap<u64, Panel> {
+        let mut p = Panel::new();
+        p.push_block(0, 0, 2, 2, &[1.0, 2.0, 3.0, 4.0]); // 32 B data
+        p.push_block(1, 0, 1, 2, &[5.0, 6.0]); // 16 B data
+        p.push_block(2, 1, 2, 1, &[7.0, 8.0]); // 16 B data
+        let mut dir = HashMap::new();
+        dir.insert(0, p);
+        dir
+    }
+
+    #[test]
+    fn intra_node_get_prices_at_shared_memory_rate() {
+        // Ranks 0,1 share node 0; rank 0 reads rank 1's window without
+        // touching the inter-node rails or counters.
+        let w = hier_world(2, 2, true, 2);
+        w.run(|c| {
+            c.win_create("w", three_block_dir());
+            let h = c.rget("w", 1 - c.rank(), 0, TrafficClass::MatrixA);
+            let bytes = h.bytes();
+            let _ = h.wait();
+            let st = c.stats();
+            assert_eq!(st.intra_bytes, bytes as u64);
+            assert_eq!(st.intra_msgs, 1);
+            assert_eq!(st.inter_bytes, 0);
+            assert_eq!(st.inter_msgs, 0);
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn coalescer_merges_adjacent_runs_and_pays_gaps() {
+        // Ranks 0,1 on different nodes (1 rank/node): the inter path.
+        let w = hier_world(2, 1, true, 0);
+        w.run(|c| {
+            c.win_create("w", three_block_dir());
+            // gap 0: [0,1,2] is one contiguous run -> 1 message,
+            // span data 32+16+16 plus ONE 24 B directory entry.
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 1, 2]);
+            assert_eq!(h.bytes(), 32 + 16 + 16 + 24);
+            let _ = h.wait();
+            // gap 0: [0,2] stays two runs (block 1 would be dead).
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixB, vec![0, 2]);
+            assert_eq!(h.bytes(), (32 + 24) + (16 + 24));
+            let _ = h.wait();
+            let st = c.stats();
+            assert_eq!(st.coalesce_blocks, 5, "3 + 2 blocks requested");
+            assert_eq!(st.coalesce_msgs, 3, "1 + 2 messages issued");
+            assert_eq!(st.inter_msgs, 3);
+            c.barrier();
+            c.win_free("w");
+        });
+        // gap 1: [0,2] merges across the dead block -> 1 message, the
+        // gap block's data is paid, one directory entry.
+        let w = hier_world(2, 1, true, 1);
+        w.run(|c| {
+            c.win_create("w", three_block_dir());
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 2]);
+            assert_eq!(h.bytes(), 32 + 16 + 16 + 24);
+            let sub = h.wait();
+            assert_eq!(sub.nblocks(), 2, "gap block is paid for, not returned");
+            let st = c.stats();
+            assert_eq!((st.coalesce_blocks, st.coalesce_msgs), (2, 1));
+            c.barrier();
+            c.win_free("w");
+        });
+    }
+
+    #[test]
+    fn uncoalesced_inter_pays_per_block_messages() {
+        let w = hier_world(2, 1, false, 2);
+        w.run(|c| {
+            c.win_create("w", three_block_dir());
+            let h = c.rget_blocks("w", 1 - c.rank(), 0, TrafficClass::MatrixA, vec![0, 1, 2]);
+            // bytes unchanged from the flat subset pricing...
+            assert_eq!(h.bytes(), (32 + 24) + (16 + 24) + (16 + 24));
+            let cost = h.cost_s();
+            let _ = h.wait();
+            let st = c.stats();
+            // ...but three messages hit the inter-node fabric.
+            assert_eq!(st.inter_msgs, 3);
+            assert_eq!((st.coalesce_blocks, st.coalesce_msgs), (3, 3));
+            // and the priced cost carries three per-message latencies.
+            let hm = crate::comm::netmodel::HierarchicalNetModel::from_net(
+                crate::comm::netmodel::NetModel::aries(),
+                1,
+            );
+            assert!((cost - hm.inter_rma_time(h_bytes(), 3)).abs() < 1e-15);
+            c.barrier();
+            c.win_free("w");
+        });
+        fn h_bytes() -> usize {
+            (32 + 24) + (16 + 24) + (16 + 24)
+        }
     }
 
     #[test]

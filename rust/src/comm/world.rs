@@ -6,6 +6,7 @@ use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::blocks::panel::Panel;
+use crate::comm::netmodel::HierarchicalNetModel;
 use crate::comm::progress::{FabricConfig, Progress, Transport};
 
 /// How long a blocking wait may stall before the simulation declares a
@@ -105,6 +106,18 @@ pub struct CommStats {
     pub rget_bytes: [u64; 6],
     /// Bytes exposed in this rank's windows (window pool footprint).
     pub window_bytes: u64,
+    /// Hierarchical-fabric split of this rank's *requested* traffic:
+    /// bytes/messages that crossed a node boundary vs stayed on-node.
+    /// All zero on a flat fabric.
+    pub inter_bytes: u64,
+    pub inter_msgs: u64,
+    pub intra_bytes: u64,
+    pub intra_msgs: u64,
+    /// Coalescer effectiveness on inter-node `rget_blocks` calls:
+    /// blocks requested vs messages actually issued after merging
+    /// contiguous runs (`coalesce_blocks / coalesce_msgs` ≥ 1).
+    pub coalesce_blocks: u64,
+    pub coalesce_msgs: u64,
 }
 
 impl CommStats {
@@ -148,6 +161,21 @@ impl CommStats {
         self.rget_calls[class.index()] += 1;
         self.rget_bytes[class.index()] += bytes as u64;
     }
+
+    pub(crate) fn note_inter(&mut self, bytes: usize, msgs: usize) {
+        self.inter_bytes += bytes as u64;
+        self.inter_msgs += msgs as u64;
+    }
+
+    pub(crate) fn note_intra(&mut self, bytes: usize, msgs: usize) {
+        self.intra_bytes += bytes as u64;
+        self.intra_msgs += msgs as u64;
+    }
+
+    pub(crate) fn note_coalesce(&mut self, blocks: usize, msgs: usize) {
+        self.coalesce_blocks += blocks as u64;
+        self.coalesce_msgs += msgs as u64;
+    }
 }
 
 /// One rank's mailbox: (src, tag) -> queue of payloads, each stamped
@@ -183,12 +211,16 @@ pub(crate) struct Shared {
     /// Virtual-clock scratch for the barrier's time synchronization
     /// (f64 bits; see `Comm::barrier`).
     pub(crate) clock_slots: Mutex<Vec<u64>>,
+    /// Rank → node placement under the hierarchical fabric; empty means
+    /// the contiguous default `rank / ranks_per_node` (or a flat world).
+    pub(crate) node_map: Arc<Vec<usize>>,
 }
 
 /// The simulated world; spawns rank closures on threads.
 pub struct SimWorld {
     n: usize,
     fabric: FabricConfig,
+    node_map: Arc<Vec<usize>>,
 }
 
 impl SimWorld {
@@ -200,7 +232,25 @@ impl SimWorld {
     /// Create a world of `n` ranks pricing virtual time on `fabric`.
     pub fn with_fabric(n: usize, fabric: FabricConfig) -> Self {
         assert!(n > 0, "world needs at least one rank");
-        Self { n, fabric }
+        Self {
+            n,
+            fabric,
+            node_map: Arc::new(Vec::new()),
+        }
+    }
+
+    /// Create a world with an explicit rank→node placement (the remap
+    /// stage's output).  An empty map keeps the contiguous default; a
+    /// non-empty map must cover every rank.
+    pub fn with_fabric_nodes(n: usize, fabric: FabricConfig, node_map: Vec<usize>) -> Self {
+        assert!(
+            node_map.is_empty() || node_map.len() == n,
+            "node map must cover every rank ({} != {n})",
+            node_map.len()
+        );
+        let mut w = Self::with_fabric(n, fabric);
+        w.node_map = Arc::new(node_map);
+        w
     }
 
     pub fn size(&self) -> usize {
@@ -223,6 +273,7 @@ impl SimWorld {
             reduce_result: AtomicU64::new(0),
             reduce_barrier: Barrier::new(self.n),
             clock_slots: Mutex::new(vec![0; self.n]),
+            node_map: Arc::clone(&self.node_map),
         });
         let fabric = self.fabric;
         let mut out: Vec<Option<T>> = (0..self.n).map(|_| None).collect();
@@ -312,6 +363,55 @@ impl Comm {
     /// Price one one-sided get of `bytes` on this fabric.
     pub fn price_rma(&self, bytes: usize) -> f64 {
         self.progress.borrow().price(Transport::Rma, bytes)
+    }
+
+    /// The fabric's hierarchical model, if any.
+    pub(crate) fn hier(&self) -> Option<HierarchicalNetModel> {
+        self.progress.borrow().config().hier
+    }
+
+    /// Node housing rank `r` under the fabric's placement: the remap
+    /// stage's explicit map when one was installed, else the contiguous
+    /// `r / ranks_per_node` grouping.  Flat fabrics put every rank on
+    /// node 0.
+    pub fn node_of(&self, r: usize) -> usize {
+        match self.hier() {
+            Some(h) => self
+                .shared
+                .node_map
+                .get(r)
+                .copied()
+                .unwrap_or_else(|| h.node_of(r)),
+            None => 0,
+        }
+    }
+
+    /// True when `other` shares this rank's node on a hierarchical
+    /// fabric; always false on a flat fabric (every transfer inter-ish:
+    /// flat pricing applies uniformly, nothing takes the shared-memory
+    /// shortcut).
+    pub fn is_intra(&self, other: usize) -> bool {
+        self.hier().is_some() && self.node_of(self.rank) == self.node_of(other)
+    }
+
+    /// Price a one-sided get of `bytes` from `target`'s window over the
+    /// correct fabric level (single message).
+    pub fn price_rma_to(&self, target: usize, bytes: usize) -> f64 {
+        match self.hier() {
+            Some(h) if self.is_intra(target) => h.intra_time(bytes),
+            Some(h) => h.inter_rma_time(bytes, 1),
+            None => self.price_rma(bytes),
+        }
+    }
+
+    /// Price a point-to-point transfer of `bytes` arriving from `peer`
+    /// over the correct fabric level (single message).
+    pub fn price_ptp_from(&self, peer: usize, bytes: usize) -> f64 {
+        match self.hier() {
+            Some(h) if self.is_intra(peer) => h.intra_time(bytes),
+            Some(h) => h.inter_ptp_time(bytes, 1),
+            None => self.price_ptp(bytes),
+        }
     }
 
     /// Account and price one blocking structure-exchange transfer of

@@ -132,6 +132,129 @@ impl ProcGrid {
     }
 }
 
+/// A rank → node placement for the hierarchical fabric: which node each
+/// of the grid's ranks runs on.  Placement is pure bookkeeping — it
+/// changes what the fabric *prices* (which transfers cross a node
+/// boundary), never what any rank computes, so C stays bitwise
+/// identical across placements.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeMapping {
+    /// Node capacity the mapping was built for.
+    pub ranks_per_node: usize,
+    /// `node_of[rank]` = node housing that rank.
+    pub node_of: Vec<usize>,
+    /// Which candidate family produced it (for reports).
+    pub label: &'static str,
+}
+
+impl NodeMapping {
+    /// Number of distinct nodes used.
+    pub fn nodes(&self) -> usize {
+        self.node_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Every node holds at most `ranks_per_node` ranks and — when the
+    /// rank count divides evenly — exactly that many: the placement is
+    /// a balanced assignment, i.e. a bijection between ranks and
+    /// (node, slot) pairs.  The remap property test pins this.
+    pub fn is_balanced(&self) -> bool {
+        let mut counts = vec![0usize; self.nodes()];
+        for &n in &self.node_of {
+            counts[n] += 1;
+        }
+        let p = self.node_of.len();
+        counts.iter().all(|&c| c <= self.ranks_per_node)
+            && (p % self.ranks_per_node != 0
+                || counts.iter().all(|&c| c == self.ranks_per_node))
+    }
+
+    /// Total bytes of `traffic` (an n×n rank-to-rank byte matrix) that
+    /// cross a node boundary under this placement.
+    pub fn inter_node_bytes(&self, traffic: &[Vec<u64>]) -> u64 {
+        let mut sum = 0u64;
+        for (s, row) in traffic.iter().enumerate() {
+            for (d, &b) in row.iter().enumerate() {
+                if self.node_of[s] != self.node_of[d] {
+                    sum += b;
+                }
+            }
+        }
+        sum
+    }
+}
+
+/// Candidate placements of `grid`'s ranks onto nodes of
+/// `ranks_per_node`.  Always includes the contiguous row-major identity
+/// (the fabric's default `rank / ranks_per_node`); adds a column-major
+/// packing (grid columns share nodes — the OSL B-fetch / Cannon
+/// B-shift neighborhood) and every `tr × tc` tile packing with
+/// `tr · tc = ranks_per_node` dividing the grid (mixing both
+/// neighborhoods), when the grid shape admits them.
+pub fn node_mapping_candidates(grid: &ProcGrid, ranks_per_node: usize) -> Vec<NodeMapping> {
+    let rpn = ranks_per_node.max(1);
+    let p = grid.size();
+    let (rows, cols) = (grid.rows(), grid.cols());
+    let mut out = Vec::new();
+    out.push(NodeMapping {
+        ranks_per_node: rpn,
+        node_of: (0..p).map(|r| r / rpn).collect(),
+        label: "row-major",
+    });
+    let mut col_major = vec![0usize; p];
+    for j in 0..cols {
+        for i in 0..rows {
+            col_major[grid.rank(i, j)] = (j * rows + i) / rpn;
+        }
+    }
+    out.push(NodeMapping {
+        ranks_per_node: rpn,
+        node_of: col_major,
+        label: "col-major",
+    });
+    let mut tr = 1;
+    while tr * tr <= rpn {
+        if rpn % tr == 0 {
+            for (a, b) in [(tr, rpn / tr), (rpn / tr, tr)] {
+                // Skip the degenerate strips (those are the row/col-major
+                // packings above when they divide the grid).
+                if a == 1 || b == 1 || rows % a != 0 || cols % b != 0 {
+                    continue;
+                }
+                let mut tile = vec![0usize; p];
+                for i in 0..rows {
+                    for j in 0..cols {
+                        tile[grid.rank(i, j)] = (i / a) * (cols / b) + j / b;
+                    }
+                }
+                out.push(NodeMapping {
+                    ranks_per_node: rpn,
+                    node_of: tile,
+                    label: if a <= b { "tile-wide" } else { "tile-tall" },
+                });
+            }
+        }
+        tr += 1;
+    }
+    out.dedup_by(|a, b| a.node_of == b.node_of);
+    out
+}
+
+/// Pick the candidate placement minimizing the **exact modeled
+/// inter-node byte count** of `traffic` (an n×n rank-to-rank byte
+/// matrix); ties keep the earliest candidate, so a traffic-indifferent
+/// grid stays on the contiguous identity.
+pub fn choose_node_mapping(
+    grid: &ProcGrid,
+    ranks_per_node: usize,
+    traffic: &[Vec<u64>],
+) -> NodeMapping {
+    let cands = node_mapping_candidates(grid, ranks_per_node);
+    cands
+        .into_iter()
+        .min_by_key(|m| m.inter_node_bytes(traffic))
+        .expect("candidate set is never empty")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +343,76 @@ mod tests {
         let g16 = ProcGrid::divisor_grids(16);
         assert_eq!(g16.len(), 5);
         assert_eq!((g16[0].rows(), g16[0].cols()), (4, 4));
+    }
+
+    #[test]
+    fn node_mapping_candidates_are_balanced_bijections() {
+        for (rows, cols, rpn) in [(4, 4, 4), (2, 8, 4), (3, 4, 2), (4, 6, 6), (2, 3, 4)] {
+            let g = ProcGrid::new(rows, cols).unwrap();
+            let cands = node_mapping_candidates(&g, rpn);
+            assert!(!cands.is_empty());
+            assert_eq!(cands[0].label, "row-major");
+            for m in &cands {
+                assert_eq!(m.node_of.len(), g.size(), "{}", m.label);
+                assert!(m.is_balanced(), "{rows}x{cols} rpn={rpn} {}", m.label);
+            }
+        }
+    }
+
+    #[test]
+    fn row_major_candidate_is_the_fabric_identity() {
+        let g = ProcGrid::new(4, 4).unwrap();
+        let cands = node_mapping_candidates(&g, 4);
+        assert_eq!(cands[0].node_of, (0..16).map(|r| r / 4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chooser_minimizes_exact_inter_node_bytes() {
+        let g = ProcGrid::new(4, 4).unwrap();
+        let p = g.size();
+        // All traffic flows within grid *columns*: column-major packing
+        // (each node = one grid column) makes it all intra-node.
+        let mut traffic = vec![vec![0u64; p]; p];
+        for j in 0..4 {
+            for i in 0..4 {
+                for i2 in 0..4 {
+                    if i != i2 {
+                        traffic[g.rank(i, j)][g.rank(i2, j)] = 1000;
+                    }
+                }
+            }
+        }
+        let m = choose_node_mapping(&g, 4, &traffic);
+        assert_eq!(m.label, "col-major");
+        assert_eq!(m.inter_node_bytes(&traffic), 0);
+        // Row traffic keeps the row-major identity (already all-intra,
+        // ties prefer the first candidate).
+        let mut row_traffic = vec![vec![0u64; p]; p];
+        for i in 0..4 {
+            for j in 0..4 {
+                for j2 in 0..4 {
+                    if j != j2 {
+                        row_traffic[g.rank(i, j)][g.rank(i, j2)] = 1000;
+                    }
+                }
+            }
+        }
+        let m = choose_node_mapping(&g, 4, &row_traffic);
+        assert_eq!(m.label, "row-major");
+        assert_eq!(m.inter_node_bytes(&row_traffic), 0);
+    }
+
+    #[test]
+    fn tile_candidates_divide_the_grid() {
+        let g = ProcGrid::new(4, 4).unwrap();
+        let cands = node_mapping_candidates(&g, 4);
+        // 4x4 grid, 4 ranks/node: row-major, col-major and the 2x2 tile.
+        assert!(cands.iter().any(|m| m.label.starts_with("tile")));
+        for m in cands.iter().filter(|m| m.label.starts_with("tile")) {
+            // A 2x2 tile mapping keeps each 2x2 sub-square on one node.
+            assert_eq!(m.node_of[g.rank(0, 0)], m.node_of[g.rank(1, 1)]);
+            assert_ne!(m.node_of[g.rank(0, 0)], m.node_of[g.rank(2, 2)]);
+        }
     }
 
     #[test]

@@ -152,6 +152,23 @@ impl Topology25d {
         (0..self.l_c).map(|b| b * self.side3d + j0).collect()
     }
 
+    /// Home positions of the C panels process `(i, j)` ships partial
+    /// results to — the `(L−1)·S_C` reduction edges of Eq. 6, excluding
+    /// the panel the process owns itself.  Empty at `L = 1` (no
+    /// replication, no reduction).  The hierarchical remap stage uses
+    /// this to put reduction partners in the traffic matrix.
+    pub fn c_partial_dests(&self, i: usize, j: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for m in self.c_panel_rows(i) {
+            for n in self.c_panel_cols(j) {
+                if (m, n) != (i, j) {
+                    out.push((m, n));
+                }
+            }
+        }
+        out
+    }
+
     /// The `L` grid positions that hold a replica of C panel `(m, n)`:
     /// every process sharing its reduced coordinates.
     pub fn replicas_of_panel(&self, m: usize, n: usize) -> Vec<(usize, usize)> {
@@ -275,6 +292,25 @@ mod tests {
                     // All panel coordinates stay inside the grid.
                     assert!(rows.iter().all(|&m| m < pr));
                     assert!(cols.iter().all(|&n| n < pc));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn c_partial_dests_match_replica_sets() {
+        // At L = 1 nobody ships partials; at L > 1 a process ships to
+        // exactly the L_R·L_C − 1 other panels sharing its reduced
+        // coordinates, all of which list it as a replica.
+        let t = topo(3, 3, 1).unwrap();
+        assert!(t.c_partial_dests(1, 2).is_empty());
+        let t = topo(4, 4, 4).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let dests = t.c_partial_dests(i, j);
+                assert_eq!(dests.len(), t.l - 1);
+                for &(m, n) in &dests {
+                    assert!(t.replicas_of_panel(m, n).contains(&(i, j)));
                 }
             }
         }

@@ -231,9 +231,17 @@ pub fn run_rank(
             for payload in arrivals.into_iter().flatten() {
                 let set = payload.into_panel_set();
                 let bytes: u64 = set.iter().map(|(_, p)| 8 + p.wire_bytes() as u64).sum();
-                rec.comm_s += comm.price_ptp(bytes as usize);
                 // A sets come from the right (same row), B from below; we
                 // distinguish by reassembling in tag order: first is A.
+                // Pricing follows the sender's fabric level.
+                let src = if rec.a_msgs == 0 {
+                    let (ri, rj) = grid.right(i, j);
+                    grid.rank(ri, rj)
+                } else {
+                    let (di, dj) = grid.down(i, j);
+                    grid.rank(di, dj)
+                };
+                rec.comm_s += comm.price_ptp_from(src, bytes as usize);
                 if rec.a_msgs == 0 {
                     rec.a_bytes = bytes;
                     rec.a_msgs = 1;

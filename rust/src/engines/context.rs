@@ -45,7 +45,8 @@ use crate::dist::rebalance::{
     execute_migration, plan_rebalance, RebalanceMode, RebalanceOutcome, WorkModel,
 };
 use crate::engines::multiply::{
-    multiply_distributed, MultiplyConfig, MultiplyError, MultiplyReport, SymbolicMode,
+    multiply_distributed, HierarchyConfig, MultiplyConfig, MultiplyError, MultiplyReport,
+    SymbolicMode,
 };
 use crate::engines::plancache::{PlanCache, PlanCacheStats, SparsitySignature};
 use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
@@ -309,6 +310,16 @@ impl MultSession {
         self
     }
 
+    /// Builder: run every planned multiplication on a two-level
+    /// hierarchical fabric (and have the planner price candidates on
+    /// it).  The hierarchy never alters numerics — gets read the same
+    /// windows at a different modeled rate — so plans stay bitwise
+    /// compatible with the flat default.
+    pub fn with_hierarchy(mut self, hierarchy: HierarchyConfig) -> Self {
+        self.planner.hierarchy = Some(hierarchy);
+        self
+    }
+
     /// The session's current persistent distribution, if one was built.
     pub fn distribution(&self) -> Option<&Distribution2d> {
         self.dist.as_ref()
@@ -365,6 +376,7 @@ impl MultSession {
         cfg.filter = self.filter;
         cfg.symbolic = self.symbolic;
         cfg.registry = Some(self.registry.clone());
+        cfg.hierarchy = self.planner.hierarchy;
         cfg
     }
 

@@ -13,12 +13,15 @@ use crate::blocks::build::BlockAccumulator;
 use crate::blocks::filter::{filter_blocks, FilterConfig};
 use crate::blocks::matrix::BlockCsrMatrix;
 use crate::blocks::panel::Panel;
+use crate::comm::netmodel::HierarchicalNetModel;
 use crate::comm::progress::FabricConfig;
 use crate::comm::world::{CommStats, SimWorld, TrafficClass};
 use crate::dist::distribution::Distribution2d;
+use crate::dist::grid::{choose_node_mapping, NodeMapping, ProcGrid};
 use crate::dist::topology25d::{Topology25d, TopologyError};
 use crate::engines::plancache::PlanCache;
 use crate::engines::planner::{CandidatePlan, Plan, PlanError, Planner};
+use crate::engines::schedule::osl_vk;
 use crate::engines::{cannon, osl, RankOpts};
 use crate::local::batch::LocalMultStats;
 use crate::local::dispatch::{KernelRegistry, KernelShapeReport};
@@ -100,6 +103,61 @@ pub struct SymbolicInfo {
     pub eager_bytes: u64,
 }
 
+/// Two-level fabric configuration: how many ranks share a node and
+/// which node-aware optimizations are armed.  Placement and pricing
+/// only — C stays bitwise identical to the flat fabric in every
+/// combination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HierarchyConfig {
+    /// Ranks sharing one node (1 = every rank on its own node; all
+    /// traffic then prices at the inter-node level).
+    pub ranks_per_node: usize,
+    /// Choose the rank→node placement by exact modeled inter-node byte
+    /// count over the mapping candidates (off = contiguous row-major
+    /// identity, the fabric default `rank / ranks_per_node`).
+    pub remap: bool,
+    /// Merge each block-granular get's requests to one target window
+    /// into contiguous gap-limited runs (off = one message per block).
+    pub coalesce: bool,
+}
+
+impl HierarchyConfig {
+    /// Hierarchy with both optimizations armed (the benchmark default).
+    pub fn new(ranks_per_node: usize) -> Self {
+        Self {
+            ranks_per_node,
+            remap: true,
+            coalesce: true,
+        }
+    }
+}
+
+/// What the hierarchical fabric did in one multiplication: the chosen
+/// placement, the modeled remap gain, and the executed level split
+/// (all-rank totals from the per-rank counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierarchyInfo {
+    pub ranks_per_node: usize,
+    /// Distinct nodes the placement uses.
+    pub nodes: usize,
+    /// Candidate family of the chosen placement (`row-major`,
+    /// `col-major`, `tile-wide`, `tile-tall`).
+    pub mapping: &'static str,
+    /// Modeled inter-node bytes the chosen placement saves over the
+    /// contiguous identity (0 when remap is off or identity wins).
+    pub remap_saved_bytes: u64,
+    /// Executed bytes/messages that crossed a node boundary.
+    pub inter_bytes: u64,
+    pub inter_msgs: u64,
+    /// Executed bytes/messages served at the intra-node level.
+    pub intra_bytes: u64,
+    pub intra_msgs: u64,
+    /// Block requests entering the inter-node coalescer and the
+    /// messages they left it as (equal when coalescing is off).
+    pub coalesce_blocks: u64,
+    pub coalesce_msgs: u64,
+}
+
 /// Multiplication configuration.
 #[derive(Clone, Debug)]
 pub struct MultiplyConfig {
@@ -128,6 +186,9 @@ pub struct MultiplyConfig {
     /// (autotuned on first use per shape); `None` runs the generic
     /// microkernel everywhere.
     pub registry: Option<Arc<KernelRegistry>>,
+    /// Two-level (node-aware) fabric; `None` keeps the flat network —
+    /// bit-for-bit the pre-hierarchy behavior.
+    pub hierarchy: Option<HierarchyConfig>,
 }
 
 impl Default for MultiplyConfig {
@@ -141,6 +202,7 @@ impl Default for MultiplyConfig {
             threads_per_rank: 1,
             async_submission: true,
             registry: None,
+            hierarchy: None,
         }
     }
 }
@@ -238,6 +300,14 @@ pub struct MultiplyReport {
     /// Per-shape kernel dispatch snapshot (variant chosen, calibrated
     /// rate, autotune cost, executed use) — empty without a registry.
     pub kernels: Vec<KernelShapeReport>,
+    /// What the hierarchical fabric did (placement + executed level
+    /// split); `None` on the flat network.
+    pub hierarchy: Option<HierarchyInfo>,
+    /// Virtual-clock makespan: the maximum over ranks of the fabric
+    /// clock at rank end.  The end-to-end metric for fabric ablations —
+    /// unlike [`MultiplyReport::model`], it is priced on the fabric the
+    /// run actually executed with (hierarchical or flat).
+    pub virtual_makespan_s: f64,
 }
 
 impl MultiplyReport {
@@ -303,6 +373,98 @@ pub enum MultiplyError {
     Plan(#[from] PlanError),
 }
 
+/// Exact rank-to-rank traffic matrix (`T[src][dst]` bytes, self edges
+/// included — they price at the intra-node level) of one multiplication
+/// under `engine`'s schedule on `grid`/`topo`.  Panel sizes come in as
+/// closures so the driver can price the actual split panels while the
+/// planner prices its uniform model sizes; `c_size` estimates one
+/// shipped partial-C panel (only L > 1 one-sided runs have any).
+///
+/// The matrix is schedule arithmetic only (panel homes are pure grid
+/// formulas), which is what lets the node remap be chosen *before* the
+/// fabric exists and the planner price a hierarchy it never executes.
+pub fn traffic_matrix(
+    grid: &ProcGrid,
+    topo: &Topology25d,
+    engine: Engine,
+    a_size: &dyn Fn(usize, usize) -> u64,
+    b_size: &dyn Fn(usize, usize) -> u64,
+    c_size: &dyn Fn(usize, usize) -> u64,
+) -> Vec<Vec<u64>> {
+    let (pr, pc) = (grid.rows(), grid.cols());
+    let p = pr * pc;
+    let v = topo.v;
+    let mut t = vec![vec![0u64; p]; p];
+    match engine {
+        Engine::OneSided { .. } => {
+            // Every fetch is a get from the panel's home: A panel
+            // (m, vk) lives at (m, vk mod P_C), B panel (vk, n) at
+            // (vk mod P_R, n); partial-C arcs ship to the panel's 2D
+            // owner.  Data flows home -> fetcher.
+            for i in 0..pr {
+                for j in 0..pc {
+                    let r = grid.rank(i, j);
+                    let rows = topo.c_panel_rows(i);
+                    let cols = topo.c_panel_cols(j);
+                    for big_t in 0..topo.nticks() {
+                        let vk = osl_vk(topo, i, j, big_t);
+                        for &m in &rows {
+                            t[grid.rank(m, vk % pc)][r] += a_size(m, vk);
+                        }
+                        for &n in &cols {
+                            t[grid.rank(vk % pr, n)][r] += b_size(vk, n);
+                        }
+                    }
+                    for (m, n) in topo.c_partial_dests(i, j) {
+                        t[r][grid.rank(m, n)] += c_size(m, n);
+                    }
+                }
+            }
+        }
+        Engine::PointToPoint => {
+            // Cannon circulates whole resident sets: the set homed at
+            // (i, j0) pre-shifts to column (j0 - i) mod P_C, then hops
+            // left V-1 times (B: rows, up-hops).  Set bytes include the
+            // 8-byte key per panel the wire format carries.
+            for i in 0..pr {
+                for j0 in 0..pc {
+                    let bytes: u64 = (0..v)
+                        .filter(|vk| vk % pc == j0)
+                        .map(|vk| 8 + a_size(i, vk))
+                        .sum();
+                    let mut cur = j0;
+                    let next = (j0 + pc - i % pc) % pc;
+                    t[grid.rank(i, cur)][grid.rank(i, next)] += bytes;
+                    cur = next;
+                    for _ in 1..v {
+                        let next = (cur + pc - 1) % pc;
+                        t[grid.rank(i, cur)][grid.rank(i, next)] += bytes;
+                        cur = next;
+                    }
+                }
+            }
+            for j in 0..pc {
+                for i0 in 0..pr {
+                    let bytes: u64 = (0..v)
+                        .filter(|vk| vk % pr == i0)
+                        .map(|vk| 8 + b_size(vk, j))
+                        .sum();
+                    let mut cur = i0;
+                    let next = (i0 + pr - j % pr) % pr;
+                    t[grid.rank(cur, j)][grid.rank(next, j)] += bytes;
+                    cur = next;
+                    for _ in 1..v {
+                        let next = (cur + pr - 1) % pr;
+                        t[grid.rank(cur, j)][grid.rank(next, j)] += bytes;
+                        cur = next;
+                    }
+                }
+            }
+        }
+    }
+    t
+}
+
 /// Distributed `C = C + A·B` over the simulated world.
 pub fn multiply_distributed(
     a: &BlockCsrMatrix,
@@ -330,6 +492,18 @@ pub fn multiply_distributed(
     let a_panels = dist.split_a(a); // [pi][vk]
     let b_panels = dist.split_b(b); // [vk][pj]
     let (pr, pc) = (grid.rows(), grid.cols());
+
+    // Tabulate the exact per-panel wire bytes before the panels move
+    // into the rank input slots: the node remap prices its candidates
+    // on the actual split sizes.
+    let a_bytes: Vec<Vec<u64>> = a_panels
+        .iter()
+        .map(|row| row.iter().map(|p| p.wire_bytes() as u64).collect())
+        .collect();
+    let b_bytes: Vec<Vec<u64>> = b_panels
+        .iter()
+        .map(|row| row.iter().map(|p| p.wire_bytes() as u64).collect())
+        .collect();
 
     // Per-rank input slots (taken by each rank thread): the A and B
     // panel directories each rank starts from.
@@ -369,12 +543,50 @@ pub fn multiply_distributed(
         .machine
         .unwrap_or_else(|| MachineModel::piz_daint(50e9))
         .with_threads(threads);
+    // Hierarchical fabric: build the two-level model, price the exact
+    // traffic matrix of this run's schedule on the actual split-panel
+    // sizes, and choose the rank→node placement minimizing inter-node
+    // bytes — all before any rank exists, so the placement only ever
+    // changes pricing, never results.
+    let hier_setup = cfg.hierarchy.map(|h| {
+        let mut net = HierarchicalNetModel::from_net(machine.net, h.ranks_per_node);
+        net.coalesce = h.coalesce;
+        let a_row: Vec<u64> = (0..pr).map(|m| a_bytes[m].iter().sum()).collect();
+        let b_col: Vec<u64> = (0..pc).map(|n| b_bytes.iter().map(|r| r[n]).sum()).collect();
+        let tm = traffic_matrix(
+            &grid,
+            &topo,
+            cfg.engine,
+            &|m, vk| a_bytes[m][vk],
+            &|vk, n| b_bytes[vk][n],
+            // One shipped partial-C panel, estimated from the operand
+            // row/column shares (C is not split until the run ends).
+            &|m, n| (a_row[m] / pc as u64 + b_col[n] / pr as u64) / 2,
+        );
+        let identity = NodeMapping {
+            ranks_per_node: h.ranks_per_node.max(1),
+            node_of: (0..pr * pc).map(|r| r / h.ranks_per_node.max(1)).collect(),
+            label: "row-major",
+        };
+        let mapping = if h.remap {
+            choose_node_mapping(&grid, h.ranks_per_node, &tm)
+        } else {
+            identity.clone()
+        };
+        let saved = identity.inter_node_bytes(&tm) - mapping.inter_node_bytes(&tm);
+        (net, mapping, saved)
+    });
     let fabric = FabricConfig {
         net: machine.net,
         flop_rate: machine.flop_rate,
+        hier: hier_setup.as_ref().map(|(net, _, _)| *net),
         ..Default::default()
     };
-    let world = SimWorld::with_fabric(pr * pc, fabric);
+    let node_map = hier_setup
+        .as_ref()
+        .map(|(_, m, _)| m.node_of.clone())
+        .unwrap_or_default();
+    let world = SimWorld::with_fabric_nodes(pr * pc, fabric, node_map);
     let eps = cfg.filter.on_the_fly_eps;
     let symbolic = cfg.symbolic.resolve(a.occupancy(), b.occupancy());
     let t0 = std::time::Instant::now();
@@ -407,7 +619,7 @@ pub fn multiply_distributed(
                     out.log,
                     comm.stats(),
                     [out.peak_buffer_bytes, 0u64, 0u64],
-                    (out.eager_fetch_bytes, out.structure_wait_s),
+                    (out.eager_fetch_bytes, out.structure_wait_s, comm.virtual_now()),
                 )
             }
             Engine::OneSided { .. } => {
@@ -432,7 +644,7 @@ pub fn multiply_distributed(
                         out.peak_fetch_bytes,
                         out.peak_partial_c_bytes,
                     ],
-                    (out.eager_fetch_bytes, out.structure_wait_s),
+                    (out.eager_fetch_bytes, out.structure_wait_s, comm.virtual_now()),
                 )
             }
         }
@@ -450,6 +662,7 @@ pub fn multiply_distributed(
     let mut peak_partial_c_bytes = 0u64;
     let mut eager_bytes = 0u64;
     let mut structure_wait_s = 0.0;
+    let mut virtual_makespan_s = 0.0f64;
     for (acc, ms, timers, log, stats, peaks, sym) in results {
         let panel = acc.into_panel();
         global.add_panel(&panel);
@@ -465,6 +678,7 @@ pub fn multiply_distributed(
         peak_partial_c_bytes = peak_partial_c_bytes.max(peaks[2]);
         eager_bytes += sym.0;
         structure_wait_s += sym.1;
+        virtual_makespan_s = virtual_makespan_s.max(sym.2);
     }
     let fetched_bytes: u64 = per_rank_stats
         .iter()
@@ -483,6 +697,18 @@ pub fn multiply_distributed(
         fetched_bytes,
         eager_bytes: if symbolic { eager_bytes } else { fetched_bytes },
     };
+    let hierarchy = hier_setup.map(|(net, mapping, saved)| HierarchyInfo {
+        ranks_per_node: net.ranks_per_node,
+        nodes: mapping.nodes(),
+        mapping: mapping.label,
+        remap_saved_bytes: saved,
+        inter_bytes: per_rank_stats.iter().map(|s| s.inter_bytes).sum(),
+        inter_msgs: per_rank_stats.iter().map(|s| s.inter_msgs).sum(),
+        intra_bytes: per_rank_stats.iter().map(|s| s.intra_bytes).sum(),
+        intra_msgs: per_rank_stats.iter().map(|s| s.intra_msgs).sum(),
+        coalesce_blocks: per_rank_stats.iter().map(|s| s.coalesce_blocks).sum(),
+        coalesce_msgs: per_rank_stats.iter().map(|s| s.coalesce_msgs).sum(),
+    });
     let mut c = global.into_matrix(a.row_layout_arc(), b.col_layout_arc());
     if let Some(c0) = c0 {
         c = c.add_scaled(1.0, c0);
@@ -508,6 +734,8 @@ pub fn multiply_distributed(
             .as_ref()
             .map(|r| r.report())
             .unwrap_or_default(),
+        hierarchy,
+        virtual_makespan_s,
     })
 }
 
@@ -809,6 +1037,109 @@ mod tests {
         };
         let auto = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
         assert!(auto.symbolic.enabled);
+    }
+
+    #[test]
+    fn hierarchical_fabric_is_bitwise_identical_and_reports_levels() {
+        let (a, b, l) = setup(16, 3, 0.4, 100);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 101);
+        for engine in [Engine::PointToPoint, Engine::OneSided { l: 1 }] {
+            let flat = {
+                let cfg = MultiplyConfig {
+                    engine,
+                    ..Default::default()
+                };
+                multiply_distributed(&a, &b, None, &dist, &cfg).unwrap()
+            };
+            assert!(flat.hierarchy.is_none());
+            assert!(flat.virtual_makespan_s > 0.0);
+            for remap in [false, true] {
+                for coalesce in [false, true] {
+                    let cfg = MultiplyConfig {
+                        engine,
+                        hierarchy: Some(HierarchyConfig {
+                            ranks_per_node: 2,
+                            remap,
+                            coalesce,
+                        }),
+                        ..Default::default()
+                    };
+                    let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+                    // placement and pricing only: C is bit-for-bit the
+                    // flat fabric's result in every mode
+                    assert_eq!(
+                        rep.c.to_dense().max_abs_diff(&flat.c.to_dense()),
+                        0.0,
+                        "{} remap={remap} coalesce={coalesce}",
+                        engine.label()
+                    );
+                    let h = rep.hierarchy.expect("hierarchy info missing");
+                    assert_eq!(h.ranks_per_node, 2);
+                    assert_eq!(h.nodes, 2);
+                    assert!(h.inter_bytes + h.intra_bytes > 0);
+                    assert!(h.inter_msgs + h.intra_msgs > 0);
+                    if !remap {
+                        assert_eq!((h.mapping, h.remap_saved_bytes), ("row-major", 0));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_matrix_matches_executed_level_split() {
+        // The matrix is the exact schedule arithmetic, so on the eager
+        // one-sided path (every transfer is a panel get) the executed
+        // inter/intra byte split must reproduce its prediction.
+        let (a, b, l) = setup(18, 3, 0.45, 110);
+        let grid = ProcGrid::new(2, 2).unwrap();
+        let dist = Distribution2d::rand_permuted(&l, &l, &grid, 111);
+        let engine = Engine::OneSided { l: 1 };
+        let cfg = MultiplyConfig {
+            engine,
+            symbolic: SymbolicMode::Off,
+            hierarchy: Some(HierarchyConfig {
+                ranks_per_node: 2,
+                remap: true,
+                coalesce: true,
+            }),
+            ..Default::default()
+        };
+        let rep = multiply_distributed(&a, &b, None, &dist, &cfg).unwrap();
+        let h = rep.hierarchy.unwrap();
+        let topo = Topology25d::new_or_fallback(grid, 1);
+        let ap = dist.split_a(&a);
+        let bp = dist.split_b(&b);
+        let tm = traffic_matrix(
+            &grid,
+            &topo,
+            engine,
+            &|m, vk| ap[m][vk].wire_bytes() as u64,
+            &|vk, n| bp[vk][n].wire_bytes() as u64,
+            &|_, _| 0,
+        );
+        let mapping = NodeMapping {
+            ranks_per_node: 2,
+            node_of: rep
+                .per_rank_stats
+                .iter()
+                .enumerate()
+                .map(|(r, _)| r / 2)
+                .collect(),
+            label: "row-major",
+        };
+        let total: u64 = tm.iter().flatten().sum();
+        // the chosen mapping's split has to match; recompute inter under
+        // the candidate set the driver searched
+        let chosen = choose_node_mapping(&grid, 2, &tm);
+        assert_eq!(h.mapping, chosen.label);
+        assert_eq!(h.inter_bytes, chosen.inter_node_bytes(&tm));
+        assert_eq!(h.inter_bytes + h.intra_bytes, total);
+        assert_eq!(
+            h.remap_saved_bytes,
+            mapping.inter_node_bytes(&tm) - chosen.inter_node_bytes(&tm)
+        );
     }
 
     #[test]

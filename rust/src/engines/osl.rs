@@ -381,10 +381,10 @@ pub fn run_rank(
         let a_bufs: Vec<Panel> = timers.time("osl/rget_waitall", || a_fetch.take());
         rec.a_msgs = a_bufs.len() as u32;
         rec.a_bytes = a_bufs.iter().map(|p| p.wire_bytes() as u64).sum();
-        rec.comm_s += a_bufs
-            .iter()
-            .map(|p| comm.price_rma(p.wire_bytes()))
-            .sum::<f64>();
+        // The priced durations the gets actually carried (level- and
+        // coalescing-aware; identical to repricing the panel bytes on a
+        // flat fabric).
+        rec.comm_s += a_fetch.take_cost_s();
         if opts.async_submission {
             // Async submission: the batch is already owned (`a_bufs`),
             // so its budget can turn over before any of this tick's
@@ -407,7 +407,7 @@ pub fn run_rank(
                 .expect("B fetch stream exhausted early");
             rec.b_msgs += 1;
             rec.b_bytes += pb.wire_bytes() as u64;
-            rec.comm_s += comm.price_rma(pb.wire_bytes());
+            rec.comm_s += b_fetch.take_cost_s();
             let pb_bytes = pb.wire_bytes() as u64;
             pool_current = gi;
             submit_q.submit((gi, pb), pb_bytes);

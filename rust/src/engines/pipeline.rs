@@ -135,6 +135,8 @@ pub struct BatchPrefetch<'c> {
     posted: VecDeque<Vec<RgetHandle<'c>>>,
     /// Byte totals of taken-but-not-released batches, in tick order.
     held_bytes: VecDeque<u64>,
+    /// Priced durations of taken transfers since the last drain.
+    cost_epoch_s: f64,
     next_post: usize,
     released: usize,
 }
@@ -157,6 +159,7 @@ impl<'c> BatchPrefetch<'c> {
             pool: BufferPool::new(label, budget),
             posted: VecDeque::new(),
             held_bytes: VecDeque::new(),
+            cost_epoch_s: 0.0,
             next_post: 0,
             released: 0,
         };
@@ -199,11 +202,20 @@ impl<'c> BatchPrefetch<'c> {
             .into_iter()
             .map(|h| {
                 bytes += h.bytes() as u64;
+                self.cost_epoch_s += h.cost_s();
                 h.wait()
             })
             .collect();
         self.held_bytes.push_back(bytes);
         panels
+    }
+
+    /// Drain the priced durations of the transfers taken since the last
+    /// call — the raw comm time the engine charges to its tick record.
+    /// Level- and coalescing-aware where repricing from the returned
+    /// panel's bytes would not be.
+    pub fn take_cost_s(&mut self) -> f64 {
+        std::mem::take(&mut self.cost_epoch_s)
     }
 
     /// Release the oldest taken batch's buffers (its panels are dead),
@@ -245,6 +257,7 @@ pub struct PrefetchQueue<'c> {
     pool: BufferPool,
     posted: VecDeque<RgetHandle<'c>>,
     current_bytes: Option<u64>,
+    cost_epoch_s: f64,
     cursor: usize,
 }
 
@@ -256,6 +269,7 @@ impl<'c> PrefetchQueue<'c> {
             pool: BufferPool::new(label, budget),
             posted: VecDeque::new(),
             current_bytes: None,
+            cost_epoch_s: 0.0,
             cursor: 0,
         };
         s.fill();
@@ -283,7 +297,14 @@ impl<'c> PrefetchQueue<'c> {
         self.fill();
         let h = self.posted.pop_front()?;
         self.current_bytes = Some(h.bytes() as u64);
+        self.cost_epoch_s += h.cost_s();
         Some(h.wait())
+    }
+
+    /// Drain the priced durations of the transfers handed out since the
+    /// last call (see [`BatchPrefetch::take_cost_s`]).
+    pub fn take_cost_s(&mut self) -> f64 {
+        std::mem::take(&mut self.cost_epoch_s)
     }
 
     pub fn bytes_live(&self) -> u64 {

@@ -41,14 +41,15 @@
 //! as a machine-readable justification; it rides into the `--json`
 //! report via `stats::report::multiply_report_json_planned`.
 
-use crate::dist::grid::ProcGrid;
+use crate::comm::netmodel::{HierarchicalNetModel, NetModel};
+use crate::dist::grid::{choose_node_mapping, NodeMapping, ProcGrid};
 use crate::dist::topology25d::Topology25d;
-use crate::engines::multiply::Engine;
+use crate::engines::multiply::{traffic_matrix, Engine, HierarchyConfig};
 use crate::local::dispatch::KernelModel;
 use crate::perfmodel::machine::MachineModel;
 use crate::perfmodel::replay::{
-    build_rank_log, build_rank_log_symbolic, modeled_peak_memory, paper_l_values, scale_log_flops,
-    ReplayConfig,
+    build_rank_log, build_rank_log_symbolic, modeled_peak_memory, panel_sizes, paper_l_values,
+    scale_log_flops, symbolic_survival, ReplayConfig,
 };
 use crate::perfmodel::virtual_time::{model_rank_time, ModeledTime};
 use crate::util::json::Json;
@@ -64,6 +65,45 @@ pub enum PlanError {
          (cheapest candidate needs {min_bytes:.3e} bytes)"
     )]
     NoFeasiblePlan { cap_bytes: f64, min_bytes: f64 },
+}
+
+/// Modeled hierarchy pricing of one candidate: the byte-level split of
+/// its exact traffic matrix under the best node placement, and the
+/// expected coalescing compression of its block-granular gets.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchyPricing {
+    pub ranks_per_node: usize,
+    /// Distinct nodes the candidate's placement uses.
+    pub nodes: usize,
+    /// Candidate family of the chosen placement.
+    pub mapping: &'static str,
+    /// Modeled bytes crossing / staying inside a node boundary.
+    pub inter_bytes: u64,
+    pub intra_bytes: u64,
+    /// `inter / (inter + intra)` — the split the executed run's level
+    /// counters are gated against (the 10% agreement bar).
+    pub inter_fraction: f64,
+    /// Expected live block requests per symbolic panel get and the
+    /// messages the gap-limited coalescer merges them into (expected
+    /// runs `n·f·(1−f)^(g+1)` under independent block survival); equal
+    /// to one message per whole-panel get on the eager path.
+    pub blocks_per_panel: f64,
+    pub msgs_per_panel: f64,
+}
+
+impl HierarchyPricing {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("ranks_per_node", Json::Num(self.ranks_per_node as f64)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("mapping", Json::Str(self.mapping.to_string())),
+            ("inter_bytes", Json::Num(self.inter_bytes as f64)),
+            ("intra_bytes", Json::Num(self.intra_bytes as f64)),
+            ("inter_fraction", Json::Num(self.inter_fraction)),
+            ("blocks_per_panel", Json::Num(self.blocks_per_panel)),
+            ("msgs_per_panel", Json::Num(self.msgs_per_panel)),
+        ])
+    }
 }
 
 /// One priced candidate configuration.
@@ -87,6 +127,8 @@ pub struct CandidatePlan {
     pub peak_mem_bytes: f64,
     /// Within the planner's memory cap.
     pub feasible: bool,
+    /// Two-level fabric pricing (`None` when the planner runs flat).
+    pub hierarchy: Option<HierarchyPricing>,
 }
 
 impl CandidatePlan {
@@ -104,7 +146,7 @@ impl CandidatePlan {
     /// Machine-readable justification of this candidate's pricing.
     pub fn to_json(&self) -> Json {
         let hidden = (self.modeled.comm_s - self.modeled.waitall_s).max(0.0);
-        Json::obj([
+        let mut out = Json::obj([
             ("engine", Json::Str(self.engine.label())),
             ("grid_rows", Json::Num(self.grid.rows() as f64)),
             ("grid_cols", Json::Num(self.grid.cols() as f64)),
@@ -118,7 +160,11 @@ impl CandidatePlan {
             ("peak_mem_bytes", Json::Num(self.peak_mem_bytes)),
             ("idle_ranks", Json::Num(self.idle_ranks as f64)),
             ("feasible", Json::Bool(self.feasible)),
-        ])
+        ]);
+        if let (Some(h), Json::Obj(m)) = (&self.hierarchy, &mut out) {
+            m.insert("hierarchy".to_string(), h.to_json());
+        }
+        out
     }
 }
 
@@ -261,6 +307,12 @@ pub struct Planner {
     /// scalar `machine.flop_rate`, so a small-block workload (heavy
     /// per-stack overhead) ranks differently from a large-block one.
     pub kernel_model: Option<KernelModel>,
+    /// Price candidates on a two-level fabric: each candidate's exact
+    /// traffic matrix is split at its best node placement and the flat
+    /// network blended accordingly (latencies linearly, bandwidths
+    /// harmonically), so comm-dominated rankings see the same level
+    /// economics the executed hierarchical fabric charges.
+    pub hierarchy: Option<HierarchyConfig>,
 }
 
 /// Aspect ratio (long/short side) of the squarest grid above which a
@@ -292,7 +344,15 @@ impl Planner {
             flop_imbalance: 1.0,
             rebalance_migration_bytes: 0,
             kernel_model: None,
+            hierarchy: None,
         }
+    }
+
+    /// Builder: price candidates on a two-level fabric (see
+    /// [`Planner::hierarchy`]).
+    pub fn with_hierarchy(mut self, h: HierarchyConfig) -> Self {
+        self.hierarchy = Some(h);
+        self
     }
 
     /// Builder: price candidate compute with per-shape calibrated
@@ -422,7 +482,11 @@ impl Planner {
                     // All enumerated L values are topology-valid, so the
                     // fallback is the identity here; it still pins `l` to
                     // the validated factor.
-                    let l = Topology25d::new_or_fallback(grid, engine.l()).l;
+                    let topo = Topology25d::new_or_fallback(grid, engine.l());
+                    let l = topo.l;
+                    let hier = self
+                        .hierarchy
+                        .map(|h| self.price_hierarchy(&h, spec, &grid, &topo, engine));
                     for &threads in &self.thread_candidates {
                         // Per-shape pricing: substitute the calibrated
                         // throughput of the spec's block shape for the
@@ -434,6 +498,9 @@ impl Planner {
                             let bs = spec.block_size;
                             base.flop_rate =
                                 km.effective_rate(bs, bs, bs, base.flop_rate);
+                        }
+                        if let Some((_, net)) = &hier {
+                            base.net = *net;
                         }
                         let machine = base.with_threads(threads);
                         let mut modeled = model_rank_time(&log, &machine);
@@ -448,6 +515,7 @@ impl Planner {
                             modeled,
                             peak_mem_bytes: mem,
                             feasible: mem <= self.mem_cap_bytes,
+                            hierarchy: hier.as_ref().map(|(hp, _)| *hp),
                         });
                     }
                 }
@@ -455,6 +523,87 @@ impl Planner {
         }
         out.sort_by(|a, b| a.modeled.total_s.partial_cmp(&b.modeled.total_s).unwrap());
         out
+    }
+
+    /// Split one candidate's exact traffic matrix at its best node
+    /// placement and blend the two fabric levels into one effective
+    /// flat network at that byte split — latency terms mix linearly
+    /// (the inter share carrying the per-message framing), bandwidths
+    /// harmonically.  Panel sizes are the spec's uniform model sizes,
+    /// so the split fraction is comparable against the executed level
+    /// counters (the 10% agreement gate).
+    fn price_hierarchy(
+        &self,
+        h: &HierarchyConfig,
+        spec: &BenchSpec,
+        grid: &ProcGrid,
+        topo: &Topology25d,
+        engine: Engine,
+    ) -> (HierarchyPricing, NetModel) {
+        let sizes = panel_sizes(spec, grid);
+        let tm = traffic_matrix(
+            grid,
+            topo,
+            engine,
+            &|_, _| sizes.s_a as u64,
+            &|_, _| sizes.s_b as u64,
+            &|_, _| sizes.s_c as u64,
+        );
+        let rpn = h.ranks_per_node.max(1);
+        let mapping = if h.remap {
+            choose_node_mapping(grid, rpn, &tm)
+        } else {
+            NodeMapping {
+                ranks_per_node: rpn,
+                node_of: (0..grid.size()).map(|r| r / rpn).collect(),
+                label: "row-major",
+            }
+        };
+        let inter = mapping.inter_node_bytes(&tm);
+        let total: u64 = tm.iter().flatten().sum();
+        let f = if total > 0 {
+            inter as f64 / total as f64
+        } else {
+            0.0
+        };
+        let hnet = HierarchicalNetModel::from_net(self.machine.net, rpn);
+        let mut net = self.machine.net;
+        net.alpha = f * (hnet.inter.alpha + hnet.msg_alpha) + (1.0 - f) * hnet.intra_alpha;
+        net.rma_alpha = f * (hnet.inter.rma_alpha + hnet.msg_alpha) + (1.0 - f) * hnet.intra_alpha;
+        net.rendezvous_alpha =
+            f * (hnet.inter.rendezvous_alpha + hnet.msg_alpha) + (1.0 - f) * hnet.intra_alpha;
+        net.beta = 1.0 / (f / hnet.inter.beta + (1.0 - f) / hnet.intra_beta);
+        // Expected coalescing compression of one symbolic A-panel get
+        // under independent block survival: `n·f_a` live requests merge
+        // into `n·f_a·(1−f_a)^(g+1)` expected runs (at least one
+        // message whenever anything survives).
+        let panel_blocks = (spec.nblocks as f64).powi(2) * spec.occupancy
+            / (grid.rows() as f64 * topo.v as f64);
+        let (f_a, _) = symbolic_survival(spec, grid, topo.l);
+        let (blocks_per_panel, msgs_per_panel) = if self.symbolic_traffic {
+            let live = panel_blocks * f_a;
+            let msgs = if h.coalesce {
+                (live * (1.0 - f_a).powi(hnet.coalesce_gap as i32 + 1)).max(live.min(1.0))
+            } else {
+                live
+            };
+            (live, msgs)
+        } else {
+            (panel_blocks, 1.0)
+        };
+        (
+            HierarchyPricing {
+                ranks_per_node: rpn,
+                nodes: mapping.nodes(),
+                mapping: mapping.label,
+                inter_bytes: inter,
+                intra_bytes: total - inter,
+                inter_fraction: f,
+                blocks_per_panel,
+                msgs_per_panel,
+            },
+            net,
+        )
     }
 
     /// Plan the multiplication of `spec`: price all candidates, reject
@@ -811,6 +960,49 @@ mod tests {
         let a = base.plan(&odd).unwrap().best_feasible_s();
         let b = tuned.plan(&odd).unwrap().best_feasible_s();
         assert!((a - b).abs() <= a * 1e-12, "fallback rate drifted: {a} vs {b}");
+    }
+
+    #[test]
+    fn hierarchy_pricing_splits_and_speeds_comm_bound_plans() {
+        let spec = BenchSpec::observed("hier", 16, 4, 0.5);
+        let flat = Planner::new(comm_dominated_machine(), 16);
+        let hier = flat.clone().with_hierarchy(HierarchyConfig::new(4));
+        let fp = flat.plan(&spec).unwrap();
+        let hp = hier.plan(&spec).unwrap();
+        assert!(fp.choice.hierarchy.is_none());
+        let h = hp.choice.hierarchy.unwrap();
+        assert_eq!(h.ranks_per_node, 4);
+        assert!(h.inter_bytes + h.intra_bytes > 0);
+        assert!(h.inter_fraction > 0.0 && h.inter_fraction < 1.0);
+        // part of every candidate's traffic rides the fast intra level,
+        // so the comm-bound frontier must get cheaper
+        assert!(
+            hp.best_feasible_s() < fp.best_feasible_s(),
+            "hier {} not under flat {}",
+            hp.best_feasible_s(),
+            fp.best_feasible_s()
+        );
+        // provenance reaches the json trail
+        let j = hp.choice.to_json();
+        let frac = j
+            .get("hierarchy")
+            .unwrap()
+            .get("inter_fraction")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((frac - h.inter_fraction).abs() < 1e-12);
+        // coalescing compresses the expected symbolic message count
+        let sym = flat
+            .clone()
+            .with_symbolic_traffic(true)
+            .with_hierarchy(HierarchyConfig::new(4));
+        let sp = sym.plan(&BenchSpec::observed("hier-sym", 24, 4, 0.15)).unwrap();
+        let hs = sp.choice.hierarchy.unwrap();
+        assert!(
+            hs.msgs_per_panel <= hs.blocks_per_panel,
+            "coalescer cannot add messages"
+        );
     }
 
     #[test]

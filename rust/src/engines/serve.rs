@@ -59,7 +59,7 @@ use crate::comm::progress::RankLedger;
 use crate::engines::context::{
     observed_pair_spec, MultSession, SessionSummary, WindowPoolStats,
 };
-use crate::engines::multiply::{MultiplyError, SymbolicMode};
+use crate::engines::multiply::{HierarchyConfig, MultiplyError, SymbolicMode};
 use crate::engines::plancache::{
     SharedCacheStats, SharedPlanCache, StructuralKey, TenantCacheStats,
 };
@@ -79,16 +79,21 @@ pub struct ServeConfig {
     /// Virtual seconds a blocked head may wait before its ranks are
     /// reserved (backfill behind it stops).
     pub aging_threshold_s: f64,
+    /// Two-level fabric every tenant session runs (and prices) on;
+    /// `None` keeps the flat single-level network.
+    pub hierarchy: Option<HierarchyConfig>,
 }
 
 impl ServeConfig {
-    /// Defaults: a 64-entry shared cache and a 0.1 s aging threshold.
+    /// Defaults: a 64-entry shared cache, a 0.1 s aging threshold, and
+    /// a flat fabric.
     pub fn new(machine: MachineModel, total_ranks: usize) -> Self {
         Self {
             machine,
             total_ranks,
             cache_capacity: 64,
             aging_threshold_s: 0.1,
+            hierarchy: None,
         }
     }
 }
@@ -430,7 +435,8 @@ impl ServeFabric {
     /// An empty fabric over `cfg`'s machine and rank budget.
     pub fn new(cfg: ServeConfig) -> Self {
         assert!(cfg.total_ranks >= 1, "a fabric needs at least one rank");
-        let planner = Planner::new(cfg.machine, cfg.total_ranks);
+        let mut planner = Planner::new(cfg.machine, cfg.total_ranks);
+        planner.hierarchy = cfg.hierarchy;
         let cache = SharedPlanCache::new(cfg.cache_capacity);
         Self {
             cfg,

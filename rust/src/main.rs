@@ -21,7 +21,8 @@ use dbcsr::dist::rebalance::{
 };
 use dbcsr::engines::context::MultSession;
 use dbcsr::engines::multiply::{
-    multiply_distributed, multiply_oracle, Engine, MultiplyConfig, MultiplyError, SymbolicMode,
+    multiply_distributed, multiply_oracle, Engine, HierarchyConfig, MultiplyConfig, MultiplyError,
+    SymbolicMode,
 };
 use dbcsr::engines::planner::Planner;
 use dbcsr::perfmodel::machine::MachineModel;
@@ -116,6 +117,41 @@ fn parse_grid(s: &str) -> ProcGrid {
     ProcGrid::new(a.parse().unwrap(), b.parse().unwrap()).unwrap()
 }
 
+/// `--nodes`/`--ranks-per-node` -> the two-level fabric to run on, or
+/// `None` (both 0/unset) for the flat single-level default.
+/// `--ranks-per-node` wins when both are given; `--nodes` divides the
+/// rank budget as evenly as packing allows.
+fn parse_hierarchy(args: &Args, total_ranks: usize) -> Option<HierarchyConfig> {
+    let rpn: usize = args.get_as("ranks-per-node");
+    let nodes: usize = args.get_as("nodes");
+    let rpn = if rpn > 0 {
+        rpn
+    } else if nodes > 0 {
+        (total_ranks + nodes - 1) / nodes
+    } else {
+        return None;
+    };
+    Some(HierarchyConfig::new(rpn))
+}
+
+fn print_hierarchy(h: &dbcsr::engines::multiply::HierarchyInfo) {
+    println!(
+        "hierarchy: {} node(s) x {} rank(s)/node, mapping {} (remap saved {:.3} MB); \
+         inter {:.3} MB / {} msg(s), intra {:.3} MB / {} msg(s); \
+         coalesced {} block get(s) -> {} message(s)",
+        h.nodes,
+        h.ranks_per_node,
+        h.mapping,
+        h.remap_saved_bytes as f64 / 1e6,
+        h.inter_bytes as f64 / 1e6,
+        h.inter_msgs,
+        h.intra_bytes as f64 / 1e6,
+        h.intra_msgs,
+        h.coalesce_blocks,
+        h.coalesce_msgs
+    );
+}
+
 fn cmd_multiply() -> i32 {
     let args = match Args::new("dbcsr multiply", "one distributed multiplication")
         .opt("bench", "dense", "benchmark: h2o|s-e|dense")
@@ -127,6 +163,8 @@ fn cmd_multiply() -> i32 {
         .opt("eps", "-1", "filter threshold (<0 = off)")
         .opt("symbolic", "auto", "symbolic structure pass: on|off|auto")
         .opt("rebalance", "off", "flop-balanced redistribution stage: on|off|auto")
+        .opt("nodes", "0", "simulated node count for the two-level fabric (0 = flat)")
+        .opt("ranks-per-node", "0", "ranks packed per node (overrides --nodes; 0 = flat)")
         .opt("seed", "42", "rng seed")
         .opt("threads", "1", "intra-rank worker threads (manual mode)")
         .flag("verify", "compare against the dense oracle")
@@ -156,7 +194,8 @@ fn cmd_multiply() -> i32 {
         "auto" => {
             let budget = parse_grid(args.get("grid")).size();
             let cap_gb: f64 = args.get_as("mem-cap-gb");
-            let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+            let mut planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+            planner.hierarchy = parse_hierarchy(&args, budget);
             let mut session = MultSession::new(planner, seed ^ 0xD157)
                 .with_filter(filter)
                 .with_symbolic(symbolic)
@@ -184,18 +223,19 @@ fn cmd_multiply() -> i32 {
             )
         }
         "manual" => {
+            let grid = parse_grid(args.get("grid"));
             let cfg = MultiplyConfig {
                 engine: parse_engine(args.get("engine")),
                 filter,
                 machine: Some(machine),
                 threads_per_rank: args.get_as("threads"),
                 symbolic,
+                hierarchy: parse_hierarchy(&args, grid.size()),
                 registry: Some(std::sync::Arc::new(
                     dbcsr::local::dispatch::KernelRegistry::modeled(machine),
                 )),
                 ..Default::default()
             };
-            let grid = parse_grid(args.get("grid"));
             let layout = spec.layout();
             let mut dist = Distribution2d::rand_permuted(&layout, &layout, &grid, seed ^ 0xD157);
             // standalone rebalance stage (the session runs the same
@@ -293,6 +333,9 @@ fn cmd_multiply() -> i32 {
             100.0 * saved as f64 / sym.eager_bytes.max(1) as f64,
             sym.structure_bytes as f64 / 1e6
         );
+    }
+    if let Some(h) = &report.hierarchy {
+        print_hierarchy(h);
     }
     if let Some(out) = &reb_out {
         println!(
@@ -417,6 +460,8 @@ fn cmd_serve() -> i32 {
         .opt("sign-frac", "0.25", "fraction of each tenant's jobs that are sign steps")
         .opt("cache", "64", "shared plan-cache capacity (0 = no cross-tenant reuse)")
         .opt("eps", "-1", "filter threshold (<0 = off)")
+        .opt("nodes", "0", "simulated node count for the two-level fabric (0 = flat)")
+        .opt("ranks-per-node", "0", "ranks packed per node (overrides --nodes; 0 = flat)")
         .opt("seed", "42", "rng seed")
         .flag("verify", "bitwise-compare every job against the serial oracle")
         .flag("json", "emit a machine-readable JSON report line")
@@ -439,6 +484,13 @@ fn cmd_serve() -> i32 {
 
     let mut cfg = ServeConfig::new(machine, args.get_as("ranks"));
     cfg.cache_capacity = args.get_as("cache");
+    cfg.hierarchy = parse_hierarchy(&args, cfg.total_ranks);
+    if let Some(h) = &cfg.hierarchy {
+        println!(
+            "hierarchy: {} rank(s)/node over {} fabric rank(s)",
+            h.ranks_per_node, cfg.total_ranks
+        );
+    }
     let mut fabric = ServeFabric::new(cfg);
     let layout = BlockLayout::uniform(nblocks, block_size);
     let nsign = ((jobs as f64) * sign_frac).round() as usize;
@@ -535,6 +587,8 @@ fn cmd_sign() -> i32 {
             "relative occupancy drift that triggers a re-plan (floored by the ~15% plan-cache bucket width)",
         )
         .opt("eps", "1e-7", "filter threshold")
+        .opt("nodes", "0", "simulated node count for the two-level fabric (0 = flat)")
+        .opt("ranks-per-node", "0", "ranks packed per node (overrides --nodes; 0 = flat)")
         .opt("seed", "7", "rng seed")
         .opt("threads", "1", "intra-rank worker threads (manual mode)")
         .flag("json", "emit a machine-readable JSON report line")
@@ -569,12 +623,21 @@ fn cmd_sign_manual(
 ) -> i32 {
     let grid = parse_grid(args.get("grid"));
     let dist = Distribution2d::rand_permuted(&sys.layout, &sys.layout, &grid, 3);
+    let hierarchy = parse_hierarchy(args, grid.size());
     let cfg = MultiplyConfig {
         engine: parse_engine(args.get("engine")),
         filter,
         threads_per_rank: args.get_as("threads"),
+        hierarchy,
         ..Default::default()
     };
+    if let Some(h) = &hierarchy {
+        println!(
+            "hierarchy: {} rank(s)/node over {} rank(s)",
+            h.ranks_per_node,
+            grid.size()
+        );
+    }
     let (p, sign) =
         dbcsr::sign::density::density_matrix(&sys.h, &sys.s, sys.mu, &dist, &cfg).unwrap();
     println!(
@@ -617,7 +680,14 @@ fn cmd_sign_auto(
     let budget = parse_grid(args.get("grid")).size();
     let cap_gb: f64 = args.get_as("mem-cap-gb");
     let machine = MachineModel::piz_daint(50e9);
-    let planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+    let mut planner = Planner::new(machine, budget).with_memory_cap(cap_gb * 1e9);
+    planner.hierarchy = parse_hierarchy(args, budget);
+    if let Some(h) = &planner.hierarchy {
+        println!(
+            "hierarchy: {} rank(s)/node over a {} rank budget",
+            h.ranks_per_node, budget
+        );
+    }
     let hm = sys.h.add_scaled(-sys.mu, &sys.s);
     let (x0, _) = scale_to_unit_norm(&hm);
     // Same rule as sign::density: convergence tolerance must sit above

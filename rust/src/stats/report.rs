@@ -334,6 +334,7 @@ pub fn multiply_report_json_planned(
         ("measured_overlap_frac", Json::Num(overlap.measured_overlap_frac())),
         ("kernels", Json::Arr(kernels)),
         ("kernel_autotune_s", Json::Num(kernel_autotune_s)),
+        ("virtual_makespan_s", Json::Num(rep.virtual_makespan_s)),
         ("per_rank", Json::Arr(stats_arr)),
     ]);
     if let Some(plan) = plan {
@@ -341,7 +342,33 @@ pub fn multiply_report_json_planned(
             m.insert("plan".to_string(), plan.to_json());
         }
     }
+    if let (Some(h), Json::Obj(m)) = (&rep.hierarchy, &mut out) {
+        m.insert("hierarchy".to_string(), hierarchy_json(h));
+    }
     out
+}
+
+/// Machine-readable two-level fabric summary (the `hierarchy` block of
+/// the `--json` reports): node shape, the chosen rank→node mapping and
+/// the inter-node bytes it saved over row-major packing, the executed
+/// inter/intra byte and message split, and the coalescer's ledger
+/// (block requests absorbed into runs vs inter-node messages issued).
+pub fn hierarchy_json(
+    h: &crate::engines::multiply::HierarchyInfo,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj([
+        ("ranks_per_node", Json::Num(h.ranks_per_node as f64)),
+        ("nodes", Json::Num(h.nodes as f64)),
+        ("mapping", Json::Str(h.mapping.to_string())),
+        ("remap_saved_bytes", Json::Num(h.remap_saved_bytes as f64)),
+        ("inter_bytes", Json::Num(h.inter_bytes as f64)),
+        ("inter_msgs", Json::Num(h.inter_msgs as f64)),
+        ("intra_bytes", Json::Num(h.intra_bytes as f64)),
+        ("intra_msgs", Json::Num(h.intra_msgs as f64)),
+        ("coalesce_blocks", Json::Num(h.coalesce_blocks as f64)),
+        ("coalesce_msgs", Json::Num(h.coalesce_msgs as f64)),
+    ])
 }
 
 /// [`multiply_report_json_planned`] plus the `session` block when the

@@ -1,0 +1,143 @@
+//! Integration: the hierarchical fabric is pure pricing — node
+//! placement never touches the numerics or the schedule.
+//!
+//! Properties, over random specs × grids × engines × symbolic modes:
+//!
+//! 1. every candidate node placement is a **balanced bijection** (each
+//!    node holds at most `ranks_per_node` ranks, exactly that many when
+//!    the rank count divides evenly), and the chosen placement never
+//!    crosses more modeled inter-node bytes than the contiguous
+//!    row-major identity;
+//! 2. running on the two-level fabric — remap on or off — leaves the
+//!    2.5D topology exactly where the flat run put it (same L, same
+//!    tick count: Eq. 4/5 validity is a function of the grid alone, and
+//!    placement never alters the grid);
+//! 3. C is **bitwise identical** across flat / remap-off / remap-on, on
+//!    both engines, eager and symbolic.
+
+use dbcsr::dist::distribution::Distribution2d;
+use dbcsr::dist::grid::{choose_node_mapping, node_mapping_candidates, ProcGrid};
+use dbcsr::engines::multiply::{
+    multiply_distributed, Engine, HierarchyConfig, MultiplyConfig, SymbolicMode,
+};
+use dbcsr::util::prng::Pcg64;
+use dbcsr::util::testkit::property;
+use dbcsr::workloads::generator::random_for_spec;
+use dbcsr::workloads::spec::BenchSpec;
+
+#[test]
+fn node_placements_are_balanced_and_chosen_no_worse_than_identity() {
+    let shapes: [(usize, usize); 4] = [(2, 2), (4, 2), (2, 3), (4, 4)];
+    property("node placement", 0x20DE5, 8, |rng: &mut Pcg64, i| {
+        let (pr, pc) = shapes[i % shapes.len()];
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let p = grid.size();
+        let rpn = [2, 3, 4][rng.usize_below(3)];
+        let traffic: Vec<Vec<u64>> = (0..p)
+            .map(|_| (0..p).map(|_| rng.next_u64() % 1_000_000).collect())
+            .collect();
+        let cands = node_mapping_candidates(&grid, rpn);
+        for m in &cands {
+            if m.node_of.len() != p {
+                return Err(format!(
+                    "{pr}x{pc} rpn={rpn}: candidate '{}' places {} of {p} ranks",
+                    m.label,
+                    m.node_of.len()
+                ));
+            }
+            if !m.is_balanced() {
+                return Err(format!(
+                    "{pr}x{pc} rpn={rpn}: candidate '{}' is not a balanced bijection",
+                    m.label
+                ));
+            }
+        }
+        let chosen = choose_node_mapping(&grid, rpn, &traffic);
+        let identity = &cands[0];
+        if chosen.inter_node_bytes(&traffic) > identity.inter_node_bytes(&traffic) {
+            return Err(format!(
+                "{pr}x{pc} rpn={rpn}: chose '{}' crossing {} B over identity's {} B",
+                chosen.label,
+                chosen.inter_node_bytes(&traffic),
+                identity.inter_node_bytes(&traffic)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchy_preserves_topology_and_bits_across_remap_modes() {
+    let engines = [Engine::PointToPoint, Engine::OneSided { l: 1 }];
+    let shapes: [(usize, usize); 3] = [(2, 2), (4, 2), (2, 3)];
+    property("hierarchy vs flat", 0x20DE6, 5, |rng: &mut Pcg64, i| {
+        let nb = 6 + rng.usize_below(7);
+        let bs = 2 + rng.usize_below(3);
+        let occ = rng.range_f64(0.2, 0.6);
+        let spec = BenchSpec::observed("hierarchy-prop", nb, bs, occ);
+        let a = random_for_spec(&spec, rng.next_u64());
+        let b = random_for_spec(&spec, rng.next_u64());
+        let layout = spec.layout();
+        let (pr, pc) = shapes[i % shapes.len()];
+        let grid = ProcGrid::new(pr, pc).unwrap();
+        let dist = Distribution2d::rand_permuted(&layout, &layout, &grid, rng.next_u64());
+        let rpn = [2, 4][rng.usize_below(2)];
+        let remap_on = HierarchyConfig::new(rpn);
+        let remap_off = HierarchyConfig {
+            remap: false,
+            ..remap_on
+        };
+        for engine in engines {
+            for symbolic in [SymbolicMode::Off, SymbolicMode::On] {
+                let base_cfg = MultiplyConfig {
+                    engine,
+                    symbolic,
+                    ..Default::default()
+                };
+                let flat = multiply_distributed(&a, &b, None, &dist, &base_cfg)
+                    .map_err(|e| e.to_string())?;
+                for hcfg in [remap_off, remap_on] {
+                    let cfg = MultiplyConfig {
+                        hierarchy: Some(hcfg),
+                        ..base_cfg.clone()
+                    };
+                    let got = multiply_distributed(&a, &b, None, &dist, &cfg)
+                        .map_err(|e| e.to_string())?;
+                    let diff = flat.c.to_dense().max_abs_diff(&got.c.to_dense());
+                    if diff != 0.0 {
+                        return Err(format!(
+                            "{} {pr}x{pc} rpn={rpn} remap={}: hierarchy changed \
+                             the bits (diff {diff:e})",
+                            engine.label(),
+                            hcfg.remap
+                        ));
+                    }
+                    if got.topo.l != flat.topo.l || got.topo.nticks() != flat.topo.nticks() {
+                        return Err(format!(
+                            "{} {pr}x{pc} rpn={rpn}: placement moved the topology \
+                             (L {} -> {}, ticks {} -> {})",
+                            engine.label(),
+                            flat.topo.l,
+                            got.topo.l,
+                            flat.topo.nticks(),
+                            got.topo.nticks()
+                        ));
+                    }
+                    let h = got
+                        .hierarchy
+                        .ok_or_else(|| "hierarchical run reported no levels".to_string())?;
+                    if !hcfg.remap && h.remap_saved_bytes != 0 {
+                        return Err("remap-off run claims remap savings".to_string());
+                    }
+                    if h.ranks_per_node != rpn {
+                        return Err(format!(
+                            "reported {} ranks/node, configured {rpn}",
+                            h.ranks_per_node
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -45,7 +45,7 @@ fn symbolic_pass_is_bitwise_invisible_and_fetches_no_more() {
                 };
                 let sym_cfg = MultiplyConfig {
                     symbolic: SymbolicMode::On,
-                    ..eager_cfg
+                    ..eager_cfg.clone()
                 };
                 let eager = multiply_distributed(&a, &b, None, &dist, &eager_cfg)
                     .map_err(|e| e.to_string())?;
